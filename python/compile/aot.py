@@ -1,0 +1,152 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts for the Rust
+runtime, plus a manifest.json describing every artifact.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Re-running is idempotent; `make artifacts` only invokes it when inputs
+changed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="float32"):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_step_signature(dims: M.ModelDims, batch: int):
+    """(names, ShapeDtypeStructs) for the train_step positional inputs."""
+    names = ["emb"]
+    specs = [_spec((batch, dims.fields, dims.emb_dim))]
+    for name, shape in dims.param_shapes():
+        names.append(name)
+        specs.append(_spec(shape))
+    names.append("labels")
+    specs.append(_spec((batch,)))
+    return names, specs
+
+
+def predict_signature(dims: M.ModelDims, batch: int):
+    names = ["emb"]
+    specs = [_spec((batch, dims.fields, dims.emb_dim))]
+    for name, shape in dims.param_shapes():
+        names.append(name)
+        specs.append(_spec(shape))
+    return names, specs
+
+
+TRAIN_OUTPUTS = ["loss", "logits", "d_emb", "dw1", "db1", "dw2", "db2", "dw3", "db3"]
+
+
+def lower_variant(name: str, dims: M.ModelDims, batch: int, out_dir: str,
+                  use_pallas: bool = True):
+    """Lower train_step + predict for one (variant, batch); return manifest
+    entries."""
+    entries = []
+
+    t_names, t_specs = train_step_signature(dims, batch)
+    train = functools.partial(M.train_step, use_pallas=use_pallas)
+    lowered = jax.jit(train).lower(*t_specs)
+    fname = f"train_step_{name}_b{batch}.hlo.txt"
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    entries.append({
+        "function": "train_step",
+        "variant": name,
+        "batch": batch,
+        "file": fname,
+        "inputs": [{"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                   for n, s in zip(t_names, t_specs)],
+        "outputs": TRAIN_OUTPUTS,
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+    })
+
+    p_names, p_specs = predict_signature(dims, batch)
+    pred = functools.partial(M.predict, use_pallas=use_pallas)
+    lowered = jax.jit(pred).lower(*p_specs)
+    fname = f"predict_{name}_b{batch}.hlo.txt"
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    entries.append({
+        "function": "predict",
+        "variant": name,
+        "batch": batch,
+        "file": fname,
+        "inputs": [{"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                   for n, s in zip(p_names, p_specs)],
+        "outputs": ["logits"],
+        "hlo_sha256": hashlib.sha256(text.encode()).hexdigest(),
+    })
+    return entries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--variants", nargs="*", default=None,
+                    help="subset of variant names (default: all)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path instead")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    wanted = args.variants or list(M.VARIANTS)
+    manifest = {
+        "format": 1,
+        "jax_version": jax.__version__,
+        "interchange": "hlo-text",
+        "variants": {},
+        "artifacts": [],
+    }
+    for name in wanted:
+        dims, batches = M.VARIANTS[name]
+        manifest["variants"][name] = {
+            "fields": dims.fields,
+            "emb_dim": dims.emb_dim,
+            "hidden1": dims.hidden1,
+            "hidden2": dims.hidden2,
+            "mlp_in": dims.mlp_in,
+            "batches": batches,
+        }
+        for batch in batches:
+            print(f"lowering {name} b={batch} ...", flush=True)
+            manifest["artifacts"].extend(
+                lower_variant(name, dims, batch, args.out,
+                              use_pallas=not args.no_pallas))
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels for the GBA recommendation model.
+
+Public surface:
+    fm_interaction   - FM bi-interaction pooling [B,F,D] -> [B,D]
+    matmul_bias_act  - fused dense layer act(x@W+b)
+    bce_logits       - per-example BCE-with-logits
+plus the pure-jnp oracles in `ref` used by the test suite.
+"""
+
+from .fm import fm_interaction
+from .loss import bce_logits
+from .mlp import matmul_bias, matmul_bias_act, matmul_bias_relu
+from . import ref
+
+__all__ = [
+    "fm_interaction",
+    "matmul_bias",
+    "matmul_bias_act",
+    "matmul_bias_relu",
+    "bce_logits",
+    "ref",
+]

@@ -1,0 +1,42 @@
+"""Shared helpers for the Pallas kernels: block-size selection and padding.
+
+Kernels tile their operands for the MXU (128x128 systolic array) and VMEM
+(~16 MiB scratchpad per core). On this testbed they run in interpret mode
+(CPU PJRT cannot execute Mosaic custom-calls), so the tiling is validated
+structurally -- correctness here, TPU-efficiency estimates in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Flip to False to compile real Mosaic kernels on a TPU host.
+INTERPRET = True
+
+# MXU-friendly tile edge. 128 matches the MXU systolic array; smaller
+# shapes fall back to the full (padded) dimension.
+MXU_TILE = 128
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return cdiv(x, m) * m
+
+
+def pick_block(dim: int, target: int = MXU_TILE) -> int:
+    """Block edge for a dimension: full dim when small, else `target`."""
+    return dim if dim <= target else target
+
+
+def pad_dim(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    """Zero-pad `axis` of `x` up to the next multiple of `multiple`."""
+    size = x.shape[axis]
+    pad = round_up(size, multiple) - size
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

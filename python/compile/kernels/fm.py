@@ -1,0 +1,108 @@
+"""Pallas kernel: FM second-order interaction with custom VJP.
+
+Forward:  out[b, d] = 0.5 * ((sum_f e[b,f,d])^2 - sum_f e[b,f,d]^2)
+Backward: de[b,f,d] = g[b,d] * (S[b,d] - e[b,f,d])   with S = sum_f e
+
+The kernel tiles over the batch dimension; each program instance holds an
+[bm, F, D] block of embeddings in VMEM, reduces over the field axis (a
+VPU reduction, not MXU work) and writes an [bm, D] block. The field sum S
+is saved as a residual so the backward pass does not re-reduce.
+
+TPU note (DESIGN.md §Hardware-Adaptation): on a real TPU the natural block
+is bm such that bm*F*D*4B fits VMEM alongside the output; for the model
+configs here (F<=32, D<=64) bm=128 keeps the working set under 1.5 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, cdiv, pad_dim, pick_block
+
+
+def _fwd_kernel(e_ref, out_ref, s_ref):
+    e = e_ref[...]                      # [bm, F, D]
+    s = jnp.sum(e, axis=1)              # [bm, D]
+    sq = jnp.sum(e * e, axis=1)         # [bm, D]
+    out_ref[...] = 0.5 * (s * s - sq)
+    s_ref[...] = s
+
+
+def _bwd_kernel(g_ref, e_ref, s_ref, de_ref):
+    g = g_ref[...]                      # [bm, D]
+    e = e_ref[...]                      # [bm, F, D]
+    s = s_ref[...]                      # [bm, D]
+    de_ref[...] = g[:, None, :] * (s[:, None, :] - e)
+
+
+def _fm_fwd_raw(emb: jnp.ndarray):
+    bsz, nfield, dim = emb.shape
+    bm = pick_block(bsz)
+    padded = pad_dim(emb, 0, bm)
+    grid = (cdiv(padded.shape[0], bm),)
+    out, s = pl.pallas_call(
+        _fwd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, nfield, dim), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((bm, dim), lambda i: (i, 0)),
+            pl.BlockSpec((bm, dim), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded.shape[0], dim), emb.dtype),
+            jax.ShapeDtypeStruct((padded.shape[0], dim), emb.dtype),
+        ],
+        interpret=INTERPRET,
+    )(padded)
+    return out[:bsz], s[:bsz]
+
+
+def _fm_bwd_raw(g: jnp.ndarray, emb: jnp.ndarray, s: jnp.ndarray):
+    bsz, nfield, dim = emb.shape
+    bm = pick_block(bsz)
+    g_p = pad_dim(g, 0, bm)
+    e_p = pad_dim(emb, 0, bm)
+    s_p = pad_dim(s, 0, bm)
+    grid = (cdiv(e_p.shape[0], bm),)
+    de = pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, dim), lambda i: (i, 0)),
+            pl.BlockSpec((bm, nfield, dim), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bm, dim), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, nfield, dim), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(e_p.shape, emb.dtype),
+        interpret=INTERPRET,
+    )(g_p, e_p, s_p)
+    return de[:bsz]
+
+
+@jax.custom_vjp
+def fm_interaction(emb: jnp.ndarray) -> jnp.ndarray:
+    """FM bi-interaction pooling, [B, F, D] -> [B, D] (Pallas)."""
+    out, _ = _fm_fwd_raw(emb)
+    return out
+
+
+def _vjp_fwd(emb):
+    out, s = _fm_fwd_raw(emb)
+    return out, (emb, s)
+
+
+def _vjp_bwd(res, g):
+    emb, s = res
+    return (_fm_bwd_raw(g, emb, s),)
+
+
+fm_interaction.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fm_interaction_jit(emb: jnp.ndarray) -> jnp.ndarray:
+    return fm_interaction(emb)

@@ -1,0 +1,87 @@
+"""Pallas kernel: numerically-stable BCE-with-logits, per-example.
+
+Forward:  l[b] = max(z,0) - z*y + log1p(exp(-|z|))
+Backward: dz[b] = g[b] * (sigmoid(z[b]) - y[b])
+
+1-D kernel tiled over the batch. The mean-reduction lives in the L2 graph
+(jnp.mean) so XLA can fuse it with the surrounding scalars.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, cdiv, pad_dim, pick_block
+
+
+def _fwd_kernel(z_ref, y_ref, o_ref):
+    z = z_ref[...]
+    y = y_ref[...]
+    o_ref[...] = jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+
+def _bwd_kernel(g_ref, z_ref, y_ref, o_ref):
+    z = z_ref[...]
+    sig = 1.0 / (1.0 + jnp.exp(-z))
+    o_ref[...] = g_ref[...] * (sig - y_ref[...])
+
+
+def _fwd_raw(logits, labels):
+    bsz = logits.shape[0]
+    bm = pick_block(bsz)
+    z_p = pad_dim(logits, 0, bm)
+    y_p = pad_dim(labels, 0, bm)
+    out = pl.pallas_call(
+        _fwd_kernel,
+        grid=(cdiv(z_p.shape[0], bm),),
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(z_p.shape, logits.dtype),
+        interpret=INTERPRET,
+    )(z_p, y_p)
+    return out[:bsz]
+
+
+def _bwd_raw(g, logits, labels):
+    bsz = logits.shape[0]
+    bm = pick_block(bsz)
+    g_p = pad_dim(g, 0, bm)
+    z_p = pad_dim(logits, 0, bm)
+    y_p = pad_dim(labels, 0, bm)
+    out = pl.pallas_call(
+        _bwd_kernel,
+        grid=(cdiv(z_p.shape[0], bm),),
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(z_p.shape, logits.dtype),
+        interpret=INTERPRET,
+    )(g_p, z_p, y_p)
+    return out[:bsz]
+
+
+@jax.custom_vjp
+def bce_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-example BCE-with-logits, [B] x [B] -> [B] (Pallas)."""
+    return _fwd_raw(logits, labels)
+
+
+def _vjp_fwd(logits, labels):
+    return _fwd_raw(logits, labels), (logits, labels)
+
+
+def _vjp_bwd(res, g):
+    logits, labels = res
+    # labels are data, not parameters: no gradient flows to them.
+    return _bwd_raw(g, logits, labels), None
+
+
+bce_logits.defvjp(_vjp_fwd, _vjp_bwd)

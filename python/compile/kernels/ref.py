@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the mathematical definition; the Pallas kernels in
+`fm.py`, `mlp.py`, `loss.py` must match these to float tolerance, both in
+value and (via `jax.grad`) in VJP. pytest + hypothesis enforce this.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(emb: jnp.ndarray) -> jnp.ndarray:
+    """FM second-order interaction (the DeepFM bi-interaction pooling).
+
+    emb: [B, F, D] field embeddings.
+    returns [B, D]: 0.5 * ((sum_f e)^2 - sum_f e^2).
+    """
+    s = jnp.sum(emb, axis=1)
+    sq = jnp.sum(emb * emb, axis=1)
+    return 0.5 * (s * s - sq)
+
+
+def matmul_bias_act_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                        act: str = "relu") -> jnp.ndarray:
+    """Fused dense layer: act(x @ w + b). act in {"relu", "none"}."""
+    z = x @ w + b
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "none":
+        return z
+    raise ValueError(f"unknown act {act!r}")
+
+
+def bce_logits_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Per-example numerically-stable binary cross-entropy with logits.
+
+    loss = max(z, 0) - z*y + log(1 + exp(-|z|))
+    """
+    z, y = logits, labels
+    return jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+
+
+def sigmoid_ref(z: jnp.ndarray) -> jnp.ndarray:
+    return 1.0 / (1.0 + jnp.exp(-z))

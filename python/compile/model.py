@@ -1,0 +1,145 @@
+"""Layer-2: the recommendation model (JAX), calling the Pallas kernels.
+
+The paper's three tasks (DeepFM / DIEN / YouTubeDNN, Table 5.1) share the
+CTR-tower shape this module implements:
+
+    emb[B,F,D] --+-- flatten fields --> x  [B, F*D] --+
+                 +-- FM interaction --> fm [B, D]   --+-> concat -> MLP -> logit
+
+The *sparse* half (ID -> embedding-row lookup) deliberately lives on the
+Rust PS (exactly where DeepRec puts it); this graph takes the gathered
+embedding block and returns the per-sample embedding gradients, which the
+PS scatter-adds per ID.
+
+Exported entry points (AOT-lowered to HLO text by `aot.py`):
+
+    train_step(emb, w1,b1,w2,b2,w3,b3, labels)
+        -> (loss, logits, d_emb, dw1, db1, dw2, db2, dw3, db3)
+    predict(emb, w1,b1,w2,b2,w3,b3) -> logits
+
+`use_pallas=False` switches every kernel to its pure-jnp oracle — the
+pytest suite checks the two paths agree on values and gradients.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bce_logits, fm_interaction, matmul_bias, matmul_bias_relu
+from .kernels import ref
+
+
+class ModelDims(NamedTuple):
+    """Static model hyper-shapes (fixed at AOT time)."""
+
+    fields: int      # F: categorical feature fields per sample
+    emb_dim: int     # D: embedding dimension
+    hidden1: int     # H1: first MLP width
+    hidden2: int     # H2: second MLP width
+
+    @property
+    def mlp_in(self) -> int:
+        # flattened fields + FM interaction vector
+        return self.fields * self.emb_dim + self.emb_dim
+
+    def param_shapes(self):
+        """Dense parameter shapes, in the positional order of train_step."""
+        return [
+            ("w1", (self.mlp_in, self.hidden1)),
+            ("b1", (self.hidden1,)),
+            ("w2", (self.hidden1, self.hidden2)),
+            ("b2", (self.hidden2,)),
+            ("w3", (self.hidden2, 1)),
+            ("b3", (1,)),
+        ]
+
+    def dense_param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_shapes())
+
+
+def init_dense_params(dims: ModelDims, seed: int = 0):
+    """He-initialized dense tower parameters (same scheme as the Rust
+    native model, so integration tests can cross-check numerics)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in dims.param_shapes():
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            scale = jnp.sqrt(2.0 / shape[0])
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+        del name
+    return params
+
+
+def forward(emb, w1, b1, w2, b2, w3, b3, *, use_pallas: bool = True):
+    """Logits for a gathered embedding block emb[B, F, D]."""
+    bsz = emb.shape[0]
+    x = emb.reshape(bsz, -1)
+    if use_pallas:
+        fm = fm_interaction(emb)
+        h = jnp.concatenate([x, fm], axis=1)
+        h = matmul_bias_relu(h, w1, b1)
+        h = matmul_bias_relu(h, w2, b2)
+        logit = matmul_bias(h, w3, b3)
+    else:
+        fm = ref.fm_interaction_ref(emb)
+        h = jnp.concatenate([x, fm], axis=1)
+        h = ref.matmul_bias_act_ref(h, w1, b1, "relu")
+        h = ref.matmul_bias_act_ref(h, w2, b2, "relu")
+        logit = ref.matmul_bias_act_ref(h, w3, b3, "none")
+    return logit[:, 0]
+
+
+def loss_fn(emb, w1, b1, w2, b2, w3, b3, labels, *, use_pallas: bool = True):
+    """(mean BCE loss, logits)."""
+    logits = forward(emb, w1, b1, w2, b2, w3, b3, use_pallas=use_pallas)
+    if use_pallas:
+        per_ex = bce_logits(logits, labels)
+    else:
+        per_ex = ref.bce_logits_ref(logits, labels)
+    return jnp.mean(per_ex), logits
+
+
+def train_step(emb, w1, b1, w2, b2, w3, b3, labels, *, use_pallas: bool = True):
+    """One gradient computation (NO update — updates happen on the PS).
+
+    Returns (loss, logits, d_emb, dw1, db1, dw2, db2, dw3, db3).
+    """
+
+    def scalar_loss(emb, w1, b1, w2, b2, w3, b3):
+        loss, logits = loss_fn(
+            emb, w1, b1, w2, b2, w3, b3, labels, use_pallas=use_pallas
+        )
+        return loss, logits
+
+    (loss, logits), grads = jax.value_and_grad(
+        scalar_loss, argnums=(0, 1, 2, 3, 4, 5, 6), has_aux=True
+    )(emb, w1, b1, w2, b2, w3, b3)
+    return (loss, logits) + tuple(grads)
+
+
+def predict(emb, w1, b1, w2, b2, w3, b3, *, use_pallas: bool = True):
+    """Inference logits (AUC evaluation path)."""
+    return forward(emb, w1, b1, w2, b2, w3, b3, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# AOT variants: every (name, dims, batch) tuple lowered by aot.py.
+# Keep in sync with configs/*.toml (validated by the Rust config loader
+# against artifacts/manifest.json).
+# ---------------------------------------------------------------------------
+
+VARIANTS = {
+    # name: (dims, batch sizes to specialize) — batch sizes must cover every
+    # local_batch/eval_batch that configs/*.toml may run on the PJRT backend.
+    "tiny": (ModelDims(fields=4, emb_dim=4, hidden1=32, hidden2=16), [8, 32]),
+    "small": (ModelDims(fields=8, emb_dim=8, hidden1=64, hidden2=32),
+              [32, 64, 128, 256, 512]),
+    "deepfm": (ModelDims(fields=16, emb_dim=16, hidden1=128, hidden2=64),
+               [64, 128, 256, 512]),
+}

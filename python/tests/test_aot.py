@@ -1,0 +1,78 @@
+"""AOT pipeline contracts: HLO text artifacts parse, manifests are
+complete, and the lowered module's entry layout matches the manifest."""
+
+import json
+import os
+import re
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    rc = aot.main(["--out", out, "--variants", "tiny"])
+    assert rc == 0
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    return out, manifest
+
+
+def test_manifest_lists_all_artifacts(built):
+    out, manifest = built
+    dims, batches = M.VARIANTS["tiny"]
+    assert len(manifest["artifacts"]) == 2 * len(batches)
+    for entry in manifest["artifacts"]:
+        path = os.path.join(out, entry["file"])
+        assert os.path.exists(path), entry["file"]
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, manifest = built
+    for entry in manifest["artifacts"]:
+        text = open(os.path.join(out, entry["file"])).read()
+        assert text.startswith("HloModule"), entry["file"]
+        assert "ENTRY" in text
+        # Must not contain TPU-only custom calls (CPU PJRT can't run them).
+        assert "custom-call" not in text, entry["file"]
+
+
+def test_entry_layout_matches_manifest_shapes(built):
+    out, manifest = built
+    for entry in manifest["artifacts"]:
+        text = open(os.path.join(out, entry["file"])).read()
+        m = re.search(r"entry_computation_layout=\{\((.*?)\)->", text)
+        assert m, entry["file"]
+        args = re.findall(r"f32\[([\d,]*)\]", m.group(1))
+        assert len(args) == len(entry["inputs"])
+        for spec, found in zip(entry["inputs"], args):
+            want = ",".join(str(d) for d in spec["shape"])
+            assert want == found, (entry["file"], spec, found)
+
+
+def test_train_outputs_documented(built):
+    _, manifest = built
+    for entry in manifest["artifacts"]:
+        if entry["function"] == "train_step":
+            assert entry["outputs"] == aot.TRAIN_OUTPUTS
+
+
+def test_manifest_variant_dims(built):
+    _, manifest = built
+    dims, _ = M.VARIANTS["tiny"]
+    v = manifest["variants"]["tiny"]
+    assert v["fields"] == dims.fields
+    assert v["emb_dim"] == dims.emb_dim
+    assert v["mlp_in"] == dims.mlp_in
+
+
+def test_sha_recorded_and_stable(built):
+    out, manifest = built
+    import hashlib
+    for entry in manifest["artifacts"]:
+        text = open(os.path.join(out, entry["file"])).read()
+        assert hashlib.sha256(text.encode()).hexdigest() == entry["hlo_sha256"]

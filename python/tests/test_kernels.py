@@ -1,0 +1,205 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (batch not a multiple of the tile edge, degenerate
+dims) and dtypes; values AND gradients (via jax.grad) must agree.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    bce_logits,
+    fm_interaction,
+    matmul_bias,
+    matmul_bias_act,
+    matmul_bias_relu,
+    ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# fm_interaction
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 300),
+    f=st.integers(1, 24),
+    d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fm_matches_ref(b, f, d, seed):
+    e = rand(jax.random.PRNGKey(seed), (b, f, d))
+    np.testing.assert_allclose(
+        fm_interaction(e), ref.fm_interaction_ref(e), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 150),
+    f=st.integers(1, 12),
+    d=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fm_grad_matches_ref(b, f, d, seed):
+    key = jax.random.PRNGKey(seed)
+    e = rand(key, (b, f, d))
+    ct = rand(jax.random.fold_in(key, 1), (b, d))
+    g1 = jax.grad(lambda e: jnp.sum(fm_interaction(e) * ct))(e)
+    g2 = jax.grad(lambda e: jnp.sum(ref.fm_interaction_ref(e) * ct))(e)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_fm_single_field_is_zero():
+    # With one field, sum^2 == sum of squares -> identically zero.
+    e = rand(jax.random.PRNGKey(0), (7, 1, 5))
+    np.testing.assert_allclose(fm_interaction(e), jnp.zeros((7, 5)), atol=1e-6)
+
+
+def test_fm_bf16_runs():
+    e = rand(jax.random.PRNGKey(0), (16, 4, 8), dtype=jnp.bfloat16)
+    out = fm_interaction(e)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        out.astype(jnp.float32),
+        ref.fm_interaction_ref(e).astype(jnp.float32),
+        rtol=5e-2,
+        atol=5e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 200),
+    k=st.integers(1, 160),
+    o=st.integers(1, 160),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(b, k, o, act, seed):
+    key = jax.random.PRNGKey(seed)
+    x = rand(key, (b, k))
+    w = rand(jax.random.fold_in(key, 1), (k, o), scale=0.3)
+    bias = rand(jax.random.fold_in(key, 2), (o,))
+    np.testing.assert_allclose(
+        matmul_bias_act(x, w, bias, act),
+        ref.matmul_bias_act_ref(x, w, bias, act),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 96),
+    k=st.integers(1, 80),
+    o=st.integers(1, 80),
+    act=st.sampled_from(["relu", "none"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_grads_match_ref(b, k, o, act, seed):
+    key = jax.random.PRNGKey(seed)
+    x = rand(key, (b, k))
+    w = rand(jax.random.fold_in(key, 1), (k, o), scale=0.3)
+    bias = rand(jax.random.fold_in(key, 2), (o,))
+    ct = rand(jax.random.fold_in(key, 3), (b, o))
+
+    def f_pallas(x, w, bias):
+        return jnp.sum(matmul_bias_act(x, w, bias, act) * ct)
+
+    def f_ref(x, w, bias):
+        return jnp.sum(ref.matmul_bias_act_ref(x, w, bias, act) * ct)
+
+    g1 = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, bias)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, bias)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_relu_clamps_negative():
+    x = -jnp.ones((4, 3))
+    w = jnp.ones((3, 2))
+    b = jnp.zeros((2,))
+    out = matmul_bias_relu(x, w, b)
+    np.testing.assert_allclose(out, jnp.zeros((4, 2)), atol=0)
+
+
+def test_matmul_shapes_above_tile_edge():
+    # exercise multi-tile grid (B, O > 128)
+    key = jax.random.PRNGKey(3)
+    x = rand(key, (257, 64))
+    w = rand(jax.random.fold_in(key, 1), (64, 130), scale=0.2)
+    b = rand(jax.random.fold_in(key, 2), (130,))
+    np.testing.assert_allclose(
+        matmul_bias(x, w, b),
+        ref.matmul_bias_act_ref(x, w, b, "none"),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_matmul_rejects_unknown_act():
+    with pytest.raises(ValueError):
+        matmul_bias_act(jnp.ones((2, 2)), jnp.ones((2, 2)), jnp.ones((2,)), "gelu")
+
+
+# ---------------------------------------------------------------------------
+# bce_logits
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 400),
+    scale=st.floats(0.1, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bce_matches_ref(b, scale, seed):
+    key = jax.random.PRNGKey(seed)
+    z = rand(key, (b,), scale=scale)
+    y = (jax.random.uniform(jax.random.fold_in(key, 1), (b,)) > 0.5).astype(jnp.float32)
+    np.testing.assert_allclose(
+        bce_logits(z, y), ref.bce_logits_ref(z, y), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_bce_grad_matches_ref(b, seed):
+    key = jax.random.PRNGKey(seed)
+    z = rand(key, (b,), scale=4.0)
+    y = (jax.random.uniform(jax.random.fold_in(key, 1), (b,)) > 0.5).astype(jnp.float32)
+    g1 = jax.grad(lambda z: jnp.mean(bce_logits(z, y)))(z)
+    g2 = jax.grad(lambda z: jnp.mean(ref.bce_logits_ref(z, y)))(z)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+def test_bce_extreme_logits_stable():
+    z = jnp.array([-80.0, -20.0, 0.0, 20.0, 80.0])
+    y = jnp.array([0.0, 1.0, 1.0, 0.0, 1.0])
+    out = bce_logits(z, y)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # loss at z=+-80 with matching label ~ 0; mismatched ~ |z|
+    np.testing.assert_allclose(out[0], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[4], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[3], 20.0, rtol=1e-5)
+
+
+def test_bce_gradient_is_sigmoid_minus_label():
+    z = jnp.array([0.0, 2.0, -2.0])
+    y = jnp.array([1.0, 0.0, 1.0])
+    g = jax.grad(lambda z: jnp.sum(bce_logits(z, y)))(z)
+    np.testing.assert_allclose(g, ref.sigmoid_ref(z) - y, rtol=1e-5, atol=1e-6)

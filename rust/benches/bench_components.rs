@@ -1,0 +1,133 @@
+//! Component micro-benchmarks: the L3 hot paths identified in DESIGN.md
+//! §Perf — gradient aggregation, embedding store, per-ID reduce, policy
+//! state machines, AUC, and the substrate (rng/channel).
+//!
+//!     cargo bench --bench bench_components
+
+use gba::coordinator::modes::GbaPolicy;
+use gba::coordinator::ModePolicy;
+use gba::data::DataGen;
+use gba::embedding::{EmbeddingConfig, EmbeddingStore};
+use gba::metrics::auc;
+use gba::model::NativeModel;
+use gba::optim::{Adagrad, Adam, Optimizer};
+use gba::ps::reduce_emb_grads;
+use gba::runtime::{HostTensor, VariantDims};
+use gba::util::bench::{black_box, Bencher};
+use gba::util::chan;
+use gba::util::rng::{Pcg64, Zipf};
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- substrate -------------------------------------------------------
+    let mut rng = Pcg64::seeded(1);
+    b.bench("rng::next_u64", || {
+        black_box(rng.next_u64());
+    });
+    let zipf = Zipf::new(1_000_000, 1.1);
+    b.bench("rng::zipf_sample(1M, s=1.1)", || {
+        black_box(zipf.sample(&mut rng));
+    });
+    {
+        let (tx, rx) = chan::unbounded::<u64>();
+        b.bench("chan::send+recv (uncontended)", || {
+            tx.send(1).unwrap();
+            black_box(rx.try_recv().unwrap());
+        });
+    }
+
+    // --- data generation --------------------------------------------------
+    let model_cfg = gba::config::ModelConfig {
+        variant: "deepfm".into(),
+        fields: 16,
+        emb_dim: 16,
+        hidden1: 128,
+        hidden2: 64,
+        vocab_size: 200_000,
+        zipf_s: 1.1,
+    };
+    let data_cfg = gba::config::DataConfig {
+        days_base: 1,
+        days_eval: 1,
+        samples_per_day: 1 << 20,
+        teacher_seed: 7,
+        label_noise: 0.05,
+        drift: 0.01,
+    };
+    let gen = DataGen::new(&model_cfg, &data_cfg, 3);
+    let mut bi = 0usize;
+    b.bench_units("data::batch_by_index(B=256,F=16)", 256.0, || {
+        bi += 1;
+        black_box(gen.batch_by_index(0, bi % 1000, 256));
+    });
+
+    // --- embedding store ---------------------------------------------------
+    let store = EmbeddingStore::new(
+        EmbeddingConfig { dim: 16, init_scale: 0.05, seed: 5, shards: 16 },
+        1,
+    );
+    let batch = gen.batch_by_index(0, 0, 256);
+    b.bench_units("embedding::gather(256x16 keys)", (256 * 16) as f64, || {
+        black_box(store.gather(&batch.keys, 256, 16));
+    });
+    let opt = Adagrad::new(0.01);
+    let grads: Vec<(u64, Vec<f32>, u32)> =
+        batch.keys.iter().take(512).map(|&k| (k, vec![0.01f32; 16], 2)).collect();
+    b.bench_units("embedding::apply_grads(512 ids)", 512.0, || {
+        store.apply_grads(&grads, &opt, 1);
+    });
+
+    // --- per-ID gradient reduce (worker-side) ------------------------------
+    let d_emb = HostTensor::zeros(vec![256 * 16, 16]);
+    b.bench_units("ps::reduce_emb_grads(256x16)", (256 * 16) as f64, || {
+        black_box(reduce_emb_grads(&batch.keys, &d_emb));
+    });
+
+    // --- policy state machines ---------------------------------------------
+    let mut gba_policy = GbaPolicy::with_iota(100, 4);
+    b.bench("policy::gba pull+push cycle", || {
+        let _ = gba_policy.on_pull(0);
+        if let gba::coordinator::PushAction::FlushNow = gba_policy.on_push(0, 0) {
+            let tokens: Vec<u64> = (0..100).collect();
+            black_box(gba_policy.flush_spec(&tokens));
+            gba_policy.on_applied();
+        }
+    });
+
+    // --- optimizers ---------------------------------------------------------
+    let adam = Adam::new(0.001);
+    let n = 64 * 1024;
+    let mut p = vec![0.1f32; n];
+    let g = vec![0.01f32; n];
+    let mut s = vec![0.0f32; 2 * n];
+    let mut t = 0;
+    b.bench_units("optim::adam(64K params)", n as f64, || {
+        t += 1;
+        adam.apply(&mut p, &g, &mut s, t);
+    });
+
+    // --- native model train_step --------------------------------------------
+    let dims = VariantDims { fields: 16, emb_dim: 16, hidden1: 128, hidden2: 64, mlp_in: 272 };
+    let native = NativeModel::new(dims);
+    let params = native.init_params(1);
+    let mut r2 = Pcg64::seeded(2);
+    let emb = HostTensor::new(
+        vec![256, 16, 16],
+        (0..256 * 256).map(|_| r2.next_f32() - 0.5).collect(),
+    )
+    .unwrap();
+    let labels: Vec<f32> = (0..256).map(|i| (i % 2) as f32).collect();
+    b.bench_units("model::native_train_step(B=256 deepfm)", 256.0, || {
+        black_box(native.train_step(&emb, &params, &labels));
+    });
+
+    // --- metrics -------------------------------------------------------------
+    let scores: Vec<f32> = (0..10_000).map(|_| r2.next_f32()).collect();
+    let labels2: Vec<f32> = (0..10_000).map(|_| (r2.bernoulli(0.3)) as u8 as f32).collect();
+    b.bench_units("metrics::auc(10K)", 10_000.0, || {
+        black_box(auc(&scores, &labels2));
+    });
+
+    b.write_report("results/bench_components.json").ok();
+}

@@ -1,0 +1,35 @@
+//! Fig. 1 bench: one full diurnal sweep (24 windows x 4 modes) of the
+//! cluster simulator on the YouTubeDNN task — the end-to-end cost of
+//! regenerating Fig. 1, and the per-window cost profile.
+//!
+//!     cargo bench --bench bench_fig1_trace
+
+use gba::config::ModeKind;
+use gba::experiments::{common, ExpCtx};
+use gba::sim::simulate_mode;
+use gba::util::bench::{black_box, Bencher};
+
+fn main() {
+    let ctx = ExpCtx::default();
+    let cfg = common::load_task(&ctx, "private").expect("config");
+    let mut b = Bencher::new();
+
+    // Per-window cost at trough vs peak (event counts differ by load).
+    for (label, hour) in [("trough 04:00", 4.0f64), ("peak 15:00", 15.0f64)] {
+        for kind in [ModeKind::Sync, ModeKind::Async, ModeKind::Gba] {
+            b.bench(&format!("window {label} {}", kind.as_str()), || {
+                black_box(simulate_mode(&cfg, kind, hour * 3600.0, 60.0, 3));
+            });
+        }
+    }
+
+    // Whole-figure sweep.
+    b.bench("full fig1 sweep (24h x 3 modes, 60s windows)", || {
+        for h in 0..24 {
+            for kind in [ModeKind::Sync, ModeKind::Async, ModeKind::Gba] {
+                black_box(simulate_mode(&cfg, kind, h as f64 * 3600.0, 60.0, 3));
+            }
+        }
+    });
+    b.write_report("results/bench_fig1_trace.json").ok();
+}

@@ -1,0 +1,45 @@
+//! Fig. 7 bench: simulator scale-out — event-processing throughput as the
+//! worker count grows from 100 to 800 at a fixed global batch (the paper's
+//! sweep). Checks the simulator itself scales near-linearly in events.
+//!
+//!     cargo bench --bench bench_fig7_scaleout
+
+use gba::cluster::StragglerModel;
+use gba::config::ClusterConfig;
+use gba::coordinator::modes::GbaPolicy;
+use gba::sim::{simulate, SimParams};
+use gba::util::bench::{black_box, Bencher};
+
+fn main() {
+    let cluster = ClusterConfig {
+        trace: "diurnal".into(),
+        base_compute_ms: 8.0,
+        hetero_sigma: 0.5,
+        ps_apply_ms: 0.6,
+    };
+    let global = 400 * 1000;
+    let mut b = Bencher::new();
+    for workers in [100usize, 200, 400, 800] {
+        let local = global / workers;
+        let params = SimParams {
+            workers,
+            local_batch: local,
+            compute: StragglerModel::new(&cluster, workers, 1),
+            ps_apply_ms: cluster.ps_apply_ms,
+            start_sec: 10.0 * 3600.0,
+            duration_sec: 30.0,
+            seed: workers as u64,
+        };
+        // Events processed per simulated run (batches pushed).
+        let probe = simulate(&params, Box::new(GbaPolicy::with_iota(workers, 4)));
+        let events: u64 = probe.per_worker_batches.iter().sum();
+        b.bench_units(
+            &format!("sim gba {workers}w x b{local} [vQPS {:.0}]", probe.global_qps()),
+            events as f64,
+            || {
+                black_box(simulate(&params, Box::new(GbaPolicy::with_iota(workers, 4))));
+            },
+        );
+    }
+    b.write_report("results/bench_fig7_scaleout.json").ok();
+}

@@ -1,0 +1,57 @@
+//! PJRT runtime bench: latency/throughput of the AOT train_step/predict
+//! artifacts through the engine pool — the production compute path. Also
+//! benchmarks the native backend on identical inputs for the backend
+//! comparison recorded in EXPERIMENTS.md §Perf.
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+//!
+//!     cargo bench --bench bench_runtime
+
+use gba::model::NativeModel;
+use gba::runtime::{EnginePool, HostTensor, Manifest};
+use gba::util::bench::{black_box, Bencher};
+use gba::util::rng::Pcg64;
+
+fn rand_tensor(rng: &mut Pcg64, shape: Vec<usize>, scale: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::new(shape, (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()).unwrap()
+}
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first; skipping");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let mut b = Bencher::new();
+
+    for (variant, threads) in [("tiny", 1usize), ("small", 1), ("deepfm", 1)] {
+        let Ok(dims) = manifest.dims(variant) else { continue };
+        let Ok(batches) = manifest.batches(variant) else { continue };
+        let batch = *batches.iter().max().unwrap();
+        let pool = EnginePool::start(&manifest, variant, threads).expect("engine");
+        let h = pool.handle();
+        let mut rng = Pcg64::seeded(3);
+        let emb = rand_tensor(&mut rng, vec![batch, dims.fields, dims.emb_dim], 0.3);
+        let params: Vec<HostTensor> =
+            dims.param_shapes().into_iter().map(|s| rand_tensor(&mut rng, s, 0.2)).collect();
+        let labels: Vec<f32> = (0..batch).map(|i| (i % 2) as f32).collect();
+
+        b.bench_units(&format!("pjrt train_step {variant} b{batch}"), batch as f64, || {
+            black_box(
+                h.train_step(batch, emb.clone(), params.clone(), labels.clone()).unwrap(),
+            );
+        });
+        b.bench_units(&format!("pjrt predict {variant} b{batch}"), batch as f64, || {
+            black_box(h.predict(batch, emb.clone(), params.clone()).unwrap());
+        });
+
+        let native = NativeModel::new(dims);
+        b.bench_units(&format!("native train_step {variant} b{batch}"), batch as f64, || {
+            black_box(native.train_step(&emb, &params, &labels));
+        });
+        pool.shutdown();
+    }
+    b.write_report("results/bench_runtime.json").ok();
+}

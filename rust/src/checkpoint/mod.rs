@@ -1,0 +1,205 @@
+//! Checkpointing: save / inherit base models (the switching protocol of
+//! Fig. 6 trains a base model in one mode, checkpoints it, and every
+//! compared mode inherits the same checkpoint).
+//!
+//! Binary format (little-endian, versioned):
+//!
+//! ```text
+//! magic "GBACKPT2" | header_len u32 | header json | dense blobs | rows
+//! ```
+//!
+//! Optimizer slots are deliberately *not* persisted: inheriting a
+//! checkpoint into a (possibly different) training mode starts fresh
+//! optimizer state, which is exactly the paper's switch semantics.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::embedding::RowMeta;
+use crate::ps::PsServer;
+use crate::runtime::{HostTensor, VariantDims};
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 8] = b"GBACKPT2";
+
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub dims: VariantDims,
+    pub dense: Vec<HostTensor>,
+    /// (key, embedding vector, metadata) — optimizer slots excluded.
+    pub emb_rows: Vec<(u64, Vec<f32>, RowMeta)>,
+    pub global_step: u64,
+}
+
+impl Checkpoint {
+    /// Snapshot a running PS.
+    pub fn from_ps(dims: VariantDims, ps: &PsServer) -> Checkpoint {
+        let mut emb_rows = Vec::new();
+        ps.emb.for_each_row(|key, vec, _state, meta| {
+            emb_rows.push((key, vec.to_vec(), meta));
+        });
+        // Deterministic order for byte-stable checkpoints.
+        emb_rows.sort_by_key(|(k, _, _)| *k);
+        Checkpoint { dims, dense: ps.dense_params(), emb_rows, global_step: ps.global_step() }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        let header = Json::obj()
+            .set("fields", self.dims.fields)
+            .set("emb_dim", self.dims.emb_dim)
+            .set("hidden1", self.dims.hidden1)
+            .set("hidden2", self.dims.hidden2)
+            .set("mlp_in", self.dims.mlp_in)
+            .set("global_step", self.global_step)
+            .set("n_rows", self.emb_rows.len())
+            .set(
+                "dense_shapes",
+                Json::Arr(
+                    self.dense
+                        .iter()
+                        .map(|t| Json::Arr(t.shape.iter().map(|&d| Json::from(d)).collect()))
+                        .collect(),
+                ),
+            );
+        let htext = header.to_string_compact();
+        f.write_all(&(htext.len() as u32).to_le_bytes())?;
+        f.write_all(htext.as_bytes())?;
+        for t in &self.dense {
+            for &x in &t.data {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        for (key, vec, meta) in &self.emb_rows {
+            f.write_all(&key.to_le_bytes())?;
+            f.write_all(&meta.last_update_step.to_le_bytes())?;
+            f.write_all(&meta.update_count.to_le_bytes())?;
+            for &x in vec {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        let u = |k: &str| -> Result<usize> {
+            header.get(k).and_then(Json::as_usize).with_context(|| format!("header.{k}"))
+        };
+        let dims = VariantDims {
+            fields: u("fields")?,
+            emb_dim: u("emb_dim")?,
+            hidden1: u("hidden1")?,
+            hidden2: u("hidden2")?,
+            mlp_in: u("mlp_in")?,
+        };
+        let global_step = u("global_step")? as u64;
+        let n_rows = u("n_rows")?;
+        let shapes: Vec<Vec<usize>> = header
+            .get("dense_shapes")
+            .and_then(Json::as_arr)
+            .context("dense_shapes")?
+            .iter()
+            .map(|s| s.as_arr().unwrap().iter().map(|d| d.as_usize().unwrap()).collect())
+            .collect();
+
+        let read_f32 = |f: &mut dyn Read, n: usize| -> Result<Vec<f32>> {
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        };
+        let mut dense = Vec::new();
+        for shape in shapes {
+            let n: usize = shape.iter().product();
+            dense.push(HostTensor { shape, data: read_f32(&mut f, n)? });
+        }
+        let mut emb_rows = Vec::with_capacity(n_rows);
+        let dim = dims.emb_dim;
+        for _ in 0..n_rows {
+            let mut k8 = [0u8; 8];
+            f.read_exact(&mut k8)?;
+            let key = u64::from_le_bytes(k8);
+            f.read_exact(&mut k8)?;
+            let last_update_step = u64::from_le_bytes(k8);
+            let mut c4 = [0u8; 4];
+            f.read_exact(&mut c4)?;
+            let update_count = u32::from_le_bytes(c4);
+            let vec = read_f32(&mut f, dim)?;
+            emb_rows.push((key, vec, RowMeta { last_update_step, update_count }));
+        }
+        Ok(Checkpoint { dims, dense, emb_rows, global_step })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let dims = VariantDims { fields: 2, emb_dim: 3, hidden1: 4, hidden2: 2, mlp_in: 9 };
+        Checkpoint {
+            dims,
+            dense: dims
+                .param_shapes()
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let n: usize = s.iter().product();
+                    HostTensor { shape: s, data: (0..n).map(|j| (i * 100 + j) as f32 * 0.5).collect() }
+                })
+                .collect(),
+            emb_rows: vec![
+                (7, vec![1.0, 2.0, 3.0], RowMeta { last_update_step: 5, update_count: 2 }),
+                (42, vec![-1.0, 0.5, 0.25], RowMeta { last_update_step: 9, update_count: 7 }),
+            ],
+            global_step: 123,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = std::env::temp_dir().join("gba_ckpt_test.bin");
+        let c = sample();
+        c.save(&path).unwrap();
+        let r = Checkpoint::load(&path).unwrap();
+        assert_eq!(r.dims, c.dims);
+        assert_eq!(r.global_step, 123);
+        assert_eq!(r.dense.len(), 6);
+        for (a, b) in r.dense.iter().zip(&c.dense) {
+            assert_eq!(a, b);
+        }
+        assert_eq!(r.emb_rows.len(), 2);
+        assert_eq!(r.emb_rows[1].0, 42);
+        assert_eq!(r.emb_rows[1].1, vec![-1.0, 0.5, 0.25]);
+        assert_eq!(r.emb_rows[0].2.update_count, 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("gba_ckpt_garbage.bin");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

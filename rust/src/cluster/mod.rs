@@ -1,0 +1,218 @@
+//! Shared-cluster model: diurnal load traces and straggler behavior.
+//!
+//! Substitutes the paper's production cluster (Fig. 1: CPU utilization over
+//! a day, and the resulting QPS of each training mode). What matters for
+//! reproducing the *shape* of Fig. 1 / Table 5.2 is the relative speed
+//! distribution across workers and time:
+//!
+//! * a **diurnal utilization curve** u(t) ∈ [0,1] (vacant at night, busy in
+//!   the day),
+//! * **per-worker heterogeneity** (lognormal speed factors — some machines
+//!   are just slower),
+//! * **transient stragglers** whose frequency and severity grow with
+//!   utilization (co-located workloads steal CPU).
+//!
+//! Synchronous training is bound by `max` over workers per step; fully
+//! asynchronous modes by the *sum of rates* — exactly the gap the paper's
+//! Observation 1 describes.
+
+use crate::config::ClusterConfig;
+use crate::util::rng::Pcg64;
+
+pub const DAY_SECS: f64 = 86_400.0;
+
+/// Cluster-wide utilization over time.
+#[derive(Clone, Debug)]
+pub enum LoadTrace {
+    /// Constant utilization.
+    Flat(f64),
+    /// Fig. 1-shaped day: low ~04:00, peak ~15:00 (+ second evening bump).
+    Diurnal,
+    /// Flat `base` with a heavy spike in [start, end) (examples).
+    Spike { base: f64, level: f64, start_sec: f64, end_sec: f64 },
+}
+
+impl LoadTrace {
+    pub fn from_name(name: &str) -> LoadTrace {
+        match name {
+            "flat" => LoadTrace::Flat(0.5),
+            "spike" => LoadTrace::Spike {
+                base: 0.3,
+                level: 0.9,
+                start_sec: 8.0 * 3600.0,
+                end_sec: 16.0 * 3600.0,
+            },
+            _ => LoadTrace::Diurnal,
+        }
+    }
+
+    /// Utilization in [0, 1] at time-of-day `t_sec` (wraps at 24h).
+    pub fn utilization(&self, t_sec: f64) -> f64 {
+        match *self {
+            LoadTrace::Flat(u) => u.clamp(0.0, 1.0),
+            LoadTrace::Spike { base, level, start_sec, end_sec } => {
+                let t = t_sec.rem_euclid(DAY_SECS);
+                if t >= start_sec && t < end_sec {
+                    level.clamp(0.0, 1.0)
+                } else {
+                    base.clamp(0.0, 1.0)
+                }
+            }
+            LoadTrace::Diurnal => {
+                let t = t_sec.rem_euclid(DAY_SECS) / DAY_SECS; // [0,1)
+                // Main daytime hump peaking ~15:00 plus a smaller evening
+                // bump ~21:00; trough ~04:30. Mirrors Fig. 1's CPU curve.
+                let main = (std::f64::consts::TAU * (t - 0.625)).cos(); // peak 15:00
+                let evening = 0.35 * (2.0 * std::f64::consts::TAU * (t - 0.875)).cos();
+                (0.52 + 0.30 * main + 0.08 * evening).clamp(0.05, 0.98)
+            }
+        }
+    }
+}
+
+/// Per-worker compute-time model.
+#[derive(Clone, Debug)]
+pub struct StragglerModel {
+    pub trace: LoadTrace,
+    /// Mean ms for one local batch on an unloaded, average worker.
+    pub base_ms: f64,
+    /// Static per-worker speed factors (lognormal(0, sigma)).
+    factors: Vec<f64>,
+    /// Jitter sigma for per-batch lognormal noise.
+    jitter_sigma: f64,
+}
+
+impl StragglerModel {
+    pub fn new(cfg: &ClusterConfig, n_workers: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0xC1u64);
+        let factors =
+            (0..n_workers).map(|_| rng.lognormal(0.0, cfg.hetero_sigma)).collect();
+        StragglerModel {
+            trace: LoadTrace::from_name(&cfg.trace),
+            base_ms: cfg.base_compute_ms,
+            factors,
+            jitter_sigma: 0.15,
+        }
+    }
+
+    /// Deterministic constant-time model (tests).
+    pub fn constant(base_ms: f64, n_workers: usize) -> Self {
+        StragglerModel {
+            trace: LoadTrace::Flat(0.0),
+            base_ms,
+            factors: vec![1.0; n_workers],
+            jitter_sigma: 0.0,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Slowdown multiplier implied by utilization: at u→1 a worker competes
+    /// with co-located jobs for cycles. Calibrated so u=0.2 ≈ 1.1x and
+    /// u=0.9 ≈ 4x.
+    fn load_multiplier(u: f64) -> f64 {
+        1.0 / (1.15 - u).clamp(0.08, 1.15) * 1.05
+    }
+
+    /// Reference local batch: `base_ms` is the cost of one batch of this
+    /// size; other batch sizes scale linearly (compute-bound workers).
+    pub const REF_BATCH: usize = 256;
+
+    /// Compute time (ms) for a batch of `batch` samples on worker `w`.
+    pub fn compute_ms_batch(
+        &self,
+        w: usize,
+        t_sec: f64,
+        batch: usize,
+        rng: &mut Pcg64,
+    ) -> f64 {
+        self.compute_ms(w, t_sec, rng) * batch as f64 / Self::REF_BATCH as f64
+    }
+
+    /// Compute time (ms) for worker `w` starting a reference-sized batch at
+    /// time-of-day `t_sec`. Uses `rng` for the per-batch jitter and
+    /// transient straggler tail.
+    pub fn compute_ms(&self, w: usize, t_sec: f64, rng: &mut Pcg64) -> f64 {
+        let u = self.trace.utilization(t_sec);
+        let mut ms = self.base_ms * self.factors[w % self.factors.len()] * Self::load_multiplier(u);
+        if self.jitter_sigma > 0.0 {
+            ms *= rng.lognormal(0.0, self.jitter_sigma);
+            // Transient straggler: probability and severity grow with load.
+            let p_tail = 0.01 + 0.10 * u;
+            if rng.bernoulli(p_tail) {
+                ms *= 2.0 + 8.0 * u * rng.next_f64();
+            }
+        }
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_shape() {
+        let t = LoadTrace::Diurnal;
+        let night = t.utilization(4.5 * 3600.0);
+        let peak = t.utilization(15.0 * 3600.0);
+        assert!(night < 0.4, "night={night}");
+        assert!(peak > 0.7, "peak={peak}");
+        // wraps across days
+        assert!((t.utilization(0.0) - t.utilization(DAY_SECS)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spike_trace_window() {
+        let t = LoadTrace::from_name("spike");
+        assert!(t.utilization(7.0 * 3600.0) < 0.4);
+        assert!(t.utilization(12.0 * 3600.0) > 0.8);
+    }
+
+    #[test]
+    fn compute_time_grows_with_load() {
+        let cfg = ClusterConfig {
+            trace: "diurnal".into(),
+            base_compute_ms: 10.0,
+            hetero_sigma: 0.0,
+            ps_apply_ms: 0.5,
+        };
+        let m = StragglerModel::new(&cfg, 4, 1);
+        let mut rng = Pcg64::seeded(2);
+        let night: f64 =
+            (0..500).map(|_| m.compute_ms(0, 4.5 * 3600.0, &mut rng)).sum::<f64>() / 500.0;
+        let peak: f64 =
+            (0..500).map(|_| m.compute_ms(0, 15.0 * 3600.0, &mut rng)).sum::<f64>() / 500.0;
+        assert!(peak > night * 1.8, "night={night} peak={peak}");
+    }
+
+    #[test]
+    fn heterogeneity_spreads_workers() {
+        let cfg = ClusterConfig {
+            trace: "flat".into(),
+            base_compute_ms: 10.0,
+            hetero_sigma: 0.5,
+            ps_apply_ms: 0.5,
+        };
+        let m = StragglerModel::new(&cfg, 64, 7);
+        let mut rng = Pcg64::seeded(3);
+        let times: Vec<f64> = (0..64).map(|w| m.compute_ms(w, 0.0, &mut rng)).collect();
+        let fastest = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let slowest = times.iter().cloned().fold(0.0, f64::max);
+        assert!(slowest / fastest > 1.5);
+    }
+
+    #[test]
+    fn constant_model_is_constant() {
+        let m = StragglerModel::constant(5.0, 2);
+        let mut rng = Pcg64::seeded(4);
+        for w in 0..2 {
+            for t in [0.0, 3600.0, 50_000.0] {
+                let ms = m.compute_ms(w, t, &mut rng);
+                assert!((ms - 5.0 * StragglerModel::load_multiplier(0.0)).abs() < 1e-9, "{ms}");
+            }
+        }
+    }
+}

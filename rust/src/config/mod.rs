@@ -1,0 +1,144 @@
+//! Typed configuration system.
+//!
+//! Experiments are driven by TOML files under `configs/` (one per paper
+//! task, mirroring Table 5.1). A config fully determines a run: model
+//! hyper-shapes (validated against `artifacts/manifest.json` when the PJRT
+//! backend is used), synthetic-data parameters, per-mode worker counts and
+//! batch sizes, optimizer/lr pairs and cluster-simulation parameters.
+
+mod schema;
+
+pub use schema::*;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::util::toml;
+
+impl ExperimentConfig {
+    /// Load and validate a config file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ExperimentConfig> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = toml::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let cfg = Self::from_doc(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from an in-memory TOML string (tests, embedded defaults).
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig> {
+        let doc = toml::parse(text)?;
+        let cfg = Self::from_doc(&doc)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+name = "unit-test-task"
+seed = 42
+
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 32
+hidden2 = 16
+vocab_size = 10000
+zipf_s = 1.1
+
+[data]
+days_base = 2
+days_eval = 2
+samples_per_day = 5000
+teacher_seed = 7
+label_noise = 0.05
+drift = 0.02
+
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.001
+lr_async = 0.002
+eval_batch = 256
+eval_samples = 2000
+
+[mode.sync]
+workers = 4
+local_batch = 64
+
+[mode.async]
+workers = 8
+local_batch = 16
+
+[mode.gba]
+workers = 8
+local_batch = 32
+iota = 3
+
+[mode.hop_bs]
+workers = 8
+local_batch = 32
+bound = 2
+
+[mode.bsp]
+workers = 8
+local_batch = 32
+aggregate = 8
+
+[mode.hop_bw]
+workers = 8
+local_batch = 32
+backup = 2
+
+[cluster]
+trace = "diurnal"
+base_compute_ms = 2.0
+hetero_sigma = 0.3
+ps_apply_ms = 0.5
+"#;
+
+    #[test]
+    fn parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "unit-test-task");
+        assert_eq!(cfg.model.fields, 4);
+        assert_eq!(cfg.mode(ModeKind::Sync).workers, 4);
+        assert_eq!(cfg.mode(ModeKind::Gba).iota, 3);
+        // Global batch consistency: sync 4*64 == gba 8*32*... M = 256/32 = 8
+        assert_eq!(cfg.global_batch_sync(), 256);
+        assert_eq!(cfg.gba_m(), 8);
+    }
+
+    #[test]
+    fn gba_m_must_divide() {
+        let bad = SAMPLE.replace("local_batch = 32\niota = 3", "local_batch = 48\niota = 3");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn unknown_optimizer_rejected() {
+        let bad = SAMPLE.replace("optimizer = \"adam\"", "optimizer = \"lamb\"");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_mode_rejected() {
+        let bad = SAMPLE.replace("[mode.sync]", "[mode_sync_typo]");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn mode_kind_roundtrip() {
+        for k in ModeKind::ALL {
+            assert_eq!(ModeKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(ModeKind::parse("nope").is_err());
+    }
+}

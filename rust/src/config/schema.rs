@@ -1,0 +1,321 @@
+//! Config structs and TOML binding.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::toml::TomlDoc;
+
+/// The six training modes evaluated in the paper (Table 5.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ModeKind {
+    Sync,
+    Async,
+    HopBs,
+    Bsp,
+    HopBw,
+    Gba,
+}
+
+impl ModeKind {
+    pub const ALL: [ModeKind; 6] =
+        [ModeKind::Sync, ModeKind::Async, ModeKind::HopBs, ModeKind::Bsp, ModeKind::HopBw, ModeKind::Gba];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModeKind::Sync => "sync",
+            ModeKind::Async => "async",
+            ModeKind::HopBs => "hop_bs",
+            ModeKind::Bsp => "bsp",
+            ModeKind::HopBw => "hop_bw",
+            ModeKind::Gba => "gba",
+        }
+    }
+
+    /// Display name as the paper prints it.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            ModeKind::Sync => "Sync.",
+            ModeKind::Async => "Async.",
+            ModeKind::HopBs => "Hop-BS",
+            ModeKind::Bsp => "BSP",
+            ModeKind::HopBw => "Hop-BW",
+            ModeKind::Gba => "GBA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ModeKind> {
+        Ok(match s {
+            "sync" => ModeKind::Sync,
+            "async" => ModeKind::Async,
+            "hop_bs" | "hop-bs" => ModeKind::HopBs,
+            "bsp" => ModeKind::Bsp,
+            "hop_bw" | "hop-bw" => ModeKind::HopBw,
+            "gba" => ModeKind::Gba,
+            _ => bail!("unknown mode '{s}'"),
+        })
+    }
+
+    /// Asynchronous-family modes use the async optimizer/lr pair
+    /// (Table 5.1: Adagrad for Async., Adam for the rest).
+    pub fn is_fully_async(&self) -> bool {
+        matches!(self, ModeKind::Async)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimKind {
+    Sgd,
+    Adagrad,
+    Adam,
+}
+
+impl OptimKind {
+    pub fn parse(s: &str) -> Result<OptimKind> {
+        Ok(match s {
+            "sgd" => OptimKind::Sgd,
+            "adagrad" => OptimKind::Adagrad,
+            "adam" => OptimKind::Adam,
+            _ => bail!("unknown optimizer '{s}'"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OptimKind::Sgd => "sgd",
+            OptimKind::Adagrad => "adagrad",
+            OptimKind::Adam => "adam",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// AOT variant name in artifacts/manifest.json (PJRT backend).
+    pub variant: String,
+    pub fields: usize,
+    pub emb_dim: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    /// Per-field ID space for the synthetic generator (hash-expandable at
+    /// the store level; this bounds the generator, not the table).
+    pub vocab_size: u64,
+    /// Zipf exponent of the ID popularity distribution (Fig. 4).
+    pub zipf_s: f64,
+}
+
+impl ModelConfig {
+    pub fn mlp_in(&self) -> usize {
+        self.fields * self.emb_dim + self.emb_dim
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub days_base: usize,
+    pub days_eval: usize,
+    pub samples_per_day: usize,
+    pub teacher_seed: u64,
+    /// Probability a label is flipped (bounds achievable AUC below 1).
+    pub label_noise: f64,
+    /// Per-day teacher drift magnitude (continual-learning signal).
+    pub drift: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Optimizer for sync / semi-sync modes (Table 5.1: Adam).
+    pub optimizer: OptimKind,
+    /// Optimizer for fully-async mode (Table 5.1: Adagrad).
+    pub optimizer_async: OptimKind,
+    pub lr: f64,
+    pub lr_async: f64,
+    pub eval_batch: usize,
+    /// Samples evaluated per AUC measurement.
+    pub eval_samples: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ModeConfig {
+    pub workers: usize,
+    pub local_batch: usize,
+    /// GBA: staleness tolerance ι (Eqn. 1).
+    pub iota: u64,
+    /// Hop-BS: staleness bound b1.
+    pub bound: u64,
+    /// BSP: aggregation count b2.
+    pub aggregate: usize,
+    /// Hop-BW: dropped (backup) gradients per step b3.
+    pub backup: usize,
+    /// GBA: explicit buffer capacity M. Default (None) derives
+    /// M = G_s / B_a per §4.1; Fig. 8 sets M = workers to let the global
+    /// batch diverge from the sync global batch.
+    pub m_override: Option<usize>,
+}
+
+impl Default for ModeConfig {
+    fn default() -> Self {
+        ModeConfig {
+            workers: 1,
+            local_batch: 1,
+            iota: 3,
+            bound: 2,
+            aggregate: 1,
+            backup: 0,
+            m_override: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Load-trace shape: "diurnal" | "flat" | "spike".
+    pub trace: String,
+    /// Mean compute time of one local batch on an unloaded worker (ms).
+    pub base_compute_ms: f64,
+    /// Lognormal sigma of worker heterogeneity.
+    pub hetero_sigma: f64,
+    /// PS time to apply one aggregated update (ms).
+    pub ps_apply_ms: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    pub model: ModelConfig,
+    pub data: DataConfig,
+    pub train: TrainConfig,
+    pub modes: Vec<(ModeKind, ModeConfig)>,
+    pub cluster: ClusterConfig,
+}
+
+impl ExperimentConfig {
+    pub fn mode(&self, kind: ModeKind) -> ModeConfig {
+        self.modes
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map(|(_, c)| *c)
+            .unwrap_or_else(|| panic!("mode {kind:?} not configured"))
+    }
+
+    pub fn has_mode(&self, kind: ModeKind) -> bool {
+        self.modes.iter().any(|(k, _)| *k == kind)
+    }
+
+    /// G_s = B_s × N_s (§4.1).
+    pub fn global_batch_sync(&self) -> usize {
+        let m = self.mode(ModeKind::Sync);
+        m.workers * m.local_batch
+    }
+
+    /// M = G_s / B_a — the gradient-buffer capacity (§4.1).
+    pub fn gba_m(&self) -> usize {
+        self.global_batch_sync() / self.mode(ModeKind::Gba).local_batch
+    }
+
+    /// Effective M honoring an explicit `m` override (Fig. 8).
+    pub fn gba_m_effective(&self) -> usize {
+        let gba = self.mode(ModeKind::Gba);
+        gba.m_override.unwrap_or_else(|| self.global_batch_sync() / gba.local_batch)
+    }
+
+    pub(crate) fn from_doc(doc: &TomlDoc) -> Result<ExperimentConfig> {
+        let req_str =
+            |k: &str| -> Result<String> { Ok(doc.get_str(k).with_context(|| format!("missing {k}"))?.to_string()) };
+        let req_usize =
+            |k: &str| -> Result<usize> { doc.get_usize(k).with_context(|| format!("missing {k}")) };
+        let req_f64 =
+            |k: &str| -> Result<f64> { doc.get_f64(k).with_context(|| format!("missing {k}")) };
+
+        let model = ModelConfig {
+            variant: req_str("model.variant")?,
+            fields: req_usize("model.fields")?,
+            emb_dim: req_usize("model.emb_dim")?,
+            hidden1: req_usize("model.hidden1")?,
+            hidden2: req_usize("model.hidden2")?,
+            vocab_size: req_usize("model.vocab_size")? as u64,
+            zipf_s: req_f64("model.zipf_s")?,
+        };
+        let data = DataConfig {
+            days_base: req_usize("data.days_base")?,
+            days_eval: req_usize("data.days_eval")?,
+            samples_per_day: req_usize("data.samples_per_day")?,
+            teacher_seed: req_usize("data.teacher_seed")? as u64,
+            label_noise: doc.get_f64("data.label_noise").unwrap_or(0.05),
+            drift: doc.get_f64("data.drift").unwrap_or(0.0),
+        };
+        let train = TrainConfig {
+            optimizer: OptimKind::parse(&req_str("train.optimizer")?)?,
+            optimizer_async: OptimKind::parse(&req_str("train.optimizer_async")?)?,
+            lr: req_f64("train.lr")?,
+            lr_async: doc.get_f64("train.lr_async").unwrap_or(req_f64("train.lr")?),
+            eval_batch: doc.get_usize("train.eval_batch").unwrap_or(256),
+            eval_samples: doc.get_usize("train.eval_samples").unwrap_or(10_000),
+        };
+        let mut modes = Vec::new();
+        for kind in ModeKind::ALL {
+            let pfx = format!("mode.{}", kind.as_str());
+            if !doc.has_table(&pfx) {
+                continue;
+            }
+            let g = |k: &str| doc.get_usize(&format!("{pfx}.{k}"));
+            let cfg = ModeConfig {
+                workers: g("workers").with_context(|| format!("{pfx}.workers"))?,
+                local_batch: g("local_batch").with_context(|| format!("{pfx}.local_batch"))?,
+                iota: g("iota").unwrap_or(3) as u64,
+                bound: g("bound").unwrap_or(2) as u64,
+                aggregate: g("aggregate").unwrap_or(1),
+                backup: g("backup").unwrap_or(0),
+                m_override: g("m"),
+            };
+            modes.push((kind, cfg));
+        }
+        let cluster = ClusterConfig {
+            trace: doc.get_str("cluster.trace").unwrap_or("diurnal").to_string(),
+            base_compute_ms: doc.get_f64("cluster.base_compute_ms").unwrap_or(2.0),
+            hetero_sigma: doc.get_f64("cluster.hetero_sigma").unwrap_or(0.3),
+            ps_apply_ms: doc.get_f64("cluster.ps_apply_ms").unwrap_or(0.5),
+        };
+        Ok(ExperimentConfig {
+            name: req_str("name")?,
+            seed: req_usize("seed")? as u64,
+            model,
+            data,
+            train,
+            modes,
+            cluster,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.model.fields == 0 || self.model.emb_dim == 0 {
+            bail!("model dims must be positive");
+        }
+        for need in [ModeKind::Sync, ModeKind::Gba] {
+            if !self.has_mode(need) {
+                bail!("config must define [mode.{}]", need.as_str());
+            }
+        }
+        for (kind, m) in &self.modes {
+            if m.workers == 0 || m.local_batch == 0 {
+                bail!("mode {} needs workers/local_batch > 0", kind.as_str());
+            }
+        }
+        let gs = self.global_batch_sync();
+        let gba = self.mode(ModeKind::Gba);
+        if gba.m_override.is_none() && gs % gba.local_batch != 0 {
+            bail!(
+                "GBA local batch {} must divide the sync global batch {gs} \
+                 (M = Gs/Ba must be integral, §4.1)",
+                gba.local_batch
+            );
+        }
+        // Paper: N_a = M avoids intrinsic staleness; warn-level check only.
+        if !(0.0..=0.5).contains(&self.data.label_noise) {
+            bail!("label_noise must be in [0, 0.5]");
+        }
+        if self.model.zipf_s <= 0.0 {
+            bail!("zipf_s must be positive");
+        }
+        Ok(())
+    }
+}

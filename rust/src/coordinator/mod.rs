@@ -1,0 +1,155 @@
+//! Training-mode coordination policies — the paper's system contribution.
+//!
+//! Every distributed training mode in the paper (§5.1) is expressed as a
+//! pure state machine over pull/push events, independent of transport and
+//! of time. The same policy objects drive
+//!
+//! * the **threaded PS runtime** (`ps`, `worker`) for real training, and
+//! * the **discrete-event cluster simulator** (`sim`) for the 100–800
+//!   worker QPS/staleness experiments,
+//!
+//! which is what makes the policy layer property-testable: invariants are
+//! checked on the state machine itself, not on timing-dependent behavior.
+//!
+//! | mode    | pull gating                        | aggregation trigger     | staleness handling |
+//! |---------|------------------------------------|-------------------------|--------------------|
+//! | Sync    | one batch per worker per step      | all `N` grads           | none possible      |
+//! | Async   | none                               | every grad              | unbounded          |
+//! | Hop-BS  | fastest ≤ slowest + b1 (SSP)       | every grad              | bounded by b1      |
+//! | BSP     | none                               | every `b2` grads        | unbounded          |
+//! | Hop-BW  | one batch per worker per step      | first `N − b3` of cohort| late grads dropped |
+//! | GBA     | none (token list)                  | buffer of `M` grads     | decay `f(τ,k)` (Eqn. 1) |
+
+pub mod modes;
+pub mod switch;
+
+pub use modes::{make_policy, AsyncPolicy, BspPolicy, GbaPolicy, HopBsPolicy, HopBwPolicy, SyncPolicy};
+
+use crate::config::ModeKind;
+
+pub type WorkerId = usize;
+
+/// Result of a worker's pull request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PullDecision {
+    /// Proceed; attach this token to the computed gradient.
+    Token(u64),
+    /// Blocked (sync barrier / SSP bound); retry after the next apply.
+    Wait,
+}
+
+/// What to do with a pushed gradient.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushAction {
+    /// Discard (stale cohort — Hop-BW stragglers).
+    Drop,
+    /// Admit to the gradient buffer; no aggregation yet.
+    Buffer,
+    /// Admit and flush the buffer now (aggregate + apply).
+    FlushNow,
+}
+
+/// Per-entry aggregation weights for a flush.
+#[derive(Clone, Debug)]
+pub struct FlushSpec {
+    /// Weight of each buffered gradient; 0.0 = excluded (counted dropped).
+    /// GBA's Eqn. (1) is the binary {0,1} case; see `DecayStrategy`.
+    pub weights: Vec<f32>,
+    /// Divisor for the dense-gradient weighted sum (Algorithm 2 L22:
+    /// GBA divides by `N_a = M` regardless of exclusions).
+    pub dense_divisor: f32,
+}
+
+/// GBA staleness-decay strategies (Eqn. 1 is `Threshold`; the others are
+/// the ablations discussed in §4.1 "GBA could employ different staleness
+/// decay strategies").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DecayStrategy {
+    /// f = 1 if k − τ ≤ ι else 0 (the paper's Eqn. 1).
+    Threshold { iota: u64 },
+    /// f = max(0, 1 − (k − τ)/ι): linear fade to zero at ι.
+    Linear { iota: u64 },
+    /// f = alpha^(k − τ): exponential decay, never fully dropped.
+    Exponential { alpha: f32 },
+}
+
+impl DecayStrategy {
+    /// Weight for a gradient with token `tau` applied at global step `k`.
+    pub fn weight(&self, tau: u64, k: u64) -> f32 {
+        let s = k.saturating_sub(tau);
+        match *self {
+            DecayStrategy::Threshold { iota } => {
+                if s > iota {
+                    0.0
+                } else {
+                    1.0
+                }
+            }
+            DecayStrategy::Linear { iota } => {
+                if s >= iota {
+                    0.0
+                } else {
+                    1.0 - s as f32 / iota as f32
+                }
+            }
+            DecayStrategy::Exponential { alpha } => alpha.powi(s as i32),
+        }
+    }
+}
+
+/// The mode state machine. All methods are called under the PS control
+/// lock (threaded runtime) or from the single-threaded simulator.
+pub trait ModePolicy: Send {
+    fn kind(&self) -> ModeKind;
+
+    /// Worker `w` requests a batch/token.
+    fn on_pull(&mut self, w: WorkerId) -> PullDecision;
+
+    /// Gradient with `token` arrives from worker `w`.
+    fn on_push(&mut self, w: WorkerId, token: u64) -> PushAction;
+
+    /// Decide aggregation weights for the buffered tokens (called when
+    /// `on_push` returned `FlushNow`, or at end-of-data force-flush).
+    fn flush_spec(&mut self, tokens: &[u64]) -> FlushSpec;
+
+    /// The flush was applied; the global step advanced.
+    fn on_applied(&mut self);
+
+    /// Current global step `k` (number of applied aggregated updates).
+    fn global_step(&self) -> u64;
+
+    /// Worker failed/recovered: forget its in-flight state (Appendix B:
+    /// "the disappearance of a specific token would not change the
+    /// correctness").
+    fn on_worker_reset(&mut self, w: WorkerId);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_threshold_matches_eqn1() {
+        let d = DecayStrategy::Threshold { iota: 3 };
+        assert_eq!(d.weight(5, 5), 1.0); // fresh
+        assert_eq!(d.weight(2, 5), 1.0); // k - τ = 3 = ι -> keep
+        assert_eq!(d.weight(1, 5), 0.0); // k - τ = 4 > ι -> drop
+        assert_eq!(d.weight(9, 5), 1.0); // token ahead of k: fresh
+    }
+
+    #[test]
+    fn decay_linear_fades() {
+        let d = DecayStrategy::Linear { iota: 4 };
+        assert_eq!(d.weight(10, 10), 1.0);
+        assert_eq!(d.weight(8, 10), 0.5);
+        assert_eq!(d.weight(6, 10), 0.0);
+    }
+
+    #[test]
+    fn decay_exponential_never_zero() {
+        let d = DecayStrategy::Exponential { alpha: 0.5 };
+        assert_eq!(d.weight(10, 10), 1.0);
+        assert_eq!(d.weight(9, 10), 0.5);
+        assert!(d.weight(0, 10) > 0.0);
+    }
+}

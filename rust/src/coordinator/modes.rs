@@ -1,0 +1,532 @@
+//! The six training-mode policies of the paper's evaluation (§5.1).
+
+use super::{DecayStrategy, FlushSpec, ModePolicy, PullDecision, PushAction, WorkerId};
+use crate::config::{ModeConfig, ModeKind};
+
+// ---------------------------------------------------------------------------
+// Sync — all-reduce-style synchronous data parallelism (emulated over PS)
+// ---------------------------------------------------------------------------
+
+/// Each global step aggregates exactly one gradient from each of the `N`
+/// workers computed on the same parameter version. Workers that finished
+/// wait at the barrier — which is why stragglers dominate (Obs. 1).
+pub struct SyncPolicy {
+    n: usize,
+    step: u64,
+    /// Whether worker w has pulled its batch for the current step.
+    pulled: Vec<bool>,
+    buffered: usize,
+}
+
+impl SyncPolicy {
+    pub fn new(n: usize) -> Self {
+        SyncPolicy { n, step: 0, pulled: vec![false; n], buffered: 0 }
+    }
+}
+
+impl ModePolicy for SyncPolicy {
+    fn kind(&self) -> ModeKind {
+        ModeKind::Sync
+    }
+
+    fn on_pull(&mut self, w: WorkerId) -> PullDecision {
+        if self.pulled[w] {
+            PullDecision::Wait
+        } else {
+            self.pulled[w] = true;
+            PullDecision::Token(self.step)
+        }
+    }
+
+    fn on_push(&mut self, _w: WorkerId, token: u64) -> PushAction {
+        if token < self.step {
+            // A cohort completed without this gradient. Possible only
+            // after a worker reset let another worker double-fill the
+            // barrier (Appendix B tolerates lost/duplicated tokens);
+            // treat the late arrival like a Hop-BW straggler: drop.
+            return PushAction::Drop;
+        }
+        self.buffered += 1;
+        if self.buffered >= self.n {
+            PushAction::FlushNow
+        } else {
+            PushAction::Buffer
+        }
+    }
+
+    fn flush_spec(&mut self, tokens: &[u64]) -> FlushSpec {
+        FlushSpec { weights: vec![1.0; tokens.len()], dense_divisor: tokens.len() as f32 }
+    }
+
+    fn on_applied(&mut self) {
+        self.step += 1;
+        self.pulled.fill(false);
+        self.buffered = 0;
+    }
+
+    fn global_step(&self) -> u64 {
+        self.step
+    }
+
+    fn on_worker_reset(&mut self, w: WorkerId) {
+        // The worker lost its in-flight batch; allow a fresh pull so the
+        // barrier is not dead-locked.
+        self.pulled[w] = false;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Async — canonical asynchronous PS training
+// ---------------------------------------------------------------------------
+
+/// Every gradient is applied immediately; token records the parameter
+/// version the worker pulled, so `k − τ` is the classic gradient staleness.
+pub struct AsyncPolicy {
+    step: u64,
+}
+
+impl AsyncPolicy {
+    pub fn new() -> Self {
+        AsyncPolicy { step: 0 }
+    }
+}
+
+impl Default for AsyncPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModePolicy for AsyncPolicy {
+    fn kind(&self) -> ModeKind {
+        ModeKind::Async
+    }
+    fn on_pull(&mut self, _w: WorkerId) -> PullDecision {
+        PullDecision::Token(self.step)
+    }
+    fn on_push(&mut self, _w: WorkerId, _token: u64) -> PushAction {
+        PushAction::FlushNow
+    }
+    fn flush_spec(&mut self, tokens: &[u64]) -> FlushSpec {
+        FlushSpec { weights: vec![1.0; tokens.len()], dense_divisor: tokens.len() as f32 }
+    }
+    fn on_applied(&mut self) {
+        self.step += 1;
+    }
+    fn global_step(&self) -> u64 {
+        self.step
+    }
+    fn on_worker_reset(&mut self, _w: WorkerId) {}
+}
+
+// ---------------------------------------------------------------------------
+// Hop-BS — bounded staleness (SSP), Luo et al. 2019
+// ---------------------------------------------------------------------------
+
+/// Gradients apply immediately (like async) but the fastest worker may be
+/// at most `b1` *local clocks* ahead of the slowest — fast workers block.
+pub struct HopBsPolicy {
+    bound: u64,
+    step: u64,
+    /// Local clock per worker: batches completed.
+    clock: Vec<u64>,
+    /// In-flight pulls count toward the clock gap check.
+    inflight: Vec<u64>,
+}
+
+impl HopBsPolicy {
+    pub fn new(n: usize, bound: u64) -> Self {
+        HopBsPolicy { bound, step: 0, clock: vec![0; n], inflight: vec![0; n] }
+    }
+
+    fn min_clock(&self) -> u64 {
+        self.clock.iter().copied().min().unwrap_or(0)
+    }
+}
+
+impl ModePolicy for HopBsPolicy {
+    fn kind(&self) -> ModeKind {
+        ModeKind::HopBs
+    }
+
+    fn on_pull(&mut self, w: WorkerId) -> PullDecision {
+        // Admit only if completing this batch keeps the fastest-slowest
+        // clock difference within b1: (clock + inflight + 1) - min <= b1.
+        let projected = self.clock[w] + self.inflight[w];
+        if projected >= self.min_clock() + self.bound {
+            return PullDecision::Wait;
+        }
+        self.inflight[w] += 1;
+        PullDecision::Token(self.step)
+    }
+
+    fn on_push(&mut self, w: WorkerId, _token: u64) -> PushAction {
+        self.clock[w] += 1;
+        self.inflight[w] = self.inflight[w].saturating_sub(1);
+        PushAction::FlushNow
+    }
+
+    fn flush_spec(&mut self, tokens: &[u64]) -> FlushSpec {
+        FlushSpec { weights: vec![1.0; tokens.len()], dense_divisor: tokens.len() as f32 }
+    }
+
+    fn on_applied(&mut self) {
+        self.step += 1;
+    }
+
+    fn global_step(&self) -> u64 {
+        self.step
+    }
+
+    fn on_worker_reset(&mut self, w: WorkerId) {
+        self.inflight[w] = 0;
+        // Bring the lost worker's clock up so it cannot stall the bound.
+        self.clock[w] = self.min_clock().max(self.clock[w]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BSP — asynchronous bulk synchronous parallel (aggregate b2, any version)
+// ---------------------------------------------------------------------------
+
+/// Aggregates a pre-set number `b2` of gradients before applying,
+/// regardless of gradient version (§5.1).
+pub struct BspPolicy {
+    b2: usize,
+    step: u64,
+    buffered: usize,
+}
+
+impl BspPolicy {
+    pub fn new(b2: usize) -> Self {
+        BspPolicy { b2: b2.max(1), step: 0, buffered: 0 }
+    }
+}
+
+impl ModePolicy for BspPolicy {
+    fn kind(&self) -> ModeKind {
+        ModeKind::Bsp
+    }
+    fn on_pull(&mut self, _w: WorkerId) -> PullDecision {
+        PullDecision::Token(self.step)
+    }
+    fn on_push(&mut self, _w: WorkerId, _token: u64) -> PushAction {
+        self.buffered += 1;
+        if self.buffered >= self.b2 {
+            PushAction::FlushNow
+        } else {
+            PushAction::Buffer
+        }
+    }
+    fn flush_spec(&mut self, tokens: &[u64]) -> FlushSpec {
+        FlushSpec { weights: vec![1.0; tokens.len()], dense_divisor: self.b2 as f32 }
+    }
+    fn on_applied(&mut self) {
+        self.step += 1;
+        self.buffered = 0;
+    }
+    fn global_step(&self) -> u64 {
+        self.step
+    }
+    fn on_worker_reset(&mut self, _w: WorkerId) {}
+}
+
+// ---------------------------------------------------------------------------
+// Hop-BW — backup workers: drop the b3 slowest gradients each step
+// ---------------------------------------------------------------------------
+
+/// Synchronous cohorts of one batch per worker, but each step applies as
+/// soon as the first `N − b3` gradients arrive; late ones are discarded
+/// ("ignores the gradients from the stragglers", §5.1 / Hop-BW).
+pub struct HopBwPolicy {
+    n: usize,
+    b3: usize,
+    step: u64,
+    pulled: Vec<bool>,
+    buffered: usize,
+}
+
+impl HopBwPolicy {
+    pub fn new(n: usize, b3: usize) -> Self {
+        assert!(b3 < n, "backup count must be < workers");
+        HopBwPolicy { n, b3, step: 0, pulled: vec![false; n], buffered: 0 }
+    }
+
+    fn quorum(&self) -> usize {
+        self.n - self.b3
+    }
+}
+
+impl ModePolicy for HopBwPolicy {
+    fn kind(&self) -> ModeKind {
+        ModeKind::HopBw
+    }
+
+    fn on_pull(&mut self, w: WorkerId) -> PullDecision {
+        if self.pulled[w] {
+            PullDecision::Wait
+        } else {
+            self.pulled[w] = true;
+            PullDecision::Token(self.step)
+        }
+    }
+
+    fn on_push(&mut self, _w: WorkerId, token: u64) -> PushAction {
+        if token < self.step {
+            // Straggler from an already-applied cohort.
+            return PushAction::Drop;
+        }
+        self.buffered += 1;
+        if self.buffered >= self.quorum() {
+            PushAction::FlushNow
+        } else {
+            PushAction::Buffer
+        }
+    }
+
+    fn flush_spec(&mut self, tokens: &[u64]) -> FlushSpec {
+        FlushSpec { weights: vec![1.0; tokens.len()], dense_divisor: tokens.len() as f32 }
+    }
+
+    fn on_applied(&mut self) {
+        self.step += 1;
+        // All workers may pull for the new cohort — including those whose
+        // previous gradient will now arrive late and be dropped.
+        self.pulled.fill(false);
+        self.buffered = 0;
+    }
+
+    fn global_step(&self) -> u64 {
+        self.step
+    }
+
+    fn on_worker_reset(&mut self, w: WorkerId) {
+        self.pulled[w] = false;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GBA — Global Batch gradients Aggregation (the paper's contribution, §4)
+// ---------------------------------------------------------------------------
+
+/// Token-control mechanism: the token list yields `t_i = ⌊i/M⌋` for the
+/// i-th handed-out batch (each token value repeats M times, ascending);
+/// the gradient buffer aggregates `M` gradients per global step, decaying
+/// entries whose data staleness `k − τ` exceeds the tolerance (Eqn. 1).
+/// No pull gating: fast workers simply take more tokens (§4.1).
+pub struct GbaPolicy {
+    m: usize,
+    decay: DecayStrategy,
+    step: u64,
+    /// Total batches handed out (the token-list cursor `i`).
+    pull_cursor: u64,
+    buffered: usize,
+}
+
+impl GbaPolicy {
+    pub fn new(m: usize, decay: DecayStrategy) -> Self {
+        assert!(m >= 1);
+        GbaPolicy { m, decay, step: 0, pull_cursor: 0, buffered: 0 }
+    }
+
+    /// The paper's default: Eqn. (1) threshold decay with tolerance ι.
+    pub fn with_iota(m: usize, iota: u64) -> Self {
+        Self::new(m, DecayStrategy::Threshold { iota })
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+}
+
+impl ModePolicy for GbaPolicy {
+    fn kind(&self) -> ModeKind {
+        ModeKind::Gba
+    }
+
+    fn on_pull(&mut self, _w: WorkerId) -> PullDecision {
+        // t_i = ⌊i/M⌋ — §4.1 states ⌊i/K⌋, which contradicts the stated
+        // "each token value repeats M times"; ⌊i/M⌋ is the consistent
+        // reading (see DESIGN.md §4 Paper-note).
+        let token = self.pull_cursor / self.m as u64;
+        self.pull_cursor += 1;
+        PullDecision::Token(token)
+    }
+
+    fn on_push(&mut self, _w: WorkerId, _token: u64) -> PushAction {
+        self.buffered += 1;
+        if self.buffered >= self.m {
+            PushAction::FlushNow
+        } else {
+            PushAction::Buffer
+        }
+    }
+
+    fn flush_spec(&mut self, tokens: &[u64]) -> FlushSpec {
+        let k = self.step;
+        let weights = tokens.iter().map(|&t| self.decay.weight(t, k)).collect();
+        // Algorithm 2 L22: weighted sum divided by N_a == M.
+        FlushSpec { weights, dense_divisor: self.m as f32 }
+    }
+
+    fn on_applied(&mut self) {
+        self.step += 1;
+        self.buffered = 0;
+    }
+
+    fn global_step(&self) -> u64 {
+        self.step
+    }
+
+    fn on_worker_reset(&mut self, _w: WorkerId) {
+        // A lost token is harmless (Appendix B): the buffer simply fills
+        // from other workers' pushes.
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Build the policy for a mode from its config. `m_global` is the GBA
+/// buffer capacity `M = G_s / B_a` (config-level invariant).
+pub fn make_policy(kind: ModeKind, mode: &ModeConfig, m_global: usize) -> Box<dyn ModePolicy> {
+    match kind {
+        ModeKind::Sync => Box::new(SyncPolicy::new(mode.workers)),
+        ModeKind::Async => Box::new(AsyncPolicy::new()),
+        ModeKind::HopBs => Box::new(HopBsPolicy::new(mode.workers, mode.bound)),
+        ModeKind::Bsp => Box::new(BspPolicy::new(mode.aggregate)),
+        ModeKind::HopBw => Box::new(HopBwPolicy::new(mode.workers, mode.backup)),
+        ModeKind::Gba => Box::new(GbaPolicy::with_iota(m_global, mode.iota)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_barrier_cycle() {
+        let mut p = SyncPolicy::new(3);
+        for w in 0..3 {
+            assert_eq!(p.on_pull(w), PullDecision::Token(0));
+        }
+        // Second pull before apply blocks.
+        assert_eq!(p.on_pull(0), PullDecision::Wait);
+        assert_eq!(p.on_push(0, 0), PushAction::Buffer);
+        assert_eq!(p.on_push(1, 0), PushAction::Buffer);
+        assert_eq!(p.on_push(2, 0), PushAction::FlushNow);
+        let spec = p.flush_spec(&[0, 0, 0]);
+        assert_eq!(spec.weights, vec![1.0; 3]);
+        assert_eq!(spec.dense_divisor, 3.0);
+        p.on_applied();
+        assert_eq!(p.global_step(), 1);
+        assert_eq!(p.on_pull(0), PullDecision::Token(1));
+    }
+
+    #[test]
+    fn async_applies_every_push() {
+        let mut p = AsyncPolicy::new();
+        assert_eq!(p.on_pull(0), PullDecision::Token(0));
+        assert_eq!(p.on_push(0, 0), PushAction::FlushNow);
+        p.on_applied();
+        assert_eq!(p.on_pull(1), PullDecision::Token(1));
+        assert_eq!(p.on_push(1, 0), PushAction::FlushNow); // stale ok
+    }
+
+    #[test]
+    fn hop_bs_bounds_clock_gap() {
+        let mut p = HopBsPolicy::new(2, 1);
+        // Worker 0 completes one batch (clock gap now 1 = b1).
+        assert!(matches!(p.on_pull(0), PullDecision::Token(_)));
+        assert_eq!(p.on_push(0, 0), PushAction::FlushNow);
+        p.on_applied();
+        // clock: w0=1, w1=0, bound=1 -> another w0 batch would make the
+        // fastest-slowest gap 2 > b1: must wait.
+        assert_eq!(p.on_pull(0), PullDecision::Wait);
+        // Slow worker catches up.
+        assert!(matches!(p.on_pull(1), PullDecision::Token(_)));
+        assert_eq!(p.on_push(1, 0), PushAction::FlushNow);
+        p.on_applied();
+        assert!(matches!(p.on_pull(0), PullDecision::Token(_)));
+    }
+
+    #[test]
+    fn hop_bs_counts_inflight() {
+        let mut p = HopBsPolicy::new(2, 2);
+        // Without inflight tracking a worker could pull unboundedly before
+        // pushing anything.
+        assert!(matches!(p.on_pull(0), PullDecision::Token(_)));
+        assert!(matches!(p.on_pull(0), PullDecision::Token(_)));
+        assert_eq!(p.on_pull(0), PullDecision::Wait);
+    }
+
+    #[test]
+    fn bsp_aggregates_fixed_count() {
+        let mut p = BspPolicy::new(3);
+        for i in 0..2 {
+            assert_eq!(p.on_push(i, 0), PushAction::Buffer);
+        }
+        assert_eq!(p.on_push(2, 0), PushAction::FlushNow);
+        assert_eq!(p.flush_spec(&[0, 0, 0]).dense_divisor, 3.0);
+    }
+
+    #[test]
+    fn hop_bw_drops_stragglers() {
+        let mut p = HopBwPolicy::new(3, 1);
+        for w in 0..3 {
+            assert!(matches!(p.on_pull(w), PullDecision::Token(_)));
+        }
+        assert_eq!(p.on_push(0, 0), PushAction::Buffer);
+        assert_eq!(p.on_push(1, 0), PushAction::FlushNow); // quorum 2 of 3
+        p.on_applied();
+        // Worker 2's late gradient from cohort 0 is dropped.
+        assert_eq!(p.on_push(2, 0), PushAction::Drop);
+        // And worker 2 can pull for the new cohort.
+        assert_eq!(p.on_pull(2), PullDecision::Token(1));
+    }
+
+    #[test]
+    fn gba_token_list_repeats_m_times_ascending() {
+        let mut p = GbaPolicy::with_iota(4, 3);
+        let tokens: Vec<u64> = (0..12).map(|i| match p.on_pull(i % 3) {
+            PullDecision::Token(t) => t,
+            _ => panic!("gba never blocks"),
+        }).collect();
+        assert_eq!(tokens, vec![0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn gba_flush_at_m_and_divisor_m() {
+        let mut p = GbaPolicy::with_iota(3, 2);
+        assert_eq!(p.on_push(0, 0), PushAction::Buffer);
+        assert_eq!(p.on_push(1, 0), PushAction::Buffer);
+        assert_eq!(p.on_push(2, 0), PushAction::FlushNow);
+        let spec = p.flush_spec(&[0, 0, 0]);
+        assert_eq!(spec.dense_divisor, 3.0);
+        assert_eq!(spec.weights, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn gba_decays_stale_tokens() {
+        let mut p = GbaPolicy::with_iota(2, 1);
+        // Advance to step 3.
+        for _ in 0..3 {
+            p.on_push(0, 0);
+            p.on_push(0, 0);
+            p.on_applied();
+        }
+        assert_eq!(p.global_step(), 3);
+        // Tokens 3 (fresh), 2 (staleness 1 = ι), 0 (staleness 3 > ι).
+        let spec = p.flush_spec(&[3, 2, 0]);
+        assert_eq!(spec.weights, vec![1.0, 1.0, 0.0]);
+        assert_eq!(spec.dense_divisor, 2.0); // still M
+    }
+
+    #[test]
+    fn factory_builds_all() {
+        let mc = ModeConfig { workers: 4, local_batch: 8, iota: 3, bound: 2, aggregate: 5, backup: 1, m_override: None };
+        for kind in ModeKind::ALL {
+            let p = make_policy(kind, &mc, 6);
+            assert_eq!(p.kind(), kind);
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Mode-switch bookkeeping: records a switch trace (when, from, to) so
+//! experiments can annotate AUC curves with switch points, and implements
+//! the *adaptive* switching controller sketched in the paper's conclusion
+//! ("make GBA adaptive to the cluster status" — future work there,
+//! implemented here as an extension).
+
+use crate::config::ModeKind;
+
+/// One switch event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwitchEvent {
+    /// Day index (continual-training time axis).
+    pub day: usize,
+    pub from: ModeKind,
+    pub to: ModeKind,
+}
+
+/// Trace of mode switches over a continual run.
+#[derive(Clone, Debug, Default)]
+pub struct SwitchTrace {
+    pub events: Vec<SwitchEvent>,
+}
+
+impl SwitchTrace {
+    pub fn record(&mut self, day: usize, from: ModeKind, to: ModeKind) {
+        self.events.push(SwitchEvent { day, from, to });
+    }
+
+    pub fn mode_on_day(&self, initial: ModeKind, day: usize) -> ModeKind {
+        let mut mode = initial;
+        for e in &self.events {
+            if e.day <= day {
+                mode = e.to;
+            }
+        }
+        mode
+    }
+}
+
+/// Adaptive switching controller (paper §6 future work): choose the mode
+/// from the observed cluster utilization with hysteresis — synchronous HPC
+/// when the cluster is vacant, GBA when it is busy.
+#[derive(Clone, Debug)]
+pub struct AdaptiveSwitcher {
+    /// Switch to GBA above this utilization.
+    pub high_watermark: f64,
+    /// Switch back to sync below this utilization.
+    pub low_watermark: f64,
+    current: ModeKind,
+}
+
+impl AdaptiveSwitcher {
+    pub fn new(initial: ModeKind) -> Self {
+        AdaptiveSwitcher { high_watermark: 0.60, low_watermark: 0.40, current: initial }
+    }
+
+    pub fn current(&self) -> ModeKind {
+        self.current
+    }
+
+    /// Feed a utilization observation; returns Some(new_mode) on a switch.
+    pub fn observe(&mut self, utilization: f64) -> Option<ModeKind> {
+        let next = match self.current {
+            ModeKind::Sync if utilization > self.high_watermark => ModeKind::Gba,
+            ModeKind::Gba if utilization < self.low_watermark => ModeKind::Sync,
+            other => other,
+        };
+        if next != self.current {
+            self.current = next;
+            Some(next)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_resolves_mode_by_day() {
+        let mut t = SwitchTrace::default();
+        t.record(3, ModeKind::Sync, ModeKind::Gba);
+        t.record(7, ModeKind::Gba, ModeKind::Sync);
+        assert_eq!(t.mode_on_day(ModeKind::Sync, 0), ModeKind::Sync);
+        assert_eq!(t.mode_on_day(ModeKind::Sync, 3), ModeKind::Gba);
+        assert_eq!(t.mode_on_day(ModeKind::Sync, 6), ModeKind::Gba);
+        assert_eq!(t.mode_on_day(ModeKind::Sync, 9), ModeKind::Sync);
+    }
+
+    #[test]
+    fn adaptive_hysteresis() {
+        let mut a = AdaptiveSwitcher::new(ModeKind::Sync);
+        assert_eq!(a.observe(0.5), None); // between watermarks: no switch
+        assert_eq!(a.observe(0.7), Some(ModeKind::Gba));
+        assert_eq!(a.observe(0.5), None); // hysteresis holds GBA
+        assert_eq!(a.observe(0.3), Some(ModeKind::Sync));
+        assert_eq!(a.observe(0.3), None);
+    }
+}

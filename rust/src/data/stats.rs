@@ -1,0 +1,102 @@
+//! Dataset statistics — the measurement behind Fig. 4 (skewed distribution
+//! of ID occurrences across batches) and Insight 2 (embedding parameters
+//! are updated far less often than dense parameters).
+
+use std::collections::HashMap;
+
+use super::DataGen;
+
+/// Per-ID batch-occurrence statistics over `n_batches` batches of one day.
+#[derive(Clone, Debug)]
+pub struct OccurrenceStats {
+    /// Number of distinct IDs observed.
+    pub distinct_ids: usize,
+    /// occurrence_counts[i] = number of batches in which the i-th ID
+    /// appeared (deduplicated per batch), sorted descending.
+    pub batches_per_id: Vec<u32>,
+    /// Total batches scanned.
+    pub n_batches: usize,
+    /// Fraction of IDs that appear in at most `k` batches, for k=1..=10.
+    pub cdf_small: Vec<f64>,
+    /// Mean update opportunities of an ID vs a dense parameter: a dense
+    /// parameter is updated every batch (ratio 1.0); an embedding row only
+    /// in the batches containing its ID.
+    pub mean_update_ratio: f64,
+}
+
+/// Scan `n_batches` batches of `day` at `batch_size` and aggregate the
+/// per-ID occurrence distribution.
+pub fn id_occurrence_stats(
+    gen: &DataGen,
+    day: usize,
+    batch_size: usize,
+    n_batches: usize,
+) -> OccurrenceStats {
+    let mut per_id: HashMap<u64, u32> = HashMap::new();
+    let mut seen_in_batch: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    for b in 0..n_batches {
+        let batch = gen.batch_by_index(day, b, batch_size);
+        seen_in_batch.clear();
+        for &k in &batch.keys {
+            if seen_in_batch.insert(k) {
+                *per_id.entry(k).or_insert(0) += 1;
+            }
+        }
+    }
+    let mut batches_per_id: Vec<u32> = per_id.values().copied().collect();
+    batches_per_id.sort_unstable_by(|a, b| b.cmp(a));
+    let n_ids = batches_per_id.len().max(1);
+    let cdf_small = (1..=10)
+        .map(|k| batches_per_id.iter().filter(|&&c| c <= k).count() as f64 / n_ids as f64)
+        .collect();
+    let mean_update_ratio = batches_per_id.iter().map(|&c| c as f64).sum::<f64>()
+        / (n_ids as f64 * n_batches.max(1) as f64);
+    OccurrenceStats {
+        distinct_ids: per_id.len(),
+        batches_per_id,
+        n_batches,
+        cdf_small,
+        mean_update_ratio,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DataConfig, ModelConfig};
+
+    #[test]
+    fn occurrence_distribution_is_skewed() {
+        let m = ModelConfig {
+            variant: "tiny".into(),
+            fields: 4,
+            emb_dim: 4,
+            hidden1: 8,
+            hidden2: 4,
+            vocab_size: 5_000,
+            zipf_s: 1.1,
+        };
+        let d = DataConfig {
+            days_base: 1,
+            days_eval: 1,
+            samples_per_day: 10_000,
+            teacher_seed: 7,
+            label_noise: 0.0,
+            drift: 0.0,
+        };
+        let gen = DataGen::new(&m, &d, 1);
+        let stats = id_occurrence_stats(&gen, 0, 64, 100);
+        assert!(stats.distinct_ids > 100);
+        assert_eq!(stats.n_batches, 100);
+        // Skew: the hottest ID is in (almost) every batch...
+        assert!(stats.batches_per_id[0] as usize >= 90);
+        // ...while most IDs appear in <= 10 batches (the Fig. 4 shape).
+        assert!(stats.cdf_small[9] > 0.5, "cdf10={}", stats.cdf_small[9]);
+        // Embedding rows see far fewer updates than dense params.
+        assert!(stats.mean_update_ratio < 0.5);
+        // CDF is monotone.
+        for w in stats.cdf_small.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+}

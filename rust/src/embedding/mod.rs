@@ -1,0 +1,305 @@
+//! Expandable hash-table embedding store (the DeepRec-style sparse half of
+//! the parameter server).
+//!
+//! * Rows are created lazily on first lookup with a deterministic per-key
+//!   initialization (seeded from the key), so every training mode — and the
+//!   native vs PJRT backends — see identical initial embeddings.
+//! * Each row carries optimizer slots and per-ID metadata: the global step
+//!   of its last update and its update count. Algorithm 2 (lines 19–23)
+//!   decays embedding gradients by *per-ID* staleness, which needs exactly
+//!   this tag.
+//! * The table is sharded `mix64(key) % n_shards`, each shard behind its
+//!   own `RwLock` — concurrent worker pulls only contend per shard.
+
+use crate::util::fasthash::U64Map;
+use std::sync::RwLock;
+
+use crate::optim::Optimizer;
+use crate::runtime::HostTensor;
+use crate::util::rng::{mix64, Pcg64};
+
+/// Per-row bookkeeping used by the staleness-decay logic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RowMeta {
+    /// Global step at which this row was last updated (Algorithm 2 L19).
+    pub last_update_step: u64,
+    pub update_count: u32,
+}
+
+#[derive(Clone, Debug)]
+struct Row {
+    vec: Vec<f32>,
+    /// Optimizer slots, planar layout (`dim * slots` floats).
+    state: Vec<f32>,
+    meta: RowMeta,
+}
+
+#[derive(Clone, Debug)]
+pub struct EmbeddingConfig {
+    pub dim: usize,
+    /// Std of the N(0, scale^2) lazy initializer.
+    pub init_scale: f32,
+    pub seed: u64,
+    pub shards: usize,
+}
+
+impl Default for EmbeddingConfig {
+    fn default() -> Self {
+        EmbeddingConfig { dim: 16, init_scale: 0.05, seed: 0, shards: 8 }
+    }
+}
+
+pub struct EmbeddingStore {
+    cfg: EmbeddingConfig,
+    slots: usize,
+    shards: Vec<RwLock<U64Map<Row>>>,
+}
+
+impl EmbeddingStore {
+    /// `slots`: optimizer state floats per weight (from `Optimizer::slots`).
+    pub fn new(cfg: EmbeddingConfig, slots: usize) -> Self {
+        let shards = (0..cfg.shards.max(1)).map(|_| RwLock::new(U64Map::default())).collect();
+        EmbeddingStore { cfg, slots, shards }
+    }
+
+    #[inline]
+    fn shard_of(&self, key: u64) -> usize {
+        (mix64(key) % self.shards.len() as u64) as usize
+    }
+
+    fn init_row(&self, key: u64) -> Row {
+        let mut rng = Pcg64::new(self.cfg.seed ^ mix64(key), 0xE21B);
+        let vec =
+            (0..self.cfg.dim).map(|_| rng.normal() as f32 * self.cfg.init_scale).collect();
+        Row { vec, state: vec![0.0; self.cfg.dim * self.slots], meta: RowMeta::default() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.cfg.dim
+    }
+
+    /// Number of materialized rows.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Gather rows for a flattened key block into an [B, F, D] tensor.
+    /// Missing rows are materialized (expandable-vocab semantics).
+    pub fn gather(&self, keys: &[u64], batch: usize, fields: usize) -> HostTensor {
+        debug_assert_eq!(keys.len(), batch * fields);
+        let dim = self.cfg.dim;
+        let mut data = vec![0.0f32; keys.len() * dim];
+        for (i, &key) in keys.iter().enumerate() {
+            self.read_row_into(key, &mut data[i * dim..(i + 1) * dim]);
+        }
+        HostTensor { shape: vec![batch, fields, dim], data }
+    }
+
+    /// Copy one row's vector (materializing it if absent).
+    pub fn read_row_into(&self, key: u64, out: &mut [f32]) {
+        let shard = &self.shards[self.shard_of(key)];
+        {
+            let guard = shard.read().unwrap();
+            if let Some(row) = guard.get(&key) {
+                out.copy_from_slice(&row.vec);
+                return;
+            }
+        }
+        let mut guard = shard.write().unwrap();
+        let row = guard.entry(key).or_insert_with(|| self.init_row(key));
+        out.copy_from_slice(&row.vec);
+    }
+
+    pub fn row(&self, key: u64) -> Vec<f32> {
+        let mut v = vec![0.0; self.cfg.dim];
+        self.read_row_into(key, &mut v);
+        v
+    }
+
+    pub fn meta(&self, key: u64) -> Option<RowMeta> {
+        let shard = &self.shards[self.shard_of(key)];
+        shard.read().unwrap().get(&key).map(|r| r.meta)
+    }
+
+    /// Apply aggregated per-ID gradients at global step `step`.
+    ///
+    /// `grads`: (key, gradient-sum, contributing-worker-count) triples —
+    /// Algorithm 2 L23 divides each ID's gradient by the number of workers
+    /// that encountered that ID (not by M).
+    pub fn apply_grads(
+        &self,
+        grads: &[(u64, Vec<f32>, u32)],
+        opt: &dyn Optimizer,
+        step: u64,
+    ) {
+        let mut scaled = vec![0.0f32; self.cfg.dim];
+        for (key, gsum, count) in grads {
+            let shard = &self.shards[self.shard_of(*key)];
+            let mut guard = shard.write().unwrap();
+            let row = guard.entry(*key).or_insert_with(|| self.init_row(*key));
+            let inv = 1.0 / (*count).max(1) as f32;
+            for (s, g) in scaled.iter_mut().zip(gsum) {
+                *s = g * inv;
+            }
+            opt.apply(&mut row.vec, &scaled, &mut row.state, step);
+            row.meta.last_update_step = step;
+            row.meta.update_count += 1;
+        }
+    }
+
+    /// Iterate all rows (checkpointing). The callback sees
+    /// (key, vector, optimizer state, meta).
+    pub fn for_each_row(&self, mut f: impl FnMut(u64, &[f32], &[f32], RowMeta)) {
+        for shard in &self.shards {
+            let guard = shard.read().unwrap();
+            for (k, row) in guard.iter() {
+                f(*k, &row.vec, &row.state, row.meta);
+            }
+        }
+    }
+
+    /// Bulk-insert a row (checkpoint restore).
+    pub fn insert_row(&self, key: u64, vec: Vec<f32>, state: Vec<f32>, meta: RowMeta) {
+        assert_eq!(vec.len(), self.cfg.dim);
+        assert_eq!(state.len(), self.cfg.dim * self.slots);
+        let shard = &self.shards[self.shard_of(key)];
+        shard.write().unwrap().insert(key, Row { vec, state, meta });
+    }
+
+    /// Drop all rows (tests).
+    pub fn clear(&self) {
+        for shard in &self.shards {
+            shard.write().unwrap().clear();
+        }
+    }
+
+    /// Approximate resident bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.len() * (self.cfg.dim * (1 + self.slots) * 4 + 32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Adagrad, Sgd};
+
+    fn store(slots: usize) -> EmbeddingStore {
+        EmbeddingStore::new(
+            EmbeddingConfig { dim: 4, init_scale: 0.1, seed: 9, shards: 4 },
+            slots,
+        )
+    }
+
+    #[test]
+    fn lazy_init_is_deterministic() {
+        let s1 = store(0);
+        let s2 = store(0);
+        for key in [1u64, 999, 1 << 50] {
+            assert_eq!(s1.row(key), s2.row(key));
+        }
+        assert_eq!(s1.len(), 3);
+    }
+
+    #[test]
+    fn different_keys_different_rows() {
+        let s = store(0);
+        assert_ne!(s.row(1), s.row(2));
+    }
+
+    #[test]
+    fn gather_shapes_and_content() {
+        let s = store(0);
+        let keys = vec![10, 11, 12, 10, 11, 13];
+        let t = s.gather(&keys, 2, 3);
+        assert_eq!(t.shape, vec![2, 3, 4]);
+        // Same key gathers the same row.
+        assert_eq!(&t.data[0..4], &t.data[12..16]);
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn apply_grads_divides_by_worker_count() {
+        let s = store(0);
+        let before = s.row(5);
+        let opt = Sgd { lr: 1.0 };
+        // gradient sum [2,2,2,2] over 2 contributing workers -> step of 1.0
+        s.apply_grads(&[(5, vec![2.0; 4], 2)], &opt, 1);
+        let after = s.row(5);
+        for i in 0..4 {
+            assert!((after[i] - (before[i] - 1.0)).abs() < 1e-6);
+        }
+        let meta = s.meta(5).unwrap();
+        assert_eq!(meta.last_update_step, 1);
+        assert_eq!(meta.update_count, 1);
+    }
+
+    #[test]
+    fn optimizer_state_persists_across_updates() {
+        let s = store(1);
+        let opt = Adagrad::new(0.1);
+        let k = 77u64;
+        let mut deltas = Vec::new();
+        for step in 1..=3 {
+            let before = s.row(k);
+            s.apply_grads(&[(k, vec![1.0; 4], 1)], &opt, step);
+            let after = s.row(k);
+            deltas.push((after[0] - before[0]).abs());
+        }
+        // Accumulator grows -> steps shrink.
+        assert!(deltas[1] < deltas[0] && deltas[2] < deltas[1], "{deltas:?}");
+    }
+
+    #[test]
+    fn concurrent_gather_and_update() {
+        use std::sync::Arc;
+        let s = Arc::new(store(0));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let opt = Sgd { lr: 0.01 };
+                for i in 0..200u64 {
+                    let key = (t * 37 + i) % 64;
+                    let _ = s.row(key);
+                    s.apply_grads(&[(key, vec![0.1; 4], 1)], &opt, i + 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(s.len() <= 64);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_via_iteration() {
+        let s = store(1);
+        let opt = Adagrad::new(0.1);
+        for k in 0..20u64 {
+            s.apply_grads(&[(k, vec![1.0; 4], 1)], &opt, k + 1);
+        }
+        let mut rows = Vec::new();
+        s.for_each_row(|k, v, st, m| rows.push((k, v.to_vec(), st.to_vec(), m)));
+        assert_eq!(rows.len(), 20);
+        let s2 = store(1);
+        for (k, v, st, m) in rows {
+            s2.insert_row(k, v, st, m);
+        }
+        for k in 0..20u64 {
+            assert_eq!(s.row(k), s2.row(k));
+            assert_eq!(s.meta(k).unwrap().update_count, s2.meta(k).unwrap().update_count);
+        }
+    }
+
+    #[test]
+    fn memory_accounting_positive() {
+        let s = store(2);
+        let _ = s.row(1);
+        assert!(s.memory_bytes() > 0);
+    }
+}

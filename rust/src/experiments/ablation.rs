@@ -1,0 +1,71 @@
+//! Ablation (extension beyond the paper's Eqn. 1): staleness-decay
+//! strategies and the tolerance ι. §4.1 notes "GBA could employ different
+//! staleness decay strategies"; this driver compares them under an
+//! artificially noisy cluster so staleness actually occurs.
+
+use anyhow::Result;
+
+use super::{common, ExpCtx};
+use crate::cluster::StragglerModel;
+use crate::config::ModeKind;
+use crate::coordinator::modes::GbaPolicy;
+use crate::coordinator::DecayStrategy;
+use crate::metrics::report::{write_result, Table};
+use crate::sim::{simulate, SimParams};
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let cfg = common::load_task(ctx, "private")?;
+    let mode = cfg.mode(ModeKind::Gba);
+    let m = cfg.gba_m_effective();
+
+    // Sim half: drops + staleness per strategy under peak-hour stragglers.
+    let strategies: Vec<(String, DecayStrategy)> = vec![
+        ("threshold ι=0".into(), DecayStrategy::Threshold { iota: 0 }),
+        ("threshold ι=2".into(), DecayStrategy::Threshold { iota: 2 }),
+        ("threshold ι=4 (paper)".into(), DecayStrategy::Threshold { iota: 4 }),
+        ("threshold ι=16".into(), DecayStrategy::Threshold { iota: 16 }),
+        ("linear ι=4".into(), DecayStrategy::Linear { iota: 4 }),
+        ("exponential α=0.7".into(), DecayStrategy::Exponential { alpha: 0.7 }),
+    ];
+    let mut table = Table::new(
+        "Ablation — GBA staleness-decay strategies (sim, peak hour)",
+        &["strategy", "steps", "dropped", "kept stale mean", "kept stale max"],
+    );
+    let mut jrows = Vec::new();
+    for (name, decay) in &strategies {
+        let compute = StragglerModel::new(&cfg.cluster, mode.workers, ctx.seed);
+        let params = SimParams {
+            workers: mode.workers,
+            local_batch: mode.local_batch,
+            compute,
+            ps_apply_ms: cfg.cluster.ps_apply_ms,
+            start_sec: 15.0 * 3600.0,
+            duration_sec: if ctx.quick { 60.0 } else { 180.0 },
+            seed: ctx.seed,
+        };
+        let out = simulate(&params, Box::new(GbaPolicy::new(m, *decay)));
+        table.row(vec![
+            name.clone(),
+            out.global_steps.to_string(),
+            out.dropped_batches.to_string(),
+            format!("{:.3}", out.staleness.mean()),
+            out.staleness.max().to_string(),
+        ]);
+        jrows.push(
+            Json::obj()
+                .set("strategy", name.as_str())
+                .set("steps", out.global_steps)
+                .set("dropped", out.dropped_batches)
+                .set("stale_mean", out.staleness.mean())
+                .set("stale_max", out.staleness.max()),
+        );
+    }
+    table.print();
+    println!(
+        "\n(threshold ι=0 drops every late gradient; exponential never drops \
+         but down-weights — the paper's Eqn. 1 is the threshold row)"
+    );
+    write_result(&ctx.out_dir, "ablation_decay", &Json::obj().set("rows", Json::Arr(jrows)))?;
+    Ok(())
+}

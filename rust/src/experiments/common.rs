@@ -1,0 +1,77 @@
+//! Shared helpers for experiment drivers: task-config loading (with
+//! embedded fallbacks so drivers run from any cwd) and quick-mode scaling.
+
+use anyhow::Result;
+
+use super::ExpCtx;
+use crate::config::ExperimentConfig;
+
+/// The three tasks of Table 5.1.
+pub const TASKS: &[(&str, &str)] = &[
+    ("criteo", "criteo_deepfm.toml"),
+    ("alimama", "alimama_dien.toml"),
+    ("private", "private_youtubednn.toml"),
+];
+
+const EMBEDDED: &[(&str, &str)] = &[
+    ("criteo", include_str!("../../../configs/criteo_deepfm.toml")),
+    ("alimama", include_str!("../../../configs/alimama_dien.toml")),
+    ("private", include_str!("../../../configs/private_youtubednn.toml")),
+];
+
+/// Load a task config by short name, preferring `<configs_dir>/<file>`,
+/// falling back to the embedded copy.
+pub fn load_task(ctx: &ExpCtx, short: &str) -> Result<ExperimentConfig> {
+    let file = TASKS
+        .iter()
+        .find(|(s, _)| *s == short)
+        .map(|(_, f)| *f)
+        .ok_or_else(|| anyhow::anyhow!("unknown task '{short}'"))?;
+    let path = ctx.configs_dir.join(file);
+    let mut cfg = if path.exists() {
+        ExperimentConfig::load(&path)?
+    } else {
+        let text = EMBEDDED.iter().find(|(s, _)| *s == short).unwrap().1;
+        ExperimentConfig::from_toml(text)?
+    };
+    if ctx.quick {
+        quicken(&mut cfg);
+    }
+    Ok(cfg)
+}
+
+/// Shrink a config for smoke runs: fewer days, fewer samples. Preserves
+/// the global-batch invariants (batch sizes and worker counts untouched).
+pub fn quicken(cfg: &mut ExperimentConfig) {
+    cfg.data.days_base = cfg.data.days_base.min(2);
+    cfg.data.days_eval = cfg.data.days_eval.min(2);
+    cfg.data.samples_per_day = cfg.data.samples_per_day.min(8192);
+    cfg.train.eval_samples = cfg.train.eval_samples.min(4096);
+}
+
+/// All three tasks (order of Table 5.1).
+pub fn load_all_tasks(ctx: &ExpCtx) -> Result<Vec<(&'static str, ExperimentConfig)>> {
+    TASKS.iter().map(|(s, _)| Ok((*s, load_task(ctx, s)?))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedded_configs_parse_and_validate() {
+        let ctx = ExpCtx { configs_dir: "/nonexistent".into(), ..ExpCtx::default() };
+        for (short, _) in TASKS {
+            let cfg = load_task(&ctx, short).unwrap();
+            assert!(cfg.gba_m() >= 2, "{short}: M = {}", cfg.gba_m());
+        }
+    }
+
+    #[test]
+    fn quick_mode_shrinks() {
+        let ctx = ExpCtx { configs_dir: "/nonexistent".into(), quick: true, ..ExpCtx::default() };
+        let cfg = load_task(&ctx, "criteo").unwrap();
+        assert!(cfg.data.samples_per_day <= 8192);
+        assert!(cfg.data.days_base <= 2);
+    }
+}

@@ -1,0 +1,122 @@
+//! Fig. 1 — normalized QPS of four training modes across a day of shared-
+//! cluster load (CPU utilization), on the YouTubeDNN-like task.
+//!
+//! Modes: Sync (AR), Async (PS), GBA, and a local-all-reduce baseline
+//! (SwarmAdam/Prague-like), modelled as `g` independent synchronous islands
+//! of N/g workers whose throughputs add — the throughput-side behaviour of
+//! decentralized local AR (its accuracy problems are why the paper rejects
+//! it; see §2).
+
+use anyhow::Result;
+
+use super::{common, ExpCtx};
+use crate::cluster::{LoadTrace, StragglerModel};
+use crate::config::ModeKind;
+use crate::coordinator::modes::{make_policy, SyncPolicy};
+use crate::metrics::report::{write_result, Table};
+use crate::sim::{simulate, SimParams};
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let cfg = common::load_task(ctx, "private")?;
+    let hours: Vec<f64> =
+        if ctx.quick { vec![4.0, 10.0, 15.0, 22.0] } else { (0..24).map(|h| h as f64).collect() };
+    let window = if ctx.quick { 60.0 } else { 180.0 };
+
+    let trace = LoadTrace::from_name(&cfg.cluster.trace);
+    let mut rows: Vec<(f64, f64, f64, f64, f64, f64)> = Vec::new(); // h, util, sync, async, local_ar, gba
+    for &h in &hours {
+        let start = h * 3600.0;
+        let util = trace.utilization(start);
+        let mut qps = std::collections::BTreeMap::new();
+        for kind in [ModeKind::Sync, ModeKind::Async, ModeKind::Gba] {
+            let mode = cfg.mode(kind);
+            let compute = StragglerModel::new(&cfg.cluster, mode.workers, ctx.seed);
+            let params = SimParams {
+                workers: mode.workers,
+                local_batch: mode.local_batch,
+                compute,
+                ps_apply_ms: cfg.cluster.ps_apply_ms,
+                start_sec: start,
+                duration_sec: window,
+                seed: ctx.seed ^ (h as u64),
+            };
+            let out = simulate(&params, make_policy(kind, &mode, cfg.gba_m()));
+            qps.insert(kind, out.global_qps());
+        }
+        // local all-reduce: 4 sync islands, throughputs add.
+        let sync_mode = cfg.mode(ModeKind::Sync);
+        let groups = 4usize;
+        let per_group = (sync_mode.workers / groups).max(1);
+        let mut local_ar = 0.0;
+        for g in 0..groups {
+            let compute = StragglerModel::new(&cfg.cluster, per_group, ctx.seed ^ (g as u64) << 3);
+            let params = SimParams {
+                workers: per_group,
+                local_batch: sync_mode.local_batch,
+                compute,
+                ps_apply_ms: cfg.cluster.ps_apply_ms,
+                start_sec: start,
+                duration_sec: window,
+                seed: ctx.seed ^ (h as u64) ^ (g as u64) << 8,
+            };
+            local_ar += simulate(&params, Box::new(SyncPolicy::new(per_group))).global_qps();
+        }
+        rows.push((
+            h,
+            util,
+            qps[&ModeKind::Sync],
+            qps[&ModeKind::Async],
+            local_ar,
+            qps[&ModeKind::Gba],
+        ));
+    }
+
+    // Normalize each mode by its own max (as the paper does).
+    let maxes = rows.iter().fold([0.0f64; 4], |m, r| {
+        [m[0].max(r.2), m[1].max(r.3), m[2].max(r.4), m[3].max(r.5)]
+    });
+    let mut table = Table::new(
+        "Fig. 1 — normalized QPS over a day (YouTubeDNN task, shared cluster)",
+        &["hour", "cpu util", "Sync.", "Async.", "LocalAR", "GBA"],
+    );
+    let mut series = Vec::new();
+    for (h, util, s, a, l, g) in &rows {
+        table.row(vec![
+            format!("{h:02.0}:00"),
+            format!("{:.2}", util),
+            format!("{:.2}", s / maxes[0]),
+            format!("{:.2}", a / maxes[1]),
+            format!("{:.2}", l / maxes[2]),
+            format!("{:.2}", g / maxes[3]),
+        ]);
+        series.push(
+            Json::obj()
+                .set("hour", *h)
+                .set("util", *util)
+                .set("sync_qps", *s)
+                .set("async_qps", *a)
+                .set("local_ar_qps", *l)
+                .set("gba_qps", *g),
+        );
+    }
+    table.print();
+
+    // Headline checks (paper's Observation 1): at peak load async/GBA
+    // sustain much higher QPS than sync; when vacant they are comparable.
+    let peak = rows.iter().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    let vacant = rows.iter().min_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    println!(
+        "\npeak-load async/sync = {:.2}x, gba/sync = {:.2}x; vacant async/sync = {:.2}x",
+        peak.3 / peak.2,
+        peak.5 / peak.2,
+        vacant.3 / vacant.2
+    );
+
+    write_result(
+        &ctx.out_dir,
+        "fig1",
+        &Json::obj().set("series", Json::Arr(series)).set("table", table.to_json()),
+    )?;
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Fig. 3 — distribution of gradient L2 norms vs the aggregated batch
+//! size (Insight 1: the aggregated/global batch size determines the mean
+//! and variance of the gradient distribution; BSP at the sync global batch
+//! matches sync's distribution).
+
+use anyhow::Result;
+
+use super::{common, ExpCtx};
+use crate::config::ModeKind;
+use crate::metrics::report::{write_result, Table};
+use crate::util::json::Json;
+use crate::util::stats;
+use crate::worker::session::{SessionOptions, TrainSession};
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut cfg = common::load_task(ctx, "private")?;
+    cfg.data.samples_per_day = if ctx.quick { 16384 } else { 32768 };
+    cfg.train.eval_samples = 1024; // eval unused here
+
+    let sync_mode = cfg.mode(ModeKind::Sync);
+    let g_sync = sync_mode.workers * sync_mode.local_batch;
+    let b_local = cfg.mode(ModeKind::Bsp).local_batch;
+    let target_norms = if ctx.quick { 24 } else { 96 };
+
+    // BSP with aggregation counts giving aggregated batches around G_sync.
+    let bsp_aggs: Vec<usize> =
+        vec![(g_sync / b_local / 4).max(1), g_sync / b_local, (g_sync / b_local) * 4];
+
+    let mut table = Table::new(
+        "Fig. 3 — L2 norm of aggregated dense gradients vs aggregated batch size",
+        &["config", "agg. batch", "mean ||g||", "std ||g||", "n"],
+    );
+    let mut jrows = Vec::new();
+
+    let mut collect = |label: String, kind: ModeKind, agg_override: Option<usize>| -> Result<(f64, f64)> {
+        let mut c = cfg.clone();
+        if let Some(b2) = agg_override {
+            for (k, m) in c.modes.iter_mut() {
+                if *k == ModeKind::Bsp {
+                    m.aggregate = b2;
+                }
+            }
+        }
+        let agg_batch = match kind {
+            ModeKind::Sync => g_sync,
+            ModeKind::Bsp => agg_override.unwrap() * b_local,
+            _ => g_sync,
+        };
+        // Enough days to see ~target_norms applies.
+        let applies_per_day = (c.data.samples_per_day / agg_batch).max(1);
+        let days = (target_norms / applies_per_day).clamp(1, 24);
+        c.data.days_base = days + 1;
+        c.data.days_eval = 1;
+        let s = TrainSession::new(c.clone(), kind, SessionOptions::default())?;
+        s.ps().collect_grad_norms(true);
+        let mut norms = Vec::new();
+        for d in 0..days {
+            s.train_day(d)?;
+            norms.extend(s.ps().take_grad_norms());
+        }
+        let (m, sd) = (stats::mean(&norms), stats::std(&norms));
+        table.row(vec![
+            label.clone(),
+            agg_batch.to_string(),
+            format!("{m:.4}"),
+            format!("{sd:.4}"),
+            norms.len().to_string(),
+        ]);
+        jrows.push(
+            Json::obj()
+                .set("config", label)
+                .set("agg_batch", agg_batch)
+                .set("mean_norm", m)
+                .set("std_norm", sd)
+                .set("norms_head", norms.iter().take(200).cloned().collect::<Vec<f64>>()),
+        );
+        Ok((m, sd))
+    };
+
+    let (sync_mean, _) = collect(format!("Sync (G={g_sync})"), ModeKind::Sync, None)?;
+    let mut bsp_at_g = (0.0, 0.0);
+    for &b2 in &bsp_aggs {
+        let r = collect(format!("BSP-{}", b2 * b_local), ModeKind::Bsp, Some(b2))?;
+        if b2 * b_local == g_sync {
+            bsp_at_g = r;
+        }
+    }
+    table.print();
+    println!(
+        "\nBSP at the sync global batch: mean ||g|| = {:.4} vs sync {:.4} \
+         (paper: distributions coincide when aggregation sizes match)",
+        bsp_at_g.0, sync_mean
+    );
+    write_result(&ctx.out_dir, "fig3", &Json::obj().set("rows", Json::Arr(jrows)))?;
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Fig. 6 / Tables 6.1–6.8 — the paper's headline experiment.
+//!
+//! For each task:
+//! * (a–c): train a base model synchronously over the base days, then
+//!   switch to every compared mode and continue the continual protocol
+//!   (train day d, evaluate day d+1) over the eval days (Tables 6.1–6.3).
+//! * (d–f): train a base model in every compared mode, then switch each to
+//!   synchronous training for the eval days (Tables 6.5–6.7).
+//! * (g–h): the per-day AUC deltas between GBA and the other modes
+//!   (Tables 6.4 and 6.8).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use super::{common, ExpCtx};
+use crate::checkpoint::Checkpoint;
+use crate::config::{ExperimentConfig, ModeKind};
+use crate::metrics::report::{fmt_auc, write_result, Table};
+use crate::util::json::Json;
+use crate::worker::session::{SessionOptions, TrainSession};
+
+/// Mode order as the paper's tables print it.
+const COLS: [ModeKind; 6] =
+    [ModeKind::Sync, ModeKind::Gba, ModeKind::HopBw, ModeKind::HopBs, ModeKind::Bsp, ModeKind::Async];
+
+fn train_base(cfg: &ExperimentConfig, kind: ModeKind) -> Result<Checkpoint> {
+    let s = TrainSession::new(cfg.clone(), kind, SessionOptions::default())?;
+    for d in 0..cfg.data.days_base {
+        s.train_day(d)?;
+    }
+    Ok(s.checkpoint())
+}
+
+/// Continue in `kind` from `ckpt` over the eval days; per-day AUCs.
+fn eval_arm(cfg: &ExperimentConfig, kind: ModeKind, ckpt: &Checkpoint) -> Result<Vec<f64>> {
+    let s = TrainSession::from_checkpoint(cfg.clone(), kind, SessionOptions::default(), ckpt)?;
+    let mut aucs = Vec::new();
+    let d0 = cfg.data.days_base;
+    for d in d0..d0 + cfg.data.days_eval {
+        s.train_day(d)?;
+        aucs.push(s.eval_auc(d + 1)?);
+    }
+    Ok(aucs)
+}
+
+fn print_task_table(
+    title: &str,
+    days0: usize,
+    per_mode: &BTreeMap<ModeKind, Vec<f64>>,
+) -> (Table, Json) {
+    let mut headers = vec!["Day".to_string()];
+    headers.extend(COLS.iter().map(|k| k.paper_name().to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(title, &hrefs);
+    let n_days = per_mode.values().next().map(|v| v.len()).unwrap_or(0);
+    for i in 0..n_days {
+        let mut row = vec![format!("{}", days0 + i + 1)];
+        for k in COLS {
+            row.push(per_mode.get(&k).map(|v| fmt_auc(v[i])).unwrap_or_else(|| "-".into()));
+        }
+        table.row(row);
+    }
+    // Average row.
+    let mut avg_row = vec!["Avg.".to_string()];
+    let mut javg = Json::obj();
+    for k in COLS {
+        if let Some(v) = per_mode.get(&k) {
+            let avg = v.iter().sum::<f64>() / v.len() as f64;
+            avg_row.push(fmt_auc(avg));
+            javg = javg.set(k.as_str(), avg);
+        } else {
+            avg_row.push("-".into());
+        }
+    }
+    table.row(avg_row);
+    table.print();
+    println!();
+    let mut jmode = Json::obj();
+    for (k, v) in per_mode {
+        jmode = jmode.set(k.as_str(), v.clone());
+    }
+    (table, Json::obj().set("per_day", jmode).set("avg", javg))
+}
+
+/// Table 6.4 / 6.8 shape: GBA-minus-mode deltas on first/last/avg day.
+fn delta_table(title: &str, all: &BTreeMap<&str, BTreeMap<ModeKind, Vec<f64>>>) -> (Table, Json) {
+    let mut headers = vec!["".to_string()];
+    headers.extend(COLS.iter().filter(|k| **k != ModeKind::Gba).map(|k| k.paper_name().to_string()));
+    let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(title, &hrefs);
+    let mut jd = Json::obj();
+    for (label, pick) in [("1st day", 0usize), ("last day", usize::MAX), ("Average", usize::MAX - 1)]
+    {
+        let mut row = vec![label.to_string()];
+        let mut jrow = Json::obj();
+        for k in COLS.iter().filter(|k| **k != ModeKind::Gba) {
+            // mean over tasks of (mode AUC - GBA AUC) at the chosen day
+            let mut deltas = Vec::new();
+            for per_mode in all.values() {
+                let (Some(gba), Some(other)) = (per_mode.get(&ModeKind::Gba), per_mode.get(k))
+                else {
+                    continue;
+                };
+                let idx = |v: &Vec<f64>| match pick {
+                    0 => v[0],
+                    usize::MAX => *v.last().unwrap(),
+                    _ => v.iter().sum::<f64>() / v.len() as f64,
+                };
+                deltas.push(idx(other) - idx(gba));
+            }
+            let d = deltas.iter().sum::<f64>() / deltas.len().max(1) as f64;
+            row.push(format!("{d:+.4}"));
+            jrow = jrow.set(k.as_str(), d);
+        }
+        table.row(row);
+        jd = jd.set(label, jrow);
+    }
+    table.print();
+    println!();
+    (table, jd)
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut doc = Json::obj();
+    let mut from_sync_all: BTreeMap<&str, BTreeMap<ModeKind, Vec<f64>>> = BTreeMap::new();
+    let mut to_sync_all: BTreeMap<&str, BTreeMap<ModeKind, Vec<f64>>> = BTreeMap::new();
+
+    for (short, cfg) in common::load_all_tasks(ctx)? {
+        // ---- (a-c): base trained sync, switch to each mode -------------
+        let base_sync = train_base(&cfg, ModeKind::Sync)?;
+        let mut from_sync: BTreeMap<ModeKind, Vec<f64>> = BTreeMap::new();
+        for kind in COLS {
+            if !cfg.has_mode(kind) {
+                continue;
+            }
+            from_sync.insert(kind, eval_arm(&cfg, kind, &base_sync)?);
+        }
+        let (_t, j) = print_task_table(
+            &format!("Table 6.x — {short}: inherit sync base, switch to mode"),
+            cfg.data.days_base,
+            &from_sync,
+        );
+        doc = doc.set(&format!("{short}_from_sync"), j);
+        from_sync_all.insert(short, from_sync);
+
+        // ---- (d-f): base trained in each mode, switch to sync ----------
+        let mut to_sync: BTreeMap<ModeKind, Vec<f64>> = BTreeMap::new();
+        for kind in COLS {
+            if !cfg.has_mode(kind) {
+                continue;
+            }
+            let base = if kind == ModeKind::Sync {
+                base_sync.clone()
+            } else {
+                train_base(&cfg, kind)?
+            };
+            to_sync.insert(kind, eval_arm(&cfg, ModeKind::Sync, &base)?);
+        }
+        let (_t, j) = print_task_table(
+            &format!("Table 6.x — {short}: base trained per mode, switch to sync"),
+            cfg.data.days_base,
+            &to_sync,
+        );
+        doc = doc.set(&format!("{short}_to_sync"), j);
+        to_sync_all.insert(short, to_sync);
+    }
+
+    let (_t, j) = delta_table(
+        "Table 6.4 — avg AUC delta vs GBA across tasks (from sync)",
+        &from_sync_all,
+    );
+    doc = doc.set("table64_deltas_from_sync", j);
+    let (_t, j) =
+        delta_table("Table 6.8 — avg AUC delta vs GBA across tasks (to sync)", &to_sync_all);
+    doc = doc.set("table68_deltas_to_sync", j);
+
+    write_result(&ctx.out_dir, "fig6", &doc)?;
+    Ok(())
+}

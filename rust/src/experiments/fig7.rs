@@ -1,0 +1,139 @@
+//! Fig. 7 — GBA scale-out: vary the number of workers with the global
+//! batch size fixed (local batch co-varies). The paper reports a steady
+//! AUC (absolute difference < 1e-4 between worker counts... we report the
+//! spread) and a near-linear QPS boost.
+//!
+//! Two halves:
+//! * QPS at paper scale (100–800 workers) on the discrete-event simulator.
+//! * AUC at proportionally scaled-down worker counts with *real* training
+//!   (native backend), global batch held exactly constant.
+
+use anyhow::Result;
+
+use super::{common, ExpCtx};
+use crate::cluster::StragglerModel;
+use crate::config::ModeKind;
+use crate::coordinator::modes::GbaPolicy;
+use crate::metrics::report::{fmt_auc, write_result, Table};
+use crate::sim::{simulate, SimParams};
+use crate::util::json::Json;
+use crate::worker::session::{SessionOptions, TrainSession};
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let cfg = common::load_task(ctx, "private")?;
+
+    // ---- QPS half: paper-scale worker counts on the simulator ----------
+    let paper_workers = [100usize, 200, 400, 800];
+    let paper_global_batch = 400 * 1000; // paper: 400 workers x 1K local
+    let mut qps_table = Table::new(
+        "Fig. 7 (QPS) — GBA scale-out at fixed global batch (sim, paper scale)",
+        &["workers", "local batch", "global QPS", "steps/s"],
+    );
+    let mut jqps = Vec::new();
+    for &n in &paper_workers {
+        let local = paper_global_batch / n;
+        let m = n; // N_a = M (paper's §4.1 choice)
+        let compute = StragglerModel::new(&cfg.cluster, n, ctx.seed);
+        let params = SimParams {
+            workers: n,
+            local_batch: local,
+            compute,
+            ps_apply_ms: cfg.cluster.ps_apply_ms,
+            start_sec: 10.0 * 3600.0,
+            duration_sec: if ctx.quick { 30.0 } else { 120.0 },
+            seed: ctx.seed ^ n as u64,
+        };
+        let out = simulate(&params, Box::new(GbaPolicy::with_iota(m, 4)));
+        qps_table.row(vec![
+            n.to_string(),
+            local.to_string(),
+            format!("{:.0}", out.global_qps()),
+            format!("{:.2}", out.global_steps as f64 / params.duration_sec),
+        ]);
+        jqps.push(
+            Json::obj()
+                .set("workers", n)
+                .set("local_batch", local)
+                .set("qps", out.global_qps())
+                .set("steps", out.global_steps),
+        );
+    }
+    qps_table.print();
+
+    // ---- AUC half: real training, G fixed, workers scaled --------------
+    // Inherit a common sync-trained base (the paper's protocol), then run
+    // GBA with different worker counts at the *same* global batch.
+    let mut c0 = cfg.clone();
+    if ctx.quick {
+        common::quicken(&mut c0);
+    } else {
+        c0.data.days_base = c0.data.days_base.min(3);
+        c0.data.days_eval = c0.data.days_eval.min(2);
+    }
+    let base_session = TrainSession::new(c0.clone(), ModeKind::Sync, SessionOptions::default())?;
+    for d in 0..c0.data.days_base {
+        base_session.train_day(d)?;
+    }
+    let ckpt = base_session.checkpoint();
+
+    let sync = c0.mode(ModeKind::Sync);
+    let g = sync.workers * sync.local_batch;
+    let worker_counts: &[usize] = if ctx.quick { &[8, 16] } else { &[4, 8, 16, 32] };
+    let mut auc_table = Table::new(
+        "Fig. 7 (AUC) — real GBA training from a common base, global batch fixed",
+        &["workers", "local batch", "M", "AUC avg", "wall sec/day"],
+    );
+    let mut jauc = Vec::new();
+    let mut aucs = Vec::new();
+    for &n in worker_counts {
+        let local = g / n;
+        let mut c = c0.clone();
+        // Patch the GBA mode entry: workers n, local batch G/n.
+        for (kind, mode) in c.modes.iter_mut() {
+            if *kind == ModeKind::Gba {
+                mode.workers = n;
+                mode.local_batch = local;
+                mode.m_override = None;
+            }
+        }
+        c.validate()?;
+        let s = TrainSession::from_checkpoint(c.clone(), ModeKind::Gba, SessionOptions::default(), &ckpt)?;
+        let mut day_aucs = Vec::new();
+        let mut wall = 0.0;
+        for d in c0.data.days_base..c0.data.days_base + c0.data.days_eval {
+            let stats = s.train_day(d)?;
+            wall += stats.wall_sec;
+            day_aucs.push(s.eval_auc(d + 1)?);
+        }
+        let auc = day_aucs.iter().sum::<f64>() / day_aucs.len() as f64;
+        aucs.push(auc);
+        auc_table.row(vec![
+            n.to_string(),
+            local.to_string(),
+            c.gba_m().to_string(),
+            fmt_auc(auc),
+            format!("{:.2}", wall / c0.data.days_eval as f64),
+        ]);
+        jauc.push(
+            Json::obj()
+                .set("workers", n)
+                .set("local_batch", local)
+                .set("auc", auc)
+                .set("auc_per_day", day_aucs.clone()),
+        );
+    }
+    auc_table.print();
+    let spread = aucs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - aucs.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("\nAUC spread across worker counts: {spread:.5} (paper: < 1e-4 steady state)");
+
+    write_result(
+        &ctx.out_dir,
+        "fig7",
+        &Json::obj()
+            .set("qps_scaleout", Json::Arr(jqps))
+            .set("auc_fixed_global_batch", Json::Arr(jauc))
+            .set("auc_spread", spread),
+    )?;
+    Ok(())
+}

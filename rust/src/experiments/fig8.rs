@@ -1,0 +1,83 @@
+//! Fig. 8 — fixing the workers and varying GBA's local batch size, so the
+//! global batch *diverges* from the sync global batch. The paper shows the
+//! AUC degrades (or at least fails to reach the tuned optimum) whenever
+//! G_a ≠ G_s — the evidence that keeping the global batch is what makes
+//! switching tuning-free.
+
+use anyhow::Result;
+
+use super::{common, ExpCtx};
+use crate::config::ModeKind;
+use crate::metrics::report::{fmt_auc, write_result, Table};
+use crate::worker::session::{SessionOptions, TrainSession};
+use crate::util::json::Json;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let mut cfg = common::load_task(ctx, "private")?;
+    common::quicken(&mut cfg);
+    if !ctx.quick {
+        cfg.data.days_base = 2;
+        cfg.data.days_eval = 2;
+        cfg.data.samples_per_day = 16384;
+    }
+
+    let sync = cfg.mode(ModeKind::Sync);
+    let g_sync = sync.workers * sync.local_batch;
+    let gba_workers = cfg.mode(ModeKind::Gba).workers;
+
+    // Base model from sync training (the inherit-and-switch protocol).
+    let base_session = TrainSession::new(cfg.clone(), ModeKind::Sync, SessionOptions::default())?;
+    for d in 0..cfg.data.days_base {
+        base_session.train_day(d)?;
+    }
+    let ckpt = base_session.checkpoint();
+
+    let batches: &[usize] = if ctx.quick { &[128, 256, 512] } else { &[64, 128, 256, 512] };
+    let mut table = Table::new(
+        "Fig. 8 — AUC vs GBA local batch at fixed workers (global batch varies)",
+        &["local batch", "global batch", "== sync G?", "AUC min", "AUC max", "AUC avg"],
+    );
+    let mut jrows = Vec::new();
+    for &b in batches {
+        let mut c = cfg.clone();
+        // Paper setting: M is pinned to the (fixed) worker count, so the
+        // actual global batch G_a = workers * B_a varies with B_a.
+        for (k, m) in c.modes.iter_mut() {
+            if *k == ModeKind::Gba {
+                m.local_batch = b;
+                m.workers = gba_workers;
+                m.m_override = Some(gba_workers);
+            }
+        }
+        c.validate()?;
+        let s = TrainSession::from_checkpoint(c.clone(), ModeKind::Gba, SessionOptions::default(), &ckpt)?;
+        let mut aucs = Vec::new();
+        for d in cfg.data.days_base..cfg.data.days_base + cfg.data.days_eval {
+            s.train_day(d)?;
+            aucs.push(s.eval_auc(d + 1)?);
+        }
+        let g_a = c.gba_m_effective() * b;
+        let (mn, mx) =
+            aucs.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(a, z), &x| (a.min(x), z.max(x)));
+        let avg = aucs.iter().sum::<f64>() / aucs.len() as f64;
+        table.row(vec![
+            b.to_string(),
+            g_a.to_string(),
+            (g_a == g_sync).to_string(),
+            fmt_auc(mn),
+            fmt_auc(mx),
+            fmt_auc(avg),
+        ]);
+        jrows.push(
+            Json::obj()
+                .set("local_batch", b)
+                .set("global_batch", g_a)
+                .set("matches_sync", g_a == g_sync)
+                .set("auc", aucs.clone()),
+        );
+    }
+    table.print();
+    println!("\n(paper: the matched global batch reaches the best AUC without tuning)");
+    write_result(&ctx.out_dir, "fig8", &Json::obj().set("rows", Json::Arr(jrows)).set("g_sync", g_sync))?;
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (see DESIGN.md §3 for the experiment index). Every driver prints a
+//! paper-shaped table and writes `results/<id>.json`.
+
+pub mod ablation;
+pub mod common;
+pub mod convergence;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table52;
+pub mod table53;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::worker::BackendKind;
+
+/// Shared driver context.
+#[derive(Clone)]
+pub struct ExpCtx {
+    pub out_dir: PathBuf,
+    pub configs_dir: PathBuf,
+    pub backend: BackendKind,
+    /// Reduced days/samples for smoke runs.
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx {
+            out_dir: PathBuf::from("results"),
+            configs_dir: PathBuf::from("configs"),
+            backend: BackendKind::Native,
+            quick: false,
+            seed: 7,
+        }
+    }
+}
+
+/// All experiment ids, in suggested execution order (cheap sims first).
+pub const ALL: &[&str] = &[
+    "fig4", "fig1", "table52", "fig7", "table53", "convergence", "fig3", "fig2", "fig8",
+    "ablation_decay", "fig6",
+];
+
+/// Run one experiment (or "all").
+pub fn run(name: &str, ctx: &ExpCtx) -> Result<()> {
+    match name {
+        "all" => {
+            for n in ALL {
+                println!("\n################ experiment {n} ################");
+                run(n, ctx)?;
+            }
+            Ok(())
+        }
+        "fig1" => fig1::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "table52" => table52::run(ctx),
+        "table53" => table53::run(ctx),
+        "convergence" => convergence::run(ctx),
+        "ablation_decay" => ablation::run(ctx),
+        other => bail!("unknown experiment '{other}' (one of {ALL:?} or 'all')"),
+    }
+}

@@ -1,0 +1,59 @@
+//! Table 5.2 — global QPS (mean ± std) of the six training modes on the
+//! three tasks, under the shared-cluster load trace.
+
+use anyhow::Result;
+
+use super::{common, ExpCtx};
+use crate::config::ModeKind;
+use crate::metrics::report::{fmt_qps_k, write_result, Table};
+use crate::sim::simulate_mode;
+use crate::util::json::Json;
+use crate::util::stats;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    // Sample several windows spread over the day (the paper's ± spread
+    // comes from the varying cluster state).
+    let windows: Vec<f64> = if ctx.quick {
+        vec![4.0, 15.0]
+    } else {
+        vec![2.0, 6.0, 10.0, 13.0, 15.0, 18.0, 21.0]
+    };
+    let dur = if ctx.quick { 60.0 } else { 120.0 };
+
+    let mut table = Table::new(
+        "Table 5.2 — global QPS of the compared training modes",
+        &["task", "Sync.", "Async.", "Hop-BS", "BSP", "Hop-BW", "GBA"],
+    );
+    let mut doc = Json::obj();
+    for (short, cfg) in common::load_all_tasks(ctx)? {
+        let mut cells = vec![short.to_string()];
+        let mut jtask = Json::obj();
+        for kind in ModeKind::ALL {
+            if !cfg.has_mode(kind) {
+                cells.push("-".into());
+                continue;
+            }
+            let qps: Vec<f64> = windows
+                .iter()
+                .map(|&h| {
+                    simulate_mode(&cfg, kind, h * 3600.0, dur, ctx.seed ^ (h as u64)).global_qps()
+                })
+                .collect();
+            let (m, s) = (stats::mean(&qps), stats::std(&qps));
+            cells.push(fmt_qps_k(m, s));
+            jtask = jtask.set(
+                kind.as_str(),
+                Json::obj().set("mean_qps", m).set("std_qps", s).set("windows", qps.clone()),
+            );
+        }
+        table.row(cells);
+        doc = doc.set(short, jtask);
+    }
+    table.print();
+
+    // Paper's headline: GBA ~= Async >> Sync; Hop-BS struggles with slow
+    // workers; Hop-BW in between.
+    println!("\n(expect: GBA within a few % of Async.; Sync slowest; Hop-BS < BSP)");
+    write_result(&ctx.out_dir, "table52", &doc.set("table", table.to_json()))?;
+    Ok(())
+}

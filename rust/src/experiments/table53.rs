@@ -1,0 +1,113 @@
+//! Table 5.3 — fine-grained analysis on the Private task across cluster
+//! periods: local QPS (Async vs GBA), AUC (Sync vs GBA), dropped batches
+//! (Hop-BW vs GBA), and average (max) dense-gradient staleness
+//! (Hop-BS vs GBA vs BSP).
+//!
+//! QPS / drops / staleness come from the discrete-event simulator at three
+//! periods of the load trace (the paper repeats the experiment "during
+//! different periods of a day"); AUC comes from real training with the
+//! straggler model injected.
+
+use anyhow::Result;
+
+use super::{common, ExpCtx};
+use crate::config::ModeKind;
+use crate::metrics::report::{fmt_auc, write_result, Table};
+use crate::sim::simulate_mode;
+use crate::util::json::Json;
+use crate::worker::session::{SessionOptions, TrainSession};
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let cfg = common::load_task(ctx, "private")?;
+    let periods: &[(&str, f64)] = &[("peak 15:00", 15.0), ("evening 20:00", 20.0), ("night 04:00", 4.0)];
+    let dur = if ctx.quick { 60.0 } else { 180.0 };
+
+    let mut table = Table::new(
+        "Table 5.3 — fine-grained analysis (Private task)",
+        &[
+            "period",
+            "localQPS Async.",
+            "localQPS GBA",
+            "AUC Sync.",
+            "AUC GBA",
+            "#drop Hop-BW",
+            "#drop GBA",
+            "stale Hop-BS",
+            "stale GBA",
+            "stale BSP",
+        ],
+    );
+    let mut jrows = Vec::new();
+    for &(label, hour) in periods {
+        let start = hour * 3600.0;
+        let sim = |kind: ModeKind| simulate_mode(&cfg, kind, start, dur, ctx.seed ^ hour as u64);
+        let s_async = sim(ModeKind::Async);
+        let s_gba = sim(ModeKind::Gba);
+        let s_bw = sim(ModeKind::HopBw);
+        let s_bs = sim(ModeKind::HopBs);
+        let s_bsp = sim(ModeKind::Bsp);
+
+        // AUC: real short training run with stragglers at this period.
+        let mut c = cfg.clone();
+        if ctx.quick {
+            common::quicken(&mut c);
+        } else {
+            c.data.days_base = 2;
+            c.data.days_eval = 1;
+        }
+        c.cluster.base_compute_ms = 0.5; // keep wall time sane
+        let auc_of = |kind: ModeKind| -> Result<f64> {
+            let opts = SessionOptions {
+                straggler: true,
+                start_sec: start,
+                ..SessionOptions::default()
+            };
+            let s = TrainSession::new(c.clone(), kind, opts)?;
+            for d in 0..c.data.days_base {
+                s.train_day(d)?;
+            }
+            s.eval_auc(c.data.days_base)
+        };
+        let auc_sync = auc_of(ModeKind::Sync)?;
+        let auc_gba = auc_of(ModeKind::Gba)?;
+
+        let fmt_stale = |o: &crate::sim::SimOutcome| {
+            format!("{:.2} ({})", o.staleness.mean(), o.staleness.max())
+        };
+        table.row(vec![
+            label.to_string(),
+            format!("{:.0}", s_async.local_qps_mean),
+            format!("{:.0}", s_gba.local_qps_mean),
+            fmt_auc(auc_sync),
+            fmt_auc(auc_gba),
+            s_bw.dropped_batches.to_string(),
+            s_gba.dropped_batches.to_string(),
+            fmt_stale(&s_bs),
+            fmt_stale(&s_gba),
+            fmt_stale(&s_bsp),
+        ]);
+        jrows.push(
+            Json::obj()
+                .set("period", label)
+                .set("local_qps_async", s_async.local_qps_mean)
+                .set("local_qps_gba", s_gba.local_qps_mean)
+                .set("auc_sync", auc_sync)
+                .set("auc_gba", auc_gba)
+                .set("drops_hop_bw", s_bw.dropped_batches)
+                .set("drops_gba", s_gba.dropped_batches)
+                .set("stale_hop_bs_mean", s_bs.staleness.mean())
+                .set("stale_hop_bs_max", s_bs.staleness.max())
+                .set("stale_gba_mean", s_gba.staleness.mean())
+                .set("stale_gba_max", s_gba.staleness.max())
+                .set("stale_bsp_mean", s_bsp.staleness.mean())
+                .set("stale_bsp_max", s_bsp.staleness.max()),
+        );
+    }
+    table.print();
+    println!(
+        "\n(expect: GBA local QPS ~ Async.; GBA drops << Hop-BW; GBA staleness \
+         between Hop-BS and BSP; AUC stable — the paper's Table 5.3 shape)"
+    );
+    write_result(&ctx.out_dir, "table53", &Json::obj().set("rows", Json::Arr(jrows)))?;
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! # gba-train
+//!
+//! Reproduction of **"GBA: A Tuning-free Approach to Switch between
+//! Synchronous and Asynchronous Training for Recommendation Models"**
+//! (Su, Zhang, et al., NeurIPS 2022) as a three-layer Rust + JAX + Pallas
+//! framework:
+//!
+//! * **Layer 3 (this crate)** — a parameter-server training coordinator
+//!   implementing GBA's token-control mechanism plus five baseline modes
+//!   (Sync, Async, Hop-BS, BSP, Hop-BW), an expandable hash-table embedding
+//!   store, sparse/dense optimizers, a threaded worker runtime, a
+//!   discrete-event cluster simulator, metrics and experiment drivers.
+//! * **Layer 2 (python/compile/model.py)** — the recommendation model
+//!   (DeepFM/YouTubeDNN-family CTR tower) fwd/bwd in JAX, AOT-lowered to
+//!   HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots (FM interaction, fused matmul+bias+ReLU, BCE loss).
+//!
+//! Python never runs on the training path: artifacts are compiled once by
+//! `make artifacts`, then loaded via PJRT ([`runtime`]).
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod checkpoint;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod embedding;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod ps;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod worker;

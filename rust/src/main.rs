@@ -1,0 +1,218 @@
+//! `gba-train` — launcher CLI.
+//!
+//! Subcommands:
+//!   experiment <id|all>   regenerate a paper table/figure (DESIGN.md §3)
+//!   train                 run continual training from a config
+//!   datagen               inspect the synthetic data generator
+//!   inspect               dump the AOT artifact manifest
+//!
+//! (Hand-rolled argument parsing: the build environment has no clap.)
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use gba::config::{ExperimentConfig, ModeKind};
+use gba::data::DataGen;
+use gba::experiments::{self, ExpCtx};
+use gba::metrics::report::fmt_auc;
+use gba::runtime::Manifest;
+use gba::worker::session::{SessionOptions, TrainSession};
+use gba::worker::BackendKind;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // --flag value  or bare --flag (boolean)
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(name.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+const USAGE: &str = "\
+gba-train — GBA (NeurIPS'22) reproduction: tuning-free sync/async switching
+
+USAGE:
+  gba-train experiment <id|all> [--out DIR] [--configs DIR] [--quick]
+                                 [--backend native|pjrt] [--seed N]
+  gba-train train --config FILE --mode <sync|async|hop_bs|bsp|hop_bw|gba>
+                  [--days N] [--backend native|pjrt] [--artifacts DIR]
+                  [--straggler] [--switch-to MODE] [--switch-day D]
+  gba-train datagen --config FILE [--day D] [--samples N]
+  gba-train inspect [--artifacts DIR]
+
+EXPERIMENTS (DESIGN.md §3): fig1 fig2 fig3 fig4 fig6 fig7 fig8 table52
+table53 convergence ablation_decay
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    let result = match cmd.as_str() {
+        "experiment" => cmd_experiment(&args),
+        "train" => cmd_train(&args),
+        "datagen" => cmd_datagen(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let name = args.positional.first().context("experiment id required (or 'all')")?;
+    let ctx = ExpCtx {
+        out_dir: PathBuf::from(args.get("out").unwrap_or("results")),
+        configs_dir: PathBuf::from(args.get("configs").unwrap_or("configs")),
+        backend: BackendKind::parse(args.get("backend").unwrap_or("native"))?,
+        quick: args.get_bool("quick"),
+        seed: args.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(7),
+    };
+    experiments::run(name, &ctx)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let config = args.get("config").context("--config FILE required")?;
+    let cfg = ExperimentConfig::load(config)?;
+    let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
+    let days: usize = args
+        .get("days")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(cfg.data.days_base + cfg.data.days_eval - 1);
+    let switch_to = args.get("switch-to").map(ModeKind::parse).transpose()?;
+    let switch_day: usize =
+        args.get("switch-day").map(|s| s.parse()).transpose()?.unwrap_or(days / 2);
+    let opts = SessionOptions {
+        backend: BackendKind::parse(args.get("backend").unwrap_or("native"))?,
+        artifacts_dir: PathBuf::from(args.get("artifacts").unwrap_or("artifacts")),
+        straggler: args.get_bool("straggler"),
+        ..SessionOptions::default()
+    };
+
+    println!(
+        "task {} | mode {} | G_sync = {} | M = {} | backend {:?}",
+        cfg.name,
+        kind.paper_name(),
+        cfg.global_batch_sync(),
+        cfg.gba_m_effective(),
+        opts.backend
+    );
+    let mut session = TrainSession::new(cfg, kind, opts)?;
+    for d in 0..days {
+        if let Some(to) = switch_to {
+            if d == switch_day {
+                println!(
+                    "--- switching {} -> {} (tuning-free) ---",
+                    session.kind.paper_name(),
+                    to.paper_name()
+                );
+                session.switch_mode(to)?;
+            }
+        }
+        let stats = session.train_day(d)?;
+        let auc = session.eval_auc(d + 1)?;
+        println!(
+            "day {d}: auc(day{}) = {}  qps = {:.0}  steps = {}  dropped = {}  stale(mean/max) = {:.2}/{}",
+            d + 1,
+            fmt_auc(auc),
+            stats.qps,
+            stats.counters.global_steps,
+            stats.counters.dropped_batches,
+            stats.counters.dense_staleness.mean(),
+            stats.counters.dense_staleness.max(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let config = args.get("config").context("--config FILE required")?;
+    let cfg = ExperimentConfig::load(config)?;
+    let day: usize = args.get("day").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let samples: usize = args.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    let gen = DataGen::new(&cfg.model, &cfg.data, cfg.seed);
+    println!("task {} day {day}: first {samples} samples", cfg.name);
+    let mut pos = 0usize;
+    for j in 0..samples {
+        let s = gen.sample(day, j);
+        pos += (s.label > 0.5) as usize;
+        println!("  #{j}: label={} keys={:?}", s.label, &s.keys[..s.keys.len().min(6)]);
+    }
+    let n = 4096.min(cfg.data.samples_per_day);
+    let ctr = (0..n).filter(|&j| gen.sample(day, j).label > 0.5).count() as f64 / n as f64;
+    println!("shown positives: {pos}/{samples}; day CTR over {n} samples: {ctr:.3}");
+    let stats = gba::data::stats::id_occurrence_stats(&gen, day, 256, 32);
+    println!(
+        "id stats over 32x256 batches: {} distinct ids, {:.1}% in <=10 batches",
+        stats.distinct_ids,
+        100.0 * stats.cdf_small[9]
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let m = Manifest::load(dir)?;
+    println!("artifacts at {dir} (jax {}):", m.jax_version);
+    for (name, (dims, batches)) in &m.variants {
+        println!(
+            "  variant {name}: F={} D={} H=({}, {}) mlp_in={} batches={batches:?}",
+            dims.fields, dims.emb_dim, dims.hidden1, dims.hidden2, dims.mlp_in
+        );
+    }
+    for a in &m.artifacts {
+        println!(
+            "  {} [{} b{}] <- {} ({} inputs)",
+            a.file,
+            a.variant,
+            a.batch,
+            a.function,
+            a.inputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Training metrics: AUC (the paper's accuracy metric), QPS meters (the
+//! efficiency metric), gradient-staleness statistics and drop counters
+//! (Table 5.3), and tabular/JSON reporting.
+
+pub mod report;
+
+use crate::util::stats::Running;
+
+/// Exact ROC-AUC with tie handling (average ranks). O(n log n).
+///
+/// Returns 0.5 for degenerate inputs (single class) — matches how the
+/// paper reports a diverged model ("AUC decreases to 0.5", Fig. 2).
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    if n == 0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let (mut n_pos, mut n_neg) = (0u64, 0u64);
+    for &l in labels {
+        if l > 0.5 {
+            n_pos += 1;
+        } else {
+            n_neg += 1;
+        }
+    }
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    // Sum of positive ranks with average rank for ties.
+    let mut rank_sum = 0.0f64;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            if labels[k] > 0.5 {
+                rank_sum += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    (rank_sum - n_pos as f64 * (n_pos as f64 + 1.0) / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+/// Sample-throughput series over (possibly virtual) time.
+#[derive(Clone, Debug, Default)]
+pub struct RateSeries {
+    /// (time-seconds, samples-completed-at-that-instant)
+    points: Vec<(f64, u64)>,
+}
+
+impl RateSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, t_sec: f64, samples: u64) {
+        self.points.push((t_sec, samples));
+    }
+
+    pub fn total_samples(&self) -> u64 {
+        self.points.iter().map(|&(_, s)| s).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn duration(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        let t0 = self.points.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+        let t1 = self.points.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+        (t1 - t0).max(0.0)
+    }
+
+    /// Mean QPS over the whole series.
+    pub fn mean_qps(&self) -> f64 {
+        let d = self.duration();
+        if d <= 0.0 {
+            return 0.0;
+        }
+        self.total_samples() as f64 / d
+    }
+
+    /// QPS per fixed window; returns (window-center-time, qps).
+    pub fn windowed_qps(&self, width_sec: f64) -> Vec<(f64, f64)> {
+        if self.points.is_empty() || width_sec <= 0.0 {
+            return vec![];
+        }
+        let t0 = self.points.iter().map(|p| p.0).fold(f64::INFINITY, f64::min);
+        let t1 = self.points.iter().map(|p| p.0).fold(f64::NEG_INFINITY, f64::max);
+        let nw = (((t1 - t0) / width_sec).ceil() as usize).max(1);
+        let mut sums = vec![0u64; nw];
+        for &(t, s) in &self.points {
+            let w = (((t - t0) / width_sec) as usize).min(nw - 1);
+            sums[w] += s;
+        }
+        sums.iter()
+            .enumerate()
+            .map(|(w, &s)| (t0 + (w as f64 + 0.5) * width_sec, s as f64 / width_sec))
+            .collect()
+    }
+
+    /// Mean ± std of windowed QPS (the "±" columns of Table 5.2).
+    pub fn qps_mean_std(&self, width_sec: f64) -> (f64, f64) {
+        let ws = self.windowed_qps(width_sec);
+        if ws.is_empty() {
+            return (0.0, 0.0);
+        }
+        let xs: Vec<f64> = ws.iter().map(|&(_, q)| q).collect();
+        (crate::util::stats::mean(&xs), crate::util::stats::std(&xs))
+    }
+}
+
+/// Gradient-staleness statistics (Table 5.3 columns).
+#[derive(Clone, Debug, Default)]
+pub struct StalenessStats {
+    run: Running,
+    max: u64,
+}
+
+impl StalenessStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn record(&mut self, staleness: u64) {
+        self.run.push(staleness as f64);
+        self.max = self.max.max(staleness);
+    }
+    pub fn mean(&self) -> f64 {
+        self.run.mean()
+    }
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+    pub fn count(&self) -> u64 {
+        self.run.count()
+    }
+    pub fn merge(&mut self, other: &StalenessStats) {
+        self.run.merge(&other.run);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Counters a training run accumulates (owner lives on the PS).
+#[derive(Clone, Debug, Default)]
+pub struct TrainCounters {
+    /// Batches whose gradients were discarded (Hop-BW drops, GBA decay).
+    pub dropped_batches: u64,
+    /// Gradients applied to parameters.
+    pub applied_gradients: u64,
+    /// Global steps (aggregated updates).
+    pub global_steps: u64,
+    /// Samples trained (excluding drops).
+    pub samples_trained: u64,
+    pub dense_staleness: StalenessStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let labels = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &labels), 1.0);
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &labels), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(1);
+        let n = 20_000;
+        let scores: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let labels: Vec<f32> = (0..n).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.02, "auc={a}");
+    }
+
+    #[test]
+    fn auc_ties_averaged() {
+        // all scores equal -> AUC 0.5 exactly
+        let a = auc(&[0.7; 6], &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+        assert!((a - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_single_class() {
+        assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+        assert_eq!(auc(&[], &[]), 0.5);
+    }
+
+    #[test]
+    fn auc_known_value() {
+        // pos {0.8, 0.4}, neg {0.6, 0.2}: won pairs = 3 of 4
+        let a = auc(&[0.8, 0.4, 0.6, 0.2], &[1.0, 1.0, 0.0, 0.0]);
+        assert!((a - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_series_windows() {
+        let mut r = RateSeries::new();
+        for i in 0..100 {
+            r.record(i as f64 * 0.1, 50);
+        }
+        assert_eq!(r.total_samples(), 5000);
+        let (mean, std) = r.qps_mean_std(1.0);
+        assert!((mean - 500.0).abs() < 55.0, "mean={mean}");
+        assert!(std < 200.0);
+        assert!((r.mean_qps() - 5000.0 / 9.9).abs() < 1.0);
+    }
+
+    #[test]
+    fn staleness_stats() {
+        let mut s = StalenessStats::new();
+        for v in [0, 1, 2, 11] {
+            s.record(v);
+        }
+        assert_eq!(s.max(), 11);
+        assert!((s.mean() - 3.5).abs() < 1e-12);
+        let mut t = StalenessStats::new();
+        t.record(20);
+        s.merge(&t);
+        assert_eq!(s.max(), 20);
+        assert_eq!(s.count(), 5);
+    }
+}

@@ -1,0 +1,140 @@
+//! Tabular + JSON experiment reporting. Every experiment driver prints a
+//! table shaped like the paper's and writes the same rows to
+//! `results/<experiment>.json` for downstream tooling.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Simple aligned-column table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                let mut obj = Json::obj();
+                for (h, c) in self.headers.iter().zip(r) {
+                    obj = obj.set(h, c.as_str());
+                }
+                obj
+            })
+            .collect();
+        Json::obj().set("title", self.title.as_str()).set("rows", Json::Arr(rows))
+    }
+}
+
+/// Write an experiment result document under `out_dir`.
+pub fn write_result(out_dir: impl AsRef<Path>, name: &str, doc: &Json) -> Result<()> {
+    let dir = out_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, doc.to_string_pretty())?;
+    Ok(())
+}
+
+/// Format an AUC the way the paper prints it (4 decimals).
+pub fn fmt_auc(a: f64) -> String {
+    format!("{a:.4}")
+}
+
+/// Format "mean(±std)" QPS in K-units like Table 5.2.
+pub fn fmt_qps_k(mean: f64, std: f64) -> String {
+    format!("{:.0}K(±{:.0}K)", mean / 1e3, std / 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["mode", "auc"]);
+        t.row(vec!["sync".into(), "0.7864".into()]);
+        t.row(vec!["gba".into(), "0.7866".into()]);
+        let r = t.render();
+        assert!(r.contains("== Demo =="));
+        assert!(r.contains("sync  0.7864"));
+        let j = t.to_json();
+        assert_eq!(j.get("rows").unwrap().idx(1).unwrap().get("mode").unwrap().as_str(), Some("gba"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn write_result_roundtrip() {
+        let dir = std::env::temp_dir().join("gba_report_test");
+        let doc = Json::obj().set("x", 1i64);
+        write_result(&dir, "unit", &doc).unwrap();
+        let text = std::fs::read_to_string(dir.join("unit.json")).unwrap();
+        assert!(text.contains("\"x\""));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_auc(0.78639), "0.7864");
+        assert_eq!(fmt_qps_k(3_253_000.0, 84_000.0), "3253K(±84K)");
+    }
+}

@@ -1,0 +1,483 @@
+//! Native (pure-Rust) implementation of the L2 model — forward and
+//! backward — mirroring `python/compile/model.py` bit-for-bit in structure.
+//!
+//! Two jobs:
+//! 1. **Fast compute backend** for the accuracy experiments (Fig. 2/3/6/7/8):
+//!    the models in this reproduction are small enough that FFI+PJRT
+//!    overhead dominates, so experiments default to this path. The PJRT
+//!    backend is the production path; an integration test pins the two
+//!    to the same numerics.
+//! 2. **Independent oracle** for the AOT pipeline: any disagreement
+//!    between this implementation and the artifact indicates a lowering
+//!    or layout bug.
+
+use crate::runtime::{HostTensor, TrainOut, VariantDims};
+use crate::util::rng::Pcg64;
+
+/// Row-major matmul out[m,n] = a[m,k] @ b[k,n]  (+= when `acc`).
+fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    // 4-row register blocking: each pass over a row of `b` feeds four
+    // output rows, quartering the b-matrix memory traffic (b is the
+    // largest operand and is re-streamed per output row otherwise).
+    let mut i = 0;
+    while i + 4 <= m {
+        let (o01, o23) = out[i * n..(i + 4) * n].split_at_mut(2 * n);
+        let (o0, o1) = o01.split_at_mut(n);
+        let (o2, o3) = o23.split_at_mut(n);
+        for p in 0..k {
+            let a0 = a[i * k + p];
+            let a1 = a[(i + 1) * k + p];
+            let a2 = a[(i + 2) * k + p];
+            let a3 = a[(i + 3) * k + p];
+            if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                let bv = brow[j];
+                o0[j] += a0 * bv;
+                o1[j] += a1 * bv;
+                o2[j] += a2 * bv;
+                o3[j] += a3 * bv;
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let orow = &mut out[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// out[m,n] = a[m,k] @ b[n,k]^T
+///
+/// The inner product is split over 8 independent accumulators so the
+/// compiler can vectorize the reduction (float adds are not associative,
+/// so a single-accumulator loop defeats auto-vectorization).
+fn matmul_bt(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = [0.0f32; 8];
+            let chunks = k / 8;
+            for c in 0..chunks {
+                let base = c * 8;
+                for l in 0..8 {
+                    acc[l] += arow[base + l] * brow[base + l];
+                }
+            }
+            let mut tail = 0.0f32;
+            for p in chunks * 8..k {
+                tail += arow[p] * brow[p];
+            }
+            out[i * n + j] = acc.iter().sum::<f32>() + tail;
+        }
+    }
+}
+
+/// out[k,n] = a[m,k]^T @ b[m,n]
+fn matmul_at(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    out.fill(0.0);
+    // 4-row blocking over the summation index: four (a,b) row pairs
+    // accumulate into `out` per pass, quartering the out-matrix traffic
+    // (out is k x n and is the streamed operand here).
+    let mut i = 0;
+    while i + 4 <= m {
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        let b0 = &b[i * n..(i + 1) * n];
+        let b1 = &b[(i + 1) * n..(i + 2) * n];
+        let b2 = &b[(i + 2) * n..(i + 3) * n];
+        let b3 = &b[(i + 3) * n..(i + 4) * n];
+        for p in 0..k {
+            let (v0, v1, v2, v3) = (a0[p], a1[p], a2[p], a3[p]);
+            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                continue;
+            }
+            let orow = &mut out[p * n..(p + 1) * n];
+            for j in 0..n {
+                orow[j] += v0 * b0[j] + v1 * b1[j] + v2 * b2[j] + v3 * b3[j];
+            }
+        }
+        i += 4;
+    }
+    while i < m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = arow[p];
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+        i += 1;
+    }
+}
+
+#[inline]
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// Forward-pass intermediates kept for the backward pass.
+struct Residuals {
+    h0: Vec<f32>,   // [B, IN] concat(x, fm)
+    a1: Vec<f32>,   // [B, H1] post-ReLU
+    a2: Vec<f32>,   // [B, H2] post-ReLU
+    s: Vec<f32>,    // [B, D] field sums (FM residual)
+    logits: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub dims: VariantDims,
+}
+
+impl NativeModel {
+    pub fn new(dims: VariantDims) -> Self {
+        NativeModel { dims }
+    }
+
+    /// He-initialized dense parameters (weights N(0, 2/fan_in), zero bias).
+    /// Same *scheme* as the python side; exact values come from this RNG,
+    /// so tests that cross-check PJRT vs native pass parameters explicitly.
+    pub fn init_params(&self, seed: u64) -> Vec<HostTensor> {
+        let mut rng = Pcg64::new(seed, 0x9a17);
+        self.dims
+            .param_shapes()
+            .into_iter()
+            .map(|shape| {
+                if shape.len() == 2 {
+                    let scale = (2.0 / shape[0] as f64).sqrt();
+                    let n: usize = shape.iter().product();
+                    let data =
+                        (0..n).map(|_| (rng.normal() * scale) as f32).collect::<Vec<_>>();
+                    HostTensor { shape, data }
+                } else {
+                    HostTensor::zeros(shape)
+                }
+            })
+            .collect()
+    }
+
+    fn forward_full(&self, emb: &HostTensor, params: &[HostTensor]) -> Residuals {
+        let d = &self.dims;
+        let b = emb.shape[0];
+        let (f, dim) = (d.fields, d.emb_dim);
+        debug_assert_eq!(emb.shape, vec![b, f, dim]);
+        let xin = f * dim;
+        let h0w = d.mlp_in;
+
+        // h0 = concat(flatten(emb), fm)
+        let mut h0 = vec![0.0f32; b * h0w];
+        let mut s = vec![0.0f32; b * dim];
+        for i in 0..b {
+            let erow = &emb.data[i * xin..(i + 1) * xin];
+            h0[i * h0w..i * h0w + xin].copy_from_slice(erow);
+            let srow = &mut s[i * dim..(i + 1) * dim];
+            for fi in 0..f {
+                for di in 0..dim {
+                    srow[di] += erow[fi * dim + di];
+                }
+            }
+            // fm = 0.5 * (s^2 - sum e^2)
+            let fmrow = &mut h0[i * h0w + xin..(i + 1) * h0w];
+            for di in 0..dim {
+                let mut sq = 0.0;
+                for fi in 0..f {
+                    let e = erow[fi * dim + di];
+                    sq += e * e;
+                }
+                fmrow[di] = 0.5 * (srow[di] * srow[di] - sq);
+            }
+        }
+
+        let (w1, b1, w2, b2, w3, b3) =
+            (&params[0], &params[1], &params[2], &params[3], &params[4], &params[5]);
+        let (h1, h2) = (d.hidden1, d.hidden2);
+
+        let mut a1 = vec![0.0f32; b * h1];
+        matmul(&h0, &w1.data, &mut a1, b, h0w, h1);
+        for i in 0..b {
+            for j in 0..h1 {
+                a1[i * h1 + j] = (a1[i * h1 + j] + b1.data[j]).max(0.0);
+            }
+        }
+        let mut a2 = vec![0.0f32; b * h2];
+        matmul(&a1, &w2.data, &mut a2, b, h1, h2);
+        for i in 0..b {
+            for j in 0..h2 {
+                a2[i * h2 + j] = (a2[i * h2 + j] + b2.data[j]).max(0.0);
+            }
+        }
+        let mut logits = vec![0.0f32; b];
+        for i in 0..b {
+            let mut acc = b3.data[0];
+            for j in 0..h2 {
+                acc += a2[i * h2 + j] * w3.data[j];
+            }
+            logits[i] = acc;
+        }
+        Residuals { h0, a1, a2, s, logits }
+    }
+
+    /// Inference logits.
+    pub fn predict(&self, emb: &HostTensor, params: &[HostTensor]) -> Vec<f32> {
+        self.forward_full(emb, params).logits
+    }
+
+    /// Mean BCE loss + gradients — mirrors the AOT `train_step` signature.
+    pub fn train_step(
+        &self,
+        emb: &HostTensor,
+        params: &[HostTensor],
+        labels: &[f32],
+    ) -> TrainOut {
+        let d = &self.dims;
+        let b = emb.shape[0];
+        debug_assert_eq!(labels.len(), b);
+        let (f, dim) = (d.fields, d.emb_dim);
+        let xin = f * dim;
+        let h0w = d.mlp_in;
+        let (h1, h2) = (d.hidden1, d.hidden2);
+        let res = self.forward_full(emb, params);
+        let (w1, w2, w3) = (&params[0], &params[2], &params[4]);
+
+        // loss = mean(max(z,0) - z*y + log1p(exp(-|z|)))
+        let mut loss = 0.0f64;
+        for i in 0..b {
+            let z = res.logits[i];
+            let y = labels[i];
+            loss += (z.max(0.0) - z * y + (-z.abs()).exp().ln_1p()) as f64;
+        }
+        let loss = (loss / b as f64) as f32;
+
+        // dz3[i] = (sigmoid(z) - y) / B
+        let invb = 1.0 / b as f32;
+        let dz3: Vec<f32> =
+            (0..b).map(|i| (sigmoid(res.logits[i]) - labels[i]) * invb).collect();
+
+        // layer 3: w3 [H2,1]
+        let mut dw3 = vec![0.0f32; h2];
+        let mut db3 = 0.0f32;
+        let mut da2 = vec![0.0f32; b * h2];
+        for i in 0..b {
+            db3 += dz3[i];
+            for j in 0..h2 {
+                dw3[j] += res.a2[i * h2 + j] * dz3[i];
+                da2[i * h2 + j] = dz3[i] * w3.data[j];
+            }
+        }
+        // relu mask
+        let mut dz2 = da2;
+        for (dz, a) in dz2.iter_mut().zip(&res.a2) {
+            if *a <= 0.0 {
+                *dz = 0.0;
+            }
+        }
+        let mut dw2 = vec![0.0f32; h1 * h2];
+        matmul_at(&res.a1, &dz2, &mut dw2, b, h1, h2);
+        let mut db2 = vec![0.0f32; h2];
+        for i in 0..b {
+            for j in 0..h2 {
+                db2[j] += dz2[i * h2 + j];
+            }
+        }
+        let mut da1 = vec![0.0f32; b * h1];
+        matmul_bt(&dz2, &w2.data, &mut da1, b, h2, h1);
+        let mut dz1 = da1;
+        for (dz, a) in dz1.iter_mut().zip(&res.a1) {
+            if *a <= 0.0 {
+                *dz = 0.0;
+            }
+        }
+        let mut dw1 = vec![0.0f32; h0w * h1];
+        matmul_at(&res.h0, &dz1, &mut dw1, b, h0w, h1);
+        let mut db1 = vec![0.0f32; h1];
+        for i in 0..b {
+            for j in 0..h1 {
+                db1[j] += dz1[i * h1 + j];
+            }
+        }
+        let mut dh0 = vec![0.0f32; b * h0w];
+        matmul_bt(&dz1, &w1.data, &mut dh0, b, h1, h0w);
+
+        // demb = dx + dfm * (s - e)
+        let mut demb = vec![0.0f32; b * xin];
+        for i in 0..b {
+            let erow = &emb.data[i * xin..(i + 1) * xin];
+            let dxrow = &dh0[i * h0w..i * h0w + xin];
+            let dfmrow = &dh0[i * h0w + xin..(i + 1) * h0w];
+            let srow = &res.s[i * dim..(i + 1) * dim];
+            let drow = &mut demb[i * xin..(i + 1) * xin];
+            for fi in 0..f {
+                for di in 0..dim {
+                    let idx = fi * dim + di;
+                    drow[idx] = dxrow[idx] + dfmrow[di] * (srow[di] - erow[idx]);
+                }
+            }
+        }
+
+        TrainOut {
+            loss,
+            logits: res.logits,
+            d_emb: HostTensor { shape: vec![b, f, dim], data: demb },
+            d_dense: vec![
+                HostTensor { shape: vec![h0w, h1], data: dw1 },
+                HostTensor { shape: vec![h1], data: db1 },
+                HostTensor { shape: vec![h1, h2], data: dw2 },
+                HostTensor { shape: vec![h2], data: db2 },
+                HostTensor { shape: vec![h2, 1], data: dw3 },
+                HostTensor { shape: vec![1], data: vec![db3] },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> VariantDims {
+        VariantDims { fields: 3, emb_dim: 4, hidden1: 8, hidden2: 5, mlp_in: 16 }
+    }
+
+    fn rand_tensor(rng: &mut Pcg64, shape: Vec<usize>, scale: f32) -> HostTensor {
+        let n: usize = shape.iter().product();
+        HostTensor { shape, data: (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect() }
+    }
+
+    fn setup() -> (NativeModel, HostTensor, Vec<HostTensor>, Vec<f32>) {
+        let m = NativeModel::new(dims());
+        let mut rng = Pcg64::seeded(3);
+        let b = 6;
+        let emb = rand_tensor(&mut rng, vec![b, 3, 4], 0.4);
+        let params = m.init_params(1);
+        let labels: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+        (m, emb, params, labels)
+    }
+
+    #[test]
+    fn loss_matches_manual_bce() {
+        let (m, emb, params, labels) = setup();
+        let out = m.train_step(&emb, &params, &labels);
+        let mut want = 0.0f64;
+        for (z, y) in out.logits.iter().zip(&labels) {
+            let p = sigmoid(*z) as f64;
+            want += -(*y as f64) * p.ln() - (1.0 - *y as f64) * (1.0 - p).ln();
+        }
+        want /= labels.len() as f64;
+        assert!((out.loss as f64 - want).abs() < 1e-5, "{} vs {want}", out.loss);
+    }
+
+    #[test]
+    fn gradcheck_dense_params() {
+        let (m, emb, params, labels) = setup();
+        let out = m.train_step(&emb, &params, &labels);
+        let eps = 1e-3f32;
+        // spot-check a handful of coordinates in every param tensor
+        for (pi, p) in params.iter().enumerate() {
+            let idxs: Vec<usize> =
+                (0..p.data.len()).step_by((p.data.len() / 5).max(1)).take(5).collect();
+            for &i in &idxs {
+                let mut plus = params.clone();
+                plus[pi].data[i] += eps;
+                let lp = m.train_step(&emb, &plus, &labels).loss;
+                let mut minus = params.clone();
+                minus[pi].data[i] -= eps;
+                let lm = m.train_step(&emb, &minus, &labels).loss;
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = out.d_dense[pi].data[i];
+                assert!(
+                    (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+                    "param {pi} idx {i}: fd={fd} analytic={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gradcheck_embeddings() {
+        let (m, emb, params, labels) = setup();
+        let out = m.train_step(&emb, &params, &labels);
+        let eps = 1e-3f32;
+        for i in (0..emb.data.len()).step_by(7) {
+            let mut plus = emb.clone();
+            plus.data[i] += eps;
+            let lp = m.train_step(&plus, &params, &labels).loss;
+            let mut minus = emb.clone();
+            minus.data[i] -= eps;
+            let lm = m.train_step(&minus, &params, &labels).loss;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = out.d_emb.data[i];
+            assert!(
+                (fd - an).abs() < 2e-3 + 0.05 * fd.abs().max(an.abs()),
+                "emb idx {i}: fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_steps_reduce_loss() {
+        let (m, emb, mut params, labels) = setup();
+        let first = m.train_step(&emb, &params, &labels).loss;
+        let mut last = first;
+        for _ in 0..100 {
+            let out = m.train_step(&emb, &params, &labels);
+            for (p, g) in params.iter_mut().zip(&out.d_dense) {
+                p.axpy(-0.3, g);
+            }
+            last = out.loss;
+        }
+        assert!(last < first * 0.6, "{first} -> {last}");
+    }
+
+    #[test]
+    fn predict_matches_train_logits() {
+        let (m, emb, params, labels) = setup();
+        let out = m.train_step(&emb, &params, &labels);
+        let logits = m.predict(&emb, &params);
+        assert_eq!(logits, out.logits);
+    }
+
+    #[test]
+    fn single_field_fm_is_zero() {
+        let d = VariantDims { fields: 1, emb_dim: 4, hidden1: 4, hidden2: 3, mlp_in: 8 };
+        let m = NativeModel::new(d);
+        let mut rng = Pcg64::seeded(5);
+        let emb = rand_tensor(&mut rng, vec![2, 1, 4], 1.0);
+        let params = m.init_params(0);
+        let res = m.forward_full(&emb, &params);
+        // fm part of h0 (last emb_dim columns) must be zero
+        for i in 0..2 {
+            for di in 0..4 {
+                assert!(res.h0[i * 8 + 4 + di].abs() < 1e-6);
+            }
+        }
+    }
+}

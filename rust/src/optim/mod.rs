@@ -1,0 +1,221 @@
+//! Optimizers — dense and sparse (per-embedding-row) update rules.
+//!
+//! Table 5.1 uses Adagrad for fully-asynchronous training and Adam for the
+//! other modes; SGD exists for the convergence-analysis experiments (the
+//! theory in §4.2 is stated for SGD). All optimizers expose a uniform
+//! slot-based state layout so the embedding store and the dense store can
+//! host any of them:
+//!
+//!   state.len() == param.len() * opt.slots()
+//!   slot s of weight i lives at state[s * n + i]   (planar layout)
+
+use crate::config::OptimKind;
+
+pub trait Optimizer: Send + Sync {
+    fn kind(&self) -> OptimKind;
+    /// State floats per weight.
+    fn slots(&self) -> usize;
+    /// In-place parameter update. `step` is the 1-based global update
+    /// index (Adam bias correction); sparse rows pass the global step too
+    /// ("lazy Adam" semantics, matching DeepRec's sparse Adam).
+    fn apply(&self, param: &mut [f32], grad: &[f32], state: &mut [f32], step: u64);
+    fn lr(&self) -> f32;
+    /// Clone into a box (checkpoint restore paths).
+    fn boxed_clone(&self) -> Box<dyn Optimizer>;
+}
+
+/// Plain SGD.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Optimizer for Sgd {
+    fn kind(&self) -> OptimKind {
+        OptimKind::Sgd
+    }
+    fn slots(&self) -> usize {
+        0
+    }
+    fn apply(&self, param: &mut [f32], grad: &[f32], _state: &mut [f32], _step: u64) {
+        for (p, g) in param.iter_mut().zip(grad) {
+            *p -= self.lr * g;
+        }
+    }
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+    fn boxed_clone(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
+    }
+}
+
+/// Adagrad with TF-style initial accumulator.
+#[derive(Clone, Debug)]
+pub struct Adagrad {
+    pub lr: f32,
+    pub eps: f32,
+    pub init_acc: f32,
+}
+
+impl Adagrad {
+    pub fn new(lr: f32) -> Self {
+        Adagrad { lr, eps: 1e-7, init_acc: 0.1 }
+    }
+}
+
+impl Optimizer for Adagrad {
+    fn kind(&self) -> OptimKind {
+        OptimKind::Adagrad
+    }
+    fn slots(&self) -> usize {
+        1
+    }
+    fn apply(&self, param: &mut [f32], grad: &[f32], state: &mut [f32], _step: u64) {
+        let n = param.len();
+        debug_assert_eq!(state.len(), n);
+        for i in 0..n {
+            let g = grad[i];
+            // Zero-initialized slots get the TF init_acc on first touch.
+            if state[i] == 0.0 {
+                state[i] = self.init_acc;
+            }
+            state[i] += g * g;
+            param[i] -= self.lr * g / (state[i].sqrt() + self.eps);
+        }
+    }
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+    fn boxed_clone(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction off the global step.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn kind(&self) -> OptimKind {
+        OptimKind::Adam
+    }
+    fn slots(&self) -> usize {
+        2
+    }
+    fn apply(&self, param: &mut [f32], grad: &[f32], state: &mut [f32], step: u64) {
+        let n = param.len();
+        debug_assert_eq!(state.len(), 2 * n);
+        let t = step.max(1) as i32;
+        let bc1 = 1.0 - self.beta1.powi(t);
+        let bc2 = 1.0 - self.beta2.powi(t);
+        let (m, v) = state.split_at_mut(n);
+        for i in 0..n {
+            let g = grad[i];
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            param[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+    fn lr(&self) -> f32 {
+        self.lr
+    }
+    fn boxed_clone(&self) -> Box<dyn Optimizer> {
+        Box::new(self.clone())
+    }
+}
+
+/// Factory from config.
+pub fn make_optimizer(kind: OptimKind, lr: f64) -> Box<dyn Optimizer> {
+    match kind {
+        OptimKind::Sgd => Box::new(Sgd { lr: lr as f32 }),
+        OptimKind::Adagrad => Box::new(Adagrad::new(lr as f32)),
+        OptimKind::Adam => Box::new(Adam::new(lr as f32)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad_descend(opt: &dyn Optimizer, steps: u64) -> f32 {
+        // minimize f(x) = 0.5*||x||^2, grad = x
+        let mut x = vec![4.0f32, -3.0, 2.0];
+        let mut state = vec![0.0f32; x.len() * opt.slots()];
+        for t in 1..=steps {
+            let g = x.clone();
+            opt.apply(&mut x, &g, &mut state, t);
+        }
+        x.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        assert!(quad_descend(&Sgd { lr: 0.1 }, 100) < 1e-3);
+    }
+
+    #[test]
+    fn adagrad_converges_on_quadratic() {
+        assert!(quad_descend(&Adagrad::new(0.5), 300) < 0.05);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        assert!(quad_descend(&Adam::new(0.05), 500) < 0.01);
+    }
+
+    #[test]
+    fn adam_first_step_magnitude_is_lr() {
+        // With bias correction, |Δ| of the first step ≈ lr regardless of g.
+        let opt = Adam::new(0.01);
+        for g0 in [1e-4f32, 1.0, 1e3] {
+            let mut p = vec![0.0f32];
+            let mut s = vec![0.0f32; 2];
+            opt.apply(&mut p, &[g0], &mut s, 1);
+            assert!((p[0].abs() - 0.01).abs() < 1e-4, "g0={g0} -> {}", p[0]);
+        }
+    }
+
+    #[test]
+    fn adagrad_accumulates_monotonically_smaller_steps() {
+        let opt = Adagrad::new(0.1);
+        let mut p = vec![0.0f32];
+        let mut s = vec![0.0f32];
+        let mut deltas = Vec::new();
+        for t in 1..=5 {
+            let before = p[0];
+            opt.apply(&mut p, &[1.0], &mut s, t);
+            deltas.push((p[0] - before).abs());
+        }
+        for w in deltas.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+    }
+
+    #[test]
+    fn sgd_zero_slots() {
+        assert_eq!(Sgd { lr: 0.1 }.slots(), 0);
+        assert_eq!(Adagrad::new(0.1).slots(), 1);
+        assert_eq!(Adam::new(0.1).slots(), 2);
+    }
+
+    #[test]
+    fn factory_kinds() {
+        for k in [OptimKind::Sgd, OptimKind::Adagrad, OptimKind::Adam] {
+            assert_eq!(make_optimizer(k, 0.01).kind(), k);
+        }
+    }
+}

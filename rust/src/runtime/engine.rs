@@ -1,0 +1,286 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts and serves
+//! `train_step` / `predict` calls to worker threads.
+//!
+//! The `xla` crate's wrappers hold non-atomic `Rc` internals, so PJRT
+//! objects must stay on the thread that created them. The engine therefore
+//! runs N service threads, each owning its own `PjRtClient` and compiled
+//! executables; callers talk to the pool through an MPMC request channel
+//! and get replies on per-request oneshot channels. This mirrors the
+//! paper's deployment: each physical worker owns a private compute stream.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc as std_mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+use crate::util::chan;
+
+/// Output of one `train_step` execution.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub loss: f32,
+    pub logits: Vec<f32>,
+    /// [B, F, D] per-sample embedding gradients.
+    pub d_emb: HostTensor,
+    /// Dense gradients in param order (dw1, db1, dw2, db2, dw3, db3).
+    pub d_dense: Vec<HostTensor>,
+}
+
+enum Request {
+    Train {
+        batch: usize,
+        emb: HostTensor,
+        params: Vec<HostTensor>,
+        labels: Vec<f32>,
+        reply: std_mpsc::Sender<Result<TrainOut>>,
+    },
+    Predict {
+        batch: usize,
+        emb: HostTensor,
+        params: Vec<HostTensor>,
+        reply: std_mpsc::Sender<Result<Vec<f32>>>,
+    },
+}
+
+/// Cloneable handle used by workers to submit compute.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: chan::Sender<Request>,
+}
+
+impl EngineHandle {
+    /// Blocking train-step execution on any free engine thread.
+    pub fn train_step(
+        &self,
+        batch: usize,
+        emb: HostTensor,
+        params: Vec<HostTensor>,
+        labels: Vec<f32>,
+    ) -> Result<TrainOut> {
+        let (rtx, rrx) = std_mpsc::channel();
+        self.tx
+            .send(Request::Train { batch, emb, params, labels, reply: rtx })
+            .map_err(|_| anyhow!("engine pool shut down"))?;
+        rrx.recv().context("engine thread dropped reply")?
+    }
+
+    /// Blocking inference execution.
+    pub fn predict(
+        &self,
+        batch: usize,
+        emb: HostTensor,
+        params: Vec<HostTensor>,
+    ) -> Result<Vec<f32>> {
+        let (rtx, rrx) = std_mpsc::channel();
+        self.tx
+            .send(Request::Predict { batch, emb, params, reply: rtx })
+            .map_err(|_| anyhow!("engine pool shut down"))?;
+        rrx.recv().context("engine thread dropped reply")?
+    }
+}
+
+/// Pool of PJRT service threads for one model variant.
+pub struct EnginePool {
+    tx: chan::Sender<Request>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl EnginePool {
+    /// Start `n_threads` engines for `variant`, compiling every batch-size
+    /// specialization listed in the manifest. Blocks until all threads have
+    /// compiled (or reports the first failure).
+    pub fn start(manifest: &Manifest, variant: &str, n_threads: usize) -> Result<EnginePool> {
+        let (tx, rx) = chan::unbounded::<Request>();
+        let (ready_tx, ready_rx) = std_mpsc::channel::<Result<()>>();
+        let mut threads = Vec::new();
+        for tid in 0..n_threads.max(1) {
+            let rx = rx.clone();
+            let ready = ready_tx.clone();
+            let manifest = manifest.clone();
+            let variant = variant.to_string();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("xla-engine-{tid}"))
+                    .spawn(move || engine_thread(manifest, variant, rx, ready))
+                    .context("spawning engine thread")?,
+            );
+        }
+        drop(ready_tx);
+        for _ in 0..threads.len() {
+            ready_rx.recv().context("engine thread died during startup")??;
+        }
+        Ok(EnginePool { tx, threads })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        EngineHandle { tx: self.tx.clone() }
+    }
+
+    /// Shut down: close the queue and join the threads.
+    pub fn shutdown(mut self) {
+        self.tx.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        self.tx.close();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    /// Output element counts (for shape bookkeeping on read-back).
+    emb_shape: Vec<usize>,
+    param_shapes: Vec<Vec<usize>>,
+    batch: usize,
+}
+
+fn engine_thread(
+    manifest: Manifest,
+    variant: String,
+    rx: chan::Receiver<Request>,
+    ready: std_mpsc::Sender<Result<()>>,
+) {
+    let setup = || -> Result<(BTreeMap<usize, Compiled>, BTreeMap<usize, Compiled>)> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let dims = manifest.dims(&variant)?;
+        let mut train = BTreeMap::new();
+        let mut predict = BTreeMap::new();
+        for &batch in manifest.batches(&variant)? {
+            for (function, map) in
+                [("train_step", &mut train), ("predict", &mut predict)]
+            {
+                let entry = manifest.find(function, &variant, batch)?;
+                let path = manifest.artifact_path(entry);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )
+                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe =
+                    client.compile(&comp).map_err(|e| anyhow!("compiling {function}: {e:?}"))?;
+                map.insert(
+                    batch,
+                    Compiled {
+                        exe,
+                        emb_shape: vec![batch, dims.fields, dims.emb_dim],
+                        param_shapes: dims.param_shapes(),
+                        batch,
+                    },
+                );
+            }
+        }
+        Ok((train, predict))
+    };
+
+    let (train, predict) = match setup() {
+        Ok(x) => {
+            let _ = ready.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Train { batch, emb, params, labels, reply } => {
+                let res = run_train(&train, batch, &emb, &params, &labels);
+                let _ = reply.send(res);
+            }
+            Request::Predict { batch, emb, params, reply } => {
+                let res = run_predict(&predict, batch, &emb, &params);
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn build_args(
+    emb: &HostTensor,
+    params: &[HostTensor],
+    labels: Option<&[f32]>,
+) -> Result<Vec<xla::Literal>> {
+    let mut args = Vec::with_capacity(params.len() + 2);
+    args.push(emb.to_literal()?);
+    for p in params {
+        args.push(p.to_literal()?);
+    }
+    if let Some(labels) = labels {
+        args.push(xla::Literal::vec1(labels));
+    }
+    Ok(args)
+}
+
+fn run_train(
+    compiled: &BTreeMap<usize, Compiled>,
+    batch: usize,
+    emb: &HostTensor,
+    params: &[HostTensor],
+    labels: &[f32],
+) -> Result<TrainOut> {
+    let c = compiled
+        .get(&batch)
+        .with_context(|| format!("no train_step artifact for batch {batch}"))?;
+    if emb.shape != c.emb_shape {
+        bail!("emb shape {:?} != artifact shape {:?}", emb.shape, c.emb_shape);
+    }
+    if labels.len() != c.batch {
+        bail!("labels len {} != batch {}", labels.len(), c.batch);
+    }
+    let args = build_args(emb, params, Some(labels))?;
+    let result = c
+        .exe
+        .execute::<xla::Literal>(&args)
+        .map_err(|e| anyhow!("execute train_step: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+    // Lowered with return_tuple=True: (loss, logits, d_emb, dw1..db3).
+    let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+    if parts.len() != 9 {
+        bail!("train_step returned {} outputs, want 9", parts.len());
+    }
+    let loss = parts[0].to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
+    let logits = parts[1].to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+    let d_emb = HostTensor::from_literal(&parts[2], c.emb_shape.clone())?;
+    let mut d_dense = Vec::with_capacity(6);
+    for (i, shape) in c.param_shapes.iter().enumerate() {
+        d_dense.push(HostTensor::from_literal(&parts[3 + i], shape.clone())?);
+    }
+    Ok(TrainOut { loss, logits, d_emb, d_dense })
+}
+
+fn run_predict(
+    compiled: &BTreeMap<usize, Compiled>,
+    batch: usize,
+    emb: &HostTensor,
+    params: &[HostTensor],
+) -> Result<Vec<f32>> {
+    let c = compiled
+        .get(&batch)
+        .with_context(|| format!("no predict artifact for batch {batch}"))?;
+    if emb.shape != c.emb_shape {
+        bail!("emb shape {:?} != artifact shape {:?}", emb.shape, c.emb_shape);
+    }
+    let args = build_args(emb, params, None)?;
+    let result = c
+        .exe
+        .execute::<xla::Literal>(&args)
+        .map_err(|e| anyhow!("execute predict: {e:?}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal_sync: {e:?}"))?;
+    let logits = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+    logits.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))
+}

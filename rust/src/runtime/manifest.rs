@@ -1,0 +1,234 @@
+//! Typed view of `artifacts/manifest.json` (emitted by `python -m
+//! compile.aot`). The manifest is the contract between the build-time
+//! python pipeline and the runtime: artifact file names, input signatures
+//! (positional names/shapes/dtypes) and model hyper-shapes per variant.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One positional tensor of an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled artifact (a `train_step` or `predict` HLO module).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub function: String,
+    pub variant: String,
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+    pub hlo_sha256: String,
+}
+
+/// Model hyper-shapes for a variant (must match `python/compile/model.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VariantDims {
+    pub fields: usize,
+    pub emb_dim: usize,
+    pub hidden1: usize,
+    pub hidden2: usize,
+    pub mlp_in: usize,
+}
+
+impl VariantDims {
+    /// Dense parameter shapes in the positional order of `train_step`
+    /// (w1, b1, w2, b2, w3, b3) — mirrors `ModelDims.param_shapes()`.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        vec![
+            vec![self.mlp_in, self.hidden1],
+            vec![self.hidden1],
+            vec![self.hidden1, self.hidden2],
+            vec![self.hidden2],
+            vec![self.hidden2, 1],
+            vec![1],
+        ]
+    }
+
+    pub fn dense_param_count(&self) -> usize {
+        self.param_shapes().iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub jax_version: String,
+    pub variants: BTreeMap<String, (VariantDims, Vec<usize>)>,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(dir, &root)
+    }
+
+    fn from_json(dir: PathBuf, root: &Json) -> Result<Manifest> {
+        if root.get("interchange").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest interchange format is not hlo-text");
+        }
+        let jax_version =
+            root.get("jax_version").and_then(Json::as_str).unwrap_or("unknown").to_string();
+
+        let mut variants = BTreeMap::new();
+        let vmap = root.get("variants").and_then(Json::as_obj).context("manifest.variants")?;
+        for (name, v) in vmap {
+            let u = |k: &str| -> Result<usize> {
+                v.get(k).and_then(Json::as_usize).with_context(|| format!("variants.{name}.{k}"))
+            };
+            let dims = VariantDims {
+                fields: u("fields")?,
+                emb_dim: u("emb_dim")?,
+                hidden1: u("hidden1")?,
+                hidden2: u("hidden2")?,
+                mlp_in: u("mlp_in")?,
+            };
+            // Cross-check the python-computed mlp_in.
+            if dims.mlp_in != dims.fields * dims.emb_dim + dims.emb_dim {
+                bail!("variant {name}: inconsistent mlp_in {}", dims.mlp_in);
+            }
+            let batches = v
+                .get("batches")
+                .and_then(Json::as_arr)
+                .context("batches")?
+                .iter()
+                .map(|b| b.as_usize().context("batch"))
+                .collect::<Result<Vec<_>>>()?;
+            variants.insert(name.clone(), (dims, batches));
+        }
+
+        let mut artifacts = Vec::new();
+        for a in root.get("artifacts").and_then(Json::as_arr).context("manifest.artifacts")? {
+            let s = |k: &str| -> Result<String> {
+                Ok(a.get(k).and_then(Json::as_str).with_context(|| format!("artifact.{k}"))?.to_string())
+            };
+            let mut inputs = Vec::new();
+            for i in a.get("inputs").and_then(Json::as_arr).context("artifact.inputs")? {
+                inputs.push(TensorSpec {
+                    name: i.get("name").and_then(Json::as_str).context("input.name")?.to_string(),
+                    shape: i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("input.shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()?,
+                    dtype: i.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string(),
+                });
+            }
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("artifact.outputs")?
+                .iter()
+                .map(|o| Ok(o.as_str().context("output")?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactEntry {
+                function: s("function")?,
+                variant: s("variant")?,
+                batch: a.get("batch").and_then(Json::as_usize).context("artifact.batch")?,
+                file: s("file")?,
+                inputs,
+                outputs,
+                hlo_sha256: s("hlo_sha256").unwrap_or_default(),
+            });
+        }
+        Ok(Manifest { dir, jax_version, variants, artifacts })
+    }
+
+    pub fn dims(&self, variant: &str) -> Result<VariantDims> {
+        Ok(self.variants.get(variant).with_context(|| format!("unknown variant {variant}"))?.0)
+    }
+
+    pub fn batches(&self, variant: &str) -> Result<&[usize]> {
+        Ok(&self.variants.get(variant).with_context(|| format!("unknown variant {variant}"))?.1)
+    }
+
+    /// Find an artifact by function + variant + batch.
+    pub fn find(&self, function: &str, variant: &str, batch: usize) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.function == function && a.variant == variant && a.batch == batch)
+            .with_context(|| format!("no artifact {function}/{variant}/b{batch}"))
+    }
+
+    pub fn artifact_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Json {
+        json::parse(
+            r#"{
+              "format": 1, "jax_version": "0.8.2", "interchange": "hlo-text",
+              "variants": {"tiny": {"fields": 4, "emb_dim": 4, "hidden1": 32,
+                                     "hidden2": 16, "mlp_in": 20, "batches": [8, 32]}},
+              "artifacts": [
+                {"function": "train_step", "variant": "tiny", "batch": 8,
+                 "file": "train_step_tiny_b8.hlo.txt",
+                 "inputs": [{"name": "emb", "shape": [8, 4, 4], "dtype": "float32"}],
+                 "outputs": ["loss"], "hlo_sha256": "x"}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(PathBuf::from("/tmp"), &sample_manifest()).unwrap();
+        assert_eq!(m.dims("tiny").unwrap().fields, 4);
+        assert_eq!(m.batches("tiny").unwrap(), &[8, 32]);
+        let a = m.find("train_step", "tiny", 8).unwrap();
+        assert_eq!(a.inputs[0].shape, vec![8, 4, 4]);
+        assert_eq!(a.inputs[0].numel(), 128);
+        assert!(m.find("predict", "tiny", 8).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_mlp_in() {
+        let mut j = sample_manifest();
+        if let Json::Obj(ref mut root) = j {
+            if let Some(Json::Obj(vs)) = root.get_mut("variants") {
+                if let Some(Json::Obj(t)) = vs.get_mut("tiny") {
+                    t.insert("mlp_in".into(), Json::Num(99.0));
+                }
+            }
+        }
+        assert!(Manifest::from_json(PathBuf::from("/tmp"), &j).is_err());
+    }
+
+    #[test]
+    fn param_shapes_order() {
+        let d = VariantDims { fields: 4, emb_dim: 4, hidden1: 32, hidden2: 16, mlp_in: 20 };
+        let shapes = d.param_shapes();
+        assert_eq!(shapes[0], vec![20, 32]);
+        assert_eq!(shapes[5], vec![1]);
+        assert_eq!(d.dense_param_count(), 20 * 32 + 32 + 32 * 16 + 16 + 16 + 1);
+    }
+}

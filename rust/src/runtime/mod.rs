@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Rust hot path (python never runs at train time).
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{EngineHandle, EnginePool, TrainOut};
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec, VariantDims};
+pub use tensor::HostTensor;

@@ -1,0 +1,99 @@
+//! Host-side tensor: the framework-internal value type crossing the
+//! worker <-> PJRT boundary (and used by the native compute backend).
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let numel: usize = shape.iter().product();
+        if numel != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, numel, data.len());
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let numel = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; numel] }
+    }
+
+    pub fn scalar(x: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![x] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// L2 norm of the flattened tensor (used by Fig. 3 gradient stats).
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Elementwise in-place axpy: self += alpha * other.
+    pub fn axpy(&mut self, alpha: f32, other: &HostTensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // scalar: keep as rank-1 then reshape to rank-0
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    /// Read back from an XLA literal with known shape.
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        HostTensor::new(shape, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn l2_norm() {
+        let t = HostTensor::new(vec![4], vec![1.0, -2.0, 2.0, 0.0]).unwrap();
+        assert!((t.l2_norm() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = HostTensor::zeros(vec![3]);
+        let b = HostTensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![2.0, 4.0, 6.0]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module. Each
+//! benchmark is measured with warmup, fixed-duration sampling, and reports
+//! mean / p50 / p95 / std plus derived throughput. Results can be appended
+//! to a JSON report for the experiment pipeline.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats;
+
+pub use std::hint::black_box;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    /// Max samples collected (each sample = one batched timing).
+    pub max_samples: usize,
+    /// Iterations per sample (auto-tuned if 0).
+    pub iters_per_sample: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 200,
+            iters_per_sample: 0,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast profile for CI / tests.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            max_samples: 50,
+            iters_per_sample: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Nanoseconds per iteration.
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+    pub samples: usize,
+    pub total_iters: u64,
+    /// Optional units processed per iteration (for throughput reporting).
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    /// Units per second (if `units_per_iter` set; else iterations/s).
+    pub fn throughput(&self) -> f64 {
+        let per_iter = if self.units_per_iter > 0.0 { self.units_per_iter } else { 1.0 };
+        per_iter / (self.mean_ns * 1e-9)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("mean_ns", self.mean_ns)
+            .set("p50_ns", self.p50_ns)
+            .set("p95_ns", self.p95_ns)
+            .set("std_ns", self.std_ns)
+            .set("samples", self.samples)
+            .set("total_iters", self.total_iters)
+            .set("throughput", self.throughput())
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G/s", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M/s", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}K/s", x / 1e3)
+    } else {
+        format!("{x:.1}/s")
+    }
+}
+
+/// Benchmark runner collecting results for a report.
+pub struct Bencher {
+    cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // GBA_BENCH_QUICK=1 switches to the fast profile (used by `make test`).
+        let cfg = if std::env::var("GBA_BENCH_QUICK").is_ok() {
+            BenchConfig::quick()
+        } else {
+            BenchConfig::default()
+        };
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    /// Benchmark `f`, which should perform one logical iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_units(name, 1.0, f)
+    }
+
+    /// Benchmark with a throughput unit count per iteration (e.g. samples
+    /// per batch) so the report shows units/s.
+    pub fn bench_units<F: FnMut()>(&mut self, name: &str, units: f64, mut f: F) -> &BenchResult {
+        // Warmup + auto-tune iterations per sample.
+        let w0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while w0.elapsed() < self.cfg.warmup || warm_iters == 0 {
+            bb(&mut f)();
+            warm_iters += 1;
+        }
+        let per_iter = self.cfg.warmup.as_nanos() as f64 / warm_iters.max(1) as f64;
+        let iters = if self.cfg.iters_per_sample > 0 {
+            self.cfg.iters_per_sample
+        } else {
+            // Aim for ~ (measure / max_samples) per sample.
+            let target_ns = self.cfg.measure.as_nanos() as f64 / self.cfg.max_samples as f64;
+            ((target_ns / per_iter.max(1.0)).ceil() as u64).max(1)
+        };
+
+        let mut samples = Vec::with_capacity(self.cfg.max_samples);
+        let mut total_iters = 0u64;
+        let t0 = Instant::now();
+        while t0.elapsed() < self.cfg.measure && samples.len() < self.cfg.max_samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                bb(&mut f)();
+            }
+            let ns = s.elapsed().as_nanos() as f64 / iters as f64;
+            samples.push(ns);
+            total_iters += iters;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile_sorted(&samples, 50.0),
+            p95_ns: stats::percentile_sorted(&samples, 95.0),
+            std_ns: stats::std(&samples),
+            samples: samples.len(),
+            total_iters,
+            units_per_iter: units,
+        };
+        println!(
+            "{:<48} {:>12} /iter  p50 {:>12}  p95 {:>12}  ±{:>10}  {:>12}",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p95_ns),
+            fmt_ns(res.std_ns),
+            fmt_rate(res.throughput()),
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Write collected results as a JSON report.
+    pub fn write_report(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, arr.to_string_pretty())
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_numbers() {
+        let mut b = Bencher::with_config(BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            max_samples: 20,
+            iters_per_sample: 0,
+        });
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(black_box(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p95_ns * 1.5);
+        assert!(r.samples > 0);
+    }
+
+    #[test]
+    fn throughput_uses_units() {
+        let mut b = Bencher::with_config(BenchConfig {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(10),
+            max_samples: 5,
+            iters_per_sample: 1,
+        });
+        let r = b.bench_units("sleepy", 100.0, || std::thread::sleep(Duration::from_micros(100)));
+        let tp = r.throughput();
+        // ~100 units / 100µs = ~1e6/s, allow wide margin.
+        assert!(tp > 1e5 && tp < 2e7, "tp={tp}");
+    }
+}

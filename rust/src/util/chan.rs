@@ -1,0 +1,346 @@
+//! Multi-producer / multi-consumer channel built on `Mutex` + `Condvar`.
+//!
+//! The PS push/pull services and the worker pools need MPMC semantics
+//! (std::sync::mpsc is MPSC-only and crossbeam-channel is unavailable
+//! offline). Supports bounded and unbounded queues, blocking and
+//! non-blocking receive, timeouts and close-on-drop semantics.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inner<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    cap: Option<usize>,
+    senders: usize,
+    receivers: usize,
+    closed: bool,
+}
+
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendError<T> {
+    /// All receivers dropped or channel explicitly closed.
+    Closed(T),
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvError {
+    /// Channel empty and all senders dropped (or closed).
+    Closed,
+    /// try/timeout receive found nothing (senders still alive).
+    Empty,
+}
+
+/// Create an unbounded channel.
+pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
+    channel(None)
+}
+
+/// Create a bounded channel; `send` blocks when `cap` items are queued.
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    channel(Some(cap.max(1)))
+}
+
+fn channel<T>(cap: Option<usize>) -> (Sender<T>, Receiver<T>) {
+    let inner = Arc::new(Inner {
+        q: Mutex::new(State {
+            items: VecDeque::new(),
+            cap,
+            senders: 1,
+            receivers: 1,
+            closed: false,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender { inner: inner.clone() }, Receiver { inner })
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.q.lock().unwrap().senders += 1;
+        Sender { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.inner.q.lock().unwrap().receivers += 1;
+        Receiver { inner: self.inner.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.receivers -= 1;
+        if st.receivers == 0 {
+            self.inner.not_full.notify_all();
+        }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send (respects the bound).
+    pub fn send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed || st.receivers == 0 {
+                return Err(SendError::Closed(v));
+            }
+            match st.cap {
+                Some(cap) if st.items.len() >= cap => {
+                    st = self.inner.not_full.wait(st).unwrap();
+                }
+                _ => break,
+            }
+        }
+        st.items.push_back(v);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking send: fails with `Closed` if full would block? No —
+    /// returns the value back if the channel is full or closed.
+    pub fn try_send(&self, v: T) -> Result<(), SendError<T>> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.receivers == 0 {
+            return Err(SendError::Closed(v));
+        }
+        if let Some(cap) = st.cap {
+            if st.items.len() >= cap {
+                return Err(SendError::Closed(v));
+            }
+        }
+        st.items.push_back(v);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel: pending items remain receivable, new sends fail.
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `Err(Closed)` once drained and no senders remain.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.closed || st.senders == 0 {
+                return Err(RecvError::Closed);
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.q.lock().unwrap();
+        if let Some(v) = st.items.pop_front() {
+            drop(st);
+            self.inner.not_full.notify_one();
+            return Ok(v);
+        }
+        if st.closed || st.senders == 0 {
+            Err(RecvError::Closed)
+        } else {
+            Err(RecvError::Empty)
+        }
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.closed || st.senders == 0 {
+                return Err(RecvError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Empty);
+            }
+            let (guard, _res) = self.inner.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain everything currently queued without blocking.
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let out: Vec<T> = st.items.drain(..).collect();
+        drop(st);
+        self.inner.not_full.notify_all();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn basic_send_recv() {
+        let (tx, rx) = unbounded();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.try_recv(), Err(RecvError::Empty));
+    }
+
+    #[test]
+    fn closed_after_senders_drop() {
+        let (tx, rx) = unbounded();
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn send_fails_when_receivers_gone() {
+        let (tx, rx) = unbounded::<u32>();
+        drop(rx);
+        assert!(matches!(tx.send(1), Err(SendError::Closed(1))));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = unbounded::<u64>();
+        let producers = 4;
+        let per = 1000u64;
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                }
+            }));
+        }
+        drop(tx);
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let rx = rx.clone();
+            consumers.push(thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Ok(v) = rx.recv() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        drop(rx);
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all: Vec<u64> = Vec::new();
+        for c in consumers {
+            all.extend(c.join().unwrap());
+        }
+        all.sort();
+        assert_eq!(all, (0..producers * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn bounded_blocks_and_unblocks() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert!(matches!(tx.try_send(3), Err(SendError::Closed(3))));
+        let t = {
+            let tx = tx.clone();
+            thread::spawn(move || tx.send(3).unwrap())
+        };
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Ok(1));
+        t.join().unwrap();
+        assert_eq!(rx.recv(), Ok(2));
+        assert_eq!(rx.recv(), Ok(3));
+    }
+
+    #[test]
+    fn recv_timeout_empty() {
+        let (_tx, rx) = unbounded::<u32>();
+        let start = Instant::now();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(30)), Err(RecvError::Empty));
+        assert!(start.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_wakes_receivers() {
+        let (tx, rx) = unbounded::<u32>();
+        let h = thread::spawn(move || rx.recv());
+        thread::sleep(Duration::from_millis(10));
+        tx.close();
+        assert_eq!(h.join().unwrap(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn drain_returns_pending() {
+        let (tx, rx) = unbounded();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(rx.drain(), vec![0, 1, 2, 3, 4]);
+        assert!(rx.is_empty());
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities built in-repo (the build environment is offline, so
+//! rand/serde/toml/criterion/proptest equivalents live here).
+
+pub mod bench;
+pub mod chan;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod toml;
+pub mod fasthash;

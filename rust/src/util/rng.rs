@@ -1,0 +1,334 @@
+//! Deterministic, seedable PRNG and the sampling distributions used across
+//! the framework (data generation, straggler models, initialization).
+//!
+//! The build environment is offline (no `rand` crate), so this implements
+//! PCG64 (O'Neill, 2014; the `pcg_xsl_rr_128_64` variant) plus the handful
+//! of distributions the paper's workloads need: uniform, normal (Box–Muller),
+//! lognormal, exponential, Bernoulli and bounded Zipf (the skewed ID
+//! distribution of Fig. 4).
+
+/// splitmix64 finalizer — cheap avalanche mix for deriving per-key seeds
+/// (embedding lazy-init, teacher latents, shard selection).
+#[inline]
+pub fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// PCG64: 128-bit LCG state, XSL-RR output function. Deterministic and
+/// splittable via [`Pcg64::split`] so every worker / data shard / experiment
+/// gets an independent stream from one experiment seed.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64) | 0xda3e_39cb_94b9_5bdb) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Convenience constructor on stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Derive an independent generator; `tag` distinguishes children.
+    pub fn split(&self, tag: u64) -> Self {
+        // Use the current state to derive a new seed, mix in the tag.
+        let s = (self.state >> 64) as u64 ^ (self.state as u64);
+        Pcg64::new(s ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15), tag.wrapping_add(1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` single precision.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's multiply-shift (unbiased).
+    #[inline]
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (no cached second value: keeps the
+    /// stream position a pure function of draw count).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with given mean / std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal with parameters of the underlying normal.
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate `lambda`.
+    #[inline]
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = 1.0 - self.next_f64(); // (0, 1]
+        -u.ln() / lambda
+    }
+
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.gen_range(xs.len() as u64) as usize]
+    }
+}
+
+/// Bounded Zipf(s) sampler over `{0, 1, .., n-1}` using the
+/// rejection-inversion method (W. Hörmann & G. Derflinger, 1996). O(1) per
+/// draw, supports s in (0, ..) including s=1. Rank 0 is the most frequent ID
+/// — this is the skewed ID-occurrence distribution of Fig. 4.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    h_x1: f64,
+    h_n: f64,
+    dense: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, s: f64) -> Self {
+        assert!(n >= 1, "zipf over empty support");
+        assert!(s > 0.0, "zipf exponent must be positive");
+        let nf = n as f64;
+        let h_x1 = Self::h(1.5, s) - 1.0;
+        let h_n = Self::h(nf + 0.5, s);
+        let dense = 1.0 / (Self::h_inv(h_x1, s) - Self::h_inv(h_x1 + 1e-12, s)).abs().max(1.0);
+        Zipf { n: nf, s, h_x1, h_n, dense }
+    }
+
+    /// H(x) = integral of x^-s  (antiderivative, the s==1 case is ln).
+    fn h(x: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-9 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - s) - 1.0) / (1.0 - s)
+        }
+    }
+
+    fn h_inv(y: f64, s: f64) -> f64 {
+        if (s - 1.0).abs() < 1e-9 {
+            y.exp()
+        } else {
+            (1.0 + y * (1.0 - s)).powf(1.0 / (1.0 - s))
+        }
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 most probable.
+    pub fn sample(&self, rng: &mut Pcg64) -> u64 {
+        let _ = self.dense;
+        loop {
+            let u = self.h_x1 + rng.next_f64() * (self.h_n - self.h_x1);
+            let x = Self::h_inv(u, self.s);
+            let k = (x + 0.5).floor().clamp(1.0, self.n);
+            // Acceptance test.
+            if k - x <= 0.5 || u >= Self::h(k + 0.5, self.s) - k.powf(-self.s) {
+                return (k as u64) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::seeded(1);
+        let mut b = Pcg64::seeded(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn split_streams_independent() {
+        let root = Pcg64::seeded(9);
+        let mut c1 = root.split(1);
+        let mut c2 = root.split(2);
+        let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seeded(3);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_unbiased_small() {
+        let mut r = Pcg64::seeded(4);
+        let mut counts = [0usize; 5];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.gen_range(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let expect = n as f64 / 5.0;
+            assert!((c as f64 - expect).abs() < expect * 0.05, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(5);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::seeded(6);
+        let n = 100_000;
+        let lambda = 2.5;
+        let mean: f64 = (0..n).map(|_| r.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Pcg64::seeded(7);
+        let mut xs: Vec<f64> = (0..50_001).map(|_| r.lognormal(0.5, 0.8)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[25_000];
+        assert!((median - 0.5f64.exp()).abs() < 0.05, "median={median}");
+    }
+
+    #[test]
+    fn zipf_rank_ordering_and_support() {
+        let mut r = Pcg64::seeded(8);
+        let z = Zipf::new(1000, 1.2);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..200_000 {
+            let k = z.sample(&mut r);
+            assert!(k < 1000);
+            counts[k as usize] += 1;
+        }
+        // Head must dominate the tail.
+        assert!(counts[0] > counts[10] && counts[10] > counts[500]);
+        // Rough check of the head mass against the analytic pmf.
+        let hsum: f64 = (1..=1000u64).map(|k| (k as f64).powf(-1.2)).sum();
+        let p0 = 1.0 / hsum;
+        let f0 = counts[0] as f64 / 200_000.0;
+        assert!((f0 - p0).abs() < 0.02, "f0={f0} p0={p0}");
+    }
+
+    #[test]
+    fn zipf_s_equal_one() {
+        let mut r = Pcg64::seeded(9);
+        let z = Zipf::new(50, 1.0);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 50);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(10);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,333 @@
+//! TOML-subset parser for the config system.
+//!
+//! Supports the subset our configs use: `[table]` and `[nested.table]`
+//! headers, `key = value` with string / integer / float / boolean / array
+//! scalars, `#` comments and blank lines. Dotted keys in assignments and
+//! array-of-tables are intentionally unsupported (configs don't need them);
+//! the parser errors loudly instead of mis-reading.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|x| usize::try_from(x).ok())
+    }
+    /// Floats accept integer literals too (`lr = 1` ≡ `1.0`).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: map from `table.path.key` (dot-joined) to value.
+/// Root-level keys have no prefix.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(|v| v.as_str())
+    }
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(|v| v.as_i64())
+    }
+    pub fn get_usize(&self, path: &str) -> Option<usize> {
+        self.get(path).and_then(|v| v.as_usize())
+    }
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(|v| v.as_f64())
+    }
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(|v| v.as_bool())
+    }
+
+    /// All keys under a table prefix (`prefix.` stripped).
+    pub fn table_keys(&self, prefix: &str) -> Vec<String> {
+        let pfx = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&pfx))
+            .map(|k| k[pfx.len()..].to_string())
+            .collect()
+    }
+
+    pub fn has_table(&self, prefix: &str) -> bool {
+        !self.table_keys(prefix).is_empty()
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut prefix = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+        if let Some(rest) = line.strip_prefix('[') {
+            if line.starts_with("[[") {
+                return Err(err("array-of-tables is not supported"));
+            }
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated table header"))?;
+            let name = name.trim();
+            if name.is_empty() || !name.split('.').all(is_bare_key) {
+                return Err(err("invalid table name"));
+            }
+            prefix = name.to_string();
+        } else {
+            let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if !is_bare_key(key) {
+                return Err(err(&format!("invalid key '{key}' (dotted/quoted keys unsupported)")));
+            }
+            let vtext = line[eq + 1..].trim();
+            let value = parse_value(vtext).map_err(|m| err(&m))?;
+            let full = if prefix.is_empty() { key.to_string() } else { format!("{prefix}.{key}") };
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key '{full}'")));
+            }
+        }
+    }
+    Ok(doc)
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty() && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s.strip_prefix('[').unwrap().strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    // Number: int unless it contains . e E (TOML floats).
+    let cleaned = s.replace('_', "");
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        cleaned.parse::<f64>().map(TomlValue::Float).map_err(|_| format!("bad float '{s}'"))
+    } else {
+        cleaned.parse::<i64>().map(TomlValue::Int).map_err(|_| format!("bad value '{s}'"))
+    }
+}
+
+fn unescape(s: &str) -> Result<String, String> {
+    let mut out = String::new();
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c == '"' {
+            return Err("unescaped quote inside string".into());
+        }
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('r') => out.push('\r'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                _ => return Err("bad escape".into()),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Ok(out)
+}
+
+/// Split on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut in_str, mut start) = (0usize, false, 0usize);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_doc() {
+        let doc = parse(
+            r#"
+# top comment
+name = "criteo-deepfm"
+seed = 42
+lr = 1e-3
+
+[model]
+fields = 16
+emb_dim = 16           # inline comment
+hidden = [128, 64]
+use_fm = true
+
+[mode.gba]
+iota = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name"), Some("criteo-deepfm"));
+        assert_eq!(doc.get_i64("seed"), Some(42));
+        assert_eq!(doc.get_f64("lr"), Some(1e-3));
+        assert_eq!(doc.get_usize("model.fields"), Some(16));
+        assert_eq!(doc.get_bool("model.use_fm"), Some(true));
+        assert_eq!(doc.get_i64("mode.gba.iota"), Some(3));
+        let hidden: Vec<i64> = doc
+            .get("model.hidden")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(hidden, vec![128, 64]);
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = parse("lr = 1").unwrap();
+        assert_eq!(doc.get_f64("lr"), Some(1.0));
+        assert_eq!(doc.get_i64("lr"), Some(1));
+    }
+
+    #[test]
+    fn string_escapes_and_hash_in_string() {
+        let doc = parse(r#"s = "a#b\nc""#).unwrap();
+        assert_eq!(doc.get_str("s"), Some("a#b\nc"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("x = [[1, 2], [3]]").unwrap();
+        let arr = doc.get("x").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("[[aot]]").is_err());
+        assert!(parse("a.b = 1").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn table_keys_listing() {
+        let doc = parse("[t]\na = 1\nb = 2\n[t2]\nc = 3").unwrap();
+        let mut keys = doc.table_keys("t");
+        keys.sort();
+        assert_eq!(keys, vec!["a", "b"]);
+        assert!(doc.has_table("t2"));
+        assert!(!doc.has_table("missing"));
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let doc = parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.get_i64("n"), Some(1_000_000));
+    }
+}

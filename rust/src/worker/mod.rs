@@ -1,0 +1,283 @@
+//! Worker runtime (Algorithm 1): pull → generate/download batch → gather
+//! embeddings → compute fwd/bwd → pre-reduce per-ID gradients →
+//! non-blocking push. Plus the compute-backend abstraction.
+
+pub mod session;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cluster::StragglerModel;
+use crate::data::DataGen;
+use crate::model::NativeModel;
+use crate::ps::{reduce_emb_grads, GradPush, PsServer, PullReply};
+use crate::runtime::{EngineHandle, HostTensor, TrainOut};
+use crate::util::rng::Pcg64;
+
+/// Which engine executes the model (identical numerics — pinned by the
+/// `train_integration` test).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust fwd/bwd (`model::NativeModel`) — default for experiments.
+    Native,
+    /// AOT HLO artifacts via PJRT — the production path.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            _ => anyhow::bail!("unknown backend '{s}' (native|pjrt)"),
+        }
+    }
+}
+
+/// A compute backend instance shared by all workers of a session.
+pub enum Backend {
+    Native(NativeModel),
+    Pjrt(EngineHandle),
+}
+
+impl Backend {
+    pub fn train_step(
+        &self,
+        batch: usize,
+        emb: &HostTensor,
+        params: &[HostTensor],
+        labels: &[f32],
+    ) -> Result<TrainOut> {
+        match self {
+            Backend::Native(m) => Ok(m.train_step(emb, params, labels)),
+            Backend::Pjrt(h) => h.train_step(batch, emb.clone(), params.to_vec(), labels.to_vec()),
+        }
+    }
+
+    pub fn predict(
+        &self,
+        batch: usize,
+        emb: &HostTensor,
+        params: &[HostTensor],
+    ) -> Result<Vec<f32>> {
+        match self {
+            Backend::Native(m) => Ok(m.predict(emb, params)),
+            Backend::Pjrt(h) => h.predict(batch, emb.clone(), params.to_vec()),
+        }
+    }
+}
+
+/// Per-worker runtime parameters.
+#[derive(Clone)]
+pub struct WorkerParams {
+    pub id: usize,
+    pub local_batch: usize,
+    /// Injected compute-time model (None = run at full speed).
+    pub straggler: Option<Arc<StragglerModel>>,
+    /// Virtual time-of-day at session start (secs) for the load trace.
+    pub start_sec: f64,
+    /// Probability of a simulated crash per batch (failure injection).
+    pub fail_prob: f64,
+    pub seed: u64,
+}
+
+/// What a worker reports after a day of training.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub batches: u64,
+    pub samples: u64,
+    pub failures: u64,
+    /// Wall seconds spent in compute+sleep (excludes barrier waits).
+    pub busy_sec: f64,
+}
+
+/// Run one worker until the PS data list is exhausted (Algorithm 1).
+pub fn run_worker(
+    ps: &PsServer,
+    gen: &DataGen,
+    backend: &Backend,
+    wp: &WorkerParams,
+) -> Result<WorkerStats> {
+    let mut stats = WorkerStats::default();
+    let mut rng = Pcg64::new(wp.seed, wp.id as u64 + 1000);
+    let t0 = Instant::now();
+    loop {
+        let item = match ps.pull_blocking(wp.id) {
+            PullReply::Work(item) => item,
+            PullReply::EndOfData => break,
+            PullReply::Wait => unreachable!("pull_blocking resolves waits"),
+        };
+
+        // Failure injection: lose the claim (and its token) mid-flight.
+        if wp.fail_prob > 0.0 && rng.bernoulli(wp.fail_prob) {
+            ps.worker_reset(wp.id);
+            stats.failures += 1;
+            continue;
+        }
+
+        let busy_start = Instant::now();
+        // "Download" + pack the batch (deterministic generation).
+        let batch = gen.batch_by_index(item.day, item.batch_index, wp.local_batch);
+        // Pull parameters: dense snapshot + embedding gather.
+        let params = ps.dense_params();
+        let emb = ps.emb.gather(&batch.keys, wp.local_batch, batch.fields);
+        // Compute fwd/bwd.
+        let out = backend.train_step(wp.local_batch, &emb, &params, &batch.labels)?;
+        // Straggler model: emulate the shared-cluster compute time.
+        if let Some(m) = &wp.straggler {
+            let t_virtual = wp.start_sec + t0.elapsed().as_secs_f64();
+            let ms = m.compute_ms_batch(wp.id, t_virtual, wp.local_batch, &mut rng);
+            std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1000.0));
+        }
+        // Pre-reduce per-ID embedding gradients, then push (non-blocking
+        // from the worker's perspective: push never parks this thread).
+        let emb_grads = reduce_emb_grads(&batch.keys, &out.d_emb);
+        ps.push(GradPush {
+            worker: wp.id,
+            token: item.token,
+            dense: out.d_dense,
+            emb: emb_grads,
+            n_samples: wp.local_batch,
+            loss: out.loss,
+        });
+        stats.batches += 1;
+        stats.samples += wp.local_batch as u64;
+        stats.busy_sec += busy_start.elapsed().as_secs_f64();
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::modes::GbaPolicy;
+    use crate::embedding::EmbeddingConfig;
+    use crate::optim::Sgd;
+    use crate::runtime::VariantDims;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig::from_toml(
+            r#"
+name = "worker-test"
+seed = 1
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 16
+hidden2 = 8
+vocab_size = 500
+zipf_s = 1.1
+[data]
+days_base = 1
+days_eval = 1
+samples_per_day = 512
+teacher_seed = 3
+[train]
+optimizer = "sgd"
+optimizer_async = "sgd"
+lr = 0.1
+[mode.sync]
+workers = 2
+local_batch = 32
+[mode.gba]
+workers = 4
+local_batch = 16
+iota = 3
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn workers_train_a_day_gba() {
+        let cfg = tiny_cfg();
+        let dims = VariantDims {
+            fields: 4,
+            emb_dim: 4,
+            hidden1: 16,
+            hidden2: 8,
+            mlp_in: 20,
+        };
+        let native = NativeModel::new(dims);
+        let ps = Arc::new(PsServer::new(
+            dims,
+            native.init_params(cfg.seed),
+            EmbeddingConfig { dim: 4, init_scale: 0.05, seed: 2, shards: 4 },
+            Box::new(Sgd { lr: 0.1 }),
+            Box::new(Sgd { lr: 0.1 }),
+            Box::new(GbaPolicy::with_iota(cfg.gba_m(), 3)),
+        ));
+        let gen = Arc::new(DataGen::new(&cfg.model, &cfg.data, cfg.seed));
+        let backend = Arc::new(Backend::Native(native));
+        let mode = cfg.mode(crate::config::ModeKind::Gba);
+        let n_batches = gen.batches_per_day(mode.local_batch);
+        ps.set_day(0, n_batches);
+
+        let mut handles = Vec::new();
+        for w in 0..mode.workers {
+            let (ps, gen, backend) = (ps.clone(), gen.clone(), backend.clone());
+            let wp = WorkerParams {
+                id: w,
+                local_batch: mode.local_batch,
+                straggler: None,
+                start_sec: 0.0,
+                fail_prob: 0.0,
+                seed: 9,
+            };
+            handles.push(std::thread::spawn(move || run_worker(&ps, &gen, &backend, &wp).unwrap()));
+        }
+        let stats: Vec<WorkerStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        ps.flush_partial();
+
+        let total_batches: u64 = stats.iter().map(|s| s.batches).sum();
+        assert_eq!(total_batches as usize, n_batches);
+        let c = ps.counters();
+        // Every batch's gradient was either applied or dropped; none lost.
+        assert_eq!(c.applied_gradients + c.dropped_batches, n_batches as u64);
+        assert!(c.global_steps >= (n_batches / cfg.gba_m()) as u64);
+        assert!(ps.quiescent());
+        // Training actually moved the dense parameters.
+        let p = ps.dense_params();
+        assert!(p[0].data.iter().any(|&x| x != 0.0) || p[1].data.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn failure_injection_does_not_deadlock_sync() {
+        use crate::coordinator::modes::SyncPolicy;
+        let dims = VariantDims { fields: 4, emb_dim: 4, hidden1: 16, hidden2: 8, mlp_in: 20 };
+        let cfg = tiny_cfg();
+        let native = NativeModel::new(dims);
+        let ps = Arc::new(PsServer::new(
+            dims,
+            native.init_params(1),
+            EmbeddingConfig { dim: 4, init_scale: 0.05, seed: 2, shards: 4 },
+            Box::new(Sgd { lr: 0.1 }),
+            Box::new(Sgd { lr: 0.1 }),
+            Box::new(SyncPolicy::new(2)),
+        ));
+        let gen = Arc::new(DataGen::new(&cfg.model, &cfg.data, cfg.seed));
+        let backend = Arc::new(Backend::Native(native));
+        ps.set_day(0, 16);
+        let mut handles = Vec::new();
+        for w in 0..2 {
+            let (ps, gen, backend) = (ps.clone(), gen.clone(), backend.clone());
+            let wp = WorkerParams {
+                id: w,
+                local_batch: 32,
+                straggler: None,
+                start_sec: 0.0,
+                fail_prob: 0.2,
+                seed: 5,
+            };
+            handles.push(std::thread::spawn(move || run_worker(&ps, &gen, &backend, &wp).unwrap()));
+        }
+        let stats: Vec<WorkerStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        ps.flush_partial();
+        assert!(stats.iter().any(|s| s.failures > 0), "no failures injected");
+        assert!(ps.quiescent());
+    }
+}

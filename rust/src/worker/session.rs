@@ -1,0 +1,406 @@
+//! Training session: the launcher-level object tying config, data, PS,
+//! policy, backend and workers together. Implements the paper's continual
+//! protocol (train day d, evaluate day d+1) and the *switch* operation
+//! (inherit parameters, change mode — §5.2 / Fig. 6).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::cluster::StragglerModel;
+use crate::config::{ExperimentConfig, ModeKind};
+use crate::coordinator::modes::make_policy;
+use crate::data::DataGen;
+use crate::embedding::EmbeddingConfig;
+use crate::metrics::{auc, TrainCounters};
+use crate::model::NativeModel;
+use crate::optim::make_optimizer;
+use crate::ps::PsServer;
+use crate::runtime::{EnginePool, Manifest, VariantDims};
+use crate::worker::{run_worker, Backend, BackendKind, WorkerParams};
+
+/// Options beyond the config file.
+#[derive(Clone)]
+pub struct SessionOptions {
+    pub backend: BackendKind,
+    /// Artifacts directory (PJRT backend only).
+    pub artifacts_dir: PathBuf,
+    /// Inject the cluster straggler model into worker compute.
+    pub straggler: bool,
+    /// Virtual time-of-day at session start (secs), for the load trace.
+    pub start_sec: f64,
+    pub fail_prob: f64,
+    /// PJRT engine threads.
+    pub engine_threads: usize,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            backend: BackendKind::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            straggler: false,
+            start_sec: 0.0,
+            fail_prob: 0.0,
+            engine_threads: 2,
+        }
+    }
+}
+
+/// Per-day training statistics.
+#[derive(Clone, Debug)]
+pub struct DayStats {
+    pub day: usize,
+    pub wall_sec: f64,
+    pub samples: u64,
+    pub qps: f64,
+    pub counters: TrainCounters,
+    pub failures: u64,
+    /// Mean local (per-worker) QPS.
+    pub local_qps: f64,
+}
+
+pub struct TrainSession {
+    pub cfg: ExperimentConfig,
+    pub kind: ModeKind,
+    pub dims: VariantDims,
+    gen: Arc<DataGen>,
+    ps: Arc<PsServer>,
+    backend: Arc<Backend>,
+    /// Kept alive while the PJRT backend is in use.
+    _engine: Option<EnginePool>,
+    opts: SessionOptions,
+    straggler: Option<Arc<StragglerModel>>,
+}
+
+fn dims_of(cfg: &ExperimentConfig) -> VariantDims {
+    VariantDims {
+        fields: cfg.model.fields,
+        emb_dim: cfg.model.emb_dim,
+        hidden1: cfg.model.hidden1,
+        hidden2: cfg.model.hidden2,
+        mlp_in: cfg.model.mlp_in(),
+    }
+}
+
+/// (optimizer kind, lr) the paper assigns to a mode (Table 5.1).
+fn optim_for(cfg: &ExperimentConfig, kind: ModeKind) -> (crate::config::OptimKind, f64) {
+    if kind.is_fully_async() {
+        (cfg.train.optimizer_async, cfg.train.lr_async)
+    } else {
+        (cfg.train.optimizer, cfg.train.lr)
+    }
+}
+
+impl TrainSession {
+    pub fn new(cfg: ExperimentConfig, kind: ModeKind, opts: SessionOptions) -> Result<Self> {
+        let dims = dims_of(&cfg);
+        let native = NativeModel::new(dims);
+        let init = native.init_params(cfg.seed);
+        Self::build(cfg, kind, opts, init, None, 0)
+    }
+
+    /// Inherit a checkpoint (the paper's switching protocol).
+    pub fn from_checkpoint(
+        cfg: ExperimentConfig,
+        kind: ModeKind,
+        opts: SessionOptions,
+        ckpt: &Checkpoint,
+    ) -> Result<Self> {
+        Self::build(cfg, kind, opts, ckpt.dense.clone(), Some(ckpt), ckpt.global_step)
+    }
+
+    fn build(
+        cfg: ExperimentConfig,
+        kind: ModeKind,
+        opts: SessionOptions,
+        init_dense: Vec<crate::runtime::HostTensor>,
+        ckpt: Option<&Checkpoint>,
+        _step0: u64,
+    ) -> Result<Self> {
+        let dims = dims_of(&cfg);
+        let mode = cfg.mode(kind);
+        let (okind, lr) = optim_for(&cfg, kind);
+        let policy = make_policy(kind, &mode, cfg.gba_m_effective());
+        let ps = Arc::new(PsServer::new(
+            dims,
+            init_dense,
+            EmbeddingConfig {
+                dim: cfg.model.emb_dim,
+                init_scale: 0.05,
+                seed: cfg.seed ^ 0xE0B,
+                shards: 16,
+            },
+            make_optimizer(okind, lr),
+            make_optimizer(okind, lr),
+            policy,
+        ));
+        if let Some(ckpt) = ckpt {
+            for (key, vec, meta) in &ckpt.emb_rows {
+                ps.emb.insert_row(
+                    *key,
+                    vec.clone(),
+                    vec![0.0; vec.len() * make_optimizer(okind, lr).slots()],
+                    *meta,
+                );
+            }
+        }
+        let gen = Arc::new(DataGen::new(&cfg.model, &cfg.data, cfg.seed));
+
+        let (backend, engine) = match opts.backend {
+            BackendKind::Native => (Backend::Native(NativeModel::new(dims)), None),
+            BackendKind::Pjrt => {
+                let manifest = Manifest::load(&opts.artifacts_dir)?;
+                let mdims = manifest.dims(&cfg.model.variant)?;
+                anyhow::ensure!(
+                    mdims == dims,
+                    "config model dims {dims:?} != artifact dims {mdims:?}"
+                );
+                anyhow::ensure!(
+                    manifest.batches(&cfg.model.variant)?.contains(&mode.local_batch),
+                    "no artifact for local batch {} of variant {}",
+                    mode.local_batch,
+                    cfg.model.variant
+                );
+                let pool = EnginePool::start(&manifest, &cfg.model.variant, opts.engine_threads)
+                    .context("starting PJRT engine pool")?;
+                (Backend::Pjrt(pool.handle()), Some(pool))
+            }
+        };
+        let straggler = opts
+            .straggler
+            .then(|| Arc::new(StragglerModel::new(&cfg.cluster, mode.workers, cfg.seed ^ 0x57)));
+        Ok(TrainSession {
+            cfg,
+            kind,
+            dims,
+            gen,
+            ps,
+            backend: Arc::new(backend),
+            _engine: engine,
+            opts,
+            straggler,
+        })
+    }
+
+    pub fn ps(&self) -> &PsServer {
+        &self.ps
+    }
+
+    pub fn gen(&self) -> &DataGen {
+        &self.gen
+    }
+
+    /// Train on one day of data; returns the day's statistics.
+    pub fn train_day(&self, day: usize) -> Result<DayStats> {
+        let mode = self.cfg.mode(self.kind);
+        let n_batches = self.gen.batches_per_day(mode.local_batch);
+        self.ps.reset_counters();
+        self.ps.set_day(day, n_batches);
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for w in 0..mode.workers {
+            let ps = self.ps.clone();
+            let gen = self.gen.clone();
+            let backend = self.backend.clone();
+            let wp = WorkerParams {
+                id: w,
+                local_batch: mode.local_batch,
+                straggler: self.straggler.clone(),
+                start_sec: self.opts.start_sec,
+                fail_prob: self.opts.fail_prob,
+                seed: self.cfg.seed ^ (day as u64) << 8,
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("worker-{w}"))
+                    .spawn(move || run_worker(&ps, &gen, &backend, &wp))?,
+            );
+        }
+        let mut samples = 0u64;
+        let mut failures = 0u64;
+        let mut busy = 0.0f64;
+        for h in handles {
+            let s = h.join().expect("worker panicked")?;
+            samples += s.samples;
+            failures += s.failures;
+            busy += s.busy_sec;
+        }
+        // Drain: apply any partial buffer left at end-of-day.
+        self.ps.flush_partial();
+        let wall = t0.elapsed().as_secs_f64();
+        let counters = self.ps.counters();
+        Ok(DayStats {
+            day,
+            wall_sec: wall,
+            samples,
+            qps: samples as f64 / wall.max(1e-9),
+            local_qps: samples as f64 / busy.max(1e-9) / mode.workers as f64
+                * mode.workers as f64
+                / mode.workers as f64,
+            counters,
+            failures,
+        })
+    }
+
+    /// AUC over `n` eval samples of `day` (the paper's next-day protocol:
+    /// call with `day = trained_day + 1`).
+    pub fn eval_auc(&self, day: usize) -> Result<f64> {
+        let n = self.cfg.train.eval_samples;
+        let bsz = self.cfg.train.eval_batch;
+        let params = self.ps.dense_params();
+        let mut scores = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let n_batches = (n / bsz).max(1);
+        for b in 0..n_batches {
+            let batch = self.gen.batch_by_index(day, b, bsz);
+            let emb = self.ps.emb.gather(&batch.keys, bsz, batch.fields);
+            let logits = self.backend.predict(bsz, &emb, &params)?;
+            scores.extend_from_slice(&logits);
+            labels.extend_from_slice(&batch.labels);
+        }
+        Ok(auc(&scores, &labels))
+    }
+
+    /// In-memory checkpoint of the current parameters.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint::from_ps(self.dims, &self.ps)
+    }
+
+    /// Switch the training mode, inheriting all parameters (the paper's
+    /// tuning-free switch: same hyper-parameters, new coordination).
+    /// Optimizer slots reset — exactly what checkpoint-inherit does.
+    pub fn switch_mode(&mut self, kind: ModeKind) -> Result<()> {
+        let ckpt = self.checkpoint();
+        let new = TrainSession::from_checkpoint(
+            self.cfg.clone(),
+            kind,
+            self.opts.clone(),
+            &ckpt,
+        )?;
+        *self = new;
+        Ok(())
+    }
+
+    /// Train `days`, evaluating on the subsequent day after each (the
+    /// paper's continual protocol). Returns (day, AUC-on-day+1) pairs.
+    pub fn run_continual(&self, days: std::ops::Range<usize>) -> Result<Vec<(usize, f64, DayStats)>> {
+        let mut out = Vec::new();
+        for d in days {
+            let stats = self.train_day(d)?;
+            let a = self.eval_auc(d + 1)?;
+            out.push((d, a, stats));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig::from_toml(
+            r#"
+name = "session-test"
+seed = 11
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 32
+hidden2 = 16
+vocab_size = 2000
+zipf_s = 1.1
+[data]
+days_base = 2
+days_eval = 1
+samples_per_day = 4096
+teacher_seed = 3
+label_noise = 0.02
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+lr_async = 0.05
+eval_batch = 256
+eval_samples = 2048
+[mode.sync]
+workers = 4
+local_batch = 64
+[mode.async]
+workers = 8
+local_batch = 16
+[mode.gba]
+workers = 8
+local_batch = 32
+iota = 3
+[mode.hop_bs]
+workers = 8
+local_batch = 32
+bound = 2
+[mode.bsp]
+workers = 8
+local_batch = 32
+aggregate = 8
+[mode.hop_bw]
+workers = 4
+local_batch = 64
+backup = 1
+"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sync_training_improves_auc() {
+        let s = TrainSession::new(cfg(), ModeKind::Sync, SessionOptions::default()).unwrap();
+        let before = s.eval_auc(1).unwrap();
+        s.train_day(0).unwrap();
+        let after = s.eval_auc(1).unwrap();
+        assert!(after > before + 0.05, "auc {before} -> {after}");
+        assert!(after > 0.6, "auc after one day = {after}");
+    }
+
+    #[test]
+    fn gba_training_improves_auc_and_matches_global_batch() {
+        let c = cfg();
+        let m = c.gba_m();
+        assert_eq!(m, 8); // 4*64 / 32
+        let s = TrainSession::new(c, ModeKind::Gba, SessionOptions::default()).unwrap();
+        let stats = s.train_day(0).unwrap();
+        // steps ≈ batches / M
+        let batches = stats.counters.applied_gradients + stats.counters.dropped_batches;
+        assert!(stats.counters.global_steps >= batches / m as u64);
+        let a = s.eval_auc(1).unwrap();
+        assert!(a > 0.6, "gba auc = {a}");
+    }
+
+    #[test]
+    fn switch_sync_to_gba_keeps_accuracy() {
+        let mut s = TrainSession::new(cfg(), ModeKind::Sync, SessionOptions::default()).unwrap();
+        s.train_day(0).unwrap();
+        let before = s.eval_auc(1).unwrap();
+        s.switch_mode(ModeKind::Gba).unwrap();
+        let inherited = s.eval_auc(1).unwrap();
+        // Inheriting parameters must preserve eval exactly (same params).
+        assert!((inherited - before).abs() < 1e-9);
+        s.train_day(1).unwrap();
+        let after = s.eval_auc(2).unwrap();
+        assert!(after > before - 0.05, "switch degraded: {before} -> {after}");
+    }
+
+    #[test]
+    fn all_modes_run_a_day() {
+        for kind in crate::config::ModeKind::ALL {
+            let s = TrainSession::new(cfg(), kind, SessionOptions::default()).unwrap();
+            let stats = s.train_day(0).unwrap();
+            assert!(stats.counters.global_steps > 0, "{kind:?} made no steps");
+            let a = s.eval_auc(1).unwrap();
+            assert!(a > 0.52, "{kind:?} auc = {a}");
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! Property-based tests on the coordination policies (the paper's §4.1
+//! invariants), driven by random worker interleavings.
+//!
+//! The harness mimics a set of workers with in-flight batches: at each step
+//! it randomly either lets some worker pull (if not gated) or lets a random
+//! in-flight batch finish and push. Policies must uphold their invariants
+//! under ANY such interleaving — this is the GBA-correctness core.
+
+use gba::config::{ModeConfig, ModeKind};
+use gba::coordinator::modes::{make_policy, GbaPolicy, HopBsPolicy, SyncPolicy};
+use gba::coordinator::{DecayStrategy, ModePolicy, PullDecision, PushAction};
+use gba::util::prop;
+use gba::util::rng::Pcg64;
+
+/// Random interleaving driver. Returns per-flush records:
+/// (global step k at flush, tokens, weights).
+struct Harness {
+    policy: Box<dyn ModePolicy>,
+    n_workers: usize,
+    /// tokens in flight per worker
+    inflight: Vec<Vec<u64>>,
+    buffer: Vec<u64>,
+    pub flushes: Vec<(u64, Vec<u64>, Vec<f32>)>,
+    pub dropped_on_push: u64,
+    pub pulls: Vec<u64>,
+}
+
+impl Harness {
+    fn new(policy: Box<dyn ModePolicy>, n_workers: usize) -> Self {
+        Harness {
+            policy,
+            n_workers,
+            inflight: vec![Vec::new(); n_workers],
+            buffer: Vec::new(),
+            flushes: Vec::new(),
+            dropped_on_push: 0,
+            pulls: Vec::new(),
+        }
+    }
+
+    fn total_inflight(&self) -> usize {
+        self.inflight.iter().map(|v| v.len()).sum()
+    }
+
+    /// One random action; returns false if nothing was possible.
+    fn step(&mut self, rng: &mut Pcg64) -> bool {
+        let w = rng.gen_range(self.n_workers as u64) as usize;
+        let do_pull = rng.bernoulli(0.55) || self.total_inflight() == 0;
+        if do_pull {
+            match self.policy.on_pull(w) {
+                PullDecision::Token(t) => {
+                    self.inflight[w].push(t);
+                    self.pulls.push(t);
+                    true
+                }
+                PullDecision::Wait => self.push_random(rng),
+            }
+        } else {
+            self.push_random(rng)
+        }
+    }
+
+    fn push_random(&mut self, rng: &mut Pcg64) -> bool {
+        let candidates: Vec<usize> =
+            (0..self.n_workers).filter(|&w| !self.inflight[w].is_empty()).collect();
+        if candidates.is_empty() {
+            return false;
+        }
+        let w = *rng.choose(&candidates);
+        // Pushes may complete out of order within a worker too.
+        let idx = rng.gen_range(self.inflight[w].len() as u64) as usize;
+        let token = self.inflight[w].remove(idx);
+        match self.policy.on_push(w, token) {
+            PushAction::Drop => {
+                self.dropped_on_push += 1;
+            }
+            PushAction::Buffer => self.buffer.push(token),
+            PushAction::FlushNow => {
+                self.buffer.push(token);
+                let k = self.policy.global_step();
+                let spec = self.policy.flush_spec(&self.buffer);
+                self.flushes.push((k, self.buffer.clone(), spec.weights.clone()));
+                self.buffer.clear();
+                self.policy.on_applied();
+            }
+        }
+        true
+    }
+}
+
+#[test]
+fn gba_tokens_ascending_with_multiplicity_m() {
+    prop::check("gba token list", 40, |rng| {
+        let m = 1 + rng.gen_range(8) as usize;
+        let workers = 1 + rng.gen_range(6) as usize;
+        let mut h = Harness::new(Box::new(GbaPolicy::with_iota(m, 3)), workers);
+        for _ in 0..400 {
+            h.step(rng);
+        }
+        // Pull order IS the token list: t_i = floor(i / M).
+        for (i, &t) in h.pulls.iter().enumerate() {
+            assert_eq!(t, (i / m) as u64, "i={i} m={m}");
+        }
+    });
+}
+
+#[test]
+fn gba_flushes_exactly_m_and_decays_by_iota() {
+    prop::check("gba flush invariants", 40, |rng| {
+        let m = 1 + rng.gen_range(6) as usize;
+        let iota = rng.gen_range(4);
+        let workers = 1 + rng.gen_range(8) as usize;
+        let mut h = Harness::new(Box::new(GbaPolicy::with_iota(m, iota)), workers);
+        for _ in 0..600 {
+            h.step(rng);
+        }
+        assert!(h.dropped_on_push == 0, "GBA never drops at push time");
+        for (k, tokens, weights) in &h.flushes {
+            assert_eq!(tokens.len(), m, "buffer capacity is exactly M");
+            for (&t, &w) in tokens.iter().zip(weights) {
+                let stale = k.saturating_sub(t);
+                if stale > iota {
+                    assert_eq!(w, 0.0, "stale grad (k={k}, t={t}) must be dropped");
+                } else {
+                    assert_eq!(w, 1.0, "fresh grad (k={k}, t={t}) must be kept");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gradient_conservation_all_modes() {
+    // Every pushed gradient is exactly once: admitted (weight > 0),
+    // decayed-out (weight 0), or dropped at push. Nothing is lost or
+    // double-counted.
+    prop::check("conservation", 30, |rng| {
+        let workers = 2 + rng.gen_range(6) as usize;
+        let mc = ModeConfig {
+            workers,
+            local_batch: 8,
+            iota: rng.gen_range(4),
+            bound: 1 + rng.gen_range(3),
+            aggregate: 1 + rng.gen_range(5) as usize,
+            backup: rng.gen_range(workers as u64 - 1) as usize,
+            m_override: None,
+        };
+        for kind in ModeKind::ALL {
+            let mut h = Harness::new(make_policy(kind, &mc, 4), workers);
+            let mut actions = 0;
+            for _ in 0..500 {
+                if h.step(rng) {
+                    actions += 1;
+                }
+            }
+            assert!(actions > 0);
+            let pushed = h.pulls.len() - h.total_inflight() - h.buffer.len();
+            let flushed: usize = h.flushes.iter().map(|(_, t, _)| t.len()).sum();
+            assert_eq!(
+                pushed,
+                flushed + h.dropped_on_push as usize,
+                "mode {kind:?}: pushed {pushed} != flushed {flushed} + dropped {}",
+                h.dropped_on_push
+            );
+        }
+    });
+}
+
+#[test]
+fn sync_cohorts_are_exact() {
+    prop::check("sync cohorts", 30, |rng| {
+        let n = 2 + rng.gen_range(6) as usize;
+        let mut h = Harness::new(Box::new(SyncPolicy::new(n)), n);
+        for _ in 0..400 {
+            h.step(rng);
+        }
+        for (i, (k, tokens, weights)) in h.flushes.iter().enumerate() {
+            assert_eq!(tokens.len(), n, "sync flush has one grad per worker");
+            assert!(tokens.iter().all(|&t| t == i as u64), "all tokens equal the step");
+            assert_eq!(*k, i as u64);
+            assert!(weights.iter().all(|&w| w == 1.0), "sync never drops");
+        }
+        assert_eq!(h.dropped_on_push, 0);
+    });
+}
+
+#[test]
+fn hop_bs_clock_gap_never_exceeds_bound() {
+    prop::check("hop-bs bound", 40, |rng| {
+        let n = 2 + rng.gen_range(5) as usize;
+        let bound = 1 + rng.gen_range(3);
+        let mut policy = HopBsPolicy::new(n, bound);
+        // Track worker completion counts externally.
+        let mut clock = vec![0u64; n];
+        let mut inflight: Vec<Vec<u64>> = vec![Vec::new(); n];
+        for _ in 0..500 {
+            let w = rng.gen_range(n as u64) as usize;
+            if rng.bernoulli(0.55) {
+                if let PullDecision::Token(t) = policy.on_pull(w) {
+                    inflight[w].push(t);
+                }
+            } else {
+                let candidates: Vec<usize> =
+                    (0..n).filter(|&i| !inflight[i].is_empty()).collect();
+                if let Some(&w2) = candidates.first() {
+                    let t = inflight[w2].pop().unwrap();
+                    let _ = policy.on_push(w2, t);
+                    policy.flush_spec(&[t]);
+                    policy.on_applied();
+                    clock[w2] += 1;
+                    let min = *clock.iter().min().unwrap();
+                    let max = *clock.iter().max().unwrap();
+                    assert!(
+                        max - min <= bound,
+                        "SSP violated: clocks {clock:?} bound {bound}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn hop_bw_admits_exactly_quorum_per_step() {
+    prop::check("hop-bw quorum", 30, |rng| {
+        let n = 3 + rng.gen_range(5) as usize;
+        let b3 = 1 + rng.gen_range((n - 2) as u64) as usize;
+        let mc = ModeConfig { workers: n, local_batch: 8, iota: 3, bound: 2, aggregate: 1, backup: b3, m_override: None };
+        let mut h = Harness::new(make_policy(ModeKind::HopBw, &mc, 4), n);
+        for _ in 0..600 {
+            h.step(rng);
+        }
+        for (k, tokens, _) in &h.flushes {
+            assert_eq!(tokens.len(), n - b3, "quorum is N - b3");
+            assert!(tokens.iter().all(|&t| t == *k), "cohort tokens match step");
+        }
+    });
+}
+
+#[test]
+fn decay_strategies_are_monotone_in_staleness() {
+    prop::check("decay monotone", 50, |rng| {
+        let strategies = [
+            DecayStrategy::Threshold { iota: rng.gen_range(5) },
+            DecayStrategy::Linear { iota: 1 + rng.gen_range(5) },
+            DecayStrategy::Exponential { alpha: 0.3 + 0.6 * rng.next_f32() },
+        ];
+        let k = 50 + rng.gen_range(50);
+        for s in strategies {
+            let mut prev = f32::INFINITY;
+            for stale in 0..20u64 {
+                let w = s.weight(k - stale, k);
+                assert!((0.0..=1.0).contains(&w));
+                assert!(w <= prev, "{s:?} not monotone at staleness {stale}");
+                prev = w;
+            }
+            assert_eq!(s.weight(k, k), 1.0, "{s:?} fresh weight must be 1");
+        }
+    });
+}
+
+#[test]
+fn worker_reset_never_corrupts_policies() {
+    prop::check("reset safety", 30, |rng| {
+        let workers = 2 + rng.gen_range(5) as usize;
+        let mc = ModeConfig {
+            workers,
+            local_batch: 8,
+            iota: 2,
+            bound: 2,
+            aggregate: 3,
+            backup: 1.min(workers - 2),
+            m_override: None,
+        };
+        for kind in ModeKind::ALL {
+            let mut h = Harness::new(make_policy(kind, &mc, 4), workers);
+            for _ in 0..300 {
+                if rng.bernoulli(0.1) {
+                    // Random worker dies: its in-flight tokens vanish.
+                    let w = rng.gen_range(workers as u64) as usize;
+                    h.inflight[w].clear();
+                    h.policy.on_worker_reset(w);
+                } else {
+                    h.step(rng);
+                }
+            }
+            // Policy still functional: progress is possible — either some
+            // worker can pull, or in-flight work exists whose push will
+            // advance the system.
+            let can_push = h.total_inflight() > 0;
+            let can_pull = (0..workers)
+                .any(|w| matches!(h.policy.on_pull(w), PullDecision::Token(_)));
+            assert!(can_pull || can_push, "mode {kind:?} deadlocked after resets");
+        }
+    });
+}

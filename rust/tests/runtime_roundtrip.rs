@@ -1,0 +1,105 @@
+//! Integration: load the AOT artifacts via PJRT and execute train_step /
+//! predict with concrete inputs. Requires `make artifacts` (tiny variant).
+
+use gba::runtime::{EnginePool, HostTensor, Manifest};
+use gba::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn rand_tensor(rng: &mut Pcg64, shape: Vec<usize>, scale: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    let data = (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect();
+    HostTensor::new(shape, data).unwrap()
+}
+
+#[test]
+fn train_step_and_predict_roundtrip() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let dims = manifest.dims("tiny").unwrap();
+    let batch = manifest.batches("tiny").unwrap()[0];
+
+    let pool = EnginePool::start(&manifest, "tiny", 2).unwrap();
+    let h = pool.handle();
+
+    let mut rng = Pcg64::seeded(7);
+    let emb = rand_tensor(&mut rng, vec![batch, dims.fields, dims.emb_dim], 0.3);
+    let params: Vec<HostTensor> = dims
+        .param_shapes()
+        .into_iter()
+        .map(|s| rand_tensor(&mut rng, s, 0.2))
+        .collect();
+    let labels: Vec<f32> = (0..batch).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+
+    let out = h.train_step(batch, emb.clone(), params.clone(), labels.clone()).unwrap();
+    assert!(out.loss.is_finite() && out.loss > 0.0, "loss={}", out.loss);
+    assert_eq!(out.logits.len(), batch);
+    assert_eq!(out.d_emb.shape, vec![batch, dims.fields, dims.emb_dim]);
+    assert_eq!(out.d_dense.len(), 6);
+    for (g, s) in out.d_dense.iter().zip(dims.param_shapes()) {
+        assert_eq!(g.shape, s);
+    }
+
+    // predict logits must match train_step logits on identical inputs.
+    let logits = h.predict(batch, emb.clone(), params.clone()).unwrap();
+    for (a, b) in logits.iter().zip(&out.logits) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+
+    // Executing from several caller threads concurrently must work.
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let h = h.clone();
+        let emb = emb.clone();
+        let params = params.clone();
+        let labels = labels.clone();
+        joins.push(std::thread::spawn(move || {
+            h.train_step(batch, emb, params, labels).unwrap().loss
+        }));
+    }
+    for j in joins {
+        let loss = j.join().unwrap();
+        assert!((loss - out.loss).abs() < 1e-6);
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn gradient_step_reduces_loss_via_pjrt() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let dims = manifest.dims("tiny").unwrap();
+    let batch = manifest.batches("tiny").unwrap()[0];
+    let pool = EnginePool::start(&manifest, "tiny", 1).unwrap();
+    let h = pool.handle();
+
+    let mut rng = Pcg64::seeded(11);
+    let emb = rand_tensor(&mut rng, vec![batch, dims.fields, dims.emb_dim], 0.3);
+    let mut params: Vec<HostTensor> = dims
+        .param_shapes()
+        .into_iter()
+        .map(|s| rand_tensor(&mut rng, s, 0.2))
+        .collect();
+    let labels: Vec<f32> = (0..batch).map(|i| (i % 2) as f32).collect();
+
+    let first = h.train_step(batch, emb.clone(), params.clone(), labels.clone()).unwrap();
+    let mut last = first.loss;
+    for _ in 0..10 {
+        let out = h.train_step(batch, emb.clone(), params.clone(), labels.clone()).unwrap();
+        for (p, g) in params.iter_mut().zip(&out.d_dense) {
+            p.axpy(-0.5, g);
+        }
+        last = out.loss;
+    }
+    assert!(last < first.loss, "no improvement: {} -> {last}", first.loss);
+    pool.shutdown();
+}

@@ -1,0 +1,159 @@
+//! Integration tests across the whole stack:
+//!
+//! 1. The PJRT artifact (python-authored, pallas-lowered) and the native
+//!    Rust model must produce identical numerics — this pins L1+L2 to L3.
+//! 2. A full training session on the PJRT backend must train (AUC rises),
+//!    proving the three layers compose on the request path.
+//!
+//! Both require `make artifacts` (tiny variant); they skip gracefully if
+//! artifacts are absent so `cargo test` works in a fresh checkout.
+
+use gba::config::{ExperimentConfig, ModeKind};
+use gba::model::NativeModel;
+use gba::runtime::{EnginePool, HostTensor, Manifest};
+use gba::util::rng::Pcg64;
+use gba::worker::session::{SessionOptions, TrainSession};
+use gba::worker::BackendKind;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn rand_tensor(rng: &mut Pcg64, shape: Vec<usize>, scale: f32) -> HostTensor {
+    let n: usize = shape.iter().product();
+    HostTensor::new(shape, (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect()).unwrap()
+}
+
+#[test]
+fn pjrt_and_native_numerics_agree() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let manifest = Manifest::load(&dir).unwrap();
+    let dims = manifest.dims("tiny").unwrap();
+    let native = NativeModel::new(dims);
+    let pool = EnginePool::start(&manifest, "tiny", 1).unwrap();
+    let h = pool.handle();
+
+    for (seed, batch) in [(1u64, 8usize), (2, 32), (3, 8)] {
+        let mut rng = Pcg64::seeded(seed);
+        let emb = rand_tensor(&mut rng, vec![batch, dims.fields, dims.emb_dim], 0.4);
+        let params: Vec<HostTensor> =
+            dims.param_shapes().into_iter().map(|s| rand_tensor(&mut rng, s, 0.3)).collect();
+        let labels: Vec<f32> =
+            (0..batch).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect();
+
+        let a = native.train_step(&emb, &params, &labels);
+        let b = h.train_step(batch, emb.clone(), params.clone(), labels.clone()).unwrap();
+
+        assert!((a.loss - b.loss).abs() < 1e-4, "loss {} vs {}", a.loss, b.loss);
+        for (x, y) in a.logits.iter().zip(&b.logits) {
+            assert!((x - y).abs() < 1e-4, "logit {x} vs {y}");
+        }
+        for (x, y) in a.d_emb.data.iter().zip(&b.d_emb.data) {
+            assert!((x - y).abs() < 1e-4, "d_emb {x} vs {y}");
+        }
+        for (ga, gb) in a.d_dense.iter().zip(&b.d_dense) {
+            assert_eq!(ga.shape, gb.shape);
+            for (x, y) in ga.data.iter().zip(&gb.data) {
+                assert!((x - y).abs() < 2e-4, "dense grad {x} vs {y}");
+            }
+        }
+
+        // predict parity too
+        let pa = native.predict(&emb, &params);
+        let pb = h.predict(batch, emb, params).unwrap();
+        for (x, y) in pa.iter().zip(&pb) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+    pool.shutdown();
+}
+
+fn pjrt_cfg() -> ExperimentConfig {
+    ExperimentConfig::from_toml(
+        r#"
+name = "pjrt-session-test"
+seed = 21
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 32
+hidden2 = 16
+vocab_size = 1000
+zipf_s = 1.1
+[data]
+days_base = 1
+days_eval = 1
+samples_per_day = 1024
+teacher_seed = 5
+label_noise = 0.02
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+lr_async = 0.05
+eval_batch = 32
+eval_samples = 512
+[mode.sync]
+workers = 2
+local_batch = 32
+[mode.gba]
+workers = 4
+local_batch = 8
+iota = 3
+"#,
+    )
+    .unwrap()
+}
+
+#[test]
+fn pjrt_backend_trains_end_to_end() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let opts = SessionOptions {
+        backend: BackendKind::Pjrt,
+        artifacts_dir: dir,
+        engine_threads: 2,
+        ..SessionOptions::default()
+    };
+    let s = TrainSession::new(pjrt_cfg(), ModeKind::Gba, opts).unwrap();
+    let before = s.eval_auc(1).unwrap();
+    s.train_day(0).unwrap();
+    let after = s.eval_auc(1).unwrap();
+    assert!(after > before + 0.03, "pjrt auc {before} -> {after}");
+    assert!(s.ps().counters().global_steps > 0);
+}
+
+#[test]
+fn native_and_pjrt_sessions_learn_equivalently() {
+    // Not bit-identical (thread interleaving differs) but both backends
+    // must reach similar AUC from the same config.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let native = TrainSession::new(pjrt_cfg(), ModeKind::Sync, SessionOptions::default()).unwrap();
+    native.train_day(0).unwrap();
+    let a_native = native.eval_auc(1).unwrap();
+
+    let opts = SessionOptions {
+        backend: BackendKind::Pjrt,
+        artifacts_dir: dir,
+        engine_threads: 2,
+        ..SessionOptions::default()
+    };
+    let pjrt = TrainSession::new(pjrt_cfg(), ModeKind::Sync, opts).unwrap();
+    pjrt.train_day(0).unwrap();
+    let a_pjrt = pjrt.eval_auc(1).unwrap();
+
+    assert!(
+        (a_native - a_pjrt).abs() < 0.05,
+        "backend divergence: native {a_native} vs pjrt {a_pjrt}"
+    );
+}
