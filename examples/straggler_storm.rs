@@ -33,6 +33,7 @@ fn main() {
             local_batch,
             compute: StragglerModel::new(&cluster, workers, seed),
             ps_apply_ms: cluster.ps_apply_ms,
+            n_shards: 1,
             start_sec: start,
             duration_sec: 120.0,
             seed: seed ^ h,

@@ -8,6 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Property sweeps need hypothesis; skip the module (rather than erroring
+# at collection) where the offline image lacks it.
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import (

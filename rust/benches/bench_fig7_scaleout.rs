@@ -1,16 +1,30 @@
-//! Fig. 7 bench: simulator scale-out — event-processing throughput as the
-//! worker count grows from 100 to 800 at a fixed global batch (the paper's
-//! sweep). Checks the simulator itself scales near-linearly in events.
+//! Fig. 7 bench: scale-out along both axes.
+//!
+//! 1. **Simulator scale-out** — event-processing throughput as the worker
+//!    count grows from 100 to 800 at a fixed global batch (the paper's
+//!    sweep). Checks the simulator itself scales near-linearly in events.
+//! 2. **PS shard scale-out** — real `ShardedPs` push throughput as the
+//!    parameter-server plane grows from 1 to 8 shards, under the async
+//!    and GBA policies. The per-shard apply threads parallelize the dense
+//!    optimizer sweep, so push throughput must be monotonically
+//!    non-decreasing in the shard count.
 //!
 //!     cargo bench --bench bench_fig7_scaleout
 
+use std::sync::Arc;
+
 use gba::cluster::StragglerModel;
 use gba::config::ClusterConfig;
-use gba::coordinator::modes::GbaPolicy;
+use gba::coordinator::modes::{AsyncPolicy, GbaPolicy};
+use gba::coordinator::ModePolicy;
+use gba::embedding::EmbeddingConfig;
+use gba::optim::Adam;
+use gba::ps::{GradPush, PsServer, PullReply};
+use gba::runtime::{HostTensor, VariantDims};
 use gba::sim::{simulate, SimParams};
 use gba::util::bench::{black_box, Bencher};
 
-fn main() {
+fn sim_scaleout(b: &mut Bencher) {
     let cluster = ClusterConfig {
         trace: "diurnal".into(),
         base_compute_ms: 8.0,
@@ -18,7 +32,6 @@ fn main() {
         ps_apply_ms: 0.6,
     };
     let global = 400 * 1000;
-    let mut b = Bencher::new();
     for workers in [100usize, 200, 400, 800] {
         let local = global / workers;
         let params = SimParams {
@@ -26,6 +39,7 @@ fn main() {
             local_batch: local,
             compute: StragglerModel::new(&cluster, workers, 1),
             ps_apply_ms: cluster.ps_apply_ms,
+            n_shards: 1,
             start_sec: 10.0 * 3600.0,
             duration_sec: 30.0,
             seed: workers as u64,
@@ -41,5 +55,104 @@ fn main() {
             },
         );
     }
+}
+
+const PUSHERS: usize = 4;
+const PUSHES_PER_THREAD: usize = 12;
+
+fn bench_dims() -> VariantDims {
+    // Medium dense tower (~172K parameters) so the optimizer apply — the
+    // part the shards parallelize — dominates channel/lock overhead.
+    VariantDims { fields: 16, emb_dim: 32, hidden1: 256, hidden2: 128, mlp_in: 16 * 32 + 32 }
+}
+
+fn make_ps(n_shards: usize, policy: Box<dyn ModePolicy>) -> Arc<PsServer> {
+    let dims = bench_dims();
+    let init: Vec<HostTensor> =
+        dims.param_shapes().into_iter().map(HostTensor::zeros).collect();
+    Arc::new(PsServer::with_shards(
+        dims,
+        init,
+        EmbeddingConfig { dim: 32, init_scale: 0.01, seed: 5, shards: 8 },
+        Box::new(Adam::new(0.001)),
+        Box::new(Adam::new(0.001)),
+        policy,
+        n_shards,
+    ))
+}
+
+fn template_push(worker: usize) -> GradPush {
+    let dims = bench_dims();
+    GradPush {
+        worker,
+        token: 0,
+        dense: dims
+            .param_shapes()
+            .into_iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                HostTensor { shape: s, data: vec![1e-3; n] }
+            })
+            .collect(),
+        emb: (0..32u64).map(|k| (worker as u64 * 1000 + k, vec![1e-3f32; 32])).collect(),
+        n_samples: 32,
+        loss: 0.69,
+    }
+}
+
+/// One measured iteration: PUSHERS threads each pull+push a fixed batch
+/// count through the shared PS front.
+fn push_storm(ps: &Arc<PsServer>) {
+    let mut handles = Vec::with_capacity(PUSHERS);
+    for w in 0..PUSHERS {
+        let ps = ps.clone();
+        handles.push(std::thread::spawn(move || {
+            let template = template_push(w);
+            for _ in 0..PUSHES_PER_THREAD {
+                let item = match ps.pull_blocking(w) {
+                    PullReply::Work(item) => item,
+                    other => panic!("unexpected pull reply {other:?}"),
+                };
+                let mut g = template.clone();
+                g.token = item.token;
+                ps.push(g);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+fn shard_scaleout(b: &mut Bencher) {
+    let samples_per_iter = (PUSHERS * PUSHES_PER_THREAD * 32) as f64;
+    let policies: [(&str, fn() -> Box<dyn ModePolicy>); 2] = [
+        ("async", || Box::new(AsyncPolicy::new())),
+        ("gba", || Box::new(GbaPolicy::with_iota(8, 4))),
+    ];
+    for (name, mk) in policies {
+        let mut throughputs = Vec::new();
+        for n_shards in [1usize, 2, 4, 8] {
+            let ps = make_ps(n_shards, mk());
+            ps.set_day(0, usize::MAX / 2);
+            let r = b.bench_units(&format!("push {name} {n_shards}-shard ps"), samples_per_iter, || {
+                push_storm(&ps);
+            });
+            throughputs.push((n_shards, r.throughput()));
+            ps.flush_partial();
+        }
+        let base = throughputs[0].1;
+        let summary: Vec<String> = throughputs
+            .iter()
+            .map(|(n, t)| format!("{n}-shard {:.2}x", t / base))
+            .collect();
+        println!("push scaling [{name}] vs 1 shard: {}", summary.join("  "));
+    }
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    sim_scaleout(&mut b);
+    shard_scaleout(&mut b);
     b.write_report("results/bench_fig7_scaleout.json").ok();
 }

@@ -37,7 +37,7 @@ impl Checkpoint {
     /// Snapshot a running PS.
     pub fn from_ps(dims: VariantDims, ps: &PsServer) -> Checkpoint {
         let mut emb_rows = Vec::new();
-        ps.emb.for_each_row(|key, vec, _state, meta| {
+        ps.for_each_emb_row(|key, vec, _state, meta| {
             emb_rows.push((key, vec.to_vec(), meta));
         });
         // Deterministic order for byte-stable checkpoints.

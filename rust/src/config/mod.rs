@@ -135,6 +135,16 @@ ps_apply_ms = 0.5
     }
 
     #[test]
+    fn ps_shards_default_parse_and_bounds() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.ps.n_shards, 1, "[ps] absent defaults to one shard");
+        let sharded = format!("{SAMPLE}\n[ps]\nn_shards = 8\n");
+        assert_eq!(ExperimentConfig::from_toml(&sharded).unwrap().ps.n_shards, 8);
+        let bad = format!("{SAMPLE}\n[ps]\nn_shards = 0\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
     fn mode_kind_roundtrip() {
         for k in ModeKind::ALL {
             assert_eq!(ModeKind::parse(k.as_str()).unwrap(), k);

@@ -165,6 +165,21 @@ impl Default for ModeConfig {
     }
 }
 
+/// Parameter-server plane shape (`[ps]` table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PsConfig {
+    /// Number of PS shards: dense range partitions + consistent-hash
+    /// slices of the embedding keyspace. 1 reproduces the seed
+    /// single-server behavior bit-for-bit.
+    pub n_shards: usize,
+}
+
+impl Default for PsConfig {
+    fn default() -> Self {
+        PsConfig { n_shards: 1 }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
     /// Load-trace shape: "diurnal" | "flat" | "spike".
@@ -186,6 +201,7 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub modes: Vec<(ModeKind, ModeConfig)>,
     pub cluster: ClusterConfig,
+    pub ps: PsConfig,
 }
 
 impl ExperimentConfig {
@@ -275,6 +291,17 @@ impl ExperimentConfig {
             hetero_sigma: doc.get_f64("cluster.hetero_sigma").unwrap_or(0.3),
             ps_apply_ms: doc.get_f64("cluster.ps_apply_ms").unwrap_or(0.5),
         };
+        // Absent [ps] defaults to one shard; a *malformed* value must
+        // error, not silently fall back (a "4-shard" run that quietly
+        // ran single-shard would invalidate every scale-out result).
+        let ps = PsConfig {
+            n_shards: match doc.get("ps.n_shards") {
+                None => 1,
+                Some(v) => v
+                    .as_usize()
+                    .context("ps.n_shards must be a non-negative integer")?,
+            },
+        };
         Ok(ExperimentConfig {
             name: req_str("name")?,
             seed: req_usize("seed")? as u64,
@@ -283,6 +310,7 @@ impl ExperimentConfig {
             train,
             modes,
             cluster,
+            ps,
         })
     }
 
@@ -315,6 +343,9 @@ impl ExperimentConfig {
         }
         if self.model.zipf_s <= 0.0 {
             bail!("zipf_s must be positive");
+        }
+        if self.ps.n_shards == 0 || self.ps.n_shards > 256 {
+            bail!("ps.n_shards must be in [1, 256], got {}", self.ps.n_shards);
         }
         Ok(())
     }

@@ -64,7 +64,15 @@ impl EmbeddingStore {
 
     #[inline]
     fn shard_of(&self, key: u64) -> usize {
-        (mix64(key) % self.shards.len() as u64) as usize
+        self.shard_index(mix64(key))
+    }
+
+    /// The one place internal shard placement is decided; every lookup
+    /// path (hashed or not) must route through it so a key can never
+    /// materialize in two sub-shards.
+    #[inline]
+    fn shard_index(&self, hash: u64) -> usize {
+        (hash % self.shards.len() as u64) as usize
     }
 
     fn init_row(&self, key: u64) -> Row {
@@ -101,7 +109,15 @@ impl EmbeddingStore {
 
     /// Copy one row's vector (materializing it if absent).
     pub fn read_row_into(&self, key: u64, out: &mut [f32]) {
-        let shard = &self.shards[self.shard_of(key)];
+        self.read_row_into_hashed(key, mix64(key), out);
+    }
+
+    /// [`read_row_into`](Self::read_row_into) with a pre-computed
+    /// `mix64(key)` — lets the sharded-PS gather path hash each key once
+    /// for both cross-shard routing and this store's internal shard.
+    pub fn read_row_into_hashed(&self, key: u64, hash: u64, out: &mut [f32]) {
+        debug_assert_eq!(hash, mix64(key));
+        let shard = &self.shards[self.shard_index(hash)];
         {
             let guard = shard.read().unwrap();
             if let Some(row) = guard.get(&key) {

@@ -37,6 +37,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 local_batch: mode.local_batch,
                 compute,
                 ps_apply_ms: cfg.cluster.ps_apply_ms,
+                n_shards: cfg.ps.n_shards,
                 start_sec: start,
                 duration_sec: window,
                 seed: ctx.seed ^ (h as u64),
@@ -56,6 +57,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 local_batch: sync_mode.local_batch,
                 compute,
                 ps_apply_ms: cfg.cluster.ps_apply_ms,
+                n_shards: cfg.ps.n_shards,
                 start_sec: start,
                 duration_sec: window,
                 seed: ctx.seed ^ (h as u64) ^ (g as u64) << 8,

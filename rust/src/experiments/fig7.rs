@@ -39,6 +39,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             local_batch: local,
             compute,
             ps_apply_ms: cfg.cluster.ps_apply_ms,
+            n_shards: cfg.ps.n_shards,
             start_sec: 10.0 * 3600.0,
             duration_sec: if ctx.quick { 30.0 } else { 120.0 },
             seed: ctx.seed ^ n as u64,
@@ -127,13 +128,62 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         - aucs.iter().cloned().fold(f64::INFINITY, f64::min);
     println!("\nAUC spread across worker counts: {spread:.5} (paper: < 1e-4 steady state)");
 
+    // ---- PS shard scale-out: real training, sharded parameter plane ----
+    // Same GBA day from the common base on n_shards ∈ {1, 2, 4, 8}; the
+    // control plane makes results shard-invariant, so this sweep reports
+    // the *systems* axis: throughput plus per-shard load and dense-lock
+    // contention.
+    let shard_counts: &[usize] = if ctx.quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let mut shard_table = Table::new(
+        "Fig. 7 (shards) — GBA on a sharded PS plane (real training)",
+        &["shards", "QPS", "steps", "max/mean shard keys", "pull stall (ms)"],
+    );
+    let mut jshard = Vec::new();
+    for &n_shards in shard_counts {
+        let mut c = c0.clone();
+        c.ps.n_shards = n_shards;
+        let s = TrainSession::from_checkpoint(c, ModeKind::Gba, SessionOptions::default(), &ckpt)?;
+        let stats = s.train_day(c0.data.days_base)?;
+        let shards = s.ps().shard_stats();
+        let keys: Vec<u64> = shards.iter().map(|x| x.emb_keys_applied).collect();
+        let mean_keys = keys.iter().sum::<u64>() as f64 / keys.len() as f64;
+        let max_keys = keys.iter().copied().max().unwrap_or(0) as f64;
+        let imbalance = if mean_keys > 0.0 { max_keys / mean_keys } else { 1.0 };
+        // Contention metric: time parameter pulls spent stalled behind
+        // applies. Shards shrink the apply critical section, so this
+        // should fall as n_shards grows.
+        let pull_stall_ms = s.ps().pull_stall_ns() as f64 / 1e6;
+        let apply_ms_max = shards
+            .iter()
+            .map(|x| x.apply_ns as f64 / 1e6)
+            .fold(0.0f64, f64::max);
+        shard_table.row(vec![
+            n_shards.to_string(),
+            format!("{:.0}", stats.qps),
+            stats.counters.global_steps.to_string(),
+            format!("{imbalance:.2}x"),
+            format!("{pull_stall_ms:.2}"),
+        ]);
+        jshard.push(
+            Json::obj()
+                .set("n_shards", n_shards)
+                .set("qps", stats.qps)
+                .set("steps", stats.counters.global_steps)
+                .set("emb_key_imbalance", imbalance)
+                .set("pull_stall_ms", pull_stall_ms)
+                .set("apply_ms_slowest_shard", apply_ms_max),
+        );
+    }
+    shard_table.print();
+
     write_result(
         &ctx.out_dir,
         "fig7",
         &Json::obj()
             .set("qps_scaleout", Json::Arr(jqps))
             .set("auc_fixed_global_batch", Json::Arr(jauc))
-            .set("auc_spread", spread),
+            .set("auc_spread", spread)
+            .set("shard_scaleout", Json::Arr(jshard)),
     )?;
     Ok(())
 }

@@ -5,11 +5,13 @@
 //! (Su, Zhang, et al., NeurIPS 2022) as a three-layer Rust + JAX + Pallas
 //! framework:
 //!
-//! * **Layer 3 (this crate)** — a parameter-server training coordinator
-//!   implementing GBA's token-control mechanism plus five baseline modes
-//!   (Sync, Async, Hop-BS, BSP, Hop-BW), an expandable hash-table embedding
-//!   store, sparse/dense optimizers, a threaded worker runtime, a
-//!   discrete-event cluster simulator, metrics and experiment drivers.
+//! * **Layer 3 (this crate)** — a *sharded* parameter-server training
+//!   plane ([`shard`]) whose shard-global control plane implements GBA's
+//!   token-control mechanism plus five baseline modes (Sync, Async,
+//!   Hop-BS, BSP, Hop-BW), an expandable hash-table embedding store
+//!   partitioned by consistent hashing, sparse/dense optimizers, a
+//!   threaded worker runtime, a discrete-event cluster simulator, metrics
+//!   and experiment drivers.
 //! * **Layer 2 (python/compile/model.py)** — the recommendation model
 //!   (DeepFM/YouTubeDNN-family CTR tower) fwd/bwd in JAX, AOT-lowered to
 //!   HLO text.
@@ -34,6 +36,7 @@ pub mod model;
 pub mod optim;
 pub mod ps;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod util;
 pub mod worker;

@@ -67,6 +67,7 @@ USAGE:
   gba-train train --config FILE --mode <sync|async|hop_bs|bsp|hop_bw|gba>
                   [--days N] [--backend native|pjrt] [--artifacts DIR]
                   [--straggler] [--switch-to MODE] [--switch-day D]
+                  [--shards N]   (override [ps] n_shards: PS plane width)
   gba-train datagen --config FILE [--day D] [--samples N]
   gba-train inspect [--artifacts DIR]
 
@@ -116,7 +117,11 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let config = args.get("config").context("--config FILE required")?;
-    let cfg = ExperimentConfig::load(config)?;
+    let mut cfg = ExperimentConfig::load(config)?;
+    if let Some(n) = args.get("shards") {
+        cfg.ps.n_shards = n.parse().context("--shards wants a positive integer")?;
+        cfg.validate()?;
+    }
     let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
     let days: usize = args
         .get("days")
@@ -134,11 +139,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     println!(
-        "task {} | mode {} | G_sync = {} | M = {} | backend {:?}",
+        "task {} | mode {} | G_sync = {} | M = {} | ps shards = {} | backend {:?}",
         cfg.name,
         kind.paper_name(),
         cfg.global_batch_sync(),
         cfg.gba_m_effective(),
+        cfg.ps.n_shards,
         opts.backend
     );
     let mut session = TrainSession::new(cfg, kind, opts)?;

@@ -1,23 +1,28 @@
-//! Parameter server: dense store + embedding shards + data list +
-//! gradient buffer, driven by a [`ModePolicy`] (Figure 5 / Algorithm 2).
+//! Parameter-server request/reply types and the server itself.
 //!
-//! One in-process PS serves all worker threads. The *control* state
-//! (policy, gradient buffer, data cursor, counters) sits behind one mutex
-//! paired with a condvar (barrier modes park pullers there); the dense
-//! parameters have their own lock, and the embedding store is internally
-//! sharded — so pulls of parameters and pushes of different shards mostly
-//! don't contend.
+//! Since the sharding refactor the server lives in [`crate::shard`]: a
+//! [`ShardedPs`] composed of N independent data-plane shards under one
+//! shard-global [`ControlPlane`](crate::shard::ControlPlane). The seed's
+//! single-mutex `PsServer` is exactly the `n_shards = 1` configuration,
+//! so this module re-exports `ShardedPs` under that name — every
+//! historical call site (and its numeric behavior) is unchanged.
+//!
+//! What stays here is the wire vocabulary shared by the worker runtime,
+//! the policies and the shards: [`WorkItem`], [`PullReply`], [`GradPush`]
+//! and the worker-side pre-reduce [`reduce_emb_grads`].
 
 use crate::util::fasthash::{u64_map_with_capacity, U64Map};
-use std::sync::{Condvar, Mutex};
 
 use anyhow::Result;
 
-use crate::coordinator::{ModePolicy, PullDecision, PushAction, WorkerId};
-use crate::embedding::{EmbeddingConfig, EmbeddingStore};
-use crate::metrics::TrainCounters;
-use crate::optim::Optimizer;
-use crate::runtime::{HostTensor, VariantDims};
+use crate::coordinator::WorkerId;
+use crate::runtime::HostTensor;
+
+pub use crate::shard::ShardedPs;
+
+/// The seed server name: a 1+-shard PS front. `PsServer::new` builds the
+/// single-shard configuration; `PsServer::with_shards` scales out.
+pub type PsServer = ShardedPs;
 
 /// A claim on one batch of the data list.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,330 +57,6 @@ pub struct GradPush {
     pub loss: f32,
 }
 
-struct DenseState {
-    params: Vec<HostTensor>,
-    /// Optimizer slots per tensor (planar, `numel * slots`).
-    slots: Vec<Vec<f32>>,
-}
-
-struct Ctrl {
-    policy: Box<dyn ModePolicy>,
-    buffer: Vec<GradPush>,
-    counters: TrainCounters,
-    /// Data list for the current day.
-    day: usize,
-    next_batch: usize,
-    day_batches: usize,
-    /// Claims handed out but not yet pushed back.
-    outstanding: usize,
-    /// L2 norms of the aggregated dense gradient per apply (Fig. 3).
-    grad_norms: Option<Vec<f64>>,
-    /// Losses observed at each apply (weighted mean over included entries).
-    loss_curve: Vec<(u64, f32)>,
-}
-
-pub struct PsServer {
-    pub dims: VariantDims,
-    dense: Mutex<DenseState>,
-    pub emb: EmbeddingStore,
-    ctrl: Mutex<Ctrl>,
-    cv: Condvar,
-    opt_dense: Box<dyn Optimizer>,
-    opt_emb: Box<dyn Optimizer>,
-}
-
-impl PsServer {
-    pub fn new(
-        dims: VariantDims,
-        init_params: Vec<HostTensor>,
-        emb_cfg: EmbeddingConfig,
-        opt_dense: Box<dyn Optimizer>,
-        opt_emb: Box<dyn Optimizer>,
-        policy: Box<dyn ModePolicy>,
-    ) -> Self {
-        assert_eq!(init_params.len(), 6, "dense params are (w1,b1,w2,b2,w3,b3)");
-        let slots = init_params
-            .iter()
-            .map(|p| vec![0.0f32; p.numel() * opt_dense.slots()])
-            .collect();
-        let emb = EmbeddingStore::new(emb_cfg, opt_emb.slots());
-        PsServer {
-            dims,
-            dense: Mutex::new(DenseState { params: init_params, slots }),
-            emb,
-            ctrl: Mutex::new(Ctrl {
-                policy,
-                buffer: Vec::new(),
-                counters: TrainCounters::default(),
-                day: 0,
-                next_batch: 0,
-                day_batches: 0,
-                outstanding: 0,
-                grad_norms: None,
-                loss_curve: Vec::new(),
-            }),
-            cv: Condvar::new(),
-            opt_dense,
-            opt_emb,
-        }
-    }
-
-    /// Point the data list at a day with `n_batches` batches.
-    pub fn set_day(&self, day: usize, n_batches: usize) {
-        let mut c = self.ctrl.lock().unwrap();
-        c.day = day;
-        c.next_batch = 0;
-        c.day_batches = n_batches;
-        drop(c);
-        self.cv.notify_all();
-    }
-
-    /// Non-blocking pull (Algorithm 2 "pull responding").
-    pub fn pull(&self, w: WorkerId) -> PullReply {
-        let mut c = self.ctrl.lock().unwrap();
-        if c.next_batch >= c.day_batches {
-            return PullReply::EndOfData;
-        }
-        match c.policy.on_pull(w) {
-            PullDecision::Wait => PullReply::Wait,
-            PullDecision::Token(token) => {
-                let item = WorkItem {
-                    token,
-                    version: c.policy.global_step(),
-                    day: c.day,
-                    batch_index: c.next_batch,
-                };
-                c.next_batch += 1;
-                c.outstanding += 1;
-                PullReply::Work(item)
-            }
-        }
-    }
-
-    /// Blocking pull: parks on the condvar while gated.
-    pub fn pull_blocking(&self, w: WorkerId) -> PullReply {
-        loop {
-            match self.pull(w) {
-                PullReply::Wait => {
-                    let c = self.ctrl.lock().unwrap();
-                    // Re-check under the lock, then park briefly. The
-                    // timeout guards against missed wakeups at day ends.
-                    let _unused = self
-                        .cv
-                        .wait_timeout(c, std::time::Duration::from_millis(50))
-                        .unwrap();
-                }
-                other => return other,
-            }
-        }
-    }
-
-    /// Gradient push (Algorithm 2 "push responding"). Non-blocking for the
-    /// worker; aggregation happens inline when the buffer fills.
-    pub fn push(&self, grad: GradPush) {
-        let mut c = self.ctrl.lock().unwrap();
-        c.outstanding = c.outstanding.saturating_sub(1);
-        let action = c.policy.on_push(grad.worker, grad.token);
-        match action {
-            PushAction::Drop => {
-                c.counters.dropped_batches += 1;
-            }
-            PushAction::Buffer => {
-                c.buffer.push(grad);
-            }
-            PushAction::FlushNow => {
-                c.buffer.push(grad);
-                self.flush(&mut c);
-            }
-        }
-        drop(c);
-        self.cv.notify_all();
-    }
-
-    /// Worker failed: forget its in-flight claim (Appendix B).
-    pub fn worker_reset(&self, w: WorkerId) {
-        let mut c = self.ctrl.lock().unwrap();
-        c.outstanding = c.outstanding.saturating_sub(1);
-        c.policy.on_worker_reset(w);
-        drop(c);
-        self.cv.notify_all();
-    }
-
-    /// Force-flush a partial buffer (end of day). Returns whether a flush
-    /// happened.
-    pub fn flush_partial(&self) -> bool {
-        let mut c = self.ctrl.lock().unwrap();
-        if c.buffer.is_empty() {
-            return false;
-        }
-        self.flush(&mut c);
-        drop(c);
-        self.cv.notify_all();
-        true
-    }
-
-    /// True when no claims are outstanding and the buffer is empty.
-    pub fn quiescent(&self) -> bool {
-        let c = self.ctrl.lock().unwrap();
-        c.outstanding == 0 && c.buffer.is_empty()
-    }
-
-    pub fn outstanding(&self) -> usize {
-        self.ctrl.lock().unwrap().outstanding
-    }
-
-    fn flush(&self, c: &mut Ctrl) {
-        let tokens: Vec<u64> = c.buffer.iter().map(|g| g.token).collect();
-        let spec = c.policy.flush_spec(&tokens);
-        debug_assert_eq!(spec.weights.len(), c.buffer.len());
-        let k = c.policy.global_step();
-        let opt_step = k + 1;
-
-        // --- dense aggregation: sum_i w_i * g_i / divisor ------------------
-        let mut agg: Vec<HostTensor> =
-            c.buffer[0].dense.iter().map(|t| HostTensor::zeros(t.shape.clone())).collect();
-        let mut included = 0usize;
-        let mut loss_acc = 0.0f64;
-        let mut wsum = 0.0f64;
-        for (entry, &w) in c.buffer.iter().zip(&spec.weights) {
-            let staleness = k.saturating_sub(entry.token);
-            if w == 0.0 {
-                c.counters.dropped_batches += 1;
-                continue;
-            }
-            c.counters.dense_staleness.record(staleness);
-            included += 1;
-            loss_acc += entry.loss as f64 * w as f64;
-            wsum += w as f64;
-            for (a, g) in agg.iter_mut().zip(&entry.dense) {
-                a.axpy(w, g);
-            }
-        }
-        if included > 0 {
-            let inv = 1.0 / spec.dense_divisor;
-            for a in agg.iter_mut() {
-                a.scale(inv);
-            }
-            if let Some(norms) = c.grad_norms.as_mut() {
-                let norm2: f64 = agg.iter().map(|t| {
-                    let n = t.l2_norm();
-                    n * n
-                }).sum();
-                norms.push(norm2.sqrt());
-            }
-            {
-                let mut d = self.dense.lock().unwrap();
-                let DenseState { params, slots } = &mut *d;
-                for ((p, g), s) in params.iter_mut().zip(&agg).zip(slots.iter_mut()) {
-                    self.opt_dense.apply(&mut p.data, &g.data, s, opt_step);
-                }
-            }
-
-            // --- embedding aggregation (Algorithm 2 L21–23) ---------------
-            let mut per_key: U64Map<(Vec<f32>, u32)> = u64_map_with_capacity(1024);
-            for (entry, &w) in c.buffer.iter().zip(&spec.weights) {
-                if w == 0.0 {
-                    continue;
-                }
-                for (key, gsum) in &entry.emb {
-                    let slot = per_key
-                        .entry(*key)
-                        .or_insert_with(|| (vec![0.0; gsum.len()], 0));
-                    for (a, g) in slot.0.iter_mut().zip(gsum) {
-                        *a += w * g;
-                    }
-                    slot.1 += 1;
-                }
-            }
-            let grads: Vec<(u64, Vec<f32>, u32)> =
-                per_key.into_iter().map(|(k2, (g, n))| (k2, g, n)).collect();
-            self.emb.apply_grads(&grads, self.opt_emb.as_ref(), opt_step);
-
-            c.counters.applied_gradients += included as u64;
-            c.counters.samples_trained +=
-                c.buffer.iter().zip(&spec.weights).filter(|(_, &w)| w > 0.0)
-                    .map(|(e, _)| e.n_samples as u64).sum::<u64>();
-            if wsum > 0.0 {
-                let step_loss = (loss_acc / wsum) as f32;
-                c.loss_curve.push((k, step_loss));
-            }
-        }
-        c.buffer.clear();
-        c.counters.global_steps += 1;
-        c.policy.on_applied();
-    }
-
-    /// Snapshot of the dense parameters (the worker's parameter pull).
-    pub fn dense_params(&self) -> Vec<HostTensor> {
-        self.dense.lock().unwrap().params.clone()
-    }
-
-    /// Replace dense params + reset optimizer slots (checkpoint restore).
-    pub fn set_dense_params(&self, params: Vec<HostTensor>) {
-        let mut d = self.dense.lock().unwrap();
-        assert_eq!(params.len(), d.params.len());
-        d.slots = params.iter().map(|p| vec![0.0; p.numel() * self.opt_dense.slots()]).collect();
-        d.params = params;
-    }
-
-    /// Export dense optimizer slots (checkpointing).
-    pub fn dense_slots(&self) -> Vec<Vec<f32>> {
-        self.dense.lock().unwrap().slots.clone()
-    }
-
-    pub fn set_dense_slots(&self, slots: Vec<Vec<f32>>) {
-        let mut d = self.dense.lock().unwrap();
-        assert_eq!(slots.len(), d.slots.len());
-        d.slots = slots;
-    }
-
-    pub fn counters(&self) -> TrainCounters {
-        self.ctrl.lock().unwrap().counters.clone()
-    }
-
-    pub fn reset_counters(&self) {
-        let mut c = self.ctrl.lock().unwrap();
-        c.counters = TrainCounters::default();
-        c.loss_curve.clear();
-    }
-
-    pub fn global_step(&self) -> u64 {
-        self.ctrl.lock().unwrap().policy.global_step()
-    }
-
-    pub fn mode(&self) -> crate::config::ModeKind {
-        self.ctrl.lock().unwrap().policy.kind()
-    }
-
-    /// Swap the coordination policy (the *switch* operation, §1). Any
-    /// buffered gradients are force-flushed under the old policy first.
-    pub fn switch_policy(&self, policy: Box<dyn ModePolicy>) {
-        let mut c = self.ctrl.lock().unwrap();
-        if !c.buffer.is_empty() {
-            self.flush(&mut c);
-        }
-        c.policy = policy;
-        drop(c);
-        self.cv.notify_all();
-    }
-
-    /// Enable Fig. 3 collection of aggregated-gradient L2 norms.
-    pub fn collect_grad_norms(&self, on: bool) {
-        let mut c = self.ctrl.lock().unwrap();
-        c.grad_norms = if on { Some(Vec::new()) } else { None };
-    }
-
-    pub fn take_grad_norms(&self) -> Vec<f64> {
-        let mut c = self.ctrl.lock().unwrap();
-        c.grad_norms.replace(Vec::new()).unwrap_or_default()
-    }
-
-    /// (global step, mean loss) per apply since the last reset.
-    pub fn loss_curve(&self) -> Vec<(u64, f32)> {
-        self.ctrl.lock().unwrap().loss_curve.clone()
-    }
-}
-
 /// Aggregate a `d_emb` block into per-key sums (worker-side pre-reduce).
 pub fn reduce_emb_grads(keys: &[u64], d_emb: &HostTensor) -> Vec<(u64, Vec<f32>)> {
     let dim = *d_emb.shape.last().unwrap();
@@ -404,7 +85,10 @@ pub type PsResult<T> = Result<T>;
 mod tests {
     use super::*;
     use crate::coordinator::modes::{GbaPolicy, SyncPolicy};
+    use crate::coordinator::ModePolicy;
+    use crate::embedding::EmbeddingConfig;
     use crate::optim::Sgd;
+    use crate::runtime::VariantDims;
 
     fn dims() -> VariantDims {
         VariantDims { fields: 2, emb_dim: 2, hidden1: 4, hidden2: 3, mlp_in: 6 }
@@ -418,10 +102,14 @@ mod tests {
         GradPush {
             worker,
             token,
-            dense: dims().param_shapes().into_iter().map(|s| {
-                let n: usize = s.iter().product();
-                HostTensor { shape: s, data: vec![1.0; n] }
-            }).collect(),
+            dense: dims()
+                .param_shapes()
+                .into_iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    HostTensor { shape: s, data: vec![1.0; n] }
+                })
+                .collect(),
             emb: vec![(key, vec![1.0, 1.0])],
             n_samples: 8,
             loss: 0.7,
@@ -460,7 +148,7 @@ mod tests {
         let p = ps.dense_params();
         assert!((p[0].data[0] + 1.0).abs() < 1e-6);
         // embedding: sum 2.0 over 2 contributing workers -> -1 per coord
-        let row = ps.emb.row(5);
+        let row = ps.emb_row(5);
         assert!((row[0] + 1.0).abs() < 1e-6);
         let counters = ps.counters();
         assert_eq!(counters.global_steps, 1);
@@ -501,7 +189,7 @@ mod tests {
         assert_eq!(ps.counters().dropped_batches, 1);
         // Key 9: grad sum 1.0 over 1 contributing worker -> -1.0
         // (embeddings divide by worker count, Algorithm 2 L23, not by M).
-        assert!((ps.emb.row(9)[0] + 1.0).abs() < 1e-6);
+        assert!((ps.emb_row(9)[0] + 1.0).abs() < 1e-6);
     }
 
     #[test]
@@ -549,7 +237,8 @@ mod tests {
         ps.push(unit_push(0, it.token, 1));
         let norms = ps.take_grad_norms();
         assert_eq!(norms.len(), 1);
-        let n_dense: usize = dims().param_shapes().iter().map(|s| s.iter().product::<usize>()).sum();
+        let n_dense: usize =
+            dims().param_shapes().iter().map(|s| s.iter().product::<usize>()).sum();
         assert!((norms[0] - (n_dense as f64).sqrt()).abs() < 1e-6);
     }
 
@@ -589,5 +278,37 @@ mod tests {
         assert_eq!(curve.len(), 3);
         assert!((curve[0].1 - 0.7).abs() < 1e-6);
         assert_eq!(curve[2].0, 2);
+    }
+
+    /// The same scenarios must hold verbatim on a multi-shard server —
+    /// the control plane is shard-global.
+    #[test]
+    fn sync_semantics_survive_sharding() {
+        let ps = PsServer::with_shards(
+            dims(),
+            zero_params(),
+            EmbeddingConfig { dim: 2, init_scale: 0.0, seed: 1, shards: 2 },
+            Box::new(Sgd { lr: 1.0 }),
+            Box::new(Sgd { lr: 1.0 }),
+            Box::new(SyncPolicy::new(2)),
+            4,
+        );
+        ps.set_day(0, 100);
+        let w0 = match ps.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        let w1 = match ps.pull(1) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(ps.pull(0), PullReply::Wait);
+        ps.push(unit_push(0, w0.token, 5));
+        ps.push(unit_push(1, w1.token, 5));
+        assert_eq!(ps.global_step(), 1);
+        let p = ps.dense_params();
+        assert!((p[0].data[0] + 1.0).abs() < 1e-6);
+        assert!((ps.emb_row(5)[0] + 1.0).abs() < 1e-6);
+        assert_eq!(ps.n_shards(), 4);
     }
 }

@@ -1,0 +1,413 @@
+//! The shard-global control plane.
+//!
+//! Everything the paper's token-control mechanism needs exactly once per
+//! PS — the [`ModePolicy`] state machine, the token issue path, the
+//! global-batch gradient buffer, the data-list cursor, counters, and the
+//! condvar that parks gated pullers — lives here, *outside* any shard.
+//! The data plane (N × [`super::PsShard`]) holds only partitioned
+//! parameters; coordination state is never partitioned, which is what
+//! keeps GBA/Sync/BSP/Hop semantics byte-identical for every `n_shards`.
+//!
+//! Flush protocol: the control lock is held only for *admission* — policy
+//! decision, buffer hand-off, counter/loss bookkeeping, `on_applied()` —
+//! and is released before any gradient arithmetic. While the resulting
+//! [`FlushJob`] is applied to the shards, `applying > 0` gates every
+//! state-machine entry point (pulls, pushes, resets, policy swaps), so
+//! at most one flush is ever in flight and applies land in admission
+//! order — exactly the ordering the seed `PsServer`'s single mutex
+//! enforced, but with the heavy aggregation/apply arithmetic outside
+//! the lock and fanned out across shards.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use crate::config::ModeKind;
+use crate::coordinator::{ModePolicy, PullDecision, PushAction, WorkerId};
+use crate::metrics::TrainCounters;
+use crate::ps::{GradPush, PullReply, WorkItem};
+
+/// An admitted aggregation, ready to be applied to the shards. Produced
+/// under the control lock; consumed (and the arithmetic done) outside it.
+pub struct FlushJob {
+    /// The drained gradient buffer, in admission order.
+    pub entries: Vec<GradPush>,
+    /// Per-entry aggregation weight (0.0 = decayed out, already counted).
+    pub weights: Vec<f32>,
+    pub dense_divisor: f32,
+    /// 1-based optimizer step (`k + 1` at admission).
+    pub opt_step: u64,
+    /// Entries with non-zero weight; 0 means nothing to apply.
+    pub included: usize,
+    /// Whether the flusher should compute the aggregated-gradient norm.
+    pub collect_norm: bool,
+}
+
+struct CtrlState {
+    policy: Box<dyn ModePolicy>,
+    buffer: Vec<GradPush>,
+    counters: TrainCounters,
+    day: usize,
+    next_batch: usize,
+    day_batches: usize,
+    /// Claims handed out but not yet pushed back.
+    outstanding: usize,
+    /// Flushes admitted but not yet applied to the shards.
+    applying: usize,
+    /// L2 norms of the aggregated dense gradient per apply (Fig. 3).
+    grad_norms: Option<Vec<f64>>,
+    /// Losses observed at each apply (weighted mean over included entries).
+    loss_curve: Vec<(u64, f32)>,
+}
+
+pub struct ControlPlane {
+    state: Mutex<CtrlState>,
+    cv: Condvar,
+}
+
+impl ControlPlane {
+    pub fn new(policy: Box<dyn ModePolicy>) -> Self {
+        ControlPlane {
+            state: Mutex::new(CtrlState {
+                policy,
+                buffer: Vec::new(),
+                counters: TrainCounters::default(),
+                day: 0,
+                next_batch: 0,
+                day_batches: 0,
+                outstanding: 0,
+                applying: 0,
+                grad_norms: None,
+                loss_curve: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Point the data list at a day with `n_batches` batches.
+    pub fn set_day(&self, day: usize, n_batches: usize) {
+        let mut c = self.state.lock().unwrap();
+        c.day = day;
+        c.next_batch = 0;
+        c.day_batches = n_batches;
+        drop(c);
+        self.cv.notify_all();
+    }
+
+    /// Block while an admitted flush is mid-apply. Every state-machine
+    /// entry point funnels through this, which is what guarantees at
+    /// most one [`FlushJob`] in flight and admission-ordered applies —
+    /// the seed's single-mutex semantics. The timeout guards against
+    /// missed wakeups.
+    fn wait_not_applying<'a>(
+        &self,
+        mut c: MutexGuard<'a, CtrlState>,
+    ) -> MutexGuard<'a, CtrlState> {
+        while c.applying > 0 {
+            let (guard, _timeout) =
+                self.cv.wait_timeout(c, Duration::from_millis(50)).unwrap();
+            c = guard;
+        }
+        c
+    }
+
+    /// Non-blocking pull (Algorithm 2 "pull responding"). Parks briefly
+    /// while an admitted flush is still being applied, so a fresh token is
+    /// never handed out against not-yet-visible parameters — the same
+    /// ordering the seed's single control mutex enforced.
+    pub fn pull(&self, w: WorkerId) -> PullReply {
+        let mut c = self.wait_not_applying(self.state.lock().unwrap());
+        if c.next_batch >= c.day_batches {
+            return PullReply::EndOfData;
+        }
+        match c.policy.on_pull(w) {
+            PullDecision::Wait => PullReply::Wait,
+            PullDecision::Token(token) => {
+                let item = WorkItem {
+                    token,
+                    version: c.policy.global_step(),
+                    day: c.day,
+                    batch_index: c.next_batch,
+                };
+                c.next_batch += 1;
+                c.outstanding += 1;
+                PullReply::Work(item)
+            }
+        }
+    }
+
+    /// Blocking pull: parks on the condvar while gated.
+    pub fn pull_blocking(&self, w: WorkerId) -> PullReply {
+        loop {
+            match self.pull(w) {
+                PullReply::Wait => {
+                    let c = self.state.lock().unwrap();
+                    // Re-check under the lock, then park briefly. The
+                    // timeout guards against missed wakeups at day ends.
+                    let _unused =
+                        self.cv.wait_timeout(c, Duration::from_millis(50)).unwrap();
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Gradient push (Algorithm 2 "push responding"). Returns an admitted
+    /// [`FlushJob`] when this push filled the global batch; the caller
+    /// applies it to the shards and then calls [`finish_apply`].
+    ///
+    /// [`finish_apply`]: ControlPlane::finish_apply
+    pub fn push(&self, grad: GradPush) -> Option<FlushJob> {
+        let mut c = self.wait_not_applying(self.state.lock().unwrap());
+        c.outstanding = c.outstanding.saturating_sub(1);
+        let action = c.policy.on_push(grad.worker, grad.token);
+        let job = match action {
+            PushAction::Drop => {
+                c.counters.dropped_batches += 1;
+                None
+            }
+            PushAction::Buffer => {
+                c.buffer.push(grad);
+                None
+            }
+            PushAction::FlushNow => {
+                c.buffer.push(grad);
+                Some(Self::begin_flush(&mut c))
+            }
+        };
+        drop(c);
+        self.cv.notify_all();
+        job
+    }
+
+    /// Worker failed: forget its in-flight claim (Appendix B).
+    pub fn worker_reset(&self, w: WorkerId) {
+        let mut c = self.wait_not_applying(self.state.lock().unwrap());
+        c.outstanding = c.outstanding.saturating_sub(1);
+        c.policy.on_worker_reset(w);
+        drop(c);
+        self.cv.notify_all();
+    }
+
+    /// Admit a force-flush of a partial buffer (end of day). `None` when
+    /// the buffer is empty.
+    pub fn begin_partial_flush(&self) -> Option<FlushJob> {
+        let mut c = self.wait_not_applying(self.state.lock().unwrap());
+        if c.buffer.is_empty() {
+            return None;
+        }
+        Some(Self::begin_flush(&mut c))
+    }
+
+    /// Swap the coordination policy (the *switch* operation, §1). Any
+    /// buffered gradients are admitted under the old policy first; the
+    /// returned job (if any) must be applied by the caller.
+    pub fn swap_policy(&self, policy: Box<dyn ModePolicy>) -> Option<FlushJob> {
+        let mut c = self.wait_not_applying(self.state.lock().unwrap());
+        let job = if c.buffer.is_empty() { None } else { Some(Self::begin_flush(&mut c)) };
+        c.policy = policy;
+        drop(c);
+        self.cv.notify_all();
+        job
+    }
+
+    /// The apply for an admitted flush completed; release the token gate.
+    pub fn finish_apply(&self, norm: Option<f64>) {
+        let mut c = self.state.lock().unwrap();
+        c.applying = c.applying.saturating_sub(1);
+        if let Some(n) = norm {
+            if let Some(v) = c.grad_norms.as_mut() {
+                v.push(n);
+            }
+        }
+        drop(c);
+        self.cv.notify_all();
+    }
+
+    /// Admission: drain the buffer, fix weights/divisor, advance the
+    /// policy and all counters. All the bookkeeping the seed `PsServer`
+    /// did inside `flush()` that does not touch parameters happens here,
+    /// with identical arithmetic and ordering.
+    fn begin_flush(c: &mut CtrlState) -> FlushJob {
+        let entries = std::mem::take(&mut c.buffer);
+        let tokens: Vec<u64> = entries.iter().map(|g| g.token).collect();
+        let spec = c.policy.flush_spec(&tokens);
+        debug_assert_eq!(spec.weights.len(), entries.len());
+        let k = c.policy.global_step();
+        let opt_step = k + 1;
+
+        let mut included = 0usize;
+        let mut loss_acc = 0.0f64;
+        let mut wsum = 0.0f64;
+        for (entry, &w) in entries.iter().zip(&spec.weights) {
+            let staleness = k.saturating_sub(entry.token);
+            if w == 0.0 {
+                c.counters.dropped_batches += 1;
+                continue;
+            }
+            c.counters.dense_staleness.record(staleness);
+            included += 1;
+            loss_acc += entry.loss as f64 * w as f64;
+            wsum += w as f64;
+        }
+        if included > 0 {
+            c.counters.applied_gradients += included as u64;
+            c.counters.samples_trained += entries
+                .iter()
+                .zip(&spec.weights)
+                .filter(|(_, &w)| w > 0.0)
+                .map(|(e, _)| e.n_samples as u64)
+                .sum::<u64>();
+            if wsum > 0.0 {
+                let step_loss = (loss_acc / wsum) as f32;
+                c.loss_curve.push((k, step_loss));
+            }
+        }
+        c.counters.global_steps += 1;
+        c.policy.on_applied();
+        c.applying += 1;
+        FlushJob {
+            entries,
+            weights: spec.weights,
+            dense_divisor: spec.dense_divisor,
+            opt_step,
+            included,
+            collect_norm: c.grad_norms.is_some(),
+        }
+    }
+
+    // ---- introspection ----------------------------------------------------
+
+    /// True when no claims are outstanding, the buffer is empty, and no
+    /// admitted flush is still applying.
+    pub fn quiescent(&self) -> bool {
+        let c = self.state.lock().unwrap();
+        c.outstanding == 0 && c.buffer.is_empty() && c.applying == 0
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.state.lock().unwrap().outstanding
+    }
+
+    pub fn counters(&self) -> TrainCounters {
+        self.state.lock().unwrap().counters.clone()
+    }
+
+    pub fn reset_counters(&self) {
+        let mut c = self.state.lock().unwrap();
+        c.counters = TrainCounters::default();
+        c.loss_curve.clear();
+    }
+
+    pub fn global_step(&self) -> u64 {
+        self.state.lock().unwrap().policy.global_step()
+    }
+
+    pub fn mode(&self) -> ModeKind {
+        self.state.lock().unwrap().policy.kind()
+    }
+
+    /// Enable Fig. 3 collection of aggregated-gradient L2 norms.
+    pub fn collect_grad_norms(&self, on: bool) {
+        let mut c = self.state.lock().unwrap();
+        c.grad_norms = if on { Some(Vec::new()) } else { None };
+    }
+
+    pub fn take_grad_norms(&self) -> Vec<f64> {
+        let mut c = self.state.lock().unwrap();
+        c.grad_norms.replace(Vec::new()).unwrap_or_default()
+    }
+
+    /// (global step, mean loss) per apply since the last reset.
+    pub fn loss_curve(&self) -> Vec<(u64, f32)> {
+        self.state.lock().unwrap().loss_curve.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::modes::{GbaPolicy, SyncPolicy};
+    use crate::runtime::HostTensor;
+
+    fn push_of(worker: WorkerId, token: u64) -> GradPush {
+        GradPush {
+            worker,
+            token,
+            dense: vec![HostTensor { shape: vec![2], data: vec![1.0, 1.0] }],
+            emb: vec![],
+            n_samples: 4,
+            loss: 0.5,
+        }
+    }
+
+    #[test]
+    fn admission_outside_apply_preserves_counters() {
+        let cp = ControlPlane::new(Box::new(SyncPolicy::new(2)));
+        cp.set_day(0, 10);
+        let a = match cp.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        let b = match cp.pull(1) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert!(cp.push(push_of(0, a.token)).is_none());
+        let job = cp.push(push_of(1, b.token)).expect("cohort complete");
+        assert_eq!(job.entries.len(), 2);
+        assert_eq!(job.included, 2);
+        assert_eq!(job.opt_step, 1);
+        assert_eq!(job.dense_divisor, 2.0);
+        // Step advanced at admission; the gate is up until finish_apply.
+        assert_eq!(cp.global_step(), 1);
+        assert!(!cp.quiescent());
+        cp.finish_apply(None);
+        assert!(cp.quiescent());
+        let c = cp.counters();
+        assert_eq!(c.global_steps, 1);
+        assert_eq!(c.applied_gradients, 2);
+        assert_eq!(c.samples_trained, 8);
+    }
+
+    #[test]
+    fn gba_decay_counts_drops_at_admission() {
+        let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(2, 0)));
+        cp.set_day(0, 100);
+        for _ in 0..2 {
+            let _ = cp.pull(0);
+        }
+        // First global batch: both fresh.
+        assert!(cp.push(push_of(0, 0)).is_none());
+        let j = cp.push(push_of(0, 0)).unwrap();
+        cp.finish_apply(None);
+        assert_eq!(j.included, 2);
+        // Second: one stale (token 0 at k=1, iota=0), one fresh.
+        let _ = cp.pull(0);
+        let _ = cp.pull(0);
+        assert!(cp.push(push_of(0, 0)).is_none());
+        let j = cp.push(push_of(0, 1)).unwrap();
+        cp.finish_apply(None);
+        assert_eq!(j.included, 1);
+        assert_eq!(j.weights, vec![0.0, 1.0]);
+        assert_eq!(cp.counters().dropped_batches, 1);
+    }
+
+    #[test]
+    fn partial_flush_and_policy_swap() {
+        let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(4, 3)));
+        cp.set_day(0, 10);
+        assert!(cp.begin_partial_flush().is_none());
+        let it = match cp.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert!(cp.push(push_of(0, it.token)).is_none());
+        let job = cp.begin_partial_flush().expect("partial buffer");
+        assert_eq!(job.entries.len(), 1);
+        cp.finish_apply(None);
+        assert_eq!(cp.global_step(), 1);
+        // Swap with an empty buffer admits nothing but changes the mode.
+        assert!(cp.swap_policy(Box::new(SyncPolicy::new(2))).is_none());
+        assert_eq!(cp.mode(), ModeKind::Sync);
+    }
+}

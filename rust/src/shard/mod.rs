@@ -1,0 +1,818 @@
+//! Sharded parameter-server plane with cross-shard token control.
+//!
+//! # Control plane vs. data plane
+//!
+//! The GBA paper's production PS is *many* shards serving slices of the
+//! model, while its token-control mechanism (§4.1, Algorithm 2) is
+//! logically global: one token list, one gradient buffer of `M`, one
+//! global step `k`. This module realizes that split explicitly:
+//!
+//! * [`ControlPlane`] (`control.rs`) — the shard-*global* coordination
+//!   state: the [`ModePolicy`](crate::coordinator::ModePolicy) state
+//!   machine, token issue, global-batch assembly, staleness decay
+//!   bookkeeping, counters, and the condvar gating barrier-mode pullers.
+//!   There is exactly one, regardless of `n_shards`; this is what makes
+//!   GBA/Sync/BSP/Hop-* semantics invariant to the shard count.
+//! * [`PsShard`] (`shard.rs`) — the data plane: shard `s` owns a
+//!   contiguous range slice of every dense tensor (with shard-local
+//!   optimizer slots) behind its own `RwLock`, plus the consistent-hash
+//!   slice of the embedding keyspace in its own
+//!   [`EmbeddingStore`](crate::embedding::EmbeddingStore). Pushes and
+//!   pulls touching different shards never contend.
+//! * [`ShardRouter`] (`router.rs`) — pure placement: rendezvous
+//!   (consistent) hashing for keys, range partition for dense data.
+//!
+//! # Flush pipeline
+//!
+//! A push is admitted under the control lock (policy decision, buffer,
+//! counters). When the global batch fills, admission produces a
+//! [`FlushJob`] and the lock is *released*; the pushing thread then
+//! aggregates the dense gradient (identical arithmetic and entry order
+//! to the seed's single-server `flush`) and fans the apply out to the
+//! shards — inline for `n_shards = 1`, via per-shard apply threads
+//! otherwise. While a job is applying, every control-plane entry point
+//! waits (the `applying` gate), so at most one flush is in flight,
+//! applies land in admission order, and no worker ever computes against
+//! a global step whose parameters are not yet visible; an
+//! apply-exclusion `RwLock` additionally keeps `dense_params()`
+//! snapshots atomic across shards. Together these reproduce the seed
+//! mutex's ordering guarantees while the heavy arithmetic runs outside
+//! the control lock and the optimizer sweep runs `n_shards`-way
+//! parallel.
+//!
+//! Because dense aggregation happens once (globally) and the per-shard
+//! apply is elementwise, the resulting parameters are **bit-for-bit
+//! identical for every `n_shards`** given the same pull/push sequence;
+//! `ShardedPs` with one shard *is* the seed `PsServer` (the `ps` module
+//! aliases it). The `shard_invariance` integration test and the unit
+//! tests below pin this.
+
+pub mod control;
+pub mod router;
+pub mod shard;
+
+pub use control::{ControlPlane, FlushJob};
+pub use router::ShardRouter;
+pub use shard::{DenseShardState, PsShard, ShardStats};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::{ModePolicy, WorkerId};
+use crate::embedding::{EmbeddingConfig, EmbeddingStore, RowMeta};
+use crate::metrics::TrainCounters;
+use crate::optim::Optimizer;
+use crate::ps::{GradPush, PullReply};
+use crate::runtime::{HostTensor, VariantDims};
+use crate::util::chan;
+use crate::util::fasthash::{u64_map_with_capacity, U64Map};
+use crate::util::rng::mix64;
+
+/// Shared, lock-free-readable state: the shards and their placement.
+struct Core {
+    router: ShardRouter,
+    shards: Vec<PsShard>,
+    /// Full shapes of the dense tensors (for reassembly).
+    shapes: Vec<Vec<usize>>,
+    emb_dim: usize,
+    opt_dense: Box<dyn Optimizer>,
+    opt_emb: Box<dyn Optimizer>,
+    /// Apply-exclusion lock: dense readers (parameter pulls, slot
+    /// export) take `read`, a flush's apply fan-out takes `write` for
+    /// its whole duration. This is what keeps multi-tensor snapshots
+    /// atomic across shards — the per-shard locks alone would let a
+    /// reader see shard 0 at step k+1 and shard 1 still at step k (the
+    /// seed's single dense mutex made that state impossible). Lock
+    /// order is always snapshot → per-shard, on every path.
+    snapshot: RwLock<()>,
+    /// Nanoseconds parameter pulls spent stalled behind an in-flight
+    /// apply (waiting on `snapshot.read()`). *The* front-side contention
+    /// metric: it shrinks as shards cut the apply's critical section.
+    pull_stall_ns: AtomicU64,
+}
+
+/// One shard's portion of an admitted flush, sent to its apply thread.
+struct ApplyTask {
+    agg: Arc<Vec<HostTensor>>,
+    group: Vec<(u64, Vec<f32>, u32)>,
+    opt_step: u64,
+    done: Arc<ApplyBarrier>,
+}
+
+/// Countdown latch: the flusher waits until every shard acked its slice.
+/// Tracks whether any shard's apply panicked so the flusher can
+/// propagate the failure instead of wedging the whole PS (the seed
+/// surfaced flush panics in the pushing thread; so do we).
+struct ApplyBarrier {
+    /// (shards still outstanding, a shard apply panicked)
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl ApplyBarrier {
+    fn new(n: usize) -> Self {
+        ApplyBarrier { state: Mutex::new((n, false)), cv: Condvar::new() }
+    }
+
+    fn signal(&self, ok: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        st.1 |= !ok;
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until all shards acked; returns true if any apply panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// Per-shard apply threads (only spun up for `n_shards > 1`).
+struct ApplyPool {
+    txs: Vec<chan::Sender<ApplyTask>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Drop for ApplyPool {
+    fn drop(&mut self) {
+        self.txs.clear(); // closes the channels; threads drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The sharded parameter-server front. `n_shards = 1` reproduces the
+/// seed `PsServer` exactly (the `ps` module aliases it as such).
+pub struct ShardedPs {
+    pub dims: VariantDims,
+    core: Arc<Core>,
+    control: ControlPlane,
+    pool: Option<ApplyPool>,
+}
+
+impl ShardedPs {
+    /// Single-shard constructor — signature-compatible with the seed
+    /// `PsServer::new`.
+    pub fn new(
+        dims: VariantDims,
+        init_params: Vec<HostTensor>,
+        emb_cfg: EmbeddingConfig,
+        opt_dense: Box<dyn Optimizer>,
+        opt_emb: Box<dyn Optimizer>,
+        policy: Box<dyn ModePolicy>,
+    ) -> Self {
+        Self::with_shards(dims, init_params, emb_cfg, opt_dense, opt_emb, policy, 1)
+    }
+
+    /// Build an `n_shards`-way partitioned PS.
+    pub fn with_shards(
+        dims: VariantDims,
+        init_params: Vec<HostTensor>,
+        emb_cfg: EmbeddingConfig,
+        opt_dense: Box<dyn Optimizer>,
+        opt_emb: Box<dyn Optimizer>,
+        policy: Box<dyn ModePolicy>,
+        n_shards: usize,
+    ) -> Self {
+        assert_eq!(init_params.len(), 6, "dense params are (w1,b1,w2,b2,w3,b3)");
+        assert!(n_shards >= 1, "need at least one shard");
+        let router = ShardRouter::new(n_shards);
+        let shapes: Vec<Vec<usize>> = init_params.iter().map(|t| t.shape.clone()).collect();
+        let emb_dim = emb_cfg.dim;
+        let shards: Vec<PsShard> = (0..n_shards)
+            .map(|s| {
+                let ranges: Vec<(usize, usize)> =
+                    init_params.iter().map(|t| router.dense_range(s, t.numel())).collect();
+                PsShard::new(s, ranges, &init_params, opt_dense.slots(), emb_cfg.clone(), opt_emb.slots())
+            })
+            .collect();
+        let core = Arc::new(Core {
+            router,
+            shards,
+            shapes,
+            emb_dim,
+            opt_dense,
+            opt_emb,
+            snapshot: RwLock::new(()),
+            pull_stall_ns: AtomicU64::new(0),
+        });
+        let pool = (n_shards > 1).then(|| Self::start_pool(&core));
+        ShardedPs { dims, core, control: ControlPlane::new(policy), pool }
+    }
+
+    fn start_pool(core: &Arc<Core>) -> ApplyPool {
+        let n = core.shards.len();
+        let mut txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for s in 0..n {
+            let (tx, rx) = chan::unbounded::<ApplyTask>();
+            let core = core.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ps-shard-{s}"))
+                .spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        // A panicking apply must still ack the barrier,
+                        // or the flusher (and with it the whole control
+                        // plane) would hang forever.
+                        let result = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| {
+                                core.shards[s].apply(
+                                    &task.agg,
+                                    &task.group,
+                                    core.opt_dense.as_ref(),
+                                    core.opt_emb.as_ref(),
+                                    task.opt_step,
+                                );
+                            }),
+                        );
+                        task.done.signal(result.is_ok());
+                    }
+                })
+                .expect("spawning shard apply thread");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        ApplyPool { txs, handles }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.core.shards.len()
+    }
+
+    /// Per-shard load/contention snapshot (Fig. 7 shard sweep).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.core.shards.iter().map(|s| s.stats()).collect()
+    }
+
+    /// Total nanoseconds parameter pulls spent stalled behind applies.
+    pub fn pull_stall_ns(&self) -> u64 {
+        self.core.pull_stall_ns.load(Ordering::Relaxed)
+    }
+
+    // ---- control-plane pass-throughs --------------------------------------
+
+    /// Point the data list at a day with `n_batches` batches.
+    pub fn set_day(&self, day: usize, n_batches: usize) {
+        self.control.set_day(day, n_batches);
+    }
+
+    /// Non-blocking pull (Algorithm 2 "pull responding").
+    pub fn pull(&self, w: WorkerId) -> PullReply {
+        self.control.pull(w)
+    }
+
+    /// Blocking pull: parks on the condvar while gated.
+    pub fn pull_blocking(&self, w: WorkerId) -> PullReply {
+        self.control.pull_blocking(w)
+    }
+
+    /// Worker failed: forget its in-flight claim (Appendix B).
+    pub fn worker_reset(&self, w: WorkerId) {
+        self.control.worker_reset(w);
+    }
+
+    /// True when no claims are outstanding, the buffer is empty and no
+    /// flush is mid-apply.
+    pub fn quiescent(&self) -> bool {
+        self.control.quiescent()
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.control.outstanding()
+    }
+
+    pub fn counters(&self) -> TrainCounters {
+        self.control.counters()
+    }
+
+    pub fn reset_counters(&self) {
+        self.control.reset_counters();
+    }
+
+    pub fn global_step(&self) -> u64 {
+        self.control.global_step()
+    }
+
+    pub fn mode(&self) -> crate::config::ModeKind {
+        self.control.mode()
+    }
+
+    /// Enable Fig. 3 collection of aggregated-gradient L2 norms.
+    pub fn collect_grad_norms(&self, on: bool) {
+        self.control.collect_grad_norms(on);
+    }
+
+    pub fn take_grad_norms(&self) -> Vec<f64> {
+        self.control.take_grad_norms()
+    }
+
+    /// (global step, mean loss) per apply since the last reset.
+    pub fn loss_curve(&self) -> Vec<(u64, f32)> {
+        self.control.loss_curve()
+    }
+
+    /// Swap the coordination policy (the *switch* operation, §1). Any
+    /// buffered gradients are force-flushed under the old policy first.
+    pub fn switch_policy(&self, policy: Box<dyn ModePolicy>) {
+        if let Some(job) = self.control.swap_policy(policy) {
+            self.run_flush(job);
+        }
+    }
+
+    // ---- push / flush -----------------------------------------------------
+
+    /// Gradient push (Algorithm 2 "push responding"). Never parks
+    /// waiting for *other workers* (policy gating applies to pulls
+    /// only); it does wait out an in-flight apply, exactly as a push
+    /// waited on the seed's control mutex mid-flush. If this push
+    /// completes the global batch, the calling thread performs the
+    /// aggregation and drives the shard applies.
+    pub fn push(&self, grad: GradPush) {
+        if let Some(job) = self.control.push(grad) {
+            self.run_flush(job);
+        }
+    }
+
+    /// Force-flush a partial buffer (end of day). Returns whether a flush
+    /// happened.
+    pub fn flush_partial(&self) -> bool {
+        match self.control.begin_partial_flush() {
+            Some(job) => {
+                self.run_flush(job);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Aggregate an admitted job and apply it across the shards. The
+    /// dense arithmetic (entry order, weighting, divisor) is identical to
+    /// the seed `PsServer::flush`, so results are bit-for-bit equal for
+    /// any shard count.
+    fn run_flush(&self, job: FlushJob) {
+        /// `finish_apply` must run even if aggregation or a shard apply
+        /// panics — otherwise `applying` stays raised forever and every
+        /// gated worker parks indefinitely instead of failing loudly
+        /// (the locks the panic poisons take care of the loud part).
+        struct FinishGuard<'a> {
+            control: &'a ControlPlane,
+            norm: Option<f64>,
+        }
+        impl Drop for FinishGuard<'_> {
+            fn drop(&mut self) {
+                self.control.finish_apply(self.norm.take());
+            }
+        }
+        let mut guard = FinishGuard { control: &self.control, norm: None };
+
+        if job.included > 0 {
+            // --- dense aggregation: sum_i w_i * g_i / divisor --------------
+            let mut agg: Vec<HostTensor> =
+                job.entries[0].dense.iter().map(|t| HostTensor::zeros(t.shape.clone())).collect();
+            for (entry, &w) in job.entries.iter().zip(&job.weights) {
+                if w == 0.0 {
+                    continue;
+                }
+                for (a, g) in agg.iter_mut().zip(&entry.dense) {
+                    a.axpy(w, g);
+                }
+            }
+            let inv = 1.0 / job.dense_divisor;
+            for a in agg.iter_mut() {
+                a.scale(inv);
+            }
+            if job.collect_norm {
+                let norm2: f64 = agg
+                    .iter()
+                    .map(|t| {
+                        let n = t.l2_norm();
+                        n * n
+                    })
+                    .sum();
+                guard.norm = Some(norm2.sqrt());
+            }
+
+            // --- embedding aggregation (Algorithm 2 L21–23) ----------------
+            let mut per_key: U64Map<(Vec<f32>, u32)> = u64_map_with_capacity(1024);
+            for (entry, &w) in job.entries.iter().zip(&job.weights) {
+                if w == 0.0 {
+                    continue;
+                }
+                for (key, gsum) in &entry.emb {
+                    let slot =
+                        per_key.entry(*key).or_insert_with(|| (vec![0.0; gsum.len()], 0));
+                    for (a, g) in slot.0.iter_mut().zip(gsum) {
+                        *a += w * g;
+                    }
+                    slot.1 += 1;
+                }
+            }
+            let n = self.core.router.n_shards();
+            let mut groups: Vec<Vec<(u64, Vec<f32>, u32)>> = (0..n).map(|_| Vec::new()).collect();
+            for (key, (g, cnt)) in per_key {
+                groups[self.core.router.shard_of_key(key)].push((key, g, cnt));
+            }
+
+            self.apply_to_shards(agg, groups, job.opt_step);
+        }
+        drop(guard); // normal path: finish_apply with any collected norm
+    }
+
+    fn apply_to_shards(
+        &self,
+        agg: Vec<HostTensor>,
+        mut groups: Vec<Vec<(u64, Vec<f32>, u32)>>,
+        opt_step: u64,
+    ) {
+        // Exclude dense readers for the whole apply so every
+        // `dense_params()` snapshot is a coherent global step.
+        let _apply_excl = self.core.snapshot.write().unwrap();
+        match &self.pool {
+            None => {
+                let core = &self.core;
+                for (shard, group) in core.shards.iter().zip(&groups) {
+                    shard.apply(
+                        &agg,
+                        group,
+                        core.opt_dense.as_ref(),
+                        core.opt_emb.as_ref(),
+                        opt_step,
+                    );
+                }
+            }
+            Some(pool) => {
+                let agg = Arc::new(agg);
+                let done = Arc::new(ApplyBarrier::new(pool.txs.len()));
+                for (tx, group) in pool.txs.iter().zip(groups.drain(..)) {
+                    let task =
+                        ApplyTask { agg: agg.clone(), group, opt_step, done: done.clone() };
+                    tx.send(task).unwrap_or_else(|_| panic!("shard apply pool closed"));
+                }
+                if done.wait() {
+                    panic!("a shard apply thread panicked; parameters may be inconsistent");
+                }
+            }
+        }
+    }
+
+    // ---- dense parameter access -------------------------------------------
+
+    /// Snapshot of the dense parameters (the worker's parameter pull),
+    /// reassembled from the per-shard range slices.
+    pub fn dense_params(&self) -> Vec<HostTensor> {
+        let t0 = Instant::now();
+        let _snap = self.core.snapshot.read().unwrap();
+        self.core.pull_stall_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let mut flats: Vec<Vec<f32>> =
+            self.core.shapes.iter().map(|s| vec![0.0f32; s.iter().product()]).collect();
+        for shard in &self.core.shards {
+            shard.read_params_into(&mut flats);
+        }
+        self.core
+            .shapes
+            .iter()
+            .zip(flats)
+            .map(|(shape, data)| HostTensor { shape: shape.clone(), data })
+            .collect()
+    }
+
+    /// Replace dense params + reset optimizer slots (checkpoint restore).
+    pub fn set_dense_params(&self, params: Vec<HostTensor>) {
+        assert_eq!(params.len(), self.core.shapes.len());
+        let _apply_excl = self.core.snapshot.write().unwrap();
+        let slots = self.core.opt_dense.slots();
+        for shard in &self.core.shards {
+            let mut d = shard.dense.write().unwrap();
+            for (t, p) in params.iter().enumerate() {
+                let (lo, hi) = shard.ranges[t];
+                d.params[t].copy_from_slice(&p.data[lo..hi]);
+                d.slots[t] = vec![0.0; (hi - lo) * slots];
+            }
+        }
+    }
+
+    /// Export dense optimizer slots in the unsharded planar layout
+    /// (`slot j of weight i` at `j * numel + i`), reassembled from the
+    /// shard-local planar buffers.
+    pub fn dense_slots(&self) -> Vec<Vec<f32>> {
+        let _snap = self.core.snapshot.read().unwrap();
+        let n_slots = self.core.opt_dense.slots();
+        let mut out: Vec<Vec<f32>> = self
+            .core
+            .shapes
+            .iter()
+            .map(|s| vec![0.0f32; s.iter().product::<usize>() * n_slots])
+            .collect();
+        for shard in &self.core.shards {
+            let d = shard.dense.read().unwrap();
+            for (t, shard_slots) in d.slots.iter().enumerate() {
+                let (lo, hi) = shard.ranges[t];
+                let range_len = hi - lo;
+                let numel: usize = self.core.shapes[t].iter().product();
+                for j in 0..n_slots {
+                    out[t][j * numel + lo..j * numel + hi]
+                        .copy_from_slice(&shard_slots[j * range_len..(j + 1) * range_len]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Import dense optimizer slots (inverse of [`dense_slots`]).
+    ///
+    /// [`dense_slots`]: ShardedPs::dense_slots
+    pub fn set_dense_slots(&self, slots: Vec<Vec<f32>>) {
+        assert_eq!(slots.len(), self.core.shapes.len());
+        let _apply_excl = self.core.snapshot.write().unwrap();
+        let n_slots = self.core.opt_dense.slots();
+        for shard in &self.core.shards {
+            let mut d = shard.dense.write().unwrap();
+            for (t, full) in slots.iter().enumerate() {
+                let numel: usize = self.core.shapes[t].iter().product();
+                assert_eq!(full.len(), numel * n_slots);
+                let (lo, hi) = shard.ranges[t];
+                let range_len = hi - lo;
+                for j in 0..n_slots {
+                    d.slots[t][j * range_len..(j + 1) * range_len]
+                        .copy_from_slice(&full[j * numel + lo..j * numel + hi]);
+                }
+            }
+        }
+    }
+
+    // ---- embedding access (routed to the owning shard) --------------------
+
+    /// Gather rows for a flattened key block into a `[B, F, D]` tensor,
+    /// routing each key to its owning shard. Missing rows materialize
+    /// lazily with the same key-seeded init on every shard count. Each
+    /// key is hashed exactly once, shared between the cross-shard route
+    /// and the store's internal sub-shard pick.
+    pub fn gather(&self, keys: &[u64], batch: usize, fields: usize) -> HostTensor {
+        debug_assert_eq!(keys.len(), batch * fields);
+        let dim = self.core.emb_dim;
+        let mut data = vec![0.0f32; keys.len() * dim];
+        for (i, &key) in keys.iter().enumerate() {
+            let h = mix64(key);
+            let shard = &self.core.shards[self.core.router.shard_of_hash(h)];
+            shard.emb.read_row_into_hashed(key, h, &mut data[i * dim..(i + 1) * dim]);
+        }
+        HostTensor { shape: vec![batch, fields, dim], data }
+    }
+
+    #[inline]
+    fn emb_store_of(&self, key: u64) -> &EmbeddingStore {
+        &self.core.shards[self.core.router.shard_of_key(key)].emb
+    }
+
+    /// Copy one row's vector (materializing it if absent).
+    pub fn emb_row(&self, key: u64) -> Vec<f32> {
+        self.emb_store_of(key).row(key)
+    }
+
+    pub fn emb_meta(&self, key: u64) -> Option<RowMeta> {
+        self.emb_store_of(key).meta(key)
+    }
+
+    /// Bulk-insert a row (checkpoint restore), routed to its shard.
+    pub fn insert_emb_row(&self, key: u64, vec: Vec<f32>, state: Vec<f32>, meta: RowMeta) {
+        self.emb_store_of(key).insert_row(key, vec, state, meta);
+    }
+
+    /// Iterate all rows across shards (checkpointing). Shard-index order;
+    /// callers needing a canonical order sort by key (as `Checkpoint`
+    /// does).
+    pub fn for_each_emb_row(&self, mut f: impl FnMut(u64, &[f32], &[f32], RowMeta)) {
+        for shard in &self.core.shards {
+            shard.emb.for_each_row(&mut f);
+        }
+    }
+
+    /// Number of materialized embedding rows across all shards.
+    pub fn emb_len(&self) -> usize {
+        self.core.shards.iter().map(|s| s.emb.len()).sum()
+    }
+
+    /// Approximate resident bytes of the embedding plane.
+    pub fn emb_memory_bytes(&self) -> usize {
+        self.core.shards.iter().map(|s| s.emb.memory_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::modes::{AsyncPolicy, GbaPolicy};
+    use crate::optim::{Adam, Sgd};
+
+    fn dims() -> VariantDims {
+        VariantDims { fields: 2, emb_dim: 4, hidden1: 5, hidden2: 3, mlp_in: 12 }
+    }
+
+    fn init_params(seed: f32) -> Vec<HostTensor> {
+        dims()
+            .param_shapes()
+            .into_iter()
+            .enumerate()
+            .map(|(t, s)| {
+                let n: usize = s.iter().product();
+                HostTensor {
+                    shape: s,
+                    data: (0..n).map(|i| seed + t as f32 * 0.1 + i as f32 * 0.01).collect(),
+                }
+            })
+            .collect()
+    }
+
+    fn unit_push(token: u64, keys: &[u64], g: f32) -> GradPush {
+        GradPush {
+            worker: 0,
+            token,
+            dense: dims()
+                .param_shapes()
+                .into_iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    HostTensor { shape: s, data: vec![g; n] }
+                })
+                .collect(),
+            emb: keys.iter().map(|&k| (k, vec![g; 4])).collect(),
+            n_samples: 8,
+            loss: 0.5,
+        }
+    }
+
+    fn ps_with(n_shards: usize, opt: Box<dyn Optimizer>) -> ShardedPs {
+        let opt2 = opt.boxed_clone();
+        ShardedPs::with_shards(
+            dims(),
+            init_params(0.5),
+            EmbeddingConfig { dim: 4, init_scale: 0.05, seed: 7, shards: 2 },
+            opt,
+            opt2,
+            Box::new(GbaPolicy::with_iota(2, 3)),
+            n_shards,
+        )
+    }
+
+    /// The acceptance-criteria core: identical pull/push sequences give
+    /// bit-identical parameters and loss curves for every shard count.
+    #[test]
+    fn shard_count_invariance_bitwise() {
+        let keys: Vec<u64> = (0..24).map(|i| i * 7919 + 3).collect();
+        let mut results = Vec::new();
+        for n_shards in [1usize, 2, 4, 7] {
+            let ps = ps_with(n_shards, Box::new(Adam::new(0.01)));
+            ps.set_day(0, 100);
+            for step in 0..6u64 {
+                for j in 0..2u64 {
+                    let it = match ps.pull(0) {
+                        PullReply::Work(it) => it,
+                        other => panic!("{other:?}"),
+                    };
+                    let g = 0.3 + step as f32 * 0.05 + j as f32 * 0.01;
+                    ps.push(unit_push(it.token, &keys[..(8 + step as usize)], g));
+                }
+            }
+            let dense = ps.dense_params();
+            let rows: Vec<Vec<f32>> = keys.iter().map(|&k| ps.emb_row(k)).collect();
+            results.push((dense, rows, ps.loss_curve(), ps.counters().global_steps));
+        }
+        for r in &results[1..] {
+            assert_eq!(r.0, results[0].0, "dense params differ across shard counts");
+            assert_eq!(r.1, results[0].1, "embedding rows differ across shard counts");
+            assert_eq!(r.2, results[0].2, "loss curves differ across shard counts");
+            assert_eq!(r.3, results[0].3);
+        }
+        assert_eq!(results[0].3, 6);
+    }
+
+    #[test]
+    fn async_policy_applies_across_shards() {
+        let ps = ShardedPs::with_shards(
+            dims(),
+            init_params(0.0),
+            EmbeddingConfig { dim: 4, init_scale: 0.0, seed: 1, shards: 2 },
+            Box::new(Sgd { lr: 1.0 }),
+            Box::new(Sgd { lr: 1.0 }),
+            Box::new(AsyncPolicy::new()),
+            3,
+        );
+        ps.set_day(0, 10);
+        let it = match ps.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        ps.push(unit_push(it.token, &[5, 6], 1.0));
+        assert_eq!(ps.global_step(), 1);
+        // SGD lr 1, single grad of 1.0 / divisor 1 => params -= 1 everywhere.
+        let p = ps.dense_params();
+        let inits = init_params(0.0);
+        for (t, (tensor, want)) in p.iter().zip(&inits).enumerate() {
+            for (i, (&got, &init)) in tensor.data.iter().zip(&want.data).enumerate() {
+                assert!((got - (init - 1.0)).abs() < 1e-6, "t={t} i={i}: {got} vs {init}");
+            }
+        }
+        // Embedding rows moved by -1 per coordinate (1 contributing worker).
+        let row = ps.emb_row(5);
+        assert!((row[0] + 1.0).abs() < 1e-6);
+        assert!(ps.quiescent());
+        let stats = ps.shard_stats();
+        assert_eq!(stats.len(), 3);
+        assert!(stats.iter().all(|s| s.applies == 1));
+        let total_elems: usize = stats.iter().map(|s| s.dense_elems).sum();
+        let want_elems: usize =
+            dims().param_shapes().iter().map(|s| s.iter().product::<usize>()).sum();
+        assert_eq!(total_elems, want_elems);
+    }
+
+    #[test]
+    fn dense_slots_roundtrip_across_uneven_ranges() {
+        let ps = ps_with(3, Box::new(Adam::new(0.05)));
+        ps.set_day(0, 10);
+        for _ in 0..2 {
+            let it = match ps.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            ps.push(unit_push(it.token, &[1, 2, 3], 0.7));
+        }
+        let slots = ps.dense_slots();
+        // Adam has 2 slots; the m-moment of a constant gradient is nonzero.
+        assert!(slots.iter().any(|s| s.iter().any(|&x| x != 0.0)));
+        let single = ps_with(1, Box::new(Adam::new(0.05)));
+        single.set_day(0, 10);
+        for _ in 0..2 {
+            let it = match single.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            single.push(unit_push(it.token, &[1, 2, 3], 0.7));
+        }
+        assert_eq!(slots, single.dense_slots(), "slot reassembly differs from unsharded");
+
+        // Scatter the slots back in and read them out again.
+        ps.set_dense_slots(slots.clone());
+        assert_eq!(ps.dense_slots(), slots);
+    }
+
+    #[test]
+    fn set_dense_params_resets_slots() {
+        let ps = ps_with(2, Box::new(Adam::new(0.05)));
+        ps.set_day(0, 10);
+        let it = match ps.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        ps.push(unit_push(it.token, &[9], 1.0));
+        let fresh = init_params(2.0);
+        ps.set_dense_params(fresh.clone());
+        assert_eq!(ps.dense_params(), fresh);
+        assert!(ps.dense_slots().iter().all(|s| s.iter().all(|&x| x == 0.0)));
+    }
+
+    #[test]
+    fn concurrent_pushers_many_shards() {
+        use std::sync::Arc;
+        let ps = Arc::new(ShardedPs::with_shards(
+            dims(),
+            init_params(0.1),
+            EmbeddingConfig { dim: 4, init_scale: 0.05, seed: 3, shards: 4 },
+            Box::new(Sgd { lr: 0.01 }),
+            Box::new(Sgd { lr: 0.01 }),
+            Box::new(AsyncPolicy::new()),
+            4,
+        ));
+        ps.set_day(0, 10_000);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let ps = ps.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u64 {
+                    let it = match ps.pull_blocking(t as usize) {
+                        PullReply::Work(it) => it,
+                        other => panic!("{other:?}"),
+                    };
+                    ps.push(unit_push(it.token, &[t * 100 + i % 7], 0.05));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(ps.quiescent());
+        let c = ps.counters();
+        assert_eq!(c.global_steps, 200);
+        assert_eq!(c.applied_gradients, 200);
+        let stats = ps.shard_stats();
+        assert_eq!(stats.iter().map(|s| s.applies).sum::<u64>(), 4 * 200);
+    }
+}

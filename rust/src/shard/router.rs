@@ -1,0 +1,126 @@
+//! Placement: which PS shard owns which piece of state.
+//!
+//! Two partitioning schemes, one per parameter class:
+//!
+//! * **Embedding keys** — consistent hashing via *rendezvous* (highest
+//!   random weight): shard = argmax over shards of `mix64(key ⊕ tag(s))`.
+//!   Rendezvous hashing gives near-perfect balance (each key picks its
+//!   shard independently and uniformly) and the consistent-hashing
+//!   minimal-migration property: growing `n → n+1` shards only moves the
+//!   keys whose new-shard weight wins — about `1/(n+1)` of them — and
+//!   every migrated key moves *to* the new shard, never between old ones.
+//! * **Dense parameters** — contiguous range partition: shard `s` owns
+//!   `[s·len/n, (s+1)·len/n)` of every dense tensor's flat data. Ranges
+//!   are deterministic in `(len, n)`, cover the tensor exactly, and keep
+//!   each shard's slice cache-contiguous for the optimizer sweep.
+//!
+//! The router is pure (no locks, no state beyond `n_shards`), so both
+//! the front (`ShardedPs`) and the per-shard apply threads can consult it
+//! freely.
+
+use crate::util::rng::mix64;
+
+/// Odd multiplier deriving a per-shard tag stream (splitmix64 constant).
+const SHARD_TAG_MUL: u64 = 0x9E37_79B9_7F4A_7C15;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRouter {
+    n_shards: usize,
+}
+
+impl ShardRouter {
+    pub fn new(n_shards: usize) -> Self {
+        assert!(n_shards >= 1, "need at least one shard");
+        ShardRouter { n_shards }
+    }
+
+    #[inline]
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Owning shard of an embedding key (rendezvous hashing).
+    #[inline]
+    pub fn shard_of_key(&self, key: u64) -> usize {
+        if self.n_shards == 1 {
+            return 0;
+        }
+        self.shard_of_hash(mix64(key))
+    }
+
+    /// Owning shard given a pre-computed `mix64(key)`. Hot paths that
+    /// also hand the hash to the embedding store (gather) call this so
+    /// each key is hashed once, not once per consumer. `mix64` is a
+    /// bijection, so routing on the hash preserves every consistency
+    /// property of routing on the key.
+    #[inline]
+    pub fn shard_of_hash(&self, hash: u64) -> usize {
+        if self.n_shards == 1 {
+            return 0;
+        }
+        let mut best = 0usize;
+        let mut best_w = 0u64;
+        for s in 0..self.n_shards {
+            let w = mix64(hash ^ (s as u64).wrapping_mul(SHARD_TAG_MUL));
+            if s == 0 || w > best_w {
+                best = s;
+                best_w = w;
+            }
+        }
+        best
+    }
+
+    /// `[start, end)` of a flat dense buffer of `len` owned by shard `s`.
+    #[inline]
+    pub fn dense_range(&self, s: usize, len: usize) -> (usize, usize) {
+        debug_assert!(s < self.n_shards);
+        (s * len / self.n_shards, (s + 1) * len / self.n_shards)
+    }
+}
+
+impl Default for ShardRouter {
+    fn default() -> Self {
+        ShardRouter::new(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let r = ShardRouter::new(1);
+        for key in [0u64, 1, 99, u64::MAX] {
+            assert_eq!(r.shard_of_key(key), 0);
+        }
+        assert_eq!(r.dense_range(0, 17), (0, 17));
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let a = ShardRouter::new(8);
+        let b = ShardRouter::new(8);
+        for key in 0..1000u64 {
+            assert_eq!(a.shard_of_key(key), b.shard_of_key(key));
+        }
+    }
+
+    #[test]
+    fn dense_ranges_tile_exactly() {
+        for n in 1..=9usize {
+            let r = ShardRouter::new(n);
+            for len in [0usize, 1, 5, 64, 1000, 1001] {
+                let mut covered = 0usize;
+                for s in 0..n {
+                    let (lo, hi) = r.dense_range(s, len);
+                    assert_eq!(lo, covered, "n={n} len={len} s={s}");
+                    assert!(hi >= lo);
+                    covered = hi;
+                }
+                assert_eq!(covered, len);
+            }
+        }
+    }
+
+}

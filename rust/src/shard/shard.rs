@@ -1,0 +1,142 @@
+//! A single parameter-server shard: the data plane.
+//!
+//! Each [`PsShard`] owns
+//!
+//! * a contiguous **range slice** of every dense tensor (parameters plus
+//!   shard-local planar optimizer slots) behind its own `RwLock` — pulls
+//!   take read locks, applies take the write lock, and two shards never
+//!   share a lock, and
+//! * an [`EmbeddingStore`] holding the **consistent-hash slice** of the
+//!   embedding keyspace routed to this shard.
+//!
+//! Shards hold no coordination state whatsoever — see
+//! [`super::control::ControlPlane`] for the control plane.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+use std::time::Instant;
+
+use crate::embedding::{EmbeddingConfig, EmbeddingStore};
+use crate::optim::Optimizer;
+use crate::runtime::HostTensor;
+
+/// Dense state owned by one shard: per-tensor contiguous slices.
+pub struct DenseShardState {
+    /// `params[t]` is the `[lo, hi)` slice of tensor `t`'s flat data.
+    pub params: Vec<Vec<f32>>,
+    /// Optimizer slots per tensor, planar in the *shard-local* index
+    /// (`range_len * slots` floats; slot `j` of local weight `i` lives at
+    /// `j * range_len + i`). Elementwise optimizers make this layout
+    /// bit-identical to applying on the unsharded tensor.
+    pub slots: Vec<Vec<f32>>,
+}
+
+/// Monotonic per-shard load counters (relaxed atomics; read for
+/// reporting only).
+#[derive(Default)]
+pub struct ShardCounters {
+    /// Dense applies executed by this shard.
+    pub applies: AtomicU64,
+    /// Nanoseconds this shard spent inside its apply (dense optimizer
+    /// sweep + embedding grads). The per-flush wall cost is the *max*
+    /// across shards, so imbalance here is what caps scale-out.
+    pub apply_ns: AtomicU64,
+    /// Embedding keys routed here for gradient application.
+    pub emb_keys_applied: AtomicU64,
+}
+
+/// A point-in-time snapshot of one shard's load (for Fig. 7 reporting).
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub shard: usize,
+    pub applies: u64,
+    pub apply_ns: u64,
+    pub emb_keys_applied: u64,
+    pub emb_rows: usize,
+    pub dense_elems: usize,
+}
+
+pub struct PsShard {
+    pub index: usize,
+    /// `(lo, hi)` into each dense tensor's flat data.
+    pub ranges: Vec<(usize, usize)>,
+    pub dense: RwLock<DenseShardState>,
+    pub emb: EmbeddingStore,
+    pub counters: ShardCounters,
+}
+
+impl PsShard {
+    /// Carve shard `index`'s slices out of the full initial parameters.
+    pub fn new(
+        index: usize,
+        ranges: Vec<(usize, usize)>,
+        init_params: &[HostTensor],
+        dense_slots: usize,
+        emb_cfg: EmbeddingConfig,
+        emb_slots: usize,
+    ) -> Self {
+        debug_assert_eq!(ranges.len(), init_params.len());
+        let params: Vec<Vec<f32>> = ranges
+            .iter()
+            .zip(init_params)
+            .map(|(&(lo, hi), t)| t.data[lo..hi].to_vec())
+            .collect();
+        let slots: Vec<Vec<f32>> =
+            ranges.iter().map(|&(lo, hi)| vec![0.0f32; (hi - lo) * dense_slots]).collect();
+        PsShard {
+            index,
+            ranges,
+            dense: RwLock::new(DenseShardState { params, slots }),
+            emb: EmbeddingStore::new(emb_cfg, emb_slots),
+            counters: ShardCounters::default(),
+        }
+    }
+
+    /// Apply this shard's slice of a pre-aggregated dense gradient, then
+    /// its group of per-key embedding gradients.
+    pub fn apply(
+        &self,
+        agg: &[HostTensor],
+        emb_group: &[(u64, Vec<f32>, u32)],
+        opt_dense: &dyn Optimizer,
+        opt_emb: &dyn Optimizer,
+        opt_step: u64,
+    ) {
+        let t0 = Instant::now();
+        let mut d = self.dense.write().unwrap();
+        let DenseShardState { params, slots } = &mut *d;
+        for (t, (p, s)) in params.iter_mut().zip(slots.iter_mut()).enumerate() {
+            let (lo, hi) = self.ranges[t];
+            opt_dense.apply(p, &agg[t].data[lo..hi], s, opt_step);
+        }
+        drop(d);
+        self.counters.applies.fetch_add(1, Ordering::Relaxed);
+
+        if !emb_group.is_empty() {
+            self.emb.apply_grads(emb_group, opt_emb, opt_step);
+            self.counters.emb_keys_applied.fetch_add(emb_group.len() as u64, Ordering::Relaxed);
+        }
+        self.counters.apply_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Copy this shard's parameter slices into full-size flat buffers.
+    pub fn read_params_into(&self, out: &mut [Vec<f32>]) {
+        let d = self.dense.read().unwrap();
+        for (t, p) in d.params.iter().enumerate() {
+            let (lo, hi) = self.ranges[t];
+            out[t][lo..hi].copy_from_slice(p);
+        }
+    }
+
+    pub fn stats(&self) -> ShardStats {
+        let dense_elems = self.ranges.iter().map(|&(lo, hi)| hi - lo).sum();
+        ShardStats {
+            shard: self.index,
+            applies: self.counters.applies.load(Ordering::Relaxed),
+            apply_ns: self.counters.apply_ns.load(Ordering::Relaxed),
+            emb_keys_applied: self.counters.emb_keys_applied.load(Ordering::Relaxed),
+            emb_rows: self.emb.len(),
+            dense_elems,
+        }
+    }
+}

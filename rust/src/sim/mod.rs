@@ -27,11 +27,22 @@ pub struct SimParams {
     pub compute: StragglerModel,
     /// PS cost to apply one aggregated update (ms); serializes applies.
     pub ps_apply_ms: f64,
+    /// PS shards: the dense/embedding apply fans out across shards in
+    /// parallel, so the effective apply cost is `ps_apply_ms / n_shards`.
+    pub n_shards: usize,
     /// Virtual time-of-day at simulation start (secs into the trace day).
     pub start_sec: f64,
     /// Virtual duration to simulate (secs).
     pub duration_sec: f64,
     pub seed: u64,
+}
+
+impl SimParams {
+    /// Effective wall cost of one aggregated apply (ms): the per-shard
+    /// slices apply concurrently.
+    pub fn effective_apply_ms(&self) -> f64 {
+        self.ps_apply_ms / self.n_shards.max(1) as f64
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -148,7 +159,7 @@ pub fn simulate(params: &SimParams, mut policy: Box<dyn ModePolicy>) -> SimOutco
                 buffer_tokens.clear();
                 policy.on_applied();
                 steps += 1;
-                ps_free_at = t + params.ps_apply_ms / 1e3;
+                ps_free_at = t + params.effective_apply_ms() / 1e3;
                 // The apply may unblock gated workers.
                 for w2 in 0..n {
                     if parked[w2] {
@@ -201,6 +212,7 @@ pub fn simulate_mode(
         local_batch: mode.local_batch,
         compute,
         ps_apply_ms: cfg.cluster.ps_apply_ms,
+        n_shards: cfg.ps.n_shards,
         start_sec,
         duration_sec,
         seed,
@@ -232,6 +244,7 @@ mod tests {
             local_batch: 100,
             compute,
             ps_apply_ms: 0.1,
+            n_shards: 1,
             start_sec: 0.0,
             duration_sec: 60.0,
             seed,
@@ -280,6 +293,19 @@ mod tests {
         let gba = simulate(&p, Box::new(GbaPolicy::with_iota(8, 4)));
         let batches: u64 = gba.per_worker_batches.iter().sum();
         assert!(gba.global_steps >= batches / 8 && gba.global_steps <= batches / 8 + 1);
+    }
+
+    #[test]
+    fn sharding_amortizes_apply_cost() {
+        // Heavy apply cost + cheap compute: the serialized PS apply
+        // throttles barrier-released cohorts; shards apply in parallel.
+        let mut p = params(8, false, 4);
+        p.ps_apply_ms = 20.0;
+        let one = simulate(&p, Box::new(SyncPolicy::new(8)));
+        p.n_shards = 8;
+        let eight = simulate(&p, Box::new(SyncPolicy::new(8)));
+        let ratio = eight.global_qps() / one.global_qps();
+        assert!(ratio > 1.5, "8-shard/1-shard qps ratio = {ratio}");
     }
 
     #[test]

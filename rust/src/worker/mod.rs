@@ -122,7 +122,7 @@ pub fn run_worker(
         let batch = gen.batch_by_index(item.day, item.batch_index, wp.local_batch);
         // Pull parameters: dense snapshot + embedding gather.
         let params = ps.dense_params();
-        let emb = ps.emb.gather(&batch.keys, wp.local_batch, batch.fields);
+        let emb = ps.gather(&batch.keys, wp.local_batch, batch.fields);
         // Compute fwd/bwd.
         let out = backend.train_step(wp.local_batch, &emb, &params, &batch.labels)?;
         // Straggler model: emulate the shared-cluster compute time.

@@ -125,7 +125,7 @@ impl TrainSession {
         let mode = cfg.mode(kind);
         let (okind, lr) = optim_for(&cfg, kind);
         let policy = make_policy(kind, &mode, cfg.gba_m_effective());
-        let ps = Arc::new(PsServer::new(
+        let ps = Arc::new(PsServer::with_shards(
             dims,
             init_dense,
             EmbeddingConfig {
@@ -137,15 +137,12 @@ impl TrainSession {
             make_optimizer(okind, lr),
             make_optimizer(okind, lr),
             policy,
+            cfg.ps.n_shards,
         ));
         if let Some(ckpt) = ckpt {
+            let emb_slots = make_optimizer(okind, lr).slots();
             for (key, vec, meta) in &ckpt.emb_rows {
-                ps.emb.insert_row(
-                    *key,
-                    vec.clone(),
-                    vec![0.0; vec.len() * make_optimizer(okind, lr).slots()],
-                    *meta,
-                );
+                ps.insert_emb_row(*key, vec.clone(), vec![0.0; vec.len() * emb_slots], *meta);
             }
         }
         let gen = Arc::new(DataGen::new(&cfg.model, &cfg.data, cfg.seed));
@@ -238,9 +235,7 @@ impl TrainSession {
             wall_sec: wall,
             samples,
             qps: samples as f64 / wall.max(1e-9),
-            local_qps: samples as f64 / busy.max(1e-9) / mode.workers as f64
-                * mode.workers as f64
-                / mode.workers as f64,
+            local_qps: samples as f64 / busy.max(1e-9) / mode.workers as f64,
             counters,
             failures,
         })
@@ -257,7 +252,7 @@ impl TrainSession {
         let n_batches = (n / bsz).max(1);
         for b in 0..n_batches {
             let batch = self.gen.batch_by_index(day, b, bsz);
-            let emb = self.ps.emb.gather(&batch.keys, bsz, batch.fields);
+            let emb = self.ps.gather(&batch.keys, bsz, batch.fields);
             let logits = self.backend.predict(bsz, &emb, &params)?;
             scores.extend_from_slice(&logits);
             labels.extend_from_slice(&batch.labels);
@@ -391,6 +386,18 @@ backup = 1
         s.train_day(1).unwrap();
         let after = s.eval_auc(2).unwrap();
         assert!(after > before - 0.05, "switch degraded: {before} -> {after}");
+    }
+
+    #[test]
+    fn sharded_ps_session_trains() {
+        let mut c = cfg();
+        c.ps.n_shards = 4;
+        let s = TrainSession::new(c, ModeKind::Gba, SessionOptions::default()).unwrap();
+        assert_eq!(s.ps().n_shards(), 4);
+        let stats = s.train_day(0).unwrap();
+        assert!(stats.counters.global_steps > 0);
+        let a = s.eval_auc(1).unwrap();
+        assert!(a > 0.6, "sharded gba auc = {a}");
     }
 
     #[test]

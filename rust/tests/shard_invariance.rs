@@ -1,0 +1,129 @@
+//! Shard-count invariance of the control plane: GBA training on a
+//! 1-shard and a 4-shard parameter-server plane must produce *identical*
+//! results for the same seed — the token-control state is shard-global,
+//! dense aggregation happens once, and the per-shard optimizer apply is
+//! elementwise, so nothing may depend on `n_shards`.
+//!
+//! Determinism note: the sessions run a single worker thread, so the
+//! pull/push sequence (and therefore the buffer composition of every
+//! global batch) is identical across runs; any divergence would have to
+//! come from the sharded data plane itself.
+
+use gba::config::{ExperimentConfig, ModeKind};
+use gba::worker::session::{SessionOptions, TrainSession};
+
+fn cfg(n_shards: usize) -> ExperimentConfig {
+    ExperimentConfig::from_toml(&format!(
+        r#"
+name = "shard-invariance"
+seed = 1234
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 32
+hidden2 = 16
+vocab_size = 3000
+zipf_s = 1.1
+[data]
+days_base = 1
+days_eval = 1
+samples_per_day = 2048
+teacher_seed = 9
+label_noise = 0.02
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+eval_batch = 256
+eval_samples = 1024
+[ps]
+n_shards = {n_shards}
+[mode.sync]
+workers = 2
+local_batch = 64
+[mode.gba]
+workers = 1
+local_batch = 32
+iota = 3
+"#
+    ))
+    .unwrap()
+}
+
+struct RunResult {
+    loss_curve: Vec<(u64, f32)>,
+    dense_bits: Vec<Vec<u32>>,
+    global_steps: u64,
+    auc: f64,
+}
+
+fn run_gba_day(n_shards: usize) -> RunResult {
+    let s = TrainSession::new(cfg(n_shards), ModeKind::Gba, SessionOptions::default()).unwrap();
+    assert_eq!(s.ps().n_shards(), n_shards);
+    let stats = s.train_day(0).unwrap();
+    let dense_bits = s
+        .ps()
+        .dense_params()
+        .into_iter()
+        .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    RunResult {
+        loss_curve: s.ps().loss_curve(),
+        dense_bits,
+        global_steps: stats.counters.global_steps,
+        auc: s.eval_auc(1).unwrap(),
+    }
+}
+
+#[test]
+fn gba_identical_loss_curves_on_1_and_4_shards() {
+    let one = run_gba_day(1);
+    let four = run_gba_day(4);
+
+    assert!(one.global_steps > 10, "run too short to be meaningful");
+    assert_eq!(one.global_steps, four.global_steps);
+    assert_eq!(
+        one.loss_curve.len(),
+        four.loss_curve.len(),
+        "different number of applies across shard counts"
+    );
+    for (i, (a, b)) in one.loss_curve.iter().zip(&four.loss_curve).enumerate() {
+        assert_eq!(a.0, b.0, "apply {i}: global step differs");
+        assert_eq!(
+            a.1.to_bits(),
+            b.1.to_bits(),
+            "apply {i}: loss differs ({} vs {})",
+            a.1,
+            b.1
+        );
+    }
+    // Bit-for-bit identical dense parameters after the day.
+    assert_eq!(one.dense_bits, four.dense_bits, "dense parameters diverged");
+    assert!(
+        (one.auc - four.auc).abs() < 1e-12,
+        "AUC diverged: {} vs {}",
+        one.auc,
+        four.auc
+    );
+    assert!(one.auc > 0.55, "training should beat chance, auc = {}", one.auc);
+}
+
+#[test]
+fn sharded_checkpoint_inherits_across_shard_counts() {
+    // Train on 4 shards, checkpoint, restore into a 1-shard session: the
+    // evaluation must be identical (parameters are shard-layout-free).
+    let four = TrainSession::new(cfg(4), ModeKind::Gba, SessionOptions::default()).unwrap();
+    four.train_day(0).unwrap();
+    let auc_four = four.eval_auc(1).unwrap();
+    let ckpt = four.checkpoint();
+
+    let one =
+        TrainSession::from_checkpoint(cfg(1), ModeKind::Gba, SessionOptions::default(), &ckpt)
+            .unwrap();
+    let auc_one = one.eval_auc(1).unwrap();
+    assert!(
+        (auc_four - auc_one).abs() < 1e-12,
+        "checkpoint not shard-portable: {auc_four} vs {auc_one}"
+    );
+}

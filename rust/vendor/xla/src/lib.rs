@@ -1,0 +1,164 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The PJRT backend is optional at runtime: every test and experiment can
+//! run on the native Rust backend. This vendored crate provides the exact
+//! API surface `runtime/{tensor,engine}.rs` compiles against, with
+//! [`PjRtClient::cpu`] returning an error — so `--backend pjrt` reports
+//! a clear message instead of failing the whole build when the real
+//! bindings are unavailable. Host-side [`Literal`] containers are fully
+//! functional (they are plain `Vec<f32>` + dims).
+//!
+//! Point `rust/Cargo.toml`'s `xla` dependency at the real bindings to
+//! enable PJRT execution; no call site changes.
+
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn stub_err(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT is unavailable in this build (vendored xla stub); \
+         use the native backend or point Cargo.toml at the real xla crate"
+    ))
+}
+
+/// Element types a [`Literal`] can be read back as. The stub stores f32.
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+}
+
+/// Host-side literal: dense f32 payload plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape without copying the payload; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.data.len() {
+            return Err(XlaError(format!(
+                "reshape {:?} wants {numel} elements, literal has {}",
+                dims,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Read back as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from_f32(x)).collect())
+    }
+
+    /// Destructure a tuple literal. Stub literals are never tuples.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(stub_err("to_tuple"))
+    }
+
+    /// Destructure a 1-tuple literal.
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(stub_err("to_tuple1"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from files).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(stub_err(&format!("loading HLO text from {path}")))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub: never constructed).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with host arguments; stub executables do not exist, so this
+    /// is unreachable in practice but keeps the call sites compiling.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("execute"))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The stub has no PJRT runtime: constructing a client reports why.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(stub_err("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4]).is_err());
+        // scalar reshape
+        let s = Literal::vec1(&[7.0]).reshape(&[]).unwrap();
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.0]);
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("stub"));
+    }
+}
