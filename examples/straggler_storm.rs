@@ -18,6 +18,7 @@ fn main() {
         base_compute_ms: 8.0,
         hetero_sigma: 0.5,
         ps_apply_ms: 0.5,
+        wire_ms: 0.0,
     };
     let trace = LoadTrace::from_name(&cluster.trace);
     let workers = 16;
@@ -34,6 +35,7 @@ fn main() {
             compute: StragglerModel::new(&cluster, workers, seed),
             ps_apply_ms: cluster.ps_apply_ms,
             n_shards: 1,
+            wire_ms: 0.0,
             start_sec: start,
             duration_sec: 120.0,
             seed: seed ^ h,

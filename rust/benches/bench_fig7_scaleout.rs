@@ -30,6 +30,7 @@ fn sim_scaleout(b: &mut Bencher) {
         base_compute_ms: 8.0,
         hetero_sigma: 0.5,
         ps_apply_ms: 0.6,
+        wire_ms: 0.0,
     };
     let global = 400 * 1000;
     for workers in [100usize, 200, 400, 800] {
@@ -40,6 +41,7 @@ fn sim_scaleout(b: &mut Bencher) {
             compute: StragglerModel::new(&cluster, workers, 1),
             ps_apply_ms: cluster.ps_apply_ms,
             n_shards: 1,
+            wire_ms: 0.0,
             start_sec: 10.0 * 3600.0,
             duration_sec: 30.0,
             seed: workers as u64,

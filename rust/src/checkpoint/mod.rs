@@ -2,15 +2,33 @@
 //! Fig. 6 trains a base model in one mode, checkpoints it, and every
 //! compared mode inherits the same checkpoint).
 //!
-//! Binary format (little-endian, versioned):
+//! Two on-disk layouts share one in-memory [`Checkpoint`]:
 //!
-//! ```text
-//! magic "GBACKPT2" | header_len u32 | header json | dense blobs | rows
-//! ```
+//! * **Portable single file** (little-endian, versioned):
 //!
-//! Optimizer slots are deliberately *not* persisted: inheriting a
-//! checkpoint into a (possibly different) training mode starts fresh
-//! optimizer state, which is exactly the paper's switch semantics.
+//!   ```text
+//!   magic "GBACKPT2" | header_len u32 | header json | dense blobs | rows
+//!   ```
+//!
+//!   Rows are globally key-sorted; the file is shard-layout-free and
+//!   restores into any `n_shards`/transport configuration.
+//!
+//! * **Sharded directory** ([`Checkpoint::save_sharded`]): a
+//!   `manifest.json` plus one `shard-NNN.bin` stream per PS shard, each
+//!   holding that shard's dense range slices and *its own* embedding
+//!   rows (key-sorted within the shard). This is the ROADMAP follow-up
+//!   to the single sorted row list: each shard's state is a separate
+//!   stream, written and reloadable independently — what a shard-side
+//!   service persists locally in a real multi-process deployment.
+//!   [`Checkpoint::load_sharded`] reassembles the portable form, so a
+//!   sharded save restores at any shard count.
+//!
+//! Optimizer slots are deliberately *not* persisted by either layout:
+//! inheriting a checkpoint into a (possibly different) training mode
+//! starts fresh optimizer state, which is exactly the paper's switch
+//! semantics. (The *in-memory* respawn checkpoints the
+//! [`ShardSupervisor`](crate::transport::ShardSupervisor) keeps are
+//! different: they carry slots, because respawn resumes mid-stream.)
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -23,6 +41,7 @@ use crate::runtime::{HostTensor, VariantDims};
 use crate::util::json::{self, Json};
 
 const MAGIC: &[u8; 8] = b"GBACKPT2";
+const SHARD_MAGIC: &[u8; 8] = b"GBASHRD1";
 
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
@@ -153,6 +172,204 @@ impl Checkpoint {
     }
 }
 
+fn read_f32s(f: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+impl Checkpoint {
+    /// Save a running PS as one stream per shard (`manifest.json` +
+    /// `shard-NNN.bin`). Each stream holds only what that shard owns:
+    /// its dense range slices and its consistent-hash slice of the
+    /// embedding rows, key-sorted within the shard. Like `from_ps`, the
+    /// caller is responsible for quiescing training first.
+    pub fn save_sharded(ps: &PsServer, dir: impl AsRef<Path>) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let dims = ps.dims;
+        let shapes = dims.param_shapes();
+        let manifest = Json::obj()
+            .set("version", 1)
+            .set("n_shards", ps.n_shards())
+            .set("fields", dims.fields)
+            .set("emb_dim", dims.emb_dim)
+            .set("hidden1", dims.hidden1)
+            .set("hidden2", dims.hidden2)
+            .set("mlp_in", dims.mlp_in)
+            .set("global_step", ps.global_step())
+            .set(
+                "dense_shapes",
+                Json::Arr(
+                    shapes
+                        .iter()
+                        .map(|s| Json::Arr(s.iter().map(|&d| Json::from(d)).collect()))
+                        .collect(),
+                ),
+            );
+        std::fs::write(dir.join("manifest.json"), manifest.to_string_compact())?;
+        for s in 0..ps.n_shards() {
+            let (ranges, dense) = ps.dump_shard_dense(s);
+            let rows = ps.dump_shard_rows(s);
+            let mut f =
+                std::io::BufWriter::new(std::fs::File::create(dir.join(shard_file(s)))?);
+            f.write_all(SHARD_MAGIC)?;
+            let header = Json::obj().set("shard", s).set("n_rows", rows.len()).set(
+                "ranges",
+                Json::Arr(
+                    ranges
+                        .iter()
+                        .map(|&(lo, hi)| Json::Arr(vec![Json::from(lo), Json::from(hi)]))
+                        .collect(),
+                ),
+            );
+            let htext = header.to_string_compact();
+            f.write_all(&(htext.len() as u32).to_le_bytes())?;
+            f.write_all(htext.as_bytes())?;
+            for (slice, &(lo, hi)) in dense.iter().zip(&ranges) {
+                debug_assert_eq!(slice.len(), hi - lo);
+                for &x in slice {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            // Row layout matches the portable file; optimizer state is
+            // dropped (switch semantics), key order is shard-local.
+            for (key, vec, _state, meta) in &rows {
+                f.write_all(&key.to_le_bytes())?;
+                f.write_all(&meta.last_update_step.to_le_bytes())?;
+                f.write_all(&meta.update_count.to_le_bytes())?;
+                for &x in vec {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Reassemble a sharded checkpoint directory into the portable form.
+    /// The result is shard-layout-free: it restores into a PS of *any*
+    /// shard count and transport.
+    pub fn load_sharded(dir: impl AsRef<Path>) -> Result<Checkpoint> {
+        let dir = dir.as_ref();
+        let mtext = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}", dir.join("manifest.json").display()))?;
+        let m = json::parse(&mtext)
+            .map_err(|e| anyhow::anyhow!("sharded checkpoint manifest: {e}"))?;
+        let u = |k: &str| -> Result<usize> {
+            m.get(k).and_then(Json::as_usize).with_context(|| format!("manifest.{k}"))
+        };
+        let dims = VariantDims {
+            fields: u("fields")?,
+            emb_dim: u("emb_dim")?,
+            hidden1: u("hidden1")?,
+            hidden2: u("hidden2")?,
+            mlp_in: u("mlp_in")?,
+        };
+        let n_shards = u("n_shards")?;
+        let global_step = u("global_step")? as u64;
+        let shapes: Vec<Vec<usize>> = m
+            .get("dense_shapes")
+            .and_then(Json::as_arr)
+            .context("manifest.dense_shapes")?
+            .iter()
+            .map(|s| {
+                s.as_arr()
+                    .context("dense shape entry")
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            })
+            .collect::<Result<_>>()?;
+        let numels: Vec<usize> = shapes.iter().map(|s| s.iter().product()).collect();
+        let mut flats: Vec<Vec<f32>> = numels.iter().map(|&n| vec![0.0f32; n]).collect();
+        let mut covered = vec![0usize; shapes.len()];
+        let mut emb_rows: Vec<(u64, Vec<f32>, RowMeta)> = Vec::new();
+        for s in 0..n_shards {
+            let path = dir.join(shard_file(s));
+            let mut f = std::io::BufReader::new(
+                std::fs::File::open(&path)
+                    .with_context(|| format!("opening {}", path.display()))?,
+            );
+            let mut magic = [0u8; 8];
+            f.read_exact(&mut magic)?;
+            if &magic != SHARD_MAGIC {
+                bail!("shard {s}: bad stream magic");
+            }
+            let mut len4 = [0u8; 4];
+            f.read_exact(&mut len4)?;
+            let mut hbuf = vec![0u8; u32::from_le_bytes(len4) as usize];
+            f.read_exact(&mut hbuf)?;
+            let header = json::parse(std::str::from_utf8(&hbuf)?)
+                .map_err(|e| anyhow::anyhow!("shard {s} header: {e}"))?;
+            if header.get("shard").and_then(Json::as_usize) != Some(s) {
+                bail!("shard {s}: stream claims a different shard index");
+            }
+            let n_rows =
+                header.get("n_rows").and_then(Json::as_usize).context("shard header n_rows")?;
+            let ranges: Vec<(usize, usize)> = header
+                .get("ranges")
+                .and_then(Json::as_arr)
+                .context("shard header ranges")?
+                .iter()
+                .map(|r| {
+                    let lo = r.idx(0).and_then(Json::as_usize).context("range lo")?;
+                    let hi = r.idx(1).and_then(Json::as_usize).context("range hi")?;
+                    Ok((lo, hi))
+                })
+                .collect::<Result<_>>()?;
+            if ranges.len() != shapes.len() {
+                bail!("shard {s}: {} ranges for {} tensors", ranges.len(), shapes.len());
+            }
+            for (t, &(lo, hi)) in ranges.iter().enumerate() {
+                if lo > hi || hi > numels[t] {
+                    bail!("shard {s}: range [{lo}, {hi}) outside tensor {t}");
+                }
+                // Streams are written in shard order over a contiguous
+                // range partition, so each range must start exactly
+                // where the previous shard's ended — this rejects
+                // overlaps and gaps, not just total-count mismatches.
+                if lo != covered[t] {
+                    bail!(
+                        "shard {s}: tensor {t} range starts at {lo}, expected {}",
+                        covered[t]
+                    );
+                }
+                let data = read_f32s(&mut f, hi - lo)?;
+                flats[t][lo..hi].copy_from_slice(&data);
+                covered[t] = hi;
+            }
+            for _ in 0..n_rows {
+                let mut k8 = [0u8; 8];
+                f.read_exact(&mut k8)?;
+                let key = u64::from_le_bytes(k8);
+                f.read_exact(&mut k8)?;
+                let last_update_step = u64::from_le_bytes(k8);
+                let mut c4 = [0u8; 4];
+                f.read_exact(&mut c4)?;
+                let update_count = u32::from_le_bytes(c4);
+                let vec = read_f32s(&mut f, dims.emb_dim)?;
+                emb_rows.push((key, vec, RowMeta { last_update_step, update_count }));
+            }
+        }
+        for (t, (&c, &n)) in covered.iter().zip(&numels).enumerate() {
+            if c != n {
+                bail!("tensor {t}: shard ranges cover {c} of {n} elements");
+            }
+        }
+        // Portable canonical order: global key sort (shards partition
+        // the keyspace, so no key appears twice).
+        emb_rows.sort_by_key(|(k, _, _)| *k);
+        let dense = shapes
+            .into_iter()
+            .zip(flats)
+            .map(|(shape, data)| HostTensor { shape, data })
+            .collect();
+        Ok(Checkpoint { dims, dense, emb_rows, global_step })
+    }
+}
+
+fn shard_file(s: usize) -> String {
+    format!("shard-{s:03}.bin")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,5 +418,89 @@ mod tests {
         let path = std::env::temp_dir().join("gba_ckpt_garbage.bin");
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+    }
+
+    fn trained_ps(n_shards: usize) -> (VariantDims, PsServer) {
+        use crate::coordinator::modes::AsyncPolicy;
+        use crate::embedding::EmbeddingConfig;
+        use crate::optim::Sgd;
+        use crate::ps::{GradPush, PullReply};
+
+        let dims = VariantDims { fields: 2, emb_dim: 3, hidden1: 4, hidden2: 2, mlp_in: 9 };
+        let init: Vec<HostTensor> = dims
+            .param_shapes()
+            .into_iter()
+            .enumerate()
+            .map(|(t, s)| {
+                let n: usize = s.iter().product();
+                HostTensor { shape: s, data: (0..n).map(|j| (t * 31 + j) as f32 * 0.1).collect() }
+            })
+            .collect();
+        let ps = PsServer::with_shards(
+            dims,
+            init,
+            EmbeddingConfig { dim: 3, init_scale: 0.05, seed: 5, shards: 2 },
+            Box::new(Sgd { lr: 0.1 }),
+            Box::new(Sgd { lr: 0.1 }),
+            Box::new(AsyncPolicy::new()),
+            n_shards,
+        );
+        ps.set_day(0, 100);
+        for i in 0..4u64 {
+            let it = match ps.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            ps.push(GradPush {
+                worker: 0,
+                token: it.token,
+                dense: dims
+                    .param_shapes()
+                    .into_iter()
+                    .map(|s| {
+                        let n: usize = s.iter().product();
+                        HostTensor { shape: s, data: vec![0.05; n] }
+                    })
+                    .collect(),
+                emb: vec![(i * 17 + 1, vec![0.2; 3]), (i * 17 + 2, vec![-0.1; 3])],
+                n_samples: 4,
+                loss: 0.4,
+            });
+        }
+        (dims, ps)
+    }
+
+    #[test]
+    fn sharded_save_load_matches_portable() {
+        let (dims, ps) = trained_ps(3);
+        let dir = std::env::temp_dir().join("gba_sharded_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        Checkpoint::save_sharded(&ps, &dir).unwrap();
+        let loaded = Checkpoint::load_sharded(&dir).unwrap();
+        let portable = Checkpoint::from_ps(dims, &ps);
+        assert_eq!(loaded.dims, portable.dims);
+        assert_eq!(loaded.global_step, portable.global_step);
+        assert_eq!(loaded.dense, portable.dense);
+        assert_eq!(loaded.emb_rows.len(), portable.emb_rows.len());
+        for (a, b) in loaded.emb_rows.iter().zip(&portable.emb_rows) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1, b.1);
+            assert_eq!(a.2.last_update_step, b.2.last_update_step);
+            assert_eq!(a.2.update_count, b.2.update_count);
+        }
+    }
+
+    #[test]
+    fn sharded_load_rejects_missing_stream_and_bad_magic() {
+        let (_dims, ps) = trained_ps(2);
+        let dir = std::env::temp_dir().join("gba_sharded_ckpt_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        Checkpoint::save_sharded(&ps, &dir).unwrap();
+        // Missing shard stream.
+        std::fs::remove_file(dir.join("shard-001.bin")).unwrap();
+        assert!(Checkpoint::load_sharded(&dir).is_err());
+        // Corrupt magic on the remaining one.
+        std::fs::write(dir.join("shard-001.bin"), b"XXXXXXXXjunk").unwrap();
+        assert!(Checkpoint::load_sharded(&dir).is_err());
     }
 }

@@ -178,6 +178,7 @@ mod tests {
             base_compute_ms: 10.0,
             hetero_sigma: 0.0,
             ps_apply_ms: 0.5,
+            wire_ms: 0.0,
         };
         let m = StragglerModel::new(&cfg, 4, 1);
         let mut rng = Pcg64::seeded(2);
@@ -195,6 +196,7 @@ mod tests {
             base_compute_ms: 10.0,
             hetero_sigma: 0.5,
             ps_apply_ms: 0.5,
+            wire_ms: 0.0,
         };
         let m = StragglerModel::new(&cfg, 64, 7);
         let mut rng = Pcg64::seeded(3);

@@ -145,6 +145,29 @@ ps_apply_ms = 0.5
     }
 
     #[test]
+    fn ps_transport_default_parse_and_reject() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.ps.transport, TransportKind::InProc, "absent [ps] defaults to inproc");
+        let sock = format!("{SAMPLE}\n[ps]\nn_shards = 2\ntransport = \"socket\"\n");
+        assert_eq!(
+            ExperimentConfig::from_toml(&sock).unwrap().ps.transport,
+            TransportKind::Socket
+        );
+        let bad = format!("{SAMPLE}\n[ps]\ntransport = \"carrier-pigeon\"\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        let not_str = format!("{SAMPLE}\n[ps]\ntransport = 3\n");
+        assert!(ExperimentConfig::from_toml(&not_str).is_err());
+    }
+
+    #[test]
+    fn cluster_wire_ms_parses_with_default() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.cluster.wire_ms, 0.0);
+        let wired = SAMPLE.replace("ps_apply_ms = 0.5", "ps_apply_ms = 0.5\nwire_ms = 0.2");
+        assert_eq!(ExperimentConfig::from_toml(&wired).unwrap().cluster.wire_ms, 0.2);
+    }
+
+    #[test]
     fn mode_kind_roundtrip() {
         for k in ModeKind::ALL {
             assert_eq!(ModeKind::parse(k.as_str()).unwrap(), k);

@@ -165,6 +165,35 @@ impl Default for ModeConfig {
     }
 }
 
+/// How the PS front reaches its shard services (`[ps] transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process endpoints over `util/chan` duplex pairs (default).
+    InProc,
+    /// Localhost TCP endpoints framed through the versioned binary
+    /// codec. Bit-for-bit identical results to `InProc` (pinned by
+    /// `tests/shard_invariance.rs`); the stepping stone to shards in
+    /// other processes.
+    Socket,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "inproc" => TransportKind::InProc,
+            "socket" => TransportKind::Socket,
+            _ => bail!("unknown transport '{s}' (inproc|socket)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
 /// Parameter-server plane shape (`[ps]` table).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PsConfig {
@@ -172,11 +201,13 @@ pub struct PsConfig {
     /// slices of the embedding keyspace. 1 reproduces the seed
     /// single-server behavior bit-for-bit.
     pub n_shards: usize,
+    /// Shard endpoint transport.
+    pub transport: TransportKind,
 }
 
 impl Default for PsConfig {
     fn default() -> Self {
-        PsConfig { n_shards: 1 }
+        PsConfig { n_shards: 1, transport: TransportKind::InProc }
     }
 }
 
@@ -190,6 +221,10 @@ pub struct ClusterConfig {
     pub hetero_sigma: f64,
     /// PS time to apply one aggregated update (ms).
     pub ps_apply_ms: f64,
+    /// Per-flush serialization + framing cost when shards sit behind a
+    /// socket transport (ms); the simulator adds it to the apply cost
+    /// when `[ps] transport = "socket"`.
+    pub wire_ms: f64,
 }
 
 #[derive(Clone, Debug)]
@@ -290,16 +325,24 @@ impl ExperimentConfig {
             base_compute_ms: doc.get_f64("cluster.base_compute_ms").unwrap_or(2.0),
             hetero_sigma: doc.get_f64("cluster.hetero_sigma").unwrap_or(0.3),
             ps_apply_ms: doc.get_f64("cluster.ps_apply_ms").unwrap_or(0.5),
+            wire_ms: doc.get_f64("cluster.wire_ms").unwrap_or(0.0),
         };
-        // Absent [ps] defaults to one shard; a *malformed* value must
-        // error, not silently fall back (a "4-shard" run that quietly
-        // ran single-shard would invalidate every scale-out result).
+        // Absent [ps] defaults to one in-process shard; a *malformed*
+        // value must error, not silently fall back (a "4-shard" or
+        // "socket" run that quietly ran the default would invalidate
+        // every scale-out result).
         let ps = PsConfig {
             n_shards: match doc.get("ps.n_shards") {
                 None => 1,
                 Some(v) => v
                     .as_usize()
                     .context("ps.n_shards must be a non-negative integer")?,
+            },
+            transport: match doc.get("ps.transport") {
+                None => TransportKind::InProc,
+                Some(v) => TransportKind::parse(
+                    v.as_str().context("ps.transport must be a string")?,
+                )?,
             },
         };
         Ok(ExperimentConfig {

@@ -113,8 +113,11 @@ impl EmbeddingStore {
     }
 
     /// [`read_row_into`](Self::read_row_into) with a pre-computed
-    /// `mix64(key)` — lets the sharded-PS gather path hash each key once
-    /// for both cross-shard routing and this store's internal shard.
+    /// `mix64(key)`, for callers that already hashed the key. (The
+    /// sharded-PS front used to route and look up on one hash; since
+    /// the transport split, routing hashes front-side and the shard
+    /// service re-derives the hash here — shipping hashes over the
+    /// wire wasn't worth widening the Gather frame.)
     pub fn read_row_into_hashed(&self, key: u64, hash: u64, out: &mut [f32]) {
         debug_assert_eq!(hash, mix64(key));
         let shard = &self.shards[self.shard_index(hash)];

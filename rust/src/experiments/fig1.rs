@@ -38,6 +38,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 compute,
                 ps_apply_ms: cfg.cluster.ps_apply_ms,
                 n_shards: cfg.ps.n_shards,
+                wire_ms: SimParams::wire_ms_of(&cfg),
                 start_sec: start,
                 duration_sec: window,
                 seed: ctx.seed ^ (h as u64),
@@ -58,6 +59,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 compute,
                 ps_apply_ms: cfg.cluster.ps_apply_ms,
                 n_shards: cfg.ps.n_shards,
+                wire_ms: SimParams::wire_ms_of(&cfg),
                 start_sec: start,
                 duration_sec: window,
                 seed: ctx.seed ^ (h as u64) ^ (g as u64) << 8,

@@ -38,5 +38,6 @@ pub mod ps;
 pub mod runtime;
 pub mod shard;
 pub mod sim;
+pub mod transport;
 pub mod util;
 pub mod worker;

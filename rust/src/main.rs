@@ -12,7 +12,7 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use gba::config::{ExperimentConfig, ModeKind};
+use gba::config::{ExperimentConfig, ModeKind, TransportKind};
 use gba::data::DataGen;
 use gba::experiments::{self, ExpCtx};
 use gba::metrics::report::fmt_auc;
@@ -68,6 +68,8 @@ USAGE:
                   [--days N] [--backend native|pjrt] [--artifacts DIR]
                   [--straggler] [--switch-to MODE] [--switch-day D]
                   [--shards N]   (override [ps] n_shards: PS plane width)
+                  [--transport inproc|socket]   (override [ps] transport:
+                                 shard endpoints in-process or over TCP)
   gba-train datagen --config FILE [--day D] [--samples N]
   gba-train inspect [--artifacts DIR]
 
@@ -122,6 +124,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.ps.n_shards = n.parse().context("--shards wants a positive integer")?;
         cfg.validate()?;
     }
+    if let Some(t) = args.get("transport") {
+        cfg.ps.transport = TransportKind::parse(t)?;
+    }
     let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
     let days: usize = args
         .get("days")
@@ -139,12 +144,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     println!(
-        "task {} | mode {} | G_sync = {} | M = {} | ps shards = {} | backend {:?}",
+        "task {} | mode {} | G_sync = {} | M = {} | ps shards = {} ({}) | backend {:?}",
         cfg.name,
         kind.paper_name(),
         cfg.global_batch_sync(),
         cfg.gba_m_effective(),
         cfg.ps.n_shards,
+        cfg.ps.transport.as_str(),
         opts.backend
     );
     let mut session = TrainSession::new(cfg, kind, opts)?;

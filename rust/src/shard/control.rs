@@ -393,6 +393,73 @@ mod tests {
     }
 
     #[test]
+    fn swap_policy_with_buffered_grads_admits_flush_under_old_policy() {
+        // GBA with M = 3: two pushes buffer without flushing …
+        let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(3, 3)));
+        cp.set_day(0, 10);
+        for _ in 0..2 {
+            let it = match cp.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            assert!(cp.push(push_of(0, it.token)).is_none());
+        }
+        // … then the switch admits them as one flush under the *old*
+        // policy: GBA's dense divisor is M even for a partial buffer.
+        let job = cp.swap_policy(Box::new(SyncPolicy::new(2))).expect("buffered grads");
+        assert_eq!(job.entries.len(), 2);
+        assert_eq!(job.included, 2);
+        assert_eq!(job.dense_divisor, 3.0, "old GBA policy decided the divisor");
+        assert_eq!(job.opt_step, 1);
+        // Mode changed at swap; the gate stays up until the apply lands.
+        assert_eq!(cp.mode(), ModeKind::Sync);
+        assert!(!cp.quiescent());
+        cp.finish_apply(None);
+        assert!(cp.quiescent());
+        assert_eq!(cp.counters().applied_gradients, 2);
+        // A fresh policy object carries its own step counter: the swap is
+        // a coordination-state reset (checkpoint-inherit semantics live
+        // at the session layer, not here).
+        assert_eq!(cp.global_step(), 0);
+    }
+
+    #[test]
+    fn partial_flush_with_empty_buffer_is_none_and_advances_nothing() {
+        let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(2, 3)));
+        cp.set_day(0, 10);
+        assert!(cp.begin_partial_flush().is_none());
+        assert!(cp.begin_partial_flush().is_none(), "idempotent on empty buffer");
+        assert_eq!(cp.global_step(), 0);
+        assert_eq!(cp.counters().global_steps, 0);
+        assert!(cp.quiescent(), "no apply gate may be left raised");
+    }
+
+    #[test]
+    fn flush_where_every_entry_decayed_has_zero_included() {
+        // M = 2, iota = 0: advance one step, then flush two stale grads.
+        let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(2, 0)));
+        cp.set_day(0, 100);
+        for _ in 0..4 {
+            let _ = cp.pull(0);
+        }
+        assert!(cp.push(push_of(0, 0)).is_none());
+        assert!(cp.push(push_of(0, 0)).unwrap().included == 2);
+        cp.finish_apply(None);
+        // k = 1 now; both remaining token-0 grads are stale (1 - 0 > 0).
+        assert!(cp.push(push_of(0, 0)).is_none());
+        let job = cp.push(push_of(0, 0)).expect("buffer of M admits a flush");
+        assert_eq!(job.included, 0, "all entries decayed to weight zero");
+        assert!(job.weights.iter().all(|&w| w == 0.0));
+        cp.finish_apply(None);
+        // The empty flush still advanced the step and counted the drops.
+        assert_eq!(cp.global_step(), 2);
+        let c = cp.counters();
+        assert_eq!(c.dropped_batches, 2);
+        assert_eq!(c.applied_gradients, 2);
+        assert!(cp.quiescent());
+    }
+
+    #[test]
     fn partial_flush_and_policy_swap() {
         let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(4, 3)));
         cp.set_day(0, 10);

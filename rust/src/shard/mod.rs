@@ -17,10 +17,22 @@
 //!   contiguous range slice of every dense tensor (with shard-local
 //!   optimizer slots) behind its own `RwLock`, plus the consistent-hash
 //!   slice of the embedding keyspace in its own
-//!   [`EmbeddingStore`](crate::embedding::EmbeddingStore). Pushes and
-//!   pulls touching different shards never contend.
+//!   [`EmbeddingStore`](crate::embedding::EmbeddingStore).
 //! * [`ShardRouter`] (`router.rs`) — pure placement: rendezvous
 //!   (consistent) hashing for keys, range partition for dense data.
+//!
+//! # The transport seam
+//!
+//! Since the transport refactor the front holds **no shard state at
+//! all**: each `PsShard` lives inside a
+//! [`ShardService`](crate::transport::ShardService) reachable only
+//! through a [`Conn`](crate::transport::Conn) endpoint — an in-process
+//! `util/chan` duplex pair (`inproc`, the default) or a localhost TCP
+//! socket framed through the versioned binary codec (`socket`). A
+//! [`ShardSupervisor`](crate::transport::ShardSupervisor) owns the
+//! endpoints, journals mutating requests against per-shard shard-local
+//! checkpoints, and respawns a dead shard (closed channel / broken
+//! socket) transparently — see `transport/` for the failure story.
 //!
 //! # Flush pipeline
 //!
@@ -28,21 +40,21 @@
 //! counters). When the global batch fills, admission produces a
 //! [`FlushJob`] and the lock is *released*; the pushing thread then
 //! aggregates the dense gradient (identical arithmetic and entry order
-//! to the seed's single-server `flush`) and fans the apply out to the
-//! shards — inline for `n_shards = 1`, via per-shard apply threads
-//! otherwise. While a job is applying, every control-plane entry point
+//! to the seed's single-server `flush`), cuts it into per-shard range
+//! slices and per-shard embedding groups, and fans `Apply` requests out
+//! to every shard endpoint — requests are sent to all shards before any
+//! ack is awaited, so the optimizer sweep runs `n_shards`-way parallel
+//! server-side. While a job is applying, every control-plane entry point
 //! waits (the `applying` gate), so at most one flush is in flight,
 //! applies land in admission order, and no worker ever computes against
 //! a global step whose parameters are not yet visible; an
 //! apply-exclusion `RwLock` additionally keeps `dense_params()`
-//! snapshots atomic across shards. Together these reproduce the seed
-//! mutex's ordering guarantees while the heavy arithmetic runs outside
-//! the control lock and the optimizer sweep runs `n_shards`-way
-//! parallel.
+//! snapshots atomic across shards.
 //!
-//! Because dense aggregation happens once (globally) and the per-shard
-//! apply is elementwise, the resulting parameters are **bit-for-bit
-//! identical for every `n_shards`** given the same pull/push sequence;
+//! Because dense aggregation happens once (globally), the per-shard
+//! apply is elementwise, and the codec carries `f32`s as raw bits, the
+//! resulting parameters are **bit-for-bit identical for every
+//! `n_shards` and every transport** given the same pull/push sequence;
 //! `ShardedPs` with one shard *is* the seed `PsServer` (the `ps` module
 //! aliases it). The `shard_invariance` integration test and the unit
 //! tests below pin this.
@@ -56,107 +68,132 @@ pub use router::ShardRouter;
 pub use shard::{DenseShardState, PsShard, ShardStats};
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
-use std::thread::JoinHandle;
+use std::sync::RwLock;
 use std::time::Instant;
 
+use crate::config::TransportKind;
 use crate::coordinator::{ModePolicy, WorkerId};
-use crate::embedding::{EmbeddingConfig, EmbeddingStore, RowMeta};
+use crate::embedding::{EmbeddingConfig, RowMeta};
 use crate::metrics::TrainCounters;
 use crate::optim::Optimizer;
 use crate::ps::{GradPush, PullReply};
 use crate::runtime::{HostTensor, VariantDims};
-use crate::util::chan;
+use crate::transport::{
+    EmbGradEntry, RowRecord, ShardReply, ShardRequest, ShardSpawnSpec, ShardSupervisor,
+};
 use crate::util::fasthash::{u64_map_with_capacity, U64Map};
 use crate::util::rng::mix64;
 
-/// Shared, lock-free-readable state: the shards and their placement.
-struct Core {
+// ---- reply unwrapping (a wrong variant is a front/service protocol bug) ----
+
+fn expect_ok(reply: ShardReply) {
+    match reply {
+        ShardReply::Ok => {}
+        other => panic!("shard protocol: expected Ok, got {other:?}"),
+    }
+}
+
+fn expect_dense(reply: ShardReply) -> Vec<Vec<f32>> {
+    match reply {
+        ShardReply::Dense { dense } => dense,
+        other => panic!("shard protocol: expected Dense, got {other:?}"),
+    }
+}
+
+fn expect_rows(reply: ShardReply) -> (usize, Vec<f32>) {
+    match reply {
+        ShardReply::Rows { dim, data } => (dim as usize, data),
+        other => panic!("shard protocol: expected Rows, got {other:?}"),
+    }
+}
+
+fn expect_dump(reply: ShardReply) -> Vec<RowRecord> {
+    match reply {
+        ShardReply::RowDump { rows } => rows,
+        other => panic!("shard protocol: expected RowDump, got {other:?}"),
+    }
+}
+
+fn expect_stats(reply: ShardReply) -> (ShardStats, u64) {
+    match reply {
+        ShardReply::Stats { stats, emb_mem_bytes } => (stats, emb_mem_bytes),
+        other => panic!("shard protocol: expected Stats, got {other:?}"),
+    }
+}
+
+/// All the pieces of a sharded PS, named. `new`/`with_shards` wrap this
+/// for the historical call sites; sessions build it directly to choose
+/// the transport.
+pub struct PsBuild {
+    pub dims: VariantDims,
+    pub init_params: Vec<HostTensor>,
+    pub emb_cfg: EmbeddingConfig,
+    pub opt_dense: Box<dyn Optimizer>,
+    pub opt_emb: Box<dyn Optimizer>,
+    pub policy: Box<dyn ModePolicy>,
+    pub n_shards: usize,
+    pub transport: TransportKind,
+}
+
+impl PsBuild {
+    pub fn build(self) -> ShardedPs {
+        assert_eq!(self.init_params.len(), 6, "dense params are (w1,b1,w2,b2,w3,b3)");
+        assert!(self.n_shards >= 1, "need at least one shard");
+        let router = ShardRouter::new(self.n_shards);
+        let shapes: Vec<Vec<usize>> =
+            self.init_params.iter().map(|t| t.shape.clone()).collect();
+        let specs: Vec<ShardSpawnSpec> = (0..self.n_shards)
+            .map(|s| ShardSpawnSpec {
+                index: s,
+                ranges: self
+                    .init_params
+                    .iter()
+                    .map(|t| router.dense_range(s, t.numel()))
+                    .collect(),
+                emb_cfg: self.emb_cfg.clone(),
+                opt_dense: self.opt_dense.boxed_clone(),
+                opt_emb: self.opt_emb.boxed_clone(),
+            })
+            .collect();
+        let supervisor = ShardSupervisor::start(self.transport, specs, &self.init_params);
+        ShardedPs {
+            dims: self.dims,
+            control: ControlPlane::new(self.policy),
+            router,
+            shapes,
+            emb_dim: self.emb_cfg.dim,
+            n_dense_slots: self.opt_dense.slots(),
+            snapshot: RwLock::new(()),
+            pull_stall_ns: AtomicU64::new(0),
+            supervisor,
+        }
+    }
+}
+
+/// The sharded parameter-server front. `n_shards = 1` over the `inproc`
+/// transport reproduces the seed `PsServer` exactly (the `ps` module
+/// aliases it as such).
+pub struct ShardedPs {
+    pub dims: VariantDims,
+    control: ControlPlane,
     router: ShardRouter,
-    shards: Vec<PsShard>,
-    /// Full shapes of the dense tensors (for reassembly).
+    /// Full shapes of the dense tensors (for slicing and reassembly).
     shapes: Vec<Vec<usize>>,
     emb_dim: usize,
-    opt_dense: Box<dyn Optimizer>,
-    opt_emb: Box<dyn Optimizer>,
+    n_dense_slots: usize,
     /// Apply-exclusion lock: dense readers (parameter pulls, slot
     /// export) take `read`, a flush's apply fan-out takes `write` for
     /// its whole duration. This is what keeps multi-tensor snapshots
-    /// atomic across shards — the per-shard locks alone would let a
+    /// atomic across shards — the per-shard endpoints alone would let a
     /// reader see shard 0 at step k+1 and shard 1 still at step k (the
     /// seed's single dense mutex made that state impossible). Lock
-    /// order is always snapshot → per-shard, on every path.
+    /// order is always snapshot → endpoint slot, on every path.
     snapshot: RwLock<()>,
     /// Nanoseconds parameter pulls spent stalled behind an in-flight
     /// apply (waiting on `snapshot.read()`). *The* front-side contention
     /// metric: it shrinks as shards cut the apply's critical section.
     pull_stall_ns: AtomicU64,
-}
-
-/// One shard's portion of an admitted flush, sent to its apply thread.
-struct ApplyTask {
-    agg: Arc<Vec<HostTensor>>,
-    group: Vec<(u64, Vec<f32>, u32)>,
-    opt_step: u64,
-    done: Arc<ApplyBarrier>,
-}
-
-/// Countdown latch: the flusher waits until every shard acked its slice.
-/// Tracks whether any shard's apply panicked so the flusher can
-/// propagate the failure instead of wedging the whole PS (the seed
-/// surfaced flush panics in the pushing thread; so do we).
-struct ApplyBarrier {
-    /// (shards still outstanding, a shard apply panicked)
-    state: Mutex<(usize, bool)>,
-    cv: Condvar,
-}
-
-impl ApplyBarrier {
-    fn new(n: usize) -> Self {
-        ApplyBarrier { state: Mutex::new((n, false)), cv: Condvar::new() }
-    }
-
-    fn signal(&self, ok: bool) {
-        let mut st = self.state.lock().unwrap();
-        st.0 -= 1;
-        st.1 |= !ok;
-        if st.0 == 0 {
-            self.cv.notify_all();
-        }
-    }
-
-    /// Block until all shards acked; returns true if any apply panicked.
-    fn wait(&self) -> bool {
-        let mut st = self.state.lock().unwrap();
-        while st.0 > 0 {
-            st = self.cv.wait(st).unwrap();
-        }
-        st.1
-    }
-}
-
-/// Per-shard apply threads (only spun up for `n_shards > 1`).
-struct ApplyPool {
-    txs: Vec<chan::Sender<ApplyTask>>,
-    handles: Vec<JoinHandle<()>>,
-}
-
-impl Drop for ApplyPool {
-    fn drop(&mut self) {
-        self.txs.clear(); // closes the channels; threads drain and exit
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-/// The sharded parameter-server front. `n_shards = 1` reproduces the
-/// seed `PsServer` exactly (the `ps` module aliases it as such).
-pub struct ShardedPs {
-    pub dims: VariantDims,
-    core: Arc<Core>,
-    control: ControlPlane,
-    pool: Option<ApplyPool>,
+    supervisor: ShardSupervisor,
 }
 
 impl ShardedPs {
@@ -173,7 +210,7 @@ impl ShardedPs {
         Self::with_shards(dims, init_params, emb_cfg, opt_dense, opt_emb, policy, 1)
     }
 
-    /// Build an `n_shards`-way partitioned PS.
+    /// Build an `n_shards`-way partitioned PS over in-process endpoints.
     pub fn with_shards(
         dims: VariantDims,
         init_params: Vec<HostTensor>,
@@ -183,79 +220,57 @@ impl ShardedPs {
         policy: Box<dyn ModePolicy>,
         n_shards: usize,
     ) -> Self {
-        assert_eq!(init_params.len(), 6, "dense params are (w1,b1,w2,b2,w3,b3)");
-        assert!(n_shards >= 1, "need at least one shard");
-        let router = ShardRouter::new(n_shards);
-        let shapes: Vec<Vec<usize>> = init_params.iter().map(|t| t.shape.clone()).collect();
-        let emb_dim = emb_cfg.dim;
-        let shards: Vec<PsShard> = (0..n_shards)
-            .map(|s| {
-                let ranges: Vec<(usize, usize)> =
-                    init_params.iter().map(|t| router.dense_range(s, t.numel())).collect();
-                PsShard::new(s, ranges, &init_params, opt_dense.slots(), emb_cfg.clone(), opt_emb.slots())
-            })
-            .collect();
-        let core = Arc::new(Core {
-            router,
-            shards,
-            shapes,
-            emb_dim,
+        PsBuild {
+            dims,
+            init_params,
+            emb_cfg,
             opt_dense,
             opt_emb,
-            snapshot: RwLock::new(()),
-            pull_stall_ns: AtomicU64::new(0),
-        });
-        let pool = (n_shards > 1).then(|| Self::start_pool(&core));
-        ShardedPs { dims, core, control: ControlPlane::new(policy), pool }
-    }
-
-    fn start_pool(core: &Arc<Core>) -> ApplyPool {
-        let n = core.shards.len();
-        let mut txs = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
-        for s in 0..n {
-            let (tx, rx) = chan::unbounded::<ApplyTask>();
-            let core = core.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("ps-shard-{s}"))
-                .spawn(move || {
-                    while let Ok(task) = rx.recv() {
-                        // A panicking apply must still ack the barrier,
-                        // or the flusher (and with it the whole control
-                        // plane) would hang forever.
-                        let result = std::panic::catch_unwind(
-                            std::panic::AssertUnwindSafe(|| {
-                                core.shards[s].apply(
-                                    &task.agg,
-                                    &task.group,
-                                    core.opt_dense.as_ref(),
-                                    core.opt_emb.as_ref(),
-                                    task.opt_step,
-                                );
-                            }),
-                        );
-                        task.done.signal(result.is_ok());
-                    }
-                })
-                .expect("spawning shard apply thread");
-            txs.push(tx);
-            handles.push(handle);
+            policy,
+            n_shards,
+            transport: TransportKind::InProc,
         }
-        ApplyPool { txs, handles }
+        .build()
     }
 
     pub fn n_shards(&self) -> usize {
-        self.core.shards.len()
+        self.router.n_shards()
+    }
+
+    /// Which transport the shard endpoints use.
+    pub fn transport(&self) -> TransportKind {
+        self.supervisor.transport()
     }
 
     /// Per-shard load/contention snapshot (Fig. 7 shard sweep).
     pub fn shard_stats(&self) -> Vec<ShardStats> {
-        self.core.shards.iter().map(|s| s.stats()).collect()
+        (0..self.n_shards())
+            .map(|s| expect_stats(self.supervisor.call(s, ShardRequest::Stats)).0)
+            .collect()
     }
 
     /// Total nanoseconds parameter pulls spent stalled behind applies.
     pub fn pull_stall_ns(&self) -> u64 {
-        self.core.pull_stall_ns.load(Ordering::Relaxed)
+        self.pull_stall_ns.load(Ordering::Relaxed)
+    }
+
+    // ---- fault injection / supervision ------------------------------------
+
+    /// Deterministically kill shard `s`: its endpoint is severed and its
+    /// service (with all shard state) is gone when this returns. The
+    /// next request touching the shard triggers supervisor recovery.
+    pub fn kill_shard(&self, s: usize) {
+        self.supervisor.kill(s);
+    }
+
+    /// Lost-shard recoveries performed so far.
+    pub fn lost_shard_events(&self) -> u64 {
+        self.supervisor.lost_shard_events()
+    }
+
+    /// Applies between shard-local checkpoint refreshes (journal bound).
+    pub fn set_shard_ckpt_every(&self, n: usize) {
+        self.supervisor.set_ckpt_every(n);
     }
 
     // ---- control-plane pass-throughs --------------------------------------
@@ -357,7 +372,7 @@ impl ShardedPs {
     /// Aggregate an admitted job and apply it across the shards. The
     /// dense arithmetic (entry order, weighting, divisor) is identical to
     /// the seed `PsServer::flush`, so results are bit-for-bit equal for
-    /// any shard count.
+    /// any shard count and transport.
     fn run_flush(&self, job: FlushJob) {
         /// `finish_apply` must run even if aggregation or a shard apply
         /// panics — otherwise `applying` stays raised forever and every
@@ -416,52 +431,38 @@ impl ShardedPs {
                     slot.1 += 1;
                 }
             }
-            let n = self.core.router.n_shards();
-            let mut groups: Vec<Vec<(u64, Vec<f32>, u32)>> = (0..n).map(|_| Vec::new()).collect();
+            let n = self.router.n_shards();
+            let mut groups: Vec<Vec<EmbGradEntry>> = (0..n).map(|_| Vec::new()).collect();
             for (key, (g, cnt)) in per_key {
-                groups[self.core.router.shard_of_key(key)].push((key, g, cnt));
+                groups[self.router.shard_of_key(key)].push((key, g, cnt));
             }
 
-            self.apply_to_shards(agg, groups, job.opt_step);
+            // --- fan out: one Apply request per shard ----------------------
+            let reqs: Vec<ShardRequest> = groups
+                .into_iter()
+                .enumerate()
+                .map(|(s, emb)| ShardRequest::Apply {
+                    opt_step: job.opt_step,
+                    dense: self.slice_dense(&agg, s),
+                    emb,
+                })
+                .collect();
+            // Exclude dense readers for the whole apply so every
+            // `dense_params()` snapshot is a coherent global step.
+            let _apply_excl = self.snapshot.write().unwrap();
+            self.supervisor.apply_all(reqs);
         }
         drop(guard); // normal path: finish_apply with any collected norm
     }
 
-    fn apply_to_shards(
-        &self,
-        agg: Vec<HostTensor>,
-        mut groups: Vec<Vec<(u64, Vec<f32>, u32)>>,
-        opt_step: u64,
-    ) {
-        // Exclude dense readers for the whole apply so every
-        // `dense_params()` snapshot is a coherent global step.
-        let _apply_excl = self.core.snapshot.write().unwrap();
-        match &self.pool {
-            None => {
-                let core = &self.core;
-                for (shard, group) in core.shards.iter().zip(&groups) {
-                    shard.apply(
-                        &agg,
-                        group,
-                        core.opt_dense.as_ref(),
-                        core.opt_emb.as_ref(),
-                        opt_step,
-                    );
-                }
-            }
-            Some(pool) => {
-                let agg = Arc::new(agg);
-                let done = Arc::new(ApplyBarrier::new(pool.txs.len()));
-                for (tx, group) in pool.txs.iter().zip(groups.drain(..)) {
-                    let task =
-                        ApplyTask { agg: agg.clone(), group, opt_step, done: done.clone() };
-                    tx.send(task).unwrap_or_else(|_| panic!("shard apply pool closed"));
-                }
-                if done.wait() {
-                    panic!("a shard apply thread panicked; parameters may be inconsistent");
-                }
-            }
-        }
+    /// Cut an aggregated dense gradient into shard `s`'s range slices.
+    fn slice_dense(&self, agg: &[HostTensor], s: usize) -> Vec<Vec<f32>> {
+        agg.iter()
+            .map(|t| {
+                let (lo, hi) = self.router.dense_range(s, t.numel());
+                t.data[lo..hi].to_vec()
+            })
+            .collect()
     }
 
     // ---- dense parameter access -------------------------------------------
@@ -470,15 +471,19 @@ impl ShardedPs {
     /// reassembled from the per-shard range slices.
     pub fn dense_params(&self) -> Vec<HostTensor> {
         let t0 = Instant::now();
-        let _snap = self.core.snapshot.read().unwrap();
-        self.core.pull_stall_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let _snap = self.snapshot.read().unwrap();
+        self.pull_stall_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let mut flats: Vec<Vec<f32>> =
-            self.core.shapes.iter().map(|s| vec![0.0f32; s.iter().product()]).collect();
-        for shard in &self.core.shards {
-            shard.read_params_into(&mut flats);
+            self.shapes.iter().map(|s| vec![0.0f32; s.iter().product()]).collect();
+        for s in 0..self.n_shards() {
+            let slices = expect_dense(self.supervisor.call(s, ShardRequest::ReadDense));
+            for (t, slice) in slices.iter().enumerate() {
+                let numel: usize = self.shapes[t].iter().product();
+                let (lo, hi) = self.router.dense_range(s, numel);
+                flats[t][lo..hi].copy_from_slice(slice);
+            }
         }
-        self.core
-            .shapes
+        self.shapes
             .iter()
             .zip(flats)
             .map(|(shape, data)| HostTensor { shape: shape.clone(), data })
@@ -487,16 +492,17 @@ impl ShardedPs {
 
     /// Replace dense params + reset optimizer slots (checkpoint restore).
     pub fn set_dense_params(&self, params: Vec<HostTensor>) {
-        assert_eq!(params.len(), self.core.shapes.len());
-        let _apply_excl = self.core.snapshot.write().unwrap();
-        let slots = self.core.opt_dense.slots();
-        for shard in &self.core.shards {
-            let mut d = shard.dense.write().unwrap();
-            for (t, p) in params.iter().enumerate() {
-                let (lo, hi) = shard.ranges[t];
-                d.params[t].copy_from_slice(&p.data[lo..hi]);
-                d.slots[t] = vec![0.0; (hi - lo) * slots];
-            }
+        assert_eq!(params.len(), self.shapes.len());
+        let _apply_excl = self.snapshot.write().unwrap();
+        for s in 0..self.n_shards() {
+            let dense: Vec<Vec<f32>> = params
+                .iter()
+                .map(|p| {
+                    let (lo, hi) = self.router.dense_range(s, p.numel());
+                    p.data[lo..hi].to_vec()
+                })
+                .collect();
+            expect_ok(self.supervisor.call(s, ShardRequest::SetDense { dense }));
         }
     }
 
@@ -504,23 +510,22 @@ impl ShardedPs {
     /// (`slot j of weight i` at `j * numel + i`), reassembled from the
     /// shard-local planar buffers.
     pub fn dense_slots(&self) -> Vec<Vec<f32>> {
-        let _snap = self.core.snapshot.read().unwrap();
-        let n_slots = self.core.opt_dense.slots();
+        let _snap = self.snapshot.read().unwrap();
+        let n_slots = self.n_dense_slots;
         let mut out: Vec<Vec<f32>> = self
-            .core
             .shapes
             .iter()
             .map(|s| vec![0.0f32; s.iter().product::<usize>() * n_slots])
             .collect();
-        for shard in &self.core.shards {
-            let d = shard.dense.read().unwrap();
-            for (t, shard_slots) in d.slots.iter().enumerate() {
-                let (lo, hi) = shard.ranges[t];
+        for s in 0..self.n_shards() {
+            let shard_slots = expect_dense(self.supervisor.call(s, ShardRequest::ReadSlots));
+            for (t, sl) in shard_slots.iter().enumerate() {
+                let numel: usize = self.shapes[t].iter().product();
+                let (lo, hi) = self.router.dense_range(s, numel);
                 let range_len = hi - lo;
-                let numel: usize = self.core.shapes[t].iter().product();
                 for j in 0..n_slots {
                     out[t][j * numel + lo..j * numel + hi]
-                        .copy_from_slice(&shard_slots[j * range_len..(j + 1) * range_len]);
+                        .copy_from_slice(&sl[j * range_len..(j + 1) * range_len]);
                 }
             }
         }
@@ -531,79 +536,131 @@ impl ShardedPs {
     ///
     /// [`dense_slots`]: ShardedPs::dense_slots
     pub fn set_dense_slots(&self, slots: Vec<Vec<f32>>) {
-        assert_eq!(slots.len(), self.core.shapes.len());
-        let _apply_excl = self.core.snapshot.write().unwrap();
-        let n_slots = self.core.opt_dense.slots();
-        for shard in &self.core.shards {
-            let mut d = shard.dense.write().unwrap();
-            for (t, full) in slots.iter().enumerate() {
-                let numel: usize = self.core.shapes[t].iter().product();
-                assert_eq!(full.len(), numel * n_slots);
-                let (lo, hi) = shard.ranges[t];
-                let range_len = hi - lo;
-                for j in 0..n_slots {
-                    d.slots[t][j * range_len..(j + 1) * range_len]
-                        .copy_from_slice(&full[j * numel + lo..j * numel + hi]);
-                }
-            }
+        assert_eq!(slots.len(), self.shapes.len());
+        let n_slots = self.n_dense_slots;
+        let _apply_excl = self.snapshot.write().unwrap();
+        for s in 0..self.n_shards() {
+            let shard_slots: Vec<Vec<f32>> = slots
+                .iter()
+                .enumerate()
+                .map(|(t, full)| {
+                    let numel: usize = self.shapes[t].iter().product();
+                    assert_eq!(full.len(), numel * n_slots);
+                    let (lo, hi) = self.router.dense_range(s, numel);
+                    let range_len = hi - lo;
+                    let mut local = vec![0.0f32; range_len * n_slots];
+                    for j in 0..n_slots {
+                        local[j * range_len..(j + 1) * range_len]
+                            .copy_from_slice(&full[j * numel + lo..j * numel + hi]);
+                    }
+                    local
+                })
+                .collect();
+            expect_ok(self.supervisor.call(s, ShardRequest::SetSlots { slots: shard_slots }));
         }
     }
 
     // ---- embedding access (routed to the owning shard) --------------------
 
-    /// Gather rows for a flattened key block into a `[B, F, D]` tensor,
-    /// routing each key to its owning shard. Missing rows materialize
-    /// lazily with the same key-seeded init on every shard count. Each
-    /// key is hashed exactly once, shared between the cross-shard route
-    /// and the store's internal sub-shard pick.
+    /// Gather rows for a flattened key block into a `[B, F, D]` tensor:
+    /// keys are grouped by owning shard, fetched with one `Gather`
+    /// request per shard, and scattered back into batch order. Missing
+    /// rows materialize lazily with the same key-seeded init on every
+    /// shard count and transport.
     pub fn gather(&self, keys: &[u64], batch: usize, fields: usize) -> HostTensor {
         debug_assert_eq!(keys.len(), batch * fields);
-        let dim = self.core.emb_dim;
+        let dim = self.emb_dim;
         let mut data = vec![0.0f32; keys.len() * dim];
+        let n = self.router.n_shards();
+        let mut by_shard: Vec<(Vec<usize>, Vec<u64>)> =
+            (0..n).map(|_| (Vec::new(), Vec::new())).collect();
         for (i, &key) in keys.iter().enumerate() {
-            let h = mix64(key);
-            let shard = &self.core.shards[self.core.router.shard_of_hash(h)];
-            shard.emb.read_row_into_hashed(key, h, &mut data[i * dim..(i + 1) * dim]);
+            let s = self.router.shard_of_hash(mix64(key));
+            by_shard[s].0.push(i);
+            by_shard[s].1.push(key);
+        }
+        for (s, (positions, skeys)) in by_shard.into_iter().enumerate() {
+            if skeys.is_empty() {
+                continue;
+            }
+            let (rdim, rows) =
+                expect_rows(self.supervisor.call(s, ShardRequest::Gather { keys: skeys }));
+            debug_assert_eq!(rdim, dim);
+            for (j, &i) in positions.iter().enumerate() {
+                data[i * dim..(i + 1) * dim].copy_from_slice(&rows[j * dim..(j + 1) * dim]);
+            }
         }
         HostTensor { shape: vec![batch, fields, dim], data }
     }
 
-    #[inline]
-    fn emb_store_of(&self, key: u64) -> &EmbeddingStore {
-        &self.core.shards[self.core.router.shard_of_key(key)].emb
-    }
-
     /// Copy one row's vector (materializing it if absent).
     pub fn emb_row(&self, key: u64) -> Vec<f32> {
-        self.emb_store_of(key).row(key)
+        let s = self.router.shard_of_key(key);
+        let (dim, data) =
+            expect_rows(self.supervisor.call(s, ShardRequest::Gather { keys: vec![key] }));
+        debug_assert_eq!(dim, self.emb_dim);
+        data
     }
 
     pub fn emb_meta(&self, key: u64) -> Option<RowMeta> {
-        self.emb_store_of(key).meta(key)
+        let s = self.router.shard_of_key(key);
+        match self.supervisor.call(s, ShardRequest::GetMeta { key }) {
+            ShardReply::Meta { meta } => meta,
+            other => panic!("shard protocol: expected Meta, got {other:?}"),
+        }
     }
 
     /// Bulk-insert a row (checkpoint restore), routed to its shard.
     pub fn insert_emb_row(&self, key: u64, vec: Vec<f32>, state: Vec<f32>, meta: RowMeta) {
-        self.emb_store_of(key).insert_row(key, vec, state, meta);
+        let s = self.router.shard_of_key(key);
+        expect_ok(
+            self.supervisor.call(s, ShardRequest::InsertRow { key, vec, state, meta }),
+        );
     }
 
-    /// Iterate all rows across shards (checkpointing). Shard-index order;
-    /// callers needing a canonical order sort by key (as `Checkpoint`
-    /// does).
+    /// Iterate all rows across shards (checkpointing): shard-index
+    /// order, key-sorted within each shard — exactly the shard-local
+    /// stream order the sharded checkpoint files persist. Callers
+    /// needing one global canonical order sort by key (as the portable
+    /// `Checkpoint` does).
     pub fn for_each_emb_row(&self, mut f: impl FnMut(u64, &[f32], &[f32], RowMeta)) {
-        for shard in &self.core.shards {
-            shard.emb.for_each_row(&mut f);
+        for s in 0..self.n_shards() {
+            let rows = expect_dump(self.supervisor.call(s, ShardRequest::DumpRows));
+            for (key, vec, state, meta) in rows {
+                f(key, &vec, &state, meta);
+            }
         }
+    }
+
+    /// Per-shard row dump (shard-local checkpoint streams).
+    pub fn dump_shard_rows(&self, s: usize) -> Vec<RowRecord> {
+        expect_dump(self.supervisor.call(s, ShardRequest::DumpRows))
+    }
+
+    /// Per-shard dense slices in shard-local layout, with their ranges.
+    pub fn dump_shard_dense(&self, s: usize) -> (Vec<(usize, usize)>, Vec<Vec<f32>>) {
+        let _snap = self.snapshot.read().unwrap();
+        let ranges: Vec<(usize, usize)> = self
+            .shapes
+            .iter()
+            .map(|shape| self.router.dense_range(s, shape.iter().product()))
+            .collect();
+        let dense = expect_dense(self.supervisor.call(s, ShardRequest::ReadDense));
+        (ranges, dense)
     }
 
     /// Number of materialized embedding rows across all shards.
     pub fn emb_len(&self) -> usize {
-        self.core.shards.iter().map(|s| s.emb.len()).sum()
+        (0..self.n_shards())
+            .map(|s| expect_stats(self.supervisor.call(s, ShardRequest::Stats)).0.emb_rows)
+            .sum()
     }
 
     /// Approximate resident bytes of the embedding plane.
     pub fn emb_memory_bytes(&self) -> usize {
-        self.core.shards.iter().map(|s| s.emb.memory_bytes()).sum()
+        (0..self.n_shards())
+            .map(|s| expect_stats(self.supervisor.call(s, ShardRequest::Stats)).1 as usize)
+            .sum()
     }
 }
 
@@ -814,5 +871,35 @@ mod tests {
         assert_eq!(c.applied_gradients, 200);
         let stats = ps.shard_stats();
         assert_eq!(stats.iter().map(|s| s.applies).sum::<u64>(), 4 * 200);
+    }
+
+    /// Socket endpoints behind the same front: build, push, read back.
+    /// (Bitwise transport invariance is pinned end-to-end by
+    /// `tests/shard_invariance.rs`; this is the unit-level smoke.)
+    #[test]
+    fn socket_transport_smoke() {
+        let ps = PsBuild {
+            dims: dims(),
+            init_params: init_params(0.0),
+            emb_cfg: EmbeddingConfig { dim: 4, init_scale: 0.0, seed: 1, shards: 2 },
+            opt_dense: Box::new(Sgd { lr: 1.0 }),
+            opt_emb: Box::new(Sgd { lr: 1.0 }),
+            policy: Box::new(AsyncPolicy::new()),
+            n_shards: 2,
+            transport: TransportKind::Socket,
+        }
+        .build();
+        assert_eq!(ps.transport(), TransportKind::Socket);
+        ps.set_day(0, 10);
+        let it = match ps.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        ps.push(unit_push(it.token, &[5, 6], 1.0));
+        let p = ps.dense_params();
+        let inits = init_params(0.0);
+        assert!((p[0].data[0] - (inits[0].data[0] - 1.0)).abs() < 1e-6);
+        assert!((ps.emb_row(5)[0] + 1.0).abs() < 1e-6);
+        assert_eq!(ps.lost_shard_events(), 0);
     }
 }

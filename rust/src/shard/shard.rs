@@ -83,6 +83,25 @@ impl PsShard {
             .collect();
         let slots: Vec<Vec<f32>> =
             ranges.iter().map(|&(lo, hi)| vec![0.0f32; (hi - lo) * dense_slots]).collect();
+        Self::from_parts(index, ranges, params, slots, emb_cfg, emb_slots)
+    }
+
+    /// Build a shard from already-sliced state — the respawn path: a
+    /// [`ShardSupervisor`](crate::transport::ShardSupervisor) restores a
+    /// lost shard from its shard-local checkpoint's dense/slot slices.
+    pub fn from_parts(
+        index: usize,
+        ranges: Vec<(usize, usize)>,
+        params: Vec<Vec<f32>>,
+        slots: Vec<Vec<f32>>,
+        emb_cfg: EmbeddingConfig,
+        emb_slots: usize,
+    ) -> Self {
+        debug_assert_eq!(ranges.len(), params.len());
+        debug_assert_eq!(ranges.len(), slots.len());
+        for (&(lo, hi), p) in ranges.iter().zip(&params) {
+            debug_assert_eq!(hi - lo, p.len());
+        }
         PsShard {
             index,
             ranges,
@@ -92,11 +111,13 @@ impl PsShard {
         }
     }
 
-    /// Apply this shard's slice of a pre-aggregated dense gradient, then
-    /// its group of per-key embedding gradients.
+    /// Apply this shard's pre-sliced portion of an aggregated dense
+    /// gradient (`dense[t]` is exactly the `[lo, hi)` cut of tensor `t`,
+    /// as carried by an `Apply` wire request), then its group of per-key
+    /// embedding gradients.
     pub fn apply(
         &self,
-        agg: &[HostTensor],
+        dense: &[Vec<f32>],
         emb_group: &[(u64, Vec<f32>, u32)],
         opt_dense: &dyn Optimizer,
         opt_emb: &dyn Optimizer,
@@ -105,9 +126,9 @@ impl PsShard {
         let t0 = Instant::now();
         let mut d = self.dense.write().unwrap();
         let DenseShardState { params, slots } = &mut *d;
-        for (t, (p, s)) in params.iter_mut().zip(slots.iter_mut()).enumerate() {
-            let (lo, hi) = self.ranges[t];
-            opt_dense.apply(p, &agg[t].data[lo..hi], s, opt_step);
+        debug_assert_eq!(dense.len(), params.len(), "apply: slice count mismatch");
+        for ((p, s), g) in params.iter_mut().zip(slots.iter_mut()).zip(dense) {
+            opt_dense.apply(p, g, s, opt_step);
         }
         drop(d);
         self.counters.applies.fetch_add(1, Ordering::Relaxed);

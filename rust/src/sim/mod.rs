@@ -30,6 +30,12 @@ pub struct SimParams {
     /// PS shards: the dense/embedding apply fans out across shards in
     /// parallel, so the effective apply cost is `ps_apply_ms / n_shards`.
     pub n_shards: usize,
+    /// Serialization + framing cost per flush fan-out (ms) when shards
+    /// sit behind a socket transport. The encode happens once on the
+    /// flusher's critical path (the per-shard sends then overlap), so it
+    /// adds to — and does not divide by — the shard count. 0 models the
+    /// in-process transport.
+    pub wire_ms: f64,
     /// Virtual time-of-day at simulation start (secs into the trace day).
     pub start_sec: f64,
     /// Virtual duration to simulate (secs).
@@ -39,9 +45,18 @@ pub struct SimParams {
 
 impl SimParams {
     /// Effective wall cost of one aggregated apply (ms): the per-shard
-    /// slices apply concurrently.
+    /// slices apply concurrently, then the wire cost (if any) rides on
+    /// top once.
     pub fn effective_apply_ms(&self) -> f64 {
-        self.ps_apply_ms / self.n_shards.max(1) as f64
+        self.ps_apply_ms / self.n_shards.max(1) as f64 + self.wire_ms
+    }
+
+    /// Wire cost implied by a config's `[ps] transport` choice.
+    pub fn wire_ms_of(cfg: &ExperimentConfig) -> f64 {
+        match cfg.ps.transport {
+            crate::config::TransportKind::InProc => 0.0,
+            crate::config::TransportKind::Socket => cfg.cluster.wire_ms,
+        }
     }
 }
 
@@ -213,6 +228,7 @@ pub fn simulate_mode(
         compute,
         ps_apply_ms: cfg.cluster.ps_apply_ms,
         n_shards: cfg.ps.n_shards,
+        wire_ms: SimParams::wire_ms_of(cfg),
         start_sec,
         duration_sec,
         seed,
@@ -234,6 +250,7 @@ mod tests {
                 base_compute_ms: 10.0,
                 hetero_sigma: 0.6,
                 ps_apply_ms: 0.1,
+                wire_ms: 0.0,
             };
             StragglerModel::new(&cfg, workers, seed)
         } else {
@@ -245,10 +262,31 @@ mod tests {
             compute,
             ps_apply_ms: 0.1,
             n_shards: 1,
+            wire_ms: 0.0,
             start_sec: 0.0,
             duration_sec: 60.0,
             seed,
         }
+    }
+
+    #[test]
+    fn wire_cost_slows_barrier_modes_monotonically() {
+        // Sync parks every worker behind each apply, so per-flush wire
+        // cost comes straight off the step rate.
+        let mut cheap = params(8, false, 3);
+        cheap.n_shards = 4;
+        let fast = simulate(&cheap, Box::new(SyncPolicy::new(8)));
+        let mut wired = params(8, false, 3);
+        wired.n_shards = 4;
+        wired.wire_ms = 8.0;
+        assert!(wired.effective_apply_ms() > cheap.effective_apply_ms());
+        let slow = simulate(&wired, Box::new(SyncPolicy::new(8)));
+        assert!(
+            slow.global_steps < fast.global_steps,
+            "wire cost did not slow sync: {} vs {}",
+            slow.global_steps,
+            fast.global_steps
+        );
     }
 
     #[test]

@@ -1,0 +1,730 @@
+//! Versioned binary codec for the PS wire protocol.
+//!
+//! Every message crossing a shard endpoint — worker-plane vocabulary
+//! ([`GradPush`], [`PullReply`]/[`WorkItem`](crate::ps::WorkItem)) and the
+//! shard-plane RPC ([`ShardRequest`]/[`ShardReply`]) — encodes to a
+//! length-prefixed frame:
+//!
+//! ```text
+//! len: u32 LE  |  version: u8  |  tag: u8  |  payload
+//! ```
+//!
+//! The payload is flat little-endian primitives (`f32` travels as its raw
+//! IEEE-754 bits, so NaN payloads and infinities round-trip exactly —
+//! required for the transport-invariance guarantee). There is no serde in
+//! the offline build environment; like `util/json`, this is a small
+//! self-contained implementation, hand-rolled against the message structs.
+//!
+//! Robustness rules (pinned by `tests/transport_codec.rs`):
+//!
+//! * a frame with the wrong version byte is rejected ([`CodecError::BadVersion`]),
+//! * a truncated frame or payload is rejected ([`CodecError::Truncated`]),
+//!   never panicked on, and no allocation is sized from untrusted lengths
+//!   beyond the bytes actually present,
+//! * trailing bytes after a well-formed payload are rejected
+//!   ([`CodecError::Malformed`]) — a frame is exactly one message.
+
+use std::io::{Read, Write};
+
+use crate::embedding::RowMeta;
+use crate::ps::{GradPush, PullReply, WorkItem};
+use crate::runtime::HostTensor;
+use crate::shard::ShardStats;
+
+/// Bump on any incompatible layout change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Upper bound on a frame body (defense against corrupt length prefixes).
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Aggregated per-key embedding gradient: (key, gradient sum, workers).
+pub type EmbGradEntry = (u64, Vec<f32>, u32);
+
+/// One materialized embedding row: (key, vector, optimizer state, meta).
+pub type RowRecord = (u64, Vec<f32>, Vec<f32>, RowMeta);
+
+/// Decode-side failure modes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// Clean end-of-stream at a frame boundary (peer closed).
+    Closed,
+    /// Stream or buffer ended inside a frame.
+    Truncated,
+    BadVersion(u8),
+    BadTag(u8),
+    /// Length prefix exceeds [`MAX_FRAME_BYTES`].
+    Oversize(u32),
+    /// Structurally invalid payload (bad enum tag, shape mismatch, junk).
+    Malformed(&'static str),
+    Io(std::io::ErrorKind),
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::Closed => write!(f, "connection closed"),
+            CodecError::Truncated => write!(f, "truncated frame"),
+            CodecError::BadVersion(v) => write!(f, "wire version {v} (want {WIRE_VERSION})"),
+            CodecError::BadTag(t) => write!(f, "unknown message tag {t}"),
+            CodecError::Oversize(n) => write!(f, "frame of {n} bytes exceeds cap"),
+            CodecError::Malformed(what) => write!(f, "malformed payload: {what}"),
+            CodecError::Io(kind) => write!(f, "io error: {kind:?}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Everything that can cross a PS wire, one flat tag space.
+#[derive(Clone, Debug)]
+pub enum WireMsg {
+    /// Worker → PS gradient push (Algorithm 1 L18).
+    Push(GradPush),
+    /// PS → worker pull response (token / wait / end-of-data).
+    Pull(PullReply),
+    /// Front → shard RPC request.
+    Req(ShardRequest),
+    /// Shard → front RPC reply.
+    Reply(ShardReply),
+}
+
+/// The shard-plane RPC: every way the front touches a data-plane shard.
+/// Mutating requests (`Apply`, `SetDense`, `SetSlots`, `InsertRow`) are
+/// journaled by the [`ShardSupervisor`](super::ShardSupervisor) for
+/// replay after a lost shard; reads are not.
+#[derive(Clone, Debug)]
+pub enum ShardRequest {
+    /// Liveness probe (control message).
+    Ping,
+    /// Apply this shard's slice of an admitted flush: pre-sliced dense
+    /// aggregate (one `Vec<f32>` per tensor, already cut to the shard's
+    /// range) plus its group of per-key embedding gradients.
+    Apply { opt_step: u64, dense: Vec<Vec<f32>>, emb: Vec<EmbGradEntry> },
+    /// Read the shard's dense parameter slices.
+    ReadDense,
+    /// Read the shard's planar optimizer-slot slices.
+    ReadSlots,
+    /// Replace dense parameter slices (resets optimizer slots).
+    SetDense { dense: Vec<Vec<f32>> },
+    /// Replace planar optimizer-slot slices.
+    SetSlots { slots: Vec<Vec<f32>> },
+    /// Materialize-and-read embedding rows for a key block.
+    Gather { keys: Vec<u64> },
+    /// Per-row metadata lookup.
+    GetMeta { key: u64 },
+    /// Bulk-insert one row (checkpoint restore).
+    InsertRow { key: u64, vec: Vec<f32>, state: Vec<f32>, meta: RowMeta },
+    /// Dump every materialized row (shard-local checkpoint stream).
+    DumpRows,
+    /// Load/contention counters snapshot.
+    Stats,
+}
+
+/// Replies, one per request shape.
+#[derive(Clone, Debug)]
+pub enum ShardReply {
+    /// Generic ack (Ping / mutating requests).
+    Ok,
+    /// `ReadDense` / `ReadSlots` payload.
+    Dense { dense: Vec<Vec<f32>> },
+    /// `Gather` payload: `keys.len() * dim` floats, row-major.
+    Rows { dim: u64, data: Vec<f32> },
+    Meta { meta: Option<RowMeta> },
+    /// `DumpRows` payload, sorted by key for stream stability.
+    RowDump { rows: Vec<RowRecord> },
+    Stats { stats: ShardStats, emb_mem_bytes: u64 },
+}
+
+// ---- encode -----------------------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, x: u8) {
+    b.push(x);
+}
+
+fn put_u32(b: &mut Vec<u8>, x: u32) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, x: u64) {
+    b.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, x: f32) {
+    put_u32(b, x.to_bits());
+}
+
+fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(b, xs.len() as u32);
+    for &x in xs {
+        put_f32(b, x);
+    }
+}
+
+fn put_f32_vecs(b: &mut Vec<u8>, xss: &[Vec<f32>]) {
+    put_u32(b, xss.len() as u32);
+    for xs in xss {
+        put_f32s(b, xs);
+    }
+}
+
+fn put_meta(b: &mut Vec<u8>, m: &RowMeta) {
+    put_u64(b, m.last_update_step);
+    put_u32(b, m.update_count);
+}
+
+fn put_tensor(b: &mut Vec<u8>, t: &HostTensor) {
+    put_u32(b, t.shape.len() as u32);
+    for &d in &t.shape {
+        put_u64(b, d as u64);
+    }
+    put_f32s(b, &t.data);
+}
+
+/// Encode one message body (version + tag + payload, no length prefix).
+pub fn encode(msg: &WireMsg) -> Vec<u8> {
+    let mut b = Vec::with_capacity(64);
+    put_u8(&mut b, WIRE_VERSION);
+    match msg {
+        WireMsg::Push(g) => {
+            put_u8(&mut b, 1);
+            put_u64(&mut b, g.worker as u64);
+            put_u64(&mut b, g.token);
+            put_u32(&mut b, g.dense.len() as u32);
+            for t in &g.dense {
+                put_tensor(&mut b, t);
+            }
+            put_u32(&mut b, g.emb.len() as u32);
+            for (key, gsum) in &g.emb {
+                put_u64(&mut b, *key);
+                put_f32s(&mut b, gsum);
+            }
+            put_u64(&mut b, g.n_samples as u64);
+            put_f32(&mut b, g.loss);
+        }
+        WireMsg::Pull(p) => {
+            put_u8(&mut b, 2);
+            match p {
+                PullReply::Work(it) => {
+                    put_u8(&mut b, 0);
+                    put_u64(&mut b, it.token);
+                    put_u64(&mut b, it.version);
+                    put_u64(&mut b, it.day as u64);
+                    put_u64(&mut b, it.batch_index as u64);
+                }
+                PullReply::Wait => put_u8(&mut b, 1),
+                PullReply::EndOfData => put_u8(&mut b, 2),
+            }
+        }
+        WireMsg::Req(r) => {
+            put_u8(&mut b, 3);
+            encode_req(&mut b, r);
+        }
+        WireMsg::Reply(r) => {
+            put_u8(&mut b, 4);
+            encode_reply(&mut b, r);
+        }
+    }
+    b
+}
+
+fn encode_req(b: &mut Vec<u8>, r: &ShardRequest) {
+    match r {
+        ShardRequest::Ping => put_u8(b, 0),
+        ShardRequest::Apply { opt_step, dense, emb } => {
+            put_u8(b, 1);
+            put_u64(b, *opt_step);
+            put_f32_vecs(b, dense);
+            put_u32(b, emb.len() as u32);
+            for (key, gsum, workers) in emb {
+                put_u64(b, *key);
+                put_f32s(b, gsum);
+                put_u32(b, *workers);
+            }
+        }
+        ShardRequest::ReadDense => put_u8(b, 2),
+        ShardRequest::ReadSlots => put_u8(b, 3),
+        ShardRequest::SetDense { dense } => {
+            put_u8(b, 4);
+            put_f32_vecs(b, dense);
+        }
+        ShardRequest::SetSlots { slots } => {
+            put_u8(b, 5);
+            put_f32_vecs(b, slots);
+        }
+        ShardRequest::Gather { keys } => {
+            put_u8(b, 6);
+            put_u32(b, keys.len() as u32);
+            for &k in keys {
+                put_u64(b, k);
+            }
+        }
+        ShardRequest::GetMeta { key } => {
+            put_u8(b, 7);
+            put_u64(b, *key);
+        }
+        ShardRequest::InsertRow { key, vec, state, meta } => {
+            put_u8(b, 8);
+            put_u64(b, *key);
+            put_f32s(b, vec);
+            put_f32s(b, state);
+            put_meta(b, meta);
+        }
+        ShardRequest::DumpRows => put_u8(b, 9),
+        ShardRequest::Stats => put_u8(b, 10),
+    }
+}
+
+fn encode_reply(b: &mut Vec<u8>, r: &ShardReply) {
+    match r {
+        ShardReply::Ok => put_u8(b, 0),
+        ShardReply::Dense { dense } => {
+            put_u8(b, 1);
+            put_f32_vecs(b, dense);
+        }
+        ShardReply::Rows { dim, data } => {
+            put_u8(b, 2);
+            put_u64(b, *dim);
+            put_f32s(b, data);
+        }
+        ShardReply::Meta { meta } => {
+            put_u8(b, 3);
+            match meta {
+                None => put_u8(b, 0),
+                Some(m) => {
+                    put_u8(b, 1);
+                    put_meta(b, m);
+                }
+            }
+        }
+        ShardReply::RowDump { rows } => {
+            put_u8(b, 4);
+            put_u32(b, rows.len() as u32);
+            for (key, vec, state, meta) in rows {
+                put_u64(b, *key);
+                put_f32s(b, vec);
+                put_f32s(b, state);
+                put_meta(b, meta);
+            }
+        }
+        ShardReply::Stats { stats, emb_mem_bytes } => {
+            put_u8(b, 5);
+            put_u64(b, stats.shard as u64);
+            put_u64(b, stats.applies);
+            put_u64(b, stats.apply_ns);
+            put_u64(b, stats.emb_keys_applied);
+            put_u64(b, stats.emb_rows as u64);
+            put_u64(b, stats.dense_elems as u64);
+            put_u64(b, *emb_mem_bytes);
+        }
+    }
+}
+
+// ---- decode -----------------------------------------------------------------
+
+/// Bounds-checked cursor over one frame body. Every length read is
+/// validated against the bytes actually remaining before any allocation.
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.b.len() - self.i < n {
+            return Err(CodecError::Truncated);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn usize64(&mut self) -> Result<usize, CodecError> {
+        usize::try_from(self.u64()?).map_err(|_| CodecError::Malformed("usize overflow"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, CodecError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32_vecs(&mut self) -> Result<Vec<Vec<f32>>, CodecError> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::new();
+        for _ in 0..n {
+            out.push(self.f32s()?);
+        }
+        Ok(out)
+    }
+
+    fn meta(&mut self) -> Result<RowMeta, CodecError> {
+        Ok(RowMeta { last_update_step: self.u64()?, update_count: self.u32()? })
+    }
+
+    fn tensor(&mut self) -> Result<HostTensor, CodecError> {
+        let rank = self.u32()? as usize;
+        // A dimension costs 8 bytes on the wire; bound before allocating.
+        if self.b.len() - self.i < rank * 8 {
+            return Err(CodecError::Truncated);
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.usize64()?);
+        }
+        let data = self.f32s()?;
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or(CodecError::Malformed("tensor shape overflow"))?;
+        if numel != data.len() {
+            return Err(CodecError::Malformed("tensor shape/data mismatch"));
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    fn done(&self) -> Result<(), CodecError> {
+        if self.i == self.b.len() {
+            Ok(())
+        } else {
+            Err(CodecError::Malformed("trailing bytes"))
+        }
+    }
+}
+
+/// Decode one frame body produced by [`encode`].
+pub fn decode(body: &[u8]) -> Result<WireMsg, CodecError> {
+    let mut rd = Rd { b: body, i: 0 };
+    let version = rd.u8()?;
+    if version != WIRE_VERSION {
+        return Err(CodecError::BadVersion(version));
+    }
+    let tag = rd.u8()?;
+    let msg = match tag {
+        1 => {
+            let worker = rd.usize64()?;
+            let token = rd.u64()?;
+            let n_dense = rd.u32()? as usize;
+            let mut dense = Vec::new();
+            for _ in 0..n_dense {
+                dense.push(rd.tensor()?);
+            }
+            let n_emb = rd.u32()? as usize;
+            let mut emb = Vec::new();
+            for _ in 0..n_emb {
+                let key = rd.u64()?;
+                emb.push((key, rd.f32s()?));
+            }
+            let n_samples = rd.usize64()?;
+            let loss = rd.f32()?;
+            WireMsg::Push(GradPush { worker, token, dense, emb, n_samples, loss })
+        }
+        2 => WireMsg::Pull(match rd.u8()? {
+            0 => PullReply::Work(WorkItem {
+                token: rd.u64()?,
+                version: rd.u64()?,
+                day: rd.usize64()?,
+                batch_index: rd.usize64()?,
+            }),
+            1 => PullReply::Wait,
+            2 => PullReply::EndOfData,
+            _ => return Err(CodecError::Malformed("pull reply tag")),
+        }),
+        3 => WireMsg::Req(decode_req(&mut rd)?),
+        4 => WireMsg::Reply(decode_reply(&mut rd)?),
+        other => return Err(CodecError::BadTag(other)),
+    };
+    rd.done()?;
+    Ok(msg)
+}
+
+fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
+    Ok(match rd.u8()? {
+        0 => ShardRequest::Ping,
+        1 => {
+            let opt_step = rd.u64()?;
+            let dense = rd.f32_vecs()?;
+            let n = rd.u32()? as usize;
+            let mut emb = Vec::new();
+            for _ in 0..n {
+                let key = rd.u64()?;
+                let gsum = rd.f32s()?;
+                let workers = rd.u32()?;
+                emb.push((key, gsum, workers));
+            }
+            ShardRequest::Apply { opt_step, dense, emb }
+        }
+        2 => ShardRequest::ReadDense,
+        3 => ShardRequest::ReadSlots,
+        4 => ShardRequest::SetDense { dense: rd.f32_vecs()? },
+        5 => ShardRequest::SetSlots { slots: rd.f32_vecs()? },
+        6 => {
+            let n = rd.u32()? as usize;
+            if rd.b.len() - rd.i < n * 8 {
+                return Err(CodecError::Truncated);
+            }
+            let mut keys = Vec::with_capacity(n);
+            for _ in 0..n {
+                keys.push(rd.u64()?);
+            }
+            ShardRequest::Gather { keys }
+        }
+        7 => ShardRequest::GetMeta { key: rd.u64()? },
+        8 => {
+            let key = rd.u64()?;
+            let vec = rd.f32s()?;
+            let state = rd.f32s()?;
+            let meta = rd.meta()?;
+            ShardRequest::InsertRow { key, vec, state, meta }
+        }
+        9 => ShardRequest::DumpRows,
+        10 => ShardRequest::Stats,
+        _ => return Err(CodecError::Malformed("shard request tag")),
+    })
+}
+
+fn decode_reply(rd: &mut Rd) -> Result<ShardReply, CodecError> {
+    Ok(match rd.u8()? {
+        0 => ShardReply::Ok,
+        1 => ShardReply::Dense { dense: rd.f32_vecs()? },
+        2 => {
+            let dim = rd.u64()?;
+            ShardReply::Rows { dim, data: rd.f32s()? }
+        }
+        3 => ShardReply::Meta {
+            meta: match rd.u8()? {
+                0 => None,
+                1 => Some(rd.meta()?),
+                _ => return Err(CodecError::Malformed("meta option tag")),
+            },
+        },
+        4 => {
+            let n = rd.u32()? as usize;
+            let mut rows = Vec::new();
+            for _ in 0..n {
+                let key = rd.u64()?;
+                let vec = rd.f32s()?;
+                let state = rd.f32s()?;
+                let meta = rd.meta()?;
+                rows.push((key, vec, state, meta));
+            }
+            ShardReply::RowDump { rows }
+        }
+        5 => {
+            let stats = ShardStats {
+                shard: rd.usize64()?,
+                applies: rd.u64()?,
+                apply_ns: rd.u64()?,
+                emb_keys_applied: rd.u64()?,
+                emb_rows: rd.usize64()?,
+                dense_elems: rd.usize64()?,
+            };
+            let emb_mem_bytes = rd.u64()?;
+            ShardReply::Stats { stats, emb_mem_bytes }
+        }
+        _ => return Err(CodecError::Malformed("shard reply tag")),
+    })
+}
+
+// ---- stream framing ---------------------------------------------------------
+
+/// Write one length-prefixed frame.
+pub fn write_frame<W: Write>(w: &mut W, msg: &WireMsg) -> Result<(), CodecError> {
+    let body = encode(msg);
+    let len = u32::try_from(body.len()).map_err(|_| CodecError::Oversize(u32::MAX))?;
+    if len > MAX_FRAME_BYTES {
+        return Err(CodecError::Oversize(len));
+    }
+    // One buffer, one write: a frame is never interleaved on the stream.
+    let mut out = Vec::with_capacity(body.len() + 4);
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&body);
+    w.write_all(&out).map_err(|e| CodecError::Io(e.kind()))?;
+    w.flush().map_err(|e| CodecError::Io(e.kind()))
+}
+
+/// Read one frame. Clean EOF *between* frames is [`CodecError::Closed`];
+/// EOF inside a frame is [`CodecError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<WireMsg, CodecError> {
+    let mut len4 = [0u8; 4];
+    if let Err(e) = r.read_exact(&mut len4) {
+        return Err(match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => CodecError::Closed,
+            kind => CodecError::Io(kind),
+        });
+    }
+    let len = u32::from_le_bytes(len4);
+    if len > MAX_FRAME_BYTES {
+        return Err(CodecError::Oversize(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    if let Err(e) = r.read_exact(&mut body) {
+        return Err(match e.kind() {
+            std::io::ErrorKind::UnexpectedEof => CodecError::Truncated,
+            kind => CodecError::Io(kind),
+        });
+    }
+    decode(&body)
+}
+
+/// Encoded size of a message including its 4-byte length prefix —
+/// for calibrating `[cluster] wire_ms` against real payload sizes.
+/// (Encodes to measure; don't call it on a hot path.)
+pub fn frame_size(msg: &WireMsg) -> usize {
+    encode(msg).len() + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push() -> GradPush {
+        GradPush {
+            worker: 3,
+            token: 41,
+            dense: vec![
+                HostTensor { shape: vec![2, 2], data: vec![1.0, -2.5, f32::NAN, 0.0] },
+                HostTensor { shape: vec![3], data: vec![f32::INFINITY, -0.0, 7.25] },
+            ],
+            emb: vec![(u64::MAX, vec![0.5, -0.5]), (0, vec![])],
+            n_samples: 8,
+            loss: 0.125,
+        }
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn grad_push_roundtrip_preserves_bits() {
+        let g = push();
+        let body = encode(&WireMsg::Push(g.clone()));
+        let back = match decode(&body).unwrap() {
+            WireMsg::Push(g) => g,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(back.worker, g.worker);
+        assert_eq!(back.token, g.token);
+        assert_eq!(back.dense.len(), 2);
+        for (a, b) in back.dense.iter().zip(&g.dense) {
+            assert_eq!(a.shape, b.shape);
+            assert_eq!(bits(&a.data), bits(&b.data));
+        }
+        assert_eq!(back.emb.len(), 2);
+        assert_eq!(back.emb[0].0, u64::MAX);
+        assert_eq!(bits(&back.emb[0].1), bits(&g.emb[0].1));
+        assert!(back.emb[1].1.is_empty());
+        assert_eq!(back.n_samples, 8);
+        assert_eq!(back.loss.to_bits(), g.loss.to_bits());
+    }
+
+    #[test]
+    fn pull_reply_roundtrip_all_variants() {
+        for p in [
+            PullReply::Work(WorkItem { token: 9, version: 2, day: 1, batch_index: 77 }),
+            PullReply::Wait,
+            PullReply::EndOfData,
+        ] {
+            let body = encode(&WireMsg::Pull(p));
+            match decode(&body).unwrap() {
+                WireMsg::Pull(back) => assert_eq!(back, p),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut body = encode(&WireMsg::Req(ShardRequest::Ping));
+        body[0] = WIRE_VERSION + 1;
+        assert_eq!(decode(&body).unwrap_err(), CodecError::BadVersion(WIRE_VERSION + 1));
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_cut() {
+        let body = encode(&WireMsg::Push(push()));
+        for cut in 0..body.len() {
+            match decode(&body[..cut]) {
+                Err(_) => {}
+                Ok(m) => panic!("decoded from {cut}/{} bytes: {m:?}", body.len()),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut body = encode(&WireMsg::Reply(ShardReply::Ok));
+        body.push(0);
+        assert_eq!(decode(&body).unwrap_err(), CodecError::Malformed("trailing bytes"));
+    }
+
+    #[test]
+    fn tensor_shape_mismatch_rejected() {
+        // Hand-build a Push whose tensor claims more elements than sent.
+        let mut b = vec![WIRE_VERSION, 1];
+        b.extend_from_slice(&0u64.to_le_bytes()); // worker
+        b.extend_from_slice(&0u64.to_le_bytes()); // token
+        b.extend_from_slice(&1u32.to_le_bytes()); // 1 dense tensor
+        b.extend_from_slice(&1u32.to_le_bytes()); // rank 1
+        b.extend_from_slice(&5u64.to_le_bytes()); // shape [5]
+        b.extend_from_slice(&2u32.to_le_bytes()); // but only 2 floats
+        b.extend_from_slice(&1.0f32.to_bits().to_le_bytes());
+        b.extend_from_slice(&2.0f32.to_bits().to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes()); // no emb
+        b.extend_from_slice(&0u64.to_le_bytes()); // n_samples
+        b.extend_from_slice(&0.0f32.to_bits().to_le_bytes()); // loss
+        assert_eq!(decode(&b).unwrap_err(), CodecError::Malformed("tensor shape/data mismatch"));
+    }
+
+    #[test]
+    fn stream_framing_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &WireMsg::Req(ShardRequest::Gather { keys: vec![1, 2, 3] }))
+            .unwrap();
+        write_frame(&mut buf, &WireMsg::Reply(ShardReply::Ok)).unwrap();
+        let mut r = &buf[..];
+        assert!(matches!(
+            read_frame(&mut r).unwrap(),
+            WireMsg::Req(ShardRequest::Gather { .. })
+        ));
+        assert!(matches!(read_frame(&mut r).unwrap(), WireMsg::Reply(ShardReply::Ok)));
+        assert_eq!(read_frame(&mut r).unwrap_err(), CodecError::Closed);
+        // EOF mid-frame is Truncated, not Closed.
+        let mut r = &buf[..3];
+        assert_eq!(read_frame(&mut r).unwrap_err(), CodecError::Truncated);
+        let mut r = &buf[..6];
+        assert_eq!(read_frame(&mut r).unwrap_err(), CodecError::Truncated);
+    }
+
+    #[test]
+    fn oversize_length_prefix_rejected_without_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap_err(), CodecError::Oversize(u32::MAX));
+    }
+
+    #[test]
+    fn frame_size_matches_written_bytes() {
+        let msg = WireMsg::Push(push());
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &msg).unwrap();
+        assert_eq!(frame_size(&msg), buf.len());
+    }
+}

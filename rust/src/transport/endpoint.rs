@@ -1,0 +1,149 @@
+//! Shard endpoints: one blocking, strictly request/reply connection per
+//! shard, with two interchangeable implementations.
+//!
+//! * [`ChanConn`] — in-process: a [`chan::duplex`] pair moving [`WireMsg`]
+//!   values directly (no serialization). This wraps today's `util/chan`
+//!   seam bit-for-bit: the structs that used to ride the apply-pool
+//!   channel now ride the same channel type, just behind the [`Conn`]
+//!   trait.
+//! * [`SocketConn`] — TCP on localhost: every message passes through the
+//!   versioned [`codec`](super::codec) as a length-prefixed frame. Because
+//!   `f32`s travel as raw bits, results are bit-for-bit identical to the
+//!   in-process transport (pinned by `tests/shard_invariance.rs`).
+//!
+//! A dead peer — dropped channel end, closed or reset socket — surfaces
+//! as `Err(CodecError)` from `send`/`recv`; the
+//! [`ShardSupervisor`](super::ShardSupervisor) turns that into the
+//! lost-shard recovery path. Connections carry no in-band failure
+//! protocol: liveness *is* the protocol.
+
+use std::net::TcpStream;
+
+use super::codec::{self, CodecError, ShardReply, ShardRequest, WireMsg};
+use crate::util::chan;
+
+/// A bidirectional, blocking message pipe. Calls must alternate
+/// send/recv per request — the per-shard slot lock in the supervisor
+/// enforces this, so no sequence numbers are needed on the wire.
+pub trait Conn: Send {
+    fn send(&mut self, msg: WireMsg) -> Result<(), CodecError>;
+    fn recv(&mut self) -> Result<WireMsg, CodecError>;
+}
+
+/// In-process endpoint over a [`chan::duplex`] pair.
+pub struct ChanConn {
+    pub pipe: chan::Duplex<WireMsg>,
+}
+
+impl Conn for ChanConn {
+    fn send(&mut self, msg: WireMsg) -> Result<(), CodecError> {
+        self.pipe.tx.send(msg).map_err(|_| CodecError::Closed)
+    }
+
+    fn recv(&mut self) -> Result<WireMsg, CodecError> {
+        self.pipe.rx.recv().map_err(|_| CodecError::Closed)
+    }
+}
+
+/// TCP endpoint framing every message through the codec.
+pub struct SocketConn {
+    pub stream: TcpStream,
+}
+
+impl SocketConn {
+    pub fn new(stream: TcpStream) -> Self {
+        // Frames are small and latency-bound; never batch them.
+        let _ = stream.set_nodelay(true);
+        SocketConn { stream }
+    }
+}
+
+impl Conn for SocketConn {
+    fn send(&mut self, msg: WireMsg) -> Result<(), CodecError> {
+        codec::write_frame(&mut self.stream, &msg)
+    }
+
+    fn recv(&mut self) -> Result<WireMsg, CodecError> {
+        codec::read_frame(&mut self.stream)
+    }
+}
+
+/// A connection whose peer is gone. `kill_shard` swaps this in so the
+/// next RPC fails deterministically (no half-open states in tests).
+pub struct DeadConn;
+
+impl Conn for DeadConn {
+    fn send(&mut self, _msg: WireMsg) -> Result<(), CodecError> {
+        Err(CodecError::Closed)
+    }
+
+    fn recv(&mut self) -> Result<WireMsg, CodecError> {
+        Err(CodecError::Closed)
+    }
+}
+
+/// One blocking RPC: send the request, wait for its reply.
+pub fn rpc(conn: &mut dyn Conn, req: ShardRequest) -> Result<ShardReply, CodecError> {
+    conn.send(WireMsg::Req(req))?;
+    match conn.recv()? {
+        WireMsg::Reply(r) => Ok(r),
+        _ => Err(CodecError::Malformed("expected a reply frame")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chan_conn_roundtrip_and_close() {
+        let (a, b) = chan::duplex();
+        let mut client = ChanConn { pipe: a };
+        let mut server = ChanConn { pipe: b };
+        client.send(WireMsg::Req(ShardRequest::Ping)).unwrap();
+        assert!(matches!(server.recv().unwrap(), WireMsg::Req(ShardRequest::Ping)));
+        server.send(WireMsg::Reply(ShardReply::Ok)).unwrap();
+        assert!(matches!(client.recv().unwrap(), WireMsg::Reply(ShardReply::Ok)));
+        drop(server);
+        assert_eq!(client.recv().unwrap_err(), CodecError::Closed);
+    }
+
+    #[test]
+    fn socket_conn_roundtrip_on_localhost() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = SocketConn::new(stream);
+            match conn.recv().unwrap() {
+                WireMsg::Req(ShardRequest::Gather { keys }) => {
+                    assert_eq!(keys, vec![7, 8]);
+                }
+                other => panic!("{other:?}"),
+            }
+            conn.send(WireMsg::Reply(ShardReply::Rows { dim: 2, data: vec![1.0; 4] }))
+                .unwrap();
+        });
+        let mut client = SocketConn::new(TcpStream::connect(addr).unwrap());
+        client
+            .send(WireMsg::Req(ShardRequest::Gather { keys: vec![7, 8] }))
+            .unwrap();
+        match client.recv().unwrap() {
+            WireMsg::Reply(ShardReply::Rows { dim, data }) => {
+                assert_eq!(dim, 2);
+                assert_eq!(data.len(), 4);
+            }
+            other => panic!("{other:?}"),
+        }
+        server.join().unwrap();
+        // Server side hung up: the next recv reports a closed peer.
+        assert!(client.recv().is_err());
+    }
+
+    #[test]
+    fn dead_conn_always_fails() {
+        let mut d = DeadConn;
+        assert_eq!(d.send(WireMsg::Reply(ShardReply::Ok)).unwrap_err(), CodecError::Closed);
+        assert_eq!(d.recv().unwrap_err(), CodecError::Closed);
+    }
+}

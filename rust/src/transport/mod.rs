@@ -1,0 +1,42 @@
+//! Message transport plane: PS shards behind a wire.
+//!
+//! PR 1 partitioned the parameter server into N data-plane shards under
+//! one shard-global control plane, but the shards were plain structs in
+//! the worker process. This module moves them behind a transport seam so
+//! the sharded PS becomes the skeleton of a real multi-process parameter
+//! server:
+//!
+//! * [`codec`] — a versioned, length-prefixed binary codec for everything
+//!   that crosses the wire: the worker-plane vocabulary
+//!   (`GradPush`/`PullReply`/`WorkItem`) and the shard-plane RPC
+//!   ([`ShardRequest`]/[`ShardReply`]). No external deps; `f32`s travel
+//!   as raw IEEE-754 bits so results are transport-invariant bit-for-bit.
+//! * [`endpoint`] — the [`Conn`] abstraction with two interchangeable
+//!   implementations: [`ChanConn`] over a `util/chan` duplex pair
+//!   (in-process, no serialization) and [`SocketConn`] over localhost TCP
+//!   (every message framed through the codec). Selected by
+//!   `[ps] transport = "inproc" | "socket"` / `--transport`.
+//! * [`service`] — the server side: a [`ShardService`] owns one
+//!   [`PsShard`](crate::shard::PsShard) plus its own optimizer clones and
+//!   executes RPCs until its connection dies. Nothing reaches shard state
+//!   except through a connection.
+//! * [`supervisor`] — the [`ShardSupervisor`]: spawns services, journals
+//!   mutating requests against per-shard **shard-local checkpoints**, and
+//!   on a dead endpoint (closed channel / broken socket) respawns the
+//!   shard from its checkpoint and replays the journal — the lost-shard
+//!   extension of the paper's lost-token tolerance (Appendix B), pinned
+//!   by `tests/shard_failure.rs`.
+//!
+//! The front (`shard::ShardedPs`) performs admission, aggregation and
+//! reassembly exactly as before; every parameter byte it reads or writes
+//! now moves through these endpoints.
+
+pub mod codec;
+pub mod endpoint;
+pub mod service;
+pub mod supervisor;
+
+pub use codec::{CodecError, EmbGradEntry, RowRecord, ShardReply, ShardRequest, WireMsg};
+pub use endpoint::{ChanConn, Conn, DeadConn, SocketConn};
+pub use service::{serve, serve_counting, ShardService};
+pub use supervisor::{ShardCheckpoint, ShardSpawnSpec, ShardSupervisor, DEFAULT_CKPT_EVERY};

@@ -1,0 +1,130 @@
+//! The shard server: owns one [`PsShard`] (plus its own optimizer
+//! instances) and executes the shard-plane RPC against it.
+//!
+//! This is the half of the PS that leaves the worker process: the service
+//! holds *all* of a shard's state and is reachable only through a
+//! [`Conn`], so running it behind a TCP socket instead of an in-process
+//! channel changes nothing but the transport. Optimizers are cloned into
+//! the service (they are deterministic config, not state — mutable state
+//! lives in the shard's slot buffers), which is what makes a respawned
+//! service bit-compatible with the one it replaces.
+
+use super::codec::{CodecError, RowRecord, ShardReply, ShardRequest, WireMsg};
+use super::endpoint::Conn;
+use crate::optim::Optimizer;
+use crate::shard::PsShard;
+
+pub struct ShardService {
+    shard: PsShard,
+    opt_dense: Box<dyn Optimizer>,
+    opt_emb: Box<dyn Optimizer>,
+}
+
+impl ShardService {
+    pub fn new(shard: PsShard, opt_dense: Box<dyn Optimizer>, opt_emb: Box<dyn Optimizer>) -> Self {
+        ShardService { shard, opt_dense, opt_emb }
+    }
+
+    /// Execute one request. Every request produces exactly one reply —
+    /// the strict alternation the endpoints rely on.
+    pub fn handle(&self, req: ShardRequest) -> ShardReply {
+        match req {
+            ShardRequest::Ping => ShardReply::Ok,
+            ShardRequest::Apply { opt_step, dense, emb } => {
+                self.shard.apply(
+                    &dense,
+                    &emb,
+                    self.opt_dense.as_ref(),
+                    self.opt_emb.as_ref(),
+                    opt_step,
+                );
+                ShardReply::Ok
+            }
+            ShardRequest::ReadDense => {
+                let d = self.shard.dense.read().unwrap();
+                ShardReply::Dense { dense: d.params.clone() }
+            }
+            ShardRequest::ReadSlots => {
+                let d = self.shard.dense.read().unwrap();
+                ShardReply::Dense { dense: d.slots.clone() }
+            }
+            ShardRequest::SetDense { dense } => {
+                let n_slots = self.opt_dense.slots();
+                let mut d = self.shard.dense.write().unwrap();
+                assert_eq!(dense.len(), d.params.len(), "SetDense tensor count");
+                for (t, slice) in dense.into_iter().enumerate() {
+                    let (lo, hi) = self.shard.ranges[t];
+                    assert_eq!(slice.len(), hi - lo, "SetDense slice length");
+                    d.params[t] = slice;
+                    // Checkpoint-restore semantics: fresh optimizer state.
+                    d.slots[t] = vec![0.0; (hi - lo) * n_slots];
+                }
+                ShardReply::Ok
+            }
+            ShardRequest::SetSlots { slots } => {
+                let n_slots = self.opt_dense.slots();
+                let mut d = self.shard.dense.write().unwrap();
+                assert_eq!(slots.len(), d.slots.len(), "SetSlots tensor count");
+                for (t, slice) in slots.into_iter().enumerate() {
+                    let (lo, hi) = self.shard.ranges[t];
+                    assert_eq!(slice.len(), (hi - lo) * n_slots, "SetSlots slice length");
+                    d.slots[t] = slice;
+                }
+                ShardReply::Ok
+            }
+            ShardRequest::Gather { keys } => {
+                let dim = self.shard.emb.dim();
+                let mut data = vec![0.0f32; keys.len() * dim];
+                for (i, &key) in keys.iter().enumerate() {
+                    self.shard.emb.read_row_into(key, &mut data[i * dim..(i + 1) * dim]);
+                }
+                ShardReply::Rows { dim: dim as u64, data }
+            }
+            ShardRequest::GetMeta { key } => ShardReply::Meta { meta: self.shard.emb.meta(key) },
+            ShardRequest::InsertRow { key, vec, state, meta } => {
+                self.shard.emb.insert_row(key, vec, state, meta);
+                ShardReply::Ok
+            }
+            ShardRequest::DumpRows => {
+                let mut rows: Vec<RowRecord> = Vec::with_capacity(self.shard.emb.len());
+                self.shard.emb.for_each_row(|k, v, st, m| {
+                    rows.push((k, v.to_vec(), st.to_vec(), m));
+                });
+                // Canonical order: the shard-local checkpoint stream is
+                // byte-stable regardless of hash-map iteration order.
+                rows.sort_by_key(|(k, _, _, _)| *k);
+                ShardReply::RowDump { rows }
+            }
+            ShardRequest::Stats => ShardReply::Stats {
+                stats: self.shard.stats(),
+                emb_mem_bytes: self.shard.emb.memory_bytes() as u64,
+            },
+        }
+    }
+}
+
+/// Serve one connection until the peer goes away. Any receive error or
+/// protocol violation ends the loop — and with it the thread and the
+/// shard's state, which is precisely what "losing a shard" means.
+pub fn serve(service: ShardService, conn: Box<dyn Conn>) {
+    let _ = serve_counting(service, conn);
+}
+
+/// [`serve`], but reporting how many requests were handled and why the
+/// loop exited (tests assert on the exit cause).
+pub fn serve_counting(service: ShardService, mut conn: Box<dyn Conn>) -> (u64, CodecError) {
+    let mut handled = 0u64;
+    loop {
+        match conn.recv() {
+            Ok(WireMsg::Req(req)) => {
+                let reply = service.handle(req);
+                handled += 1;
+                if let Err(e) = conn.send(WireMsg::Reply(reply)) {
+                    return (handled, e);
+                }
+            }
+            Ok(_) => return (handled, CodecError::Malformed("expected a request frame")),
+            Err(e) => return (handled, e),
+        }
+    }
+}

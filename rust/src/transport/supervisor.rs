@@ -1,0 +1,386 @@
+//! Shard supervision: spawning, journaling, lost-shard detection and
+//! respawn.
+//!
+//! Every shard runs behind a [`Conn`]; the supervisor is the only thing
+//! that talks to it. Failure model (the paper's Appendix B, extended from
+//! lost *tokens* to lost *shards*):
+//!
+//! * **Detection.** A dead shard — exited service thread, dropped
+//!   channel, broken socket — surfaces as an RPC error. There is no
+//!   heartbeat; the first request to touch the corpse finds it.
+//! * **Durability.** Each shard has a *shard-local checkpoint* (its dense
+//!   slices, optimizer-slot slices and embedding rows — nothing global)
+//!   refreshed every `ckpt_every` applies, plus a write-ahead journal of
+//!   every mutating request since that checkpoint.
+//! * **Recovery.** On error the supervisor respawns the service from the
+//!   checkpoint, replays the journal (deterministic, so the rebuilt shard
+//!   is bit-identical — including the request whose failure exposed the
+//!   death, which is how the affected global batch is re-admitted), and
+//!   the control plane never observes more than a counter tick. Rows that
+//!   were only ever *gathered* (never updated) are not journaled: they
+//!   re-materialize from the key-seeded init with identical values on
+//!   next access.
+//!
+//! The per-shard slot mutex enforces strict request/reply alternation on
+//! each connection; the flush fan-out locks all slots in index order, so
+//! shard applies run in parallel server-side while fronts never deadlock.
+//!
+//! Two deliberate semantics, inherited from one-connection-per-shard:
+//!
+//! * Reads queue behind an in-flight apply on the same shard (the fan-out
+//!   holds every slot for its duration). The in-process plane let gathers
+//!   overlap applies via per-row locks; restoring that over the wire
+//!   needs a second (read) connection per shard — a ROADMAP follow-up.
+//! * [`ShardStats`](crate::shard::ShardStats) counters are
+//!   *per-incarnation*: a respawned shard restarts them at zero (state is
+//!   checkpointed, load telemetry is not). Check `lost_shard_events`
+//!   before comparing per-shard load numbers across a faulty run.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use super::codec::{RowRecord, ShardReply, ShardRequest, WireMsg};
+use super::endpoint::{rpc, ChanConn, Conn, DeadConn, SocketConn};
+use super::service::{serve, ShardService};
+use crate::config::TransportKind;
+use crate::embedding::EmbeddingConfig;
+use crate::optim::Optimizer;
+use crate::runtime::HostTensor;
+use crate::shard::PsShard;
+use crate::util::chan;
+
+/// Applies between shard-local checkpoint refreshes (journal bound).
+pub const DEFAULT_CKPT_EVERY: usize = 16;
+
+/// Everything needed to (re)build one shard's service from scratch.
+/// Optimizers here are templates — each spawn gets its own clones.
+pub struct ShardSpawnSpec {
+    pub index: usize,
+    /// `(lo, hi)` into each dense tensor's flat data.
+    pub ranges: Vec<(usize, usize)>,
+    pub emb_cfg: EmbeddingConfig,
+    pub opt_dense: Box<dyn Optimizer>,
+    pub opt_emb: Box<dyn Optimizer>,
+}
+
+/// A shard-local checkpoint: one shard's complete state, shard-layout
+/// terms only (range slices, planar slot slices, its own rows). Unlike
+/// the portable [`Checkpoint`](crate::checkpoint::Checkpoint) this keeps
+/// optimizer state — respawn must resume mid-stream, not switch modes.
+#[derive(Clone, Debug)]
+pub struct ShardCheckpoint {
+    pub dense: Vec<Vec<f32>>,
+    pub slots: Vec<Vec<f32>>,
+    pub rows: Vec<RowRecord>,
+}
+
+impl ShardCheckpoint {
+    /// The state a shard is born with: carved initial parameters, zeroed
+    /// optimizer slots, no materialized rows.
+    pub fn initial(spec: &ShardSpawnSpec, init_params: &[HostTensor]) -> ShardCheckpoint {
+        let n_slots = spec.opt_dense.slots();
+        let dense: Vec<Vec<f32>> = spec
+            .ranges
+            .iter()
+            .zip(init_params)
+            .map(|(&(lo, hi), t)| t.data[lo..hi].to_vec())
+            .collect();
+        let slots: Vec<Vec<f32>> =
+            spec.ranges.iter().map(|&(lo, hi)| vec![0.0f32; (hi - lo) * n_slots]).collect();
+        ShardCheckpoint { dense, slots, rows: Vec::new() }
+    }
+}
+
+/// Build and launch one shard service from a checkpoint; returns the
+/// front's endpoint and the service thread's handle.
+fn spawn_service(
+    kind: TransportKind,
+    spec: &ShardSpawnSpec,
+    ckpt: &ShardCheckpoint,
+) -> (Box<dyn Conn>, JoinHandle<()>) {
+    let shard = PsShard::from_parts(
+        spec.index,
+        spec.ranges.clone(),
+        ckpt.dense.clone(),
+        ckpt.slots.clone(),
+        spec.emb_cfg.clone(),
+        spec.opt_emb.slots(),
+    );
+    for (key, vec, state, meta) in &ckpt.rows {
+        shard.emb.insert_row(*key, vec.clone(), state.clone(), *meta);
+    }
+    let service =
+        ShardService::new(shard, spec.opt_dense.boxed_clone(), spec.opt_emb.boxed_clone());
+    let name = format!("ps-shard-{}", spec.index);
+    match kind {
+        TransportKind::InProc => {
+            let (client, server) = chan::duplex::<WireMsg>();
+            let handle = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || serve(service, Box::new(ChanConn { pipe: server })))
+                .expect("spawning shard service thread");
+            (Box::new(ChanConn { pipe: client }), handle)
+        }
+        TransportKind::Socket => {
+            let listener =
+                std::net::TcpListener::bind("127.0.0.1:0").expect("binding shard socket");
+            let addr = listener.local_addr().expect("shard socket addr");
+            let handle = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || {
+                    if let Ok((stream, _peer)) = listener.accept() {
+                        serve(service, Box::new(SocketConn::new(stream)));
+                    }
+                })
+                .expect("spawning shard service thread");
+            let stream =
+                std::net::TcpStream::connect(addr).expect("connecting to shard socket");
+            (Box::new(SocketConn::new(stream)), handle)
+        }
+    }
+}
+
+/// Live per-shard connection state, guarded by one mutex per shard.
+struct ShardSlot {
+    conn: Box<dyn Conn>,
+    handle: Option<JoinHandle<()>>,
+    ckpt: ShardCheckpoint,
+    /// Mutating requests since `ckpt`, in execution order.
+    wal: Vec<ShardRequest>,
+    applies_since_ckpt: usize,
+}
+
+pub struct ShardSupervisor {
+    kind: TransportKind,
+    specs: Vec<ShardSpawnSpec>,
+    slots: Vec<Mutex<ShardSlot>>,
+    lost_events: AtomicU64,
+    ckpt_every: AtomicUsize,
+}
+
+fn is_mutating(req: &ShardRequest) -> bool {
+    matches!(
+        req,
+        ShardRequest::Apply { .. }
+            | ShardRequest::SetDense { .. }
+            | ShardRequest::SetSlots { .. }
+            | ShardRequest::InsertRow { .. }
+    )
+}
+
+impl ShardSupervisor {
+    /// Spawn every shard's service from its initial parameters.
+    pub fn start(
+        kind: TransportKind,
+        specs: Vec<ShardSpawnSpec>,
+        init_params: &[HostTensor],
+    ) -> Self {
+        let slots = specs
+            .iter()
+            .map(|spec| {
+                let ckpt = ShardCheckpoint::initial(spec, init_params);
+                let (conn, handle) = spawn_service(kind, spec, &ckpt);
+                Mutex::new(ShardSlot {
+                    conn,
+                    handle: Some(handle),
+                    ckpt,
+                    wal: Vec::new(),
+                    applies_since_ckpt: 0,
+                })
+            })
+            .collect();
+        ShardSupervisor {
+            kind,
+            specs,
+            slots,
+            lost_events: AtomicU64::new(0),
+            ckpt_every: AtomicUsize::new(DEFAULT_CKPT_EVERY),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn transport(&self) -> TransportKind {
+        self.kind
+    }
+
+    /// Lost-shard recoveries performed so far.
+    pub fn lost_shard_events(&self) -> u64 {
+        self.lost_events.load(Ordering::Relaxed)
+    }
+
+    /// Applies between shard-local checkpoint refreshes. This is the
+    /// durability/throughput knob: a refresh reads the shard's full
+    /// state (dense, slots, every row) on the flush critical path, so
+    /// small values bound the journal tightly but stall every `n`-th
+    /// flush; large values make flushes uniformly fast but grow the
+    /// journal and the replay window.
+    pub fn set_ckpt_every(&self, n: usize) {
+        self.ckpt_every.store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// One RPC to shard `s`, with journaling and lost-shard recovery.
+    pub fn call(&self, s: usize, req: ShardRequest) -> ShardReply {
+        let mut guard = self.slots[s].lock().unwrap();
+        self.exec(s, &mut guard, req)
+    }
+
+    fn exec(&self, s: usize, guard: &mut MutexGuard<'_, ShardSlot>, req: ShardRequest) -> ShardReply {
+        let slot = &mut **guard;
+        let is_apply = matches!(req, ShardRequest::Apply { .. });
+        // One copy is retained per call: mutating requests journal a
+        // clone (the journal replay *is* their retry), reads keep a
+        // clone only because a failed send consumes the original.
+        let retry = if is_mutating(&req) {
+            slot.wal.push(req.clone());
+            None
+        } else {
+            Some(req.clone())
+        };
+        match rpc(slot.conn.as_mut(), req) {
+            Ok(reply) => {
+                if is_apply {
+                    self.note_apply(s, slot);
+                }
+                reply
+            }
+            Err(_) => {
+                self.recover(s, slot);
+                match retry {
+                    // The journal replay inside `recover` already applied
+                    // this request to the rebuilt shard.
+                    None => ShardReply::Ok,
+                    Some(again) => rpc(slot.conn.as_mut(), again).unwrap_or_else(|e| {
+                        panic!("shard {s} unreachable after respawn: {e}")
+                    }),
+                }
+            }
+        }
+    }
+
+    /// Fan one admitted flush out to every shard: journal + send to all
+    /// (server-side applies run concurrently), then collect acks, then
+    /// recover any shard that died. Callers hold the PS snapshot lock, so
+    /// locking every slot in index order here cannot deadlock against the
+    /// single-slot paths.
+    pub fn apply_all(&self, reqs: Vec<ShardRequest>) {
+        assert_eq!(reqs.len(), self.slots.len());
+        let mut guards: Vec<MutexGuard<'_, ShardSlot>> =
+            self.slots.iter().map(|m| m.lock().unwrap()).collect();
+        let n = guards.len();
+        let mut sent = vec![false; n];
+        for (i, req) in reqs.into_iter().enumerate() {
+            let slot = &mut *guards[i];
+            debug_assert!(is_mutating(&req));
+            slot.wal.push(req.clone());
+            sent[i] = slot.conn.send(WireMsg::Req(req)).is_ok();
+        }
+        let mut ok = vec![false; n];
+        for i in 0..n {
+            let slot = &mut *guards[i];
+            ok[i] = sent[i] && matches!(slot.conn.recv(), Ok(WireMsg::Reply(ShardReply::Ok)));
+        }
+        for i in 0..n {
+            let slot = &mut *guards[i];
+            if ok[i] {
+                self.note_apply(i, slot);
+            } else {
+                self.recover(i, slot);
+            }
+        }
+    }
+
+    /// Deterministically kill shard `s`'s endpoint and service (fault
+    /// injection): the connection is severed and the service thread — and
+    /// with it all shard state — is gone when this returns. The next RPC
+    /// touching the shard takes the recovery path.
+    pub fn kill(&self, s: usize) {
+        let mut guard = self.slots[s].lock().unwrap();
+        let slot = &mut *guard;
+        // Dropping the old endpoint closes the channel / socket …
+        let _ = std::mem::replace(&mut slot.conn, Box::new(DeadConn));
+        // … which makes the service loop exit; join so the death is
+        // complete, not in flight, when the injection returns.
+        if let Some(h) = slot.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Apply bookkeeping: refresh the shard-local checkpoint when the
+    /// journal hits the cadence bound.
+    fn note_apply(&self, s: usize, slot: &mut ShardSlot) {
+        slot.applies_since_ckpt += 1;
+        if slot.applies_since_ckpt >= self.ckpt_every.load(Ordering::Relaxed)
+            && self.refresh_ckpt(slot).is_err()
+        {
+            // Died between the apply ack and the snapshot reads.
+            self.recover(s, slot);
+        }
+    }
+
+    /// Snapshot the live shard into `slot.ckpt` and truncate the journal.
+    fn refresh_ckpt(&self, slot: &mut ShardSlot) -> Result<(), ()> {
+        let dense = match rpc(slot.conn.as_mut(), ShardRequest::ReadDense) {
+            Ok(ShardReply::Dense { dense }) => dense,
+            _ => return Err(()),
+        };
+        let slots = match rpc(slot.conn.as_mut(), ShardRequest::ReadSlots) {
+            Ok(ShardReply::Dense { dense }) => dense,
+            _ => return Err(()),
+        };
+        let rows = match rpc(slot.conn.as_mut(), ShardRequest::DumpRows) {
+            Ok(ShardReply::RowDump { rows }) => rows,
+            _ => return Err(()),
+        };
+        slot.ckpt = ShardCheckpoint { dense, slots, rows };
+        slot.wal.clear();
+        slot.applies_since_ckpt = 0;
+        Ok(())
+    }
+
+    /// The lost-shard path: respawn from the shard-local checkpoint and
+    /// replay the journal. Panics only on a double fault (the respawned
+    /// shard dying during replay), which no caller can meaningfully
+    /// survive.
+    fn recover(&self, s: usize, slot: &mut ShardSlot) {
+        self.lost_events.fetch_add(1, Ordering::Relaxed);
+        let _ = std::mem::replace(&mut slot.conn, Box::new(DeadConn));
+        if let Some(h) = slot.handle.take() {
+            let _ = h.join();
+        }
+        let (conn, handle) = spawn_service(self.kind, &self.specs[s], &slot.ckpt);
+        slot.conn = conn;
+        slot.handle = Some(handle);
+        for req in &slot.wal {
+            match rpc(slot.conn.as_mut(), req.clone()) {
+                Ok(ShardReply::Ok) => {}
+                other => panic!("shard {s}: journal replay after respawn failed: {other:?}"),
+            }
+        }
+        if self.refresh_ckpt(slot).is_err() {
+            panic!("shard {s}: checkpoint refresh after respawn failed");
+        }
+    }
+}
+
+impl Drop for ShardSupervisor {
+    fn drop(&mut self) {
+        for m in &self.slots {
+            // A front thread that panicked mid-RPC poisons its slot;
+            // shutdown must still close the connection and reap the
+            // service thread.
+            let mut guard = match m.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            let slot = &mut *guard;
+            let _ = std::mem::replace(&mut slot.conn, Box::new(DeadConn));
+            if let Some(h) = slot.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}

@@ -50,6 +50,24 @@ pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
     channel(None)
 }
 
+/// One end of a bidirectional in-process connection (see [`duplex`]).
+pub struct Duplex<T> {
+    pub tx: Sender<T>,
+    pub rx: Receiver<T>,
+}
+
+/// A connected pair of bidirectional endpoints: what `a` sends, `b`
+/// receives, and vice versa. This is the in-process stand-in for a socket
+/// — the transport layer's `InProc` shard endpoints are exactly one
+/// `duplex` pair per shard. Dropping either end closes that direction,
+/// so a dead peer surfaces as `RecvError::Closed`/`SendError::Closed`
+/// just like a broken socket surfaces as an I/O error.
+pub fn duplex<T>() -> (Duplex<T>, Duplex<T>) {
+    let (a_tx, b_rx) = unbounded();
+    let (b_tx, a_rx) = unbounded();
+    (Duplex { tx: a_tx, rx: a_rx }, Duplex { tx: b_tx, rx: b_rx })
+}
+
 /// Create a bounded channel; `send` blocks when `cap` items are queued.
 pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
     channel(Some(cap.max(1)))
@@ -332,6 +350,18 @@ mod tests {
         thread::sleep(Duration::from_millis(10));
         tx.close();
         assert_eq!(h.join().unwrap(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn duplex_pair_is_symmetric_and_closes_on_drop() {
+        let (a, b) = duplex::<u32>();
+        a.tx.send(1).unwrap();
+        b.tx.send(2).unwrap();
+        assert_eq!(b.rx.recv(), Ok(1));
+        assert_eq!(a.rx.recv(), Ok(2));
+        drop(b);
+        assert_eq!(a.rx.recv(), Err(RecvError::Closed));
+        assert!(matches!(a.tx.send(3), Err(SendError::Closed(3))));
     }
 
     #[test]

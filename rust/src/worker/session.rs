@@ -20,6 +20,7 @@ use crate::model::NativeModel;
 use crate::optim::make_optimizer;
 use crate::ps::PsServer;
 use crate::runtime::{EnginePool, Manifest, VariantDims};
+use crate::shard::PsBuild;
 use crate::worker::{run_worker, Backend, BackendKind, WorkerParams};
 
 /// Options beyond the config file.
@@ -125,20 +126,24 @@ impl TrainSession {
         let mode = cfg.mode(kind);
         let (okind, lr) = optim_for(&cfg, kind);
         let policy = make_policy(kind, &mode, cfg.gba_m_effective());
-        let ps = Arc::new(PsServer::with_shards(
-            dims,
-            init_dense,
-            EmbeddingConfig {
-                dim: cfg.model.emb_dim,
-                init_scale: 0.05,
-                seed: cfg.seed ^ 0xE0B,
-                shards: 16,
-            },
-            make_optimizer(okind, lr),
-            make_optimizer(okind, lr),
-            policy,
-            cfg.ps.n_shards,
-        ));
+        let ps = Arc::new(
+            PsBuild {
+                dims,
+                init_params: init_dense,
+                emb_cfg: EmbeddingConfig {
+                    dim: cfg.model.emb_dim,
+                    init_scale: 0.05,
+                    seed: cfg.seed ^ 0xE0B,
+                    shards: 16,
+                },
+                opt_dense: make_optimizer(okind, lr),
+                opt_emb: make_optimizer(okind, lr),
+                policy,
+                n_shards: cfg.ps.n_shards,
+                transport: cfg.ps.transport,
+            }
+            .build(),
+        );
         if let Some(ckpt) = ckpt {
             let emb_slots = make_optimizer(okind, lr).slots();
             for (key, vec, meta) in &ckpt.emb_rows {
@@ -398,6 +403,19 @@ backup = 1
         assert!(stats.counters.global_steps > 0);
         let a = s.eval_auc(1).unwrap();
         assert!(a > 0.6, "sharded gba auc = {a}");
+    }
+
+    #[test]
+    fn socket_transport_session_trains() {
+        let mut c = cfg();
+        c.ps.n_shards = 2;
+        c.ps.transport = crate::config::TransportKind::Socket;
+        let s = TrainSession::new(c, ModeKind::Gba, SessionOptions::default()).unwrap();
+        assert_eq!(s.ps().transport(), crate::config::TransportKind::Socket);
+        let stats = s.train_day(0).unwrap();
+        assert!(stats.counters.global_steps > 0);
+        let a = s.eval_auc(1).unwrap();
+        assert!(a > 0.6, "socket gba auc = {a}");
     }
 
     #[test]

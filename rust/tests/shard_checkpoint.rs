@@ -1,0 +1,157 @@
+//! Shard-local checkpoint round-trip: save an N-shard PS as per-shard
+//! streams, reload at the same and at different shard counts (and a
+//! different transport), and assert the restored servers produce
+//! *identical pull snapshots* — dense parameter pulls and embedding
+//! gathers are byte-equal to the origin server's.
+
+use gba::checkpoint::Checkpoint;
+use gba::config::TransportKind;
+use gba::coordinator::modes::GbaPolicy;
+use gba::embedding::EmbeddingConfig;
+use gba::optim::Sgd;
+use gba::ps::{GradPush, PullReply};
+use gba::runtime::{HostTensor, VariantDims};
+use gba::shard::{PsBuild, ShardedPs};
+
+fn dims() -> VariantDims {
+    VariantDims { fields: 2, emb_dim: 4, hidden1: 8, hidden2: 4, mlp_in: 12 }
+}
+
+fn init_params() -> Vec<HostTensor> {
+    dims()
+        .param_shapes()
+        .into_iter()
+        .enumerate()
+        .map(|(t, s)| {
+            let n: usize = s.iter().product();
+            HostTensor {
+                shape: s,
+                data: (0..n).map(|i| 0.2 + t as f32 * 0.05 + i as f32 * 0.011).collect(),
+            }
+        })
+        .collect()
+}
+
+fn build(n_shards: usize, transport: TransportKind) -> ShardedPs {
+    PsBuild {
+        dims: dims(),
+        init_params: init_params(),
+        emb_cfg: EmbeddingConfig { dim: 4, init_scale: 0.05, seed: 23, shards: 2 },
+        opt_dense: Box::new(Sgd { lr: 0.05 }),
+        opt_emb: Box::new(Sgd { lr: 0.05 }),
+        policy: Box::new(GbaPolicy::with_iota(2, 3)),
+        n_shards,
+        transport,
+    }
+    .build()
+}
+
+fn keys() -> Vec<u64> {
+    (0..40).map(|i| i * 57_881 + 7).collect()
+}
+
+fn train(ps: &ShardedPs) {
+    let keys = keys();
+    ps.set_day(0, 100);
+    for step in 0..6u64 {
+        for j in 0..2u64 {
+            let it = match ps.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            let g = 0.1 + step as f32 * 0.02 + j as f32 * 0.005;
+            ps.push(GradPush {
+                worker: 0,
+                token: it.token,
+                dense: dims()
+                    .param_shapes()
+                    .into_iter()
+                    .map(|s| {
+                        let n: usize = s.iter().product();
+                        HostTensor { shape: s, data: vec![g; n] }
+                    })
+                    .collect(),
+                emb: keys[..(10 + step as usize * 2)].iter().map(|&k| (k, vec![g; 4])).collect(),
+                n_samples: 8,
+                loss: 0.4,
+            });
+        }
+    }
+}
+
+/// Restore a portable checkpoint into a PS the way sessions do: dense
+/// replace + row-by-row insert (fresh optimizer state — switch
+/// semantics).
+fn restore(ckpt: &Checkpoint, n_shards: usize, transport: TransportKind) -> ShardedPs {
+    let ps = build(n_shards, transport);
+    ps.set_dense_params(ckpt.dense.clone());
+    for (key, vec, meta) in &ckpt.emb_rows {
+        ps.insert_emb_row(*key, vec.clone(), Vec::new(), *meta);
+    }
+    ps
+}
+
+/// The "pull snapshot": everything a worker reads from the PS.
+fn pull_snapshot(ps: &ShardedPs) -> (Vec<Vec<u32>>, Vec<u32>) {
+    let dense: Vec<Vec<u32>> = ps
+        .dense_params()
+        .into_iter()
+        .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    let keys = keys();
+    let gathered = ps.gather(&keys, 8, 5);
+    assert_eq!(gathered.shape, vec![8, 5, 4]);
+    (dense, gathered.data.iter().map(|x| x.to_bits()).collect())
+}
+
+#[test]
+fn sharded_save_reload_same_and_different_shard_counts() {
+    let origin = build(3, TransportKind::InProc);
+    train(&origin);
+    assert!(origin.quiescent());
+    let want = pull_snapshot(&origin);
+
+    let dir = std::env::temp_dir().join("gba_shard_ckpt_roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    Checkpoint::save_sharded(&origin, &dir).unwrap();
+    // One stream per shard plus the manifest, nothing else.
+    assert!(dir.join("manifest.json").is_file());
+    for s in 0..3 {
+        assert!(dir.join(format!("shard-{s:03}.bin")).is_file(), "missing stream {s}");
+    }
+    let ckpt = Checkpoint::load_sharded(&dir).unwrap();
+    assert_eq!(ckpt.global_step, origin.global_step());
+    assert_eq!(ckpt.emb_rows.len(), origin.emb_len());
+
+    // Same shard count.
+    let same = restore(&ckpt, 3, TransportKind::InProc);
+    assert_eq!(pull_snapshot(&same), want, "3-shard restore diverged");
+    // Different shard counts: the portable form is shard-layout-free.
+    for n in [1usize, 2, 5] {
+        let other = restore(&ckpt, n, TransportKind::InProc);
+        assert_eq!(pull_snapshot(&other), want, "{n}-shard restore diverged");
+    }
+    // And across the wire.
+    let socket = restore(&ckpt, 2, TransportKind::Socket);
+    assert_eq!(pull_snapshot(&socket), want, "socket restore diverged");
+}
+
+#[test]
+fn sharded_save_equals_portable_save() {
+    let origin = build(4, TransportKind::InProc);
+    train(&origin);
+    let dir = std::env::temp_dir().join("gba_shard_ckpt_vs_portable");
+    let _ = std::fs::remove_dir_all(&dir);
+    Checkpoint::save_sharded(&origin, &dir).unwrap();
+    let sharded = Checkpoint::load_sharded(&dir).unwrap();
+    let portable = Checkpoint::from_ps(origin.dims, &origin);
+    assert_eq!(sharded.dense, portable.dense);
+    assert_eq!(sharded.global_step, portable.global_step);
+    assert_eq!(sharded.emb_rows.len(), portable.emb_rows.len());
+    for (a, b) in sharded.emb_rows.iter().zip(&portable.emb_rows) {
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2.last_update_step, b.2.last_update_step);
+        assert_eq!(a.2.update_count, b.2.update_count);
+    }
+}

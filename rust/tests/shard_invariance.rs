@@ -1,18 +1,24 @@
-//! Shard-count invariance of the control plane: GBA training on a
-//! 1-shard and a 4-shard parameter-server plane must produce *identical*
-//! results for the same seed — the token-control state is shard-global,
-//! dense aggregation happens once, and the per-shard optimizer apply is
-//! elementwise, so nothing may depend on `n_shards`.
+//! Shard-count and transport invariance of the control plane: GBA
+//! training on a 1-shard and a 4-shard parameter-server plane — and on
+//! in-process vs. localhost-TCP shard endpoints — must produce
+//! *identical* results for the same seed. The token-control state is
+//! shard-global, dense aggregation happens once, the per-shard optimizer
+//! apply is elementwise, and the wire codec carries `f32`s as raw bits,
+//! so nothing may depend on `n_shards` or on `[ps] transport`.
 //!
 //! Determinism note: the sessions run a single worker thread, so the
 //! pull/push sequence (and therefore the buffer composition of every
 //! global batch) is identical across runs; any divergence would have to
-//! come from the sharded data plane itself.
+//! come from the sharded data plane or the transport itself.
 
 use gba::config::{ExperimentConfig, ModeKind};
 use gba::worker::session::{SessionOptions, TrainSession};
 
 fn cfg(n_shards: usize) -> ExperimentConfig {
+    cfg_with_transport(n_shards, "inproc")
+}
+
+fn cfg_with_transport(n_shards: usize, transport: &str) -> ExperimentConfig {
     ExperimentConfig::from_toml(&format!(
         r#"
 name = "shard-invariance"
@@ -39,6 +45,7 @@ eval_batch = 256
 eval_samples = 1024
 [ps]
 n_shards = {n_shards}
+transport = "{transport}"
 [mode.sync]
 workers = 2
 local_batch = 64
@@ -59,8 +66,18 @@ struct RunResult {
 }
 
 fn run_gba_day(n_shards: usize) -> RunResult {
-    let s = TrainSession::new(cfg(n_shards), ModeKind::Gba, SessionOptions::default()).unwrap();
+    run_gba_day_over(n_shards, "inproc")
+}
+
+fn run_gba_day_over(n_shards: usize, transport: &str) -> RunResult {
+    let s = TrainSession::new(
+        cfg_with_transport(n_shards, transport),
+        ModeKind::Gba,
+        SessionOptions::default(),
+    )
+    .unwrap();
     assert_eq!(s.ps().n_shards(), n_shards);
+    assert_eq!(s.ps().transport().as_str(), transport);
     let stats = s.train_day(0).unwrap();
     let dense_bits = s
         .ps()
@@ -107,6 +124,50 @@ fn gba_identical_loss_curves_on_1_and_4_shards() {
         four.auc
     );
     assert!(one.auc > 0.55, "training should beat chance, auc = {}", one.auc);
+}
+
+/// Acceptance criterion: `--transport socket` end-to-end results are
+/// identical to `--transport inproc` — bit-for-bit, down to the loss
+/// curve and the final dense parameters.
+#[test]
+fn gba_identical_results_inproc_vs_socket() {
+    let inproc = run_gba_day_over(4, "inproc");
+    let socket = run_gba_day_over(4, "socket");
+
+    assert!(inproc.global_steps > 10, "run too short to be meaningful");
+    assert_eq!(inproc.global_steps, socket.global_steps);
+    assert_eq!(
+        inproc.loss_curve.len(),
+        socket.loss_curve.len(),
+        "different number of applies across transports"
+    );
+    for (i, (a, b)) in inproc.loss_curve.iter().zip(&socket.loss_curve).enumerate() {
+        assert_eq!(a.0, b.0, "apply {i}: global step differs");
+        assert_eq!(
+            a.1.to_bits(),
+            b.1.to_bits(),
+            "apply {i}: loss differs across transports ({} vs {})",
+            a.1,
+            b.1
+        );
+    }
+    assert_eq!(inproc.dense_bits, socket.dense_bits, "dense parameters diverged over the wire");
+    assert!(
+        (inproc.auc - socket.auc).abs() < 1e-12,
+        "AUC diverged: {} vs {}",
+        inproc.auc,
+        socket.auc
+    );
+}
+
+/// And the single-shard degenerate case: one shard behind a socket is
+/// still the seed server, byte for byte.
+#[test]
+fn single_shard_socket_matches_inproc() {
+    let inproc = run_gba_day_over(1, "inproc");
+    let socket = run_gba_day_over(1, "socket");
+    assert_eq!(inproc.dense_bits, socket.dense_bits);
+    assert_eq!(inproc.global_steps, socket.global_steps);
 }
 
 #[test]
