@@ -160,6 +160,47 @@ ps_apply_ms = 0.5
     }
 
     #[test]
+    fn ps_remote_transport_requires_matching_addrs() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert!(cfg.ps.shard_addrs.is_empty());
+        assert_eq!(cfg.ps.journal_spill_bytes, 0, "journal spill defaults off");
+        let good = format!(
+            "{SAMPLE}\n[ps]\nn_shards = 2\ntransport = \"remote\"\n\
+             shard_addrs = [\"127.0.0.1:7001\", \"127.0.0.1:7002\"]\n"
+        );
+        let cfg = ExperimentConfig::from_toml(&good).unwrap();
+        assert_eq!(cfg.ps.transport, TransportKind::Remote);
+        assert_eq!(cfg.ps.shard_addrs, vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        // Address count must equal the shard count.
+        let short = format!(
+            "{SAMPLE}\n[ps]\nn_shards = 2\ntransport = \"remote\"\n\
+             shard_addrs = [\"127.0.0.1:7001\"]\n"
+        );
+        assert!(ExperimentConfig::from_toml(&short).is_err());
+        // Addresses without the remote transport are a config bug.
+        let stray = format!(
+            "{SAMPLE}\n[ps]\nn_shards = 1\nshard_addrs = [\"127.0.0.1:7001\"]\n"
+        );
+        assert!(ExperimentConfig::from_toml(&stray).is_err());
+        // Non-string entries are rejected.
+        let bad = format!(
+            "{SAMPLE}\n[ps]\nn_shards = 1\ntransport = \"remote\"\nshard_addrs = [7001]\n"
+        );
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn ps_journal_spill_bytes_parses() {
+        let spilled = format!("{SAMPLE}\n[ps]\nn_shards = 2\njournal_spill_bytes = 4096\n");
+        assert_eq!(
+            ExperimentConfig::from_toml(&spilled).unwrap().ps.journal_spill_bytes,
+            4096
+        );
+        let bad = format!("{SAMPLE}\n[ps]\njournal_spill_bytes = \"lots\"\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
     fn cluster_wire_ms_parses_with_default() {
         let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
         assert_eq!(cfg.cluster.wire_ms, 0.0);

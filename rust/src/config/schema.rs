@@ -171,10 +171,17 @@ pub enum TransportKind {
     /// In-process endpoints over `util/chan` duplex pairs (default).
     InProc,
     /// Localhost TCP endpoints framed through the versioned binary
-    /// codec. Bit-for-bit identical results to `InProc` (pinned by
-    /// `tests/shard_invariance.rs`); the stepping stone to shards in
-    /// other processes.
+    /// codec, with the service still a thread of this process.
+    /// Bit-for-bit identical results to `InProc` (pinned by
+    /// `tests/shard_invariance.rs`); the stepping stone to `Remote`.
     Socket,
+    /// Shards are *separate OS processes*: each endpoint is a TCP
+    /// connection to a `gba-train shard-server` listening at the
+    /// matching `[ps] shard_addrs` entry. Same codec and service loop
+    /// as `Socket`, so results stay bit-for-bit identical; the
+    /// supervisor recovers a dropped peer by reconnecting and replaying
+    /// its journal instead of respawning a thread.
+    Remote,
 }
 
 impl TransportKind {
@@ -182,7 +189,8 @@ impl TransportKind {
         Ok(match s {
             "inproc" => TransportKind::InProc,
             "socket" => TransportKind::Socket,
-            _ => bail!("unknown transport '{s}' (inproc|socket)"),
+            "remote" => TransportKind::Remote,
+            _ => bail!("unknown transport '{s}' (inproc|socket|remote)"),
         })
     }
 
@@ -190,12 +198,13 @@ impl TransportKind {
         match self {
             TransportKind::InProc => "inproc",
             TransportKind::Socket => "socket",
+            TransportKind::Remote => "remote",
         }
     }
 }
 
 /// Parameter-server plane shape (`[ps]` table).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PsConfig {
     /// Number of PS shards: dense range partitions + consistent-hash
     /// slices of the embedding keyspace. 1 reproduces the seed
@@ -203,11 +212,25 @@ pub struct PsConfig {
     pub n_shards: usize,
     /// Shard endpoint transport.
     pub transport: TransportKind,
+    /// `host:port` of each `shard-server` process, index-aligned with
+    /// the shard ids. Required (length == `n_shards`) when `transport =
+    /// "remote"`; ignored otherwise.
+    pub shard_addrs: Vec<String>,
+    /// In-memory cap (bytes, approximate) on each shard's mutating-
+    /// request journal; past it the journal spills to a temp file on
+    /// disk so the checkpoint cadence can stretch without memory
+    /// growth. 0 (the default) never spills.
+    pub journal_spill_bytes: usize,
 }
 
 impl Default for PsConfig {
     fn default() -> Self {
-        PsConfig { n_shards: 1, transport: TransportKind::InProc }
+        PsConfig {
+            n_shards: 1,
+            transport: TransportKind::InProc,
+            shard_addrs: Vec::new(),
+            journal_spill_bytes: 0,
+        }
     }
 }
 
@@ -344,6 +367,25 @@ impl ExperimentConfig {
                     v.as_str().context("ps.transport must be a string")?,
                 )?,
             },
+            shard_addrs: match doc.get("ps.shard_addrs") {
+                None => Vec::new(),
+                Some(v) => v
+                    .as_arr()
+                    .context("ps.shard_addrs must be an array of \"host:port\" strings")?
+                    .iter()
+                    .map(|e| {
+                        e.as_str()
+                            .map(str::to_string)
+                            .context("ps.shard_addrs entries must be strings")
+                    })
+                    .collect::<Result<_>>()?,
+            },
+            journal_spill_bytes: match doc.get("ps.journal_spill_bytes") {
+                None => 0,
+                Some(v) => v
+                    .as_usize()
+                    .context("ps.journal_spill_bytes must be a non-negative integer")?,
+            },
         };
         Ok(ExperimentConfig {
             name: req_str("name")?,
@@ -389,6 +431,22 @@ impl ExperimentConfig {
         }
         if self.ps.n_shards == 0 || self.ps.n_shards > 256 {
             bail!("ps.n_shards must be in [1, 256], got {}", self.ps.n_shards);
+        }
+        // The remote transport needs one shard-server address per shard;
+        // a count mismatch would silently train against the wrong plane
+        // shape, so it is rejected here, not discovered at connect time.
+        if self.ps.transport == TransportKind::Remote
+            && self.ps.shard_addrs.len() != self.ps.n_shards
+        {
+            bail!(
+                "ps.transport = \"remote\" needs exactly n_shards shard_addrs \
+                 ({} configured for {} shards)",
+                self.ps.shard_addrs.len(),
+                self.ps.n_shards
+            );
+        }
+        if self.ps.transport != TransportKind::Remote && !self.ps.shard_addrs.is_empty() {
+            bail!("ps.shard_addrs is only meaningful with ps.transport = \"remote\"");
         }
         Ok(())
     }

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   experiment <id|all>   regenerate a paper table/figure (DESIGN.md §3)
 //!   train                 run continual training from a config
+//!   shard-server          serve one PS shard on a TCP socket (the
+//!                         multi-process deployment; see docs/DEPLOY.md)
 //!   datagen               inspect the synthetic data generator
 //!   inspect               dump the AOT artifact manifest
 //!
@@ -17,7 +19,8 @@ use gba::data::DataGen;
 use gba::experiments::{self, ExpCtx};
 use gba::metrics::report::fmt_auc;
 use gba::runtime::Manifest;
-use gba::worker::session::{SessionOptions, TrainSession};
+use gba::transport::serve_shard;
+use gba::worker::session::{shard_server_spec, SessionOptions, TrainSession};
 use gba::worker::BackendKind;
 
 struct Args {
@@ -68,8 +71,15 @@ USAGE:
                   [--days N] [--backend native|pjrt] [--artifacts DIR]
                   [--straggler] [--switch-to MODE] [--switch-day D]
                   [--shards N]   (override [ps] n_shards: PS plane width)
-                  [--transport inproc|socket]   (override [ps] transport:
-                                 shard endpoints in-process or over TCP)
+                  [--transport inproc|socket|remote]   (override [ps]
+                                 transport: shard endpoints in-process,
+                                 over TCP, or in shard-server processes)
+                  [--shard-addrs HOST:PORT,...]   (connect to remote
+                                 shard-servers; implies --transport remote)
+  gba-train shard-server --config FILE --shard-id K [--listen ADDR]
+                  [--mode MODE] [--shards N]
+                  (serve shard K of the PS plane on a listening socket;
+                   prints "shard-server listening on ADDR" once bound)
   gba-train datagen --config FILE [--day D] [--samples N]
   gba-train inspect [--artifacts DIR]
 
@@ -88,6 +98,7 @@ fn main() {
     let result = match cmd.as_str() {
         "experiment" => cmd_experiment(&args),
         "train" => cmd_train(&args),
+        "shard-server" => cmd_shard_server(&args),
         "datagen" => cmd_datagen(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
@@ -126,6 +137,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(t) = args.get("transport") {
         cfg.ps.transport = TransportKind::parse(t)?;
+    }
+    if let Some(addrs) = args.get("shard-addrs") {
+        cfg.ps.shard_addrs = addrs
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        cfg.ps.transport = TransportKind::Remote;
+    }
+    if cfg.ps.transport == TransportKind::Remote {
+        cfg.validate()?; // addr count must match the shard count
     }
     let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
     let days: usize = args
@@ -178,6 +200,57 @@ fn cmd_train(args: &Args) -> Result<()> {
             stats.counters.dense_staleness.max(),
         );
     }
+    Ok(())
+}
+
+/// Run one PS shard as this process: bind, announce the bound address
+/// on stdout (exactly one line — process supervisors and the
+/// `process_shards` test parse it), then serve codec RPCs forever,
+/// accepting a fresh connection (with a fresh shard, state installed by
+/// the front) whenever the previous one drops. See docs/DEPLOY.md for
+/// the multi-host launch recipe.
+fn cmd_shard_server(args: &Args) -> Result<()> {
+    let config = args.get("config").context("--config FILE required")?;
+    let mut cfg = ExperimentConfig::load(config)?;
+    // The server role ignores the front-side transport/address config —
+    // the shared file typically carries `transport = "remote"` plus the
+    // addr list, and a `--shards` override must not trip the
+    // addr-count-vs-n_shards validation rule that only binds the front.
+    cfg.ps.transport = TransportKind::InProc;
+    cfg.ps.shard_addrs.clear();
+    if let Some(n) = args.get("shards") {
+        cfg.ps.n_shards = n.parse().context("--shards wants a positive integer")?;
+        cfg.validate()?;
+    }
+    let shard_id: usize = args
+        .get("shard-id")
+        .context("--shard-id K required")?
+        .parse()
+        .context("--shard-id wants a shard index")?;
+    anyhow::ensure!(
+        shard_id < cfg.ps.n_shards,
+        "--shard-id {shard_id} out of range for {} shards (override with --shards)",
+        cfg.ps.n_shards
+    );
+    // The mode fixes the optimizer pair this shard applies with; it must
+    // match the front's --mode (Table 5.1 pairs optimizers with modes).
+    let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
+    let (spec, init) = shard_server_spec(&cfg, kind, shard_id);
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding shard-server listener on {listen}"))?;
+    let addr = listener.local_addr()?;
+    println!("shard-server listening on {addr} (shard {shard_id}/{}, task {})",
+        cfg.ps.n_shards, cfg.name);
+    use std::io::Write;
+    std::io::stdout().flush()?;
+    eprintln!(
+        "shard {shard_id}: mode {} | {} dense ranges | emb dim {} | serving forever",
+        kind.as_str(),
+        spec.ranges.len(),
+        cfg.model.emb_dim
+    );
+    serve_shard(listener, spec, &init).context("shard-server accept loop failed")?;
     Ok(())
 }
 

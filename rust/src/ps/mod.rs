@@ -7,55 +7,26 @@
 //! so this module re-exports `ShardedPs` under that name — every
 //! historical call site (and its numeric behavior) is unchanged.
 //!
-//! What stays here is the wire vocabulary shared by the worker runtime,
-//! the policies and the shards: [`WorkItem`], [`PullReply`], [`GradPush`]
-//! and the worker-side pre-reduce [`reduce_emb_grads`].
+//! Since the multi-process refactor the wire vocabulary itself —
+//! [`WorkItem`], [`PullReply`], [`GradPush`] — is *defined* by the
+//! transport codec ([`crate::transport::codec`]) and merely re-exported
+//! here: the structs the worker runtime hands the PS front are the
+//! exact frame structs the transport ships, with no in-memory
+//! duplicates. What stays in this module is the worker-side pre-reduce
+//! [`reduce_emb_grads`] and the historical `PsServer` alias.
 
 use crate::util::fasthash::{u64_map_with_capacity, U64Map};
 
 use anyhow::Result;
 
-use crate::coordinator::WorkerId;
 use crate::runtime::HostTensor;
 
 pub use crate::shard::ShardedPs;
+pub use crate::transport::codec::{GradPush, PullReply, WorkItem};
 
 /// The seed server name: a 1+-shard PS front. `PsServer::new` builds the
 /// single-shard configuration; `PsServer::with_shards` scales out.
 pub type PsServer = ShardedPs;
-
-/// A claim on one batch of the data list.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct WorkItem {
-    pub token: u64,
-    /// Parameter version (global step) at pull time.
-    pub version: u64,
-    pub day: usize,
-    pub batch_index: usize,
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PullReply {
-    Work(WorkItem),
-    /// Blocked by the mode's gate; wait for the next apply.
-    Wait,
-    /// Data list exhausted for the current day.
-    EndOfData,
-}
-
-/// A gradient push from a worker (Algorithm 1 L18).
-#[derive(Clone, Debug)]
-pub struct GradPush {
-    pub worker: WorkerId,
-    pub token: u64,
-    /// Dense gradients (dw1, db1, dw2, db2, dw3, db3), summed over the
-    /// local batch and divided by local batch size (mean-loss grads).
-    pub dense: Vec<HostTensor>,
-    /// Per-ID embedding gradients, summed within the local batch.
-    pub emb: Vec<(u64, Vec<f32>)>,
-    pub n_samples: usize,
-    pub loss: f32,
-}
 
 /// Aggregate a `d_emb` block into per-key sums (worker-side pre-reduce).
 pub fn reduce_emb_grads(keys: &[u64], d_emb: &HostTensor) -> Vec<(u64, Vec<f32>)> {
@@ -85,7 +56,7 @@ pub type PsResult<T> = Result<T>;
 mod tests {
     use super::*;
     use crate::coordinator::modes::{GbaPolicy, SyncPolicy};
-    use crate::coordinator::ModePolicy;
+    use crate::coordinator::{ModePolicy, WorkerId};
     use crate::embedding::EmbeddingConfig;
     use crate::optim::Sgd;
     use crate::runtime::VariantDims;

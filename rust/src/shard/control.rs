@@ -53,6 +53,21 @@ struct CtrlState {
     outstanding: usize,
     /// Flushes admitted but not yet applied to the shards.
     applying: usize,
+    /// While `applying > 0`: the worker whose push triggered the flush
+    /// (None for partial/switch flushes). That worker's next pull takes
+    /// the read-your-writes fast path past the `applying` gate — it
+    /// cannot race parameters it has not seen, because dense reads are
+    /// separately serialized by the front's apply-exclusion snapshot
+    /// lock; the gate only orders *token issue*, and the flusher's
+    /// tokens are already ordered after its own flush.
+    ///
+    /// Honesty note: today's `ShardedPs` runs the apply synchronously on
+    /// the pushing thread, so that thread never pulls mid-apply and the
+    /// fast path is exercised only at this API's level (pinned by the
+    /// unit test below). It becomes load-bearing the moment a front
+    /// drives applies off-thread — which is exactly the contract this
+    /// field pre-commits to.
+    flusher: Option<WorkerId>,
     /// L2 norms of the aggregated dense gradient per apply (Fig. 3).
     grad_norms: Option<Vec<f64>>,
     /// Losses observed at each apply (weighted mean over included entries).
@@ -76,6 +91,7 @@ impl ControlPlane {
                 day_batches: 0,
                 outstanding: 0,
                 applying: 0,
+                flusher: None,
                 grad_norms: None,
                 loss_curve: Vec::new(),
             }),
@@ -113,9 +129,16 @@ impl ControlPlane {
     /// Non-blocking pull (Algorithm 2 "pull responding"). Parks briefly
     /// while an admitted flush is still being applied, so a fresh token is
     /// never handed out against not-yet-visible parameters — the same
-    /// ordering the seed's single control mutex enforced.
+    /// ordering the seed's single control mutex enforced. One exception
+    /// (ROADMAP follow-up (c)): the worker whose own push triggered the
+    /// in-flight flush skips the gate — its program order already puts
+    /// this pull after its flush, and any parameter read it goes on to
+    /// make still waits on the front's apply-exclusion snapshot lock.
     pub fn pull(&self, w: WorkerId) -> PullReply {
-        let mut c = self.wait_not_applying(self.state.lock().unwrap());
+        let mut c = self.state.lock().unwrap();
+        if c.flusher != Some(w) {
+            c = self.wait_not_applying(c);
+        }
         if c.next_batch >= c.day_batches {
             return PullReply::EndOfData;
         }
@@ -159,6 +182,7 @@ impl ControlPlane {
     pub fn push(&self, grad: GradPush) -> Option<FlushJob> {
         let mut c = self.wait_not_applying(self.state.lock().unwrap());
         c.outstanding = c.outstanding.saturating_sub(1);
+        let pusher = grad.worker;
         let action = c.policy.on_push(grad.worker, grad.token);
         let job = match action {
             PushAction::Drop => {
@@ -171,7 +195,7 @@ impl ControlPlane {
             }
             PushAction::FlushNow => {
                 c.buffer.push(grad);
-                Some(Self::begin_flush(&mut c))
+                Some(Self::begin_flush(&mut c, Some(pusher)))
             }
         };
         drop(c);
@@ -195,7 +219,7 @@ impl ControlPlane {
         if c.buffer.is_empty() {
             return None;
         }
-        Some(Self::begin_flush(&mut c))
+        Some(Self::begin_flush(&mut c, None))
     }
 
     /// Swap the coordination policy (the *switch* operation, §1). Any
@@ -203,7 +227,8 @@ impl ControlPlane {
     /// returned job (if any) must be applied by the caller.
     pub fn swap_policy(&self, policy: Box<dyn ModePolicy>) -> Option<FlushJob> {
         let mut c = self.wait_not_applying(self.state.lock().unwrap());
-        let job = if c.buffer.is_empty() { None } else { Some(Self::begin_flush(&mut c)) };
+        let job =
+            if c.buffer.is_empty() { None } else { Some(Self::begin_flush(&mut c, None)) };
         c.policy = policy;
         drop(c);
         self.cv.notify_all();
@@ -214,6 +239,9 @@ impl ControlPlane {
     pub fn finish_apply(&self, norm: Option<f64>) {
         let mut c = self.state.lock().unwrap();
         c.applying = c.applying.saturating_sub(1);
+        if c.applying == 0 {
+            c.flusher = None;
+        }
         if let Some(n) = norm {
             if let Some(v) = c.grad_norms.as_mut() {
                 v.push(n);
@@ -226,8 +254,10 @@ impl ControlPlane {
     /// Admission: drain the buffer, fix weights/divisor, advance the
     /// policy and all counters. All the bookkeeping the seed `PsServer`
     /// did inside `flush()` that does not touch parameters happens here,
-    /// with identical arithmetic and ordering.
-    fn begin_flush(c: &mut CtrlState) -> FlushJob {
+    /// with identical arithmetic and ordering. `flusher` is the worker
+    /// whose push triggered the flush (read-your-writes fast path);
+    /// partial and switch flushes have none.
+    fn begin_flush(c: &mut CtrlState, flusher: Option<WorkerId>) -> FlushJob {
         let entries = std::mem::take(&mut c.buffer);
         let tokens: Vec<u64> = entries.iter().map(|g| g.token).collect();
         let spec = c.policy.flush_spec(&tokens);
@@ -265,6 +295,7 @@ impl ControlPlane {
         c.counters.global_steps += 1;
         c.policy.on_applied();
         c.applying += 1;
+        c.flusher = flusher;
         FlushJob {
             entries,
             weights: spec.weights,
@@ -421,6 +452,60 @@ mod tests {
         // a coordination-state reset (checkpoint-inherit semantics live
         // at the session layer, not here).
         assert_eq!(cp.global_step(), 0);
+    }
+
+    /// ROADMAP follow-up (c): while a flush is mid-apply, the worker
+    /// whose push triggered it pulls straight through the `applying`
+    /// gate; every other worker still parks until `finish_apply`.
+    #[test]
+    fn read_your_writes_fast_path_skips_applying_gate_for_flusher_only() {
+        use std::sync::mpsc;
+        use std::sync::Arc;
+
+        let cp = Arc::new(ControlPlane::new(Box::new(GbaPolicy::with_iota(2, 3))));
+        cp.set_day(0, 100);
+        let a = match cp.pull(3) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        let b = match cp.pull(3) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert!(cp.push(push_of(3, a.token)).is_none());
+        let job = cp.push(push_of(3, b.token)).expect("buffer of M admits a flush");
+        assert_eq!(job.included, 2);
+        assert!(!cp.quiescent(), "apply gate is up");
+
+        // The flusher (worker 3) reads its own write: token issued
+        // immediately, mid-apply.
+        match cp.pull(3) {
+            PullReply::Work(it) => assert_eq!(it.version, 1, "sees the admitted step"),
+            other => panic!("flusher was gated: {other:?}"),
+        }
+
+        // Any other worker still waits out the apply.
+        let (tx, rx) = mpsc::channel();
+        let gated = {
+            let cp = cp.clone();
+            std::thread::spawn(move || {
+                let r = cp.pull(0);
+                tx.send(()).unwrap();
+                r
+            })
+        };
+        assert!(
+            rx.recv_timeout(Duration::from_millis(80)).is_err(),
+            "non-flusher slipped past the applying gate"
+        );
+        cp.finish_apply(None);
+        rx.recv_timeout(Duration::from_secs(5)).expect("gate never released");
+        match gated.join().unwrap() {
+            PullReply::Work(_) => {}
+            other => panic!("{other:?}"),
+        }
+        // Gate down, fast-path marker cleared: nobody is special now.
+        assert_eq!(cp.state.lock().unwrap().flusher, None);
     }
 
     #[test]

@@ -27,12 +27,15 @@
 //! all**: each `PsShard` lives inside a
 //! [`ShardService`](crate::transport::ShardService) reachable only
 //! through a [`Conn`](crate::transport::Conn) endpoint — an in-process
-//! `util/chan` duplex pair (`inproc`, the default) or a localhost TCP
-//! socket framed through the versioned binary codec (`socket`). A
+//! `util/chan` duplex pair (`inproc`, the default), a localhost TCP
+//! socket framed through the versioned binary codec (`socket`), or a
+//! TCP connection to a separate `gba-train shard-server` OS process
+//! (`remote`, addresses from `[ps] shard_addrs`). A
 //! [`ShardSupervisor`](crate::transport::ShardSupervisor) owns the
 //! endpoints, journals mutating requests against per-shard shard-local
-//! checkpoints, and respawns a dead shard (closed channel / broken
-//! socket) transparently — see `transport/` for the failure story.
+//! checkpoints, and respawns — or reconnects to — a dead shard (closed
+//! channel / broken socket / lost process) transparently — see
+//! `transport/` for the failure story.
 //!
 //! # Flush pipeline
 //!
@@ -133,12 +136,22 @@ pub struct PsBuild {
     pub policy: Box<dyn ModePolicy>,
     pub n_shards: usize,
     pub transport: TransportKind,
+    /// `host:port` per shard-server process; length must equal
+    /// `n_shards` for the `Remote` transport, empty otherwise.
+    pub shard_addrs: Vec<String>,
 }
 
 impl PsBuild {
     pub fn build(self) -> ShardedPs {
         assert_eq!(self.init_params.len(), 6, "dense params are (w1,b1,w2,b2,w3,b3)");
         assert!(self.n_shards >= 1, "need at least one shard");
+        if self.transport == TransportKind::Remote {
+            assert_eq!(
+                self.shard_addrs.len(),
+                self.n_shards,
+                "remote transport needs one shard_addrs entry per shard"
+            );
+        }
         let router = ShardRouter::new(self.n_shards);
         let shapes: Vec<Vec<usize>> =
             self.init_params.iter().map(|t| t.shape.clone()).collect();
@@ -153,6 +166,7 @@ impl PsBuild {
                 emb_cfg: self.emb_cfg.clone(),
                 opt_dense: self.opt_dense.boxed_clone(),
                 opt_emb: self.opt_emb.boxed_clone(),
+                addr: self.shard_addrs.get(s).cloned(),
             })
             .collect();
         let supervisor = ShardSupervisor::start(self.transport, specs, &self.init_params);
@@ -229,6 +243,7 @@ impl ShardedPs {
             policy,
             n_shards,
             transport: TransportKind::InProc,
+            shard_addrs: Vec::new(),
         }
         .build()
     }
@@ -271,6 +286,17 @@ impl ShardedPs {
     /// Applies between shard-local checkpoint refreshes (journal bound).
     pub fn set_shard_ckpt_every(&self, n: usize) {
         self.supervisor.set_ckpt_every(n);
+    }
+
+    /// In-memory cap (approximate bytes) per shard journal before it
+    /// spills to disk; 0 (the default) never spills.
+    pub fn set_journal_spill_bytes(&self, bytes: usize) {
+        self.supervisor.set_journal_spill_bytes(bytes);
+    }
+
+    /// Journal frames currently spilled to disk for shard `s`.
+    pub fn journal_spilled_frames(&self, s: usize) -> u64 {
+        self.supervisor.journal_spilled_frames(s)
     }
 
     // ---- control-plane pass-throughs --------------------------------------
@@ -618,6 +644,23 @@ impl ShardedPs {
         );
     }
 
+    /// Bulk-insert a whole row set (checkpoint restore): rows are grouped
+    /// by owning shard and each group travels as one `InsertRows` frame —
+    /// one RPC per shard instead of one per row, which is what makes
+    /// restoring a large table into remote shard processes tractable.
+    pub fn insert_emb_rows(&self, rows: Vec<RowRecord>) {
+        let n = self.router.n_shards();
+        let mut groups: Vec<Vec<RowRecord>> = (0..n).map(|_| Vec::new()).collect();
+        for row in rows {
+            groups[self.router.shard_of_key(row.0)].push(row);
+        }
+        for (s, group) in groups.into_iter().enumerate() {
+            if !group.is_empty() {
+                expect_ok(self.supervisor.call(s, ShardRequest::InsertRows { rows: group }));
+            }
+        }
+    }
+
     /// Iterate all rows across shards (checkpointing): shard-index
     /// order, key-sorted within each shard — exactly the shard-local
     /// stream order the sharded checkpoint files persist. Callers
@@ -873,6 +916,37 @@ mod tests {
         assert_eq!(stats.iter().map(|s| s.applies).sum::<u64>(), 4 * 200);
     }
 
+    /// One `InsertRows` frame per shard must land exactly the rows that
+    /// per-row `InsertRow` RPCs would (the checkpoint-restore fast path).
+    #[test]
+    fn bulk_insert_rows_matches_single_inserts() {
+        let rows: Vec<RowRecord> = (0..20u64)
+            .map(|i| {
+                let k = i * 7919 + 5;
+                (
+                    k,
+                    vec![i as f32 * 0.5; 4],
+                    Vec::new(), // SGD: zero slot floats per row
+                    RowMeta { last_update_step: i, update_count: i as u32 + 1 },
+                )
+            })
+            .collect();
+        let bulk = ps_with(3, Box::new(Sgd { lr: 0.1 }));
+        bulk.insert_emb_rows(rows.clone());
+        let single = ps_with(3, Box::new(Sgd { lr: 0.1 }));
+        for (k, v, st, m) in rows.clone() {
+            single.insert_emb_row(k, v, st, m);
+        }
+        assert_eq!(bulk.emb_len(), rows.len());
+        for (k, _, _, _) in &rows {
+            assert_eq!(bulk.emb_row(*k), single.emb_row(*k));
+            assert_eq!(
+                bulk.emb_meta(*k).map(|m| (m.last_update_step, m.update_count)),
+                single.emb_meta(*k).map(|m| (m.last_update_step, m.update_count)),
+            );
+        }
+    }
+
     /// Socket endpoints behind the same front: build, push, read back.
     /// (Bitwise transport invariance is pinned end-to-end by
     /// `tests/shard_invariance.rs`; this is the unit-level smoke.)
@@ -887,6 +961,7 @@ mod tests {
             policy: Box::new(AsyncPolicy::new()),
             n_shards: 2,
             transport: TransportKind::Socket,
+            shard_addrs: Vec::new(),
         }
         .build();
         assert_eq!(ps.transport(), TransportKind::Socket);

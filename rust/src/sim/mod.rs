@@ -51,11 +51,16 @@ impl SimParams {
         self.ps_apply_ms / self.n_shards.max(1) as f64 + self.wire_ms
     }
 
-    /// Wire cost implied by a config's `[ps] transport` choice.
+    /// Wire cost implied by a config's `[ps] transport` choice. Remote
+    /// shards pay the same per-flush framing cost as localhost sockets;
+    /// inter-host latency is the operator's `wire_ms` calibration to
+    /// make.
     pub fn wire_ms_of(cfg: &ExperimentConfig) -> f64 {
         match cfg.ps.transport {
             crate::config::TransportKind::InProc => 0.0,
-            crate::config::TransportKind::Socket => cfg.cluster.wire_ms,
+            crate::config::TransportKind::Socket | crate::config::TransportKind::Remote => {
+                cfg.cluster.wire_ms
+            }
         }
     }
 }

@@ -1,9 +1,17 @@
-//! Versioned binary codec for the PS wire protocol.
+//! Versioned binary codec for the PS wire protocol — and the canonical
+//! definition site of the worker-plane vocabulary.
 //!
-//! Every message crossing a shard endpoint — worker-plane vocabulary
-//! ([`GradPush`], [`PullReply`]/[`WorkItem`](crate::ps::WorkItem)) and the
-//! shard-plane RPC ([`ShardRequest`]/[`ShardReply`]) — encodes to a
-//! length-prefixed frame:
+//! [`GradPush`], [`PullReply`] and [`WorkItem`] live *here*, not in
+//! `ps`: the structs the worker runtime produces and consumes are the
+//! exact frame structs the transport ships (the `ps` module re-exports
+//! them for the historical import path). There is no separate
+//! "in-memory" gradient or pull type anywhere — in-process, socket and
+//! remote deployments run one code path that differs only in the
+//! [`Conn`](super::Conn) implementation carrying these frames.
+//!
+//! Every message crossing a shard endpoint — the worker-plane vocabulary
+//! above and the shard-plane RPC ([`ShardRequest`]/[`ShardReply`]) —
+//! encodes to a length-prefixed frame:
 //!
 //! ```text
 //! len: u32 LE  |  version: u8  |  tag: u8  |  payload
@@ -26,10 +34,44 @@
 
 use std::io::{Read, Write};
 
+use crate::coordinator::WorkerId;
 use crate::embedding::RowMeta;
-use crate::ps::{GradPush, PullReply, WorkItem};
 use crate::runtime::HostTensor;
 use crate::shard::ShardStats;
+
+/// A claim on one batch of the data list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    pub token: u64,
+    /// Parameter version (global step) at pull time.
+    pub version: u64,
+    pub day: usize,
+    pub batch_index: usize,
+}
+
+/// What a pull returns: work, a gate, or exhaustion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PullReply {
+    Work(WorkItem),
+    /// Blocked by the mode's gate; wait for the next apply.
+    Wait,
+    /// Data list exhausted for the current day.
+    EndOfData,
+}
+
+/// A gradient push from a worker (Algorithm 1 L18).
+#[derive(Clone, Debug)]
+pub struct GradPush {
+    pub worker: WorkerId,
+    pub token: u64,
+    /// Dense gradients (dw1, db1, dw2, db2, dw3, db3), summed over the
+    /// local batch and divided by local batch size (mean-loss grads).
+    pub dense: Vec<HostTensor>,
+    /// Per-ID embedding gradients, summed within the local batch.
+    pub emb: Vec<(u64, Vec<f32>)>,
+    pub n_samples: usize,
+    pub loss: f32,
+}
 
 /// Bump on any incompatible layout change.
 pub const WIRE_VERSION: u8 = 1;
@@ -118,6 +160,19 @@ pub enum ShardRequest {
     DumpRows,
     /// Load/contention counters snapshot.
     Stats,
+    /// Insert a whole block of rows in one frame — the checkpoint-restore
+    /// and remote-state-install path (one RPC per shard instead of one
+    /// per row).
+    InsertRows { rows: Vec<RowRecord> },
+    /// Connect-time identity/shape handshake (remote transport): the
+    /// front declares which shard it thinks it dialed and the optimizer
+    /// shape it will aggregate for. The server asserts agreement — a
+    /// swapped `shard_addrs` entry or a `--mode` mismatch that changes
+    /// the optimizer pair (async vs. the rest, Table 5.1) dies loudly at
+    /// connect instead of silently diverging. (Learning rates are not on
+    /// the wire; equal-kind different-lr configs remain the operator's
+    /// contract.)
+    Hello { shard: u64, dense_slots: u32, emb_slots: u32, emb_dim: u32 },
 }
 
 /// Replies, one per request shape.
@@ -178,6 +233,16 @@ fn put_tensor(b: &mut Vec<u8>, t: &HostTensor) {
         put_u64(b, d as u64);
     }
     put_f32s(b, &t.data);
+}
+
+fn put_row_records(b: &mut Vec<u8>, rows: &[RowRecord]) {
+    put_u32(b, rows.len() as u32);
+    for (key, vec, state, meta) in rows {
+        put_u64(b, *key);
+        put_f32s(b, vec);
+        put_f32s(b, state);
+        put_meta(b, meta);
+    }
 }
 
 /// Encode one message body (version + tag + payload, no length prefix).
@@ -271,6 +336,17 @@ fn encode_req(b: &mut Vec<u8>, r: &ShardRequest) {
         }
         ShardRequest::DumpRows => put_u8(b, 9),
         ShardRequest::Stats => put_u8(b, 10),
+        ShardRequest::InsertRows { rows } => {
+            put_u8(b, 11);
+            put_row_records(b, rows);
+        }
+        ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim } => {
+            put_u8(b, 12);
+            put_u64(b, *shard);
+            put_u32(b, *dense_slots);
+            put_u32(b, *emb_slots);
+            put_u32(b, *emb_dim);
+        }
     }
 }
 
@@ -298,13 +374,7 @@ fn encode_reply(b: &mut Vec<u8>, r: &ShardReply) {
         }
         ShardReply::RowDump { rows } => {
             put_u8(b, 4);
-            put_u32(b, rows.len() as u32);
-            for (key, vec, state, meta) in rows {
-                put_u64(b, *key);
-                put_f32s(b, vec);
-                put_f32s(b, state);
-                put_meta(b, meta);
-            }
+            put_row_records(b, rows);
         }
         ShardReply::Stats { stats, emb_mem_bytes } => {
             put_u8(b, 5);
@@ -375,6 +445,19 @@ impl<'a> Rd<'a> {
 
     fn meta(&mut self) -> Result<RowMeta, CodecError> {
         Ok(RowMeta { last_update_step: self.u64()?, update_count: self.u32()? })
+    }
+
+    fn row_records(&mut self) -> Result<Vec<RowRecord>, CodecError> {
+        let n = self.u32()? as usize;
+        let mut rows = Vec::new();
+        for _ in 0..n {
+            let key = self.u64()?;
+            let vec = self.f32s()?;
+            let state = self.f32s()?;
+            let meta = self.meta()?;
+            rows.push((key, vec, state, meta));
+        }
+        Ok(rows)
     }
 
     fn tensor(&mut self) -> Result<HostTensor, CodecError> {
@@ -494,6 +577,13 @@ fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
         }
         9 => ShardRequest::DumpRows,
         10 => ShardRequest::Stats,
+        11 => ShardRequest::InsertRows { rows: rd.row_records()? },
+        12 => ShardRequest::Hello {
+            shard: rd.u64()?,
+            dense_slots: rd.u32()?,
+            emb_slots: rd.u32()?,
+            emb_dim: rd.u32()?,
+        },
         _ => return Err(CodecError::Malformed("shard request tag")),
     })
 }
@@ -513,18 +603,7 @@ fn decode_reply(rd: &mut Rd) -> Result<ShardReply, CodecError> {
                 _ => return Err(CodecError::Malformed("meta option tag")),
             },
         },
-        4 => {
-            let n = rd.u32()? as usize;
-            let mut rows = Vec::new();
-            for _ in 0..n {
-                let key = rd.u64()?;
-                let vec = rd.f32s()?;
-                let state = rd.f32s()?;
-                let meta = rd.meta()?;
-                rows.push((key, vec, state, meta));
-            }
-            ShardReply::RowDump { rows }
-        }
+        4 => ShardReply::RowDump { rows: rd.row_records()? },
         5 => {
             let stats = ShardStats {
                 shard: rd.usize64()?,
@@ -646,6 +725,56 @@ mod tests {
                 WireMsg::Pull(back) => assert_eq!(back, p),
                 other => panic!("{other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn insert_rows_roundtrip_preserves_bits_and_truncation_rejected() {
+        let rows: Vec<RowRecord> = vec![
+            (
+                u64::MAX,
+                vec![1.0, f32::NAN, -0.0],
+                vec![0.5, f32::INFINITY, 2.0, -3.0, 0.0, 9.75],
+                RowMeta { last_update_step: 7, update_count: 3 },
+            ),
+            (0, vec![], vec![], RowMeta { last_update_step: 0, update_count: 0 }),
+        ];
+        let body = encode(&WireMsg::Req(ShardRequest::InsertRows { rows: rows.clone() }));
+        let back = match decode(&body).unwrap() {
+            WireMsg::Req(ShardRequest::InsertRows { rows }) => rows,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(back.len(), rows.len());
+        for ((k, v, st, m), (wk, wv, wst, wm)) in back.iter().zip(&rows) {
+            assert_eq!(k, wk);
+            assert_eq!(bits(v), bits(wv));
+            assert_eq!(bits(st), bits(wst));
+            assert_eq!(m.last_update_step, wm.last_update_step);
+            assert_eq!(m.update_count, wm.update_count);
+        }
+        for cut in 0..body.len() {
+            assert!(decode(&body[..cut]).is_err(), "decoded a truncated InsertRows at {cut}");
+        }
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let req = ShardRequest::Hello {
+            shard: u64::MAX,
+            dense_slots: 2,
+            emb_slots: 1,
+            emb_dim: 16,
+        };
+        let body = encode(&WireMsg::Req(req));
+        match decode(&body).unwrap() {
+            WireMsg::Req(ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim }) => {
+                assert_eq!(shard, u64::MAX);
+                assert_eq!((dense_slots, emb_slots, emb_dim), (2, 1, 16));
+            }
+            other => panic!("{other:?}"),
+        }
+        for cut in 0..body.len() {
+            assert!(decode(&body[..cut]).is_err());
         }
     }
 

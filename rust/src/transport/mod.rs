@@ -21,22 +21,36 @@
 //!   executes RPCs until its connection dies. Nothing reaches shard state
 //!   except through a connection.
 //! * [`supervisor`] — the [`ShardSupervisor`]: spawns services, journals
-//!   mutating requests against per-shard **shard-local checkpoints**, and
-//!   on a dead endpoint (closed channel / broken socket) respawns the
-//!   shard from its checkpoint and replays the journal — the lost-shard
-//!   extension of the paper's lost-token tolerance (Appendix B), pinned
-//!   by `tests/shard_failure.rs`.
+//!   mutating requests against per-shard **shard-local checkpoints**
+//!   (spilling the journal to disk past `[ps] journal_spill_bytes`), and
+//!   on a dead endpoint (closed channel / broken socket / dropped remote
+//!   peer) respawns — or, for `remote`, reconnects to — the shard from
+//!   its checkpoint and replays the journal — the lost-shard extension
+//!   of the paper's lost-token tolerance (Appendix B), pinned by
+//!   `tests/shard_failure.rs` and `tests/process_shards.rs`.
+//! * [`remote`] — the multi-process deployment: [`connect_retry`] dials
+//!   a `gba-train shard-server` process (transport `"remote"`,
+//!   addresses from `[ps] shard_addrs`), and [`serve_shard`] is that
+//!   process's accept loop — a fresh shard per connection, state
+//!   installed over the wire by the front.
 //!
 //! The front (`shard::ShardedPs`) performs admission, aggregation and
 //! reassembly exactly as before; every parameter byte it reads or writes
-//! now moves through these endpoints.
+//! now moves through these endpoints. The worker-plane vocabulary
+//! ([`GradPush`], [`PullReply`], [`WorkItem`]) is *defined* in [`codec`]
+//! — workers hand the front the very structs the wire ships.
 
 pub mod codec;
 pub mod endpoint;
+pub mod remote;
 pub mod service;
 pub mod supervisor;
 
-pub use codec::{CodecError, EmbGradEntry, RowRecord, ShardReply, ShardRequest, WireMsg};
+pub use codec::{
+    CodecError, EmbGradEntry, GradPush, PullReply, RowRecord, ShardReply, ShardRequest,
+    WireMsg, WorkItem,
+};
 pub use endpoint::{ChanConn, Conn, DeadConn, SocketConn};
+pub use remote::{connect_retry, serve_shard, RECONNECT_DEADLINE};
 pub use service::{serve, serve_counting, ShardService};
 pub use supervisor::{ShardCheckpoint, ShardSpawnSpec, ShardSupervisor, DEFAULT_CKPT_EVERY};

@@ -1,0 +1,170 @@
+//! Remote shard endpoints: the client and server halves of the
+//! `transport = "remote"` deployment, where each PS shard is a separate
+//! OS process (`gba-train shard-server`) on its own TCP address.
+//!
+//! Protocol-wise there is nothing new here — a remote shard speaks the
+//! exact same codec frames over the exact same [`SocketConn`] as the
+//! in-process `socket` transport, so results stay bit-for-bit identical
+//! across all three transports. What *is* new is the lifecycle:
+//!
+//! * **Client side** ([`connect_retry`]): the front cannot spawn a
+//!   remote process, only dial it. Connection attempts retry with
+//!   backoff up to [`RECONNECT_DEADLINE`], which is what lets the
+//!   [`ShardSupervisor`](super::ShardSupervisor) treat a shard-server
+//!   that crashed and was restarted (by an operator, a supervisor
+//!   daemon, or a test harness) like any other lost shard: reconnect,
+//!   install the shard-local checkpoint over the wire (`SetDense`,
+//!   `SetSlots`, one bulk `InsertRows`), replay the journal.
+//! * **Server side** ([`serve_shard`]): one accept loop, one connection
+//!   at a time, and a **fresh shard per connection**. The front's
+//!   checkpoint is authoritative — a server that accepted a reconnect
+//!   holds no state worth preserving (the front could not know what the
+//!   dying connection left behind), so every accept starts from the
+//!   config-derived initial state and lets the install overwrite it.
+//!   This makes reconnect semantics deterministic: the rebuilt shard is
+//!   bit-identical to the lost one, exactly as in-process respawn is.
+//!
+//! Both halves are plain library code so tests can run real accept
+//! loops on threads; the `shard-server` subcommand in `main.rs` is a
+//! thin wrapper that binds, prints its address, and calls
+//! [`serve_shard`].
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::endpoint::SocketConn;
+use super::service::serve_counting;
+use super::supervisor::{ShardCheckpoint, ShardSpawnSpec};
+use crate::runtime::HostTensor;
+
+/// How long the front keeps dialing a shard address before declaring the
+/// shard unrecoverable. Long enough to ride out a shard-server restart;
+/// short enough that a mis-typed address fails the run, not the shift.
+pub const RECONNECT_DEADLINE: Duration = Duration::from_secs(20);
+
+/// Dial `addr` until it accepts or `deadline` elapses, backing off
+/// 10 ms → 500 ms between attempts. `None` means nobody ever listened.
+///
+/// Each attempt is individually bounded by the remaining deadline via
+/// `connect_timeout` — a peer that silently drops SYNs (firewalled
+/// port, dead host) must not park us in the kernel's own
+/// minutes-long connect timeout, because recovery calls this while
+/// holding every shard slot lock. The worst-case overshoot past the
+/// deadline is one 250 ms floor attempt.
+pub fn connect_retry(addr: &str, deadline: Duration) -> Option<SocketConn> {
+    let t0 = Instant::now();
+    let mut backoff = Duration::from_millis(10);
+    loop {
+        // connect_timeout rejects a zero duration; floor the cap so the
+        // final attempt still gets a brief real try.
+        let cap = deadline.saturating_sub(t0.elapsed()).max(Duration::from_millis(250));
+        let attempt = match addr.to_socket_addrs().ok().and_then(|mut a| a.next()) {
+            Some(sa) => TcpStream::connect_timeout(&sa, cap),
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "unresolvable shard address",
+            )),
+        };
+        match attempt {
+            Ok(stream) => return Some(SocketConn::new(stream)),
+            Err(_) => {
+                let elapsed = t0.elapsed();
+                if elapsed >= deadline {
+                    return None;
+                }
+                std::thread::sleep(backoff.min(deadline - elapsed));
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Run one shard's server loop forever: accept a connection, build a
+/// fresh shard from `spec` at its initial parameters, and serve codec
+/// RPCs until the peer goes away; then loop back to `accept`. Returns
+/// only when the listener itself fails.
+///
+/// Logs go to stderr — stdout belongs to the launcher, which prints
+/// exactly one `listening on` line that process supervisors (and the
+/// `process_shards` test) parse.
+pub fn serve_shard(
+    listener: TcpListener,
+    spec: ShardSpawnSpec,
+    init_params: &[HostTensor],
+) -> std::io::Result<()> {
+    loop {
+        let (stream, peer) = listener.accept()?;
+        eprintln!("shard {}: serving connection from {peer}", spec.index);
+        let service = spec.service_at(&ShardCheckpoint::initial(&spec, init_params));
+        let (handled, exit) = serve_counting(service, Box::new(SocketConn::new(stream)));
+        eprintln!(
+            "shard {}: connection from {peer} ended after {handled} requests ({exit}); \
+             awaiting reconnect",
+            spec.index
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::EmbeddingConfig;
+    use crate::optim::Sgd;
+    use crate::transport::codec::{ShardReply, ShardRequest};
+    use crate::transport::endpoint::rpc;
+
+    fn spec() -> ShardSpawnSpec {
+        ShardSpawnSpec {
+            index: 0,
+            ranges: vec![(0, 4)],
+            emb_cfg: EmbeddingConfig { dim: 2, init_scale: 0.0, seed: 1, shards: 2 },
+            opt_dense: Box::new(Sgd { lr: 1.0 }),
+            opt_emb: Box::new(Sgd { lr: 1.0 }),
+            addr: None,
+        }
+    }
+
+    #[test]
+    fn connect_retry_gives_up_without_listener() {
+        // A port from the dynamic range with nothing bound: bind-then-drop.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let t0 = Instant::now();
+        assert!(connect_retry(&addr, Duration::from_millis(120)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(100));
+    }
+
+    /// The accept loop hands every connection a fresh shard, so state
+    /// written on one connection is gone on the next — the reconnect
+    /// contract the supervisor's checkpoint install relies on.
+    #[test]
+    fn serve_shard_resets_state_per_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let init = vec![HostTensor { shape: vec![4], data: vec![1.0, 2.0, 3.0, 4.0] }];
+        std::thread::spawn(move || {
+            let _ = serve_shard(listener, spec(), &init);
+        });
+
+        let mut conn = connect_retry(&addr, Duration::from_secs(5)).expect("first connect");
+        match rpc(&mut conn, ShardRequest::SetDense { dense: vec![vec![9.0; 4]] }).unwrap() {
+            ShardReply::Ok => {}
+            other => panic!("{other:?}"),
+        }
+        match rpc(&mut conn, ShardRequest::ReadDense).unwrap() {
+            ShardReply::Dense { dense } => assert_eq!(dense, vec![vec![9.0; 4]]),
+            other => panic!("{other:?}"),
+        }
+        drop(conn); // sever: the server loops back to accept
+
+        let mut conn = connect_retry(&addr, Duration::from_secs(5)).expect("reconnect");
+        match rpc(&mut conn, ShardRequest::ReadDense).unwrap() {
+            ShardReply::Dense { dense } => {
+                assert_eq!(dense, vec![vec![1.0, 2.0, 3.0, 4.0]], "fresh shard per connection")
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -30,6 +30,27 @@ impl ShardService {
     pub fn handle(&self, req: ShardRequest) -> ShardReply {
         match req {
             ShardRequest::Ping => ShardReply::Ok,
+            ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim } => {
+                // A front that dialed the wrong server or was launched
+                // with a mode whose optimizer shape differs must die at
+                // connect, not diverge silently. Asserting (not erroring)
+                // is deliberate: it kills this service — and for a
+                // shard-server process, the process — leaving the reason
+                // in its log while the front sees the dropped connection.
+                assert_eq!(shard as usize, self.shard.index, "Hello: wrong shard dialed");
+                assert_eq!(
+                    dense_slots as usize,
+                    self.opt_dense.slots(),
+                    "Hello: dense optimizer shape mismatch (front/server --mode disagree?)"
+                );
+                assert_eq!(
+                    emb_slots as usize,
+                    self.opt_emb.slots(),
+                    "Hello: embedding optimizer shape mismatch (front/server --mode disagree?)"
+                );
+                assert_eq!(emb_dim as usize, self.shard.emb.dim(), "Hello: emb_dim mismatch");
+                ShardReply::Ok
+            }
             ShardRequest::Apply { opt_step, dense, emb } => {
                 self.shard.apply(
                     &dense,
@@ -83,6 +104,12 @@ impl ShardService {
             ShardRequest::GetMeta { key } => ShardReply::Meta { meta: self.shard.emb.meta(key) },
             ShardRequest::InsertRow { key, vec, state, meta } => {
                 self.shard.emb.insert_row(key, vec, state, meta);
+                ShardReply::Ok
+            }
+            ShardRequest::InsertRows { rows } => {
+                for (key, vec, state, meta) in rows {
+                    self.shard.emb.insert_row(key, vec, state, meta);
+                }
                 ShardReply::Ok
             }
             ShardRequest::DumpRows => {

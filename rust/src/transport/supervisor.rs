@@ -36,12 +36,15 @@
 //!   checkpointed, load telemetry is not). Check `lost_shard_events`
 //!   before comparing per-shard load numbers across a faulty run.
 
+use std::io::{BufReader, BufWriter, Write};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
-use super::codec::{RowRecord, ShardReply, ShardRequest, WireMsg};
+use super::codec::{self, CodecError, RowRecord, ShardReply, ShardRequest, WireMsg};
 use super::endpoint::{rpc, ChanConn, Conn, DeadConn, SocketConn};
+use super::remote;
 use super::service::{serve, ShardService};
 use crate::config::TransportKind;
 use crate::embedding::EmbeddingConfig;
@@ -62,6 +65,29 @@ pub struct ShardSpawnSpec {
     pub emb_cfg: EmbeddingConfig,
     pub opt_dense: Box<dyn Optimizer>,
     pub opt_emb: Box<dyn Optimizer>,
+    /// `host:port` of the shard's `shard-server` process. Required by
+    /// the `Remote` transport; ignored by `InProc`/`Socket`.
+    pub addr: Option<String>,
+}
+
+impl ShardSpawnSpec {
+    /// Materialize a service holding this shard at checkpoint `ckpt` —
+    /// the one construction path shared by every transport's (re)spawn
+    /// and by the `shard-server` accept loop.
+    pub fn service_at(&self, ckpt: &ShardCheckpoint) -> ShardService {
+        let shard = PsShard::from_parts(
+            self.index,
+            self.ranges.clone(),
+            ckpt.dense.clone(),
+            ckpt.slots.clone(),
+            self.emb_cfg.clone(),
+            self.opt_emb.slots(),
+        );
+        for (key, vec, state, meta) in &ckpt.rows {
+            shard.emb.insert_row(*key, vec.clone(), state.clone(), *meta);
+        }
+        ShardService::new(shard, self.opt_dense.boxed_clone(), self.opt_emb.boxed_clone())
+    }
 }
 
 /// A shard-local checkpoint: one shard's complete state, shard-layout
@@ -93,36 +119,28 @@ impl ShardCheckpoint {
 }
 
 /// Build and launch one shard service from a checkpoint; returns the
-/// front's endpoint and the service thread's handle.
+/// front's endpoint and, for in-process transports, the service
+/// thread's handle. For the `Remote` transport nothing is spawned —
+/// the shard-server process already exists; its fresh shard is brought
+/// to `ckpt` by installing the state over the wire.
 fn spawn_service(
     kind: TransportKind,
     spec: &ShardSpawnSpec,
     ckpt: &ShardCheckpoint,
-) -> (Box<dyn Conn>, JoinHandle<()>) {
-    let shard = PsShard::from_parts(
-        spec.index,
-        spec.ranges.clone(),
-        ckpt.dense.clone(),
-        ckpt.slots.clone(),
-        spec.emb_cfg.clone(),
-        spec.opt_emb.slots(),
-    );
-    for (key, vec, state, meta) in &ckpt.rows {
-        shard.emb.insert_row(*key, vec.clone(), state.clone(), *meta);
-    }
-    let service =
-        ShardService::new(shard, spec.opt_dense.boxed_clone(), spec.opt_emb.boxed_clone());
+) -> (Box<dyn Conn>, Option<JoinHandle<()>>) {
     let name = format!("ps-shard-{}", spec.index);
     match kind {
         TransportKind::InProc => {
+            let service = spec.service_at(ckpt);
             let (client, server) = chan::duplex::<WireMsg>();
             let handle = std::thread::Builder::new()
                 .name(name)
                 .spawn(move || serve(service, Box::new(ChanConn { pipe: server })))
                 .expect("spawning shard service thread");
-            (Box::new(ChanConn { pipe: client }), handle)
+            (Box::new(ChanConn { pipe: client }), Some(handle))
         }
         TransportKind::Socket => {
+            let service = spec.service_at(ckpt);
             let listener =
                 std::net::TcpListener::bind("127.0.0.1:0").expect("binding shard socket");
             let addr = listener.local_addr().expect("shard socket addr");
@@ -136,7 +154,170 @@ fn spawn_service(
                 .expect("spawning shard service thread");
             let stream =
                 std::net::TcpStream::connect(addr).expect("connecting to shard socket");
-            (Box::new(SocketConn::new(stream)), handle)
+            (Box::new(SocketConn::new(stream)), Some(handle))
+        }
+        TransportKind::Remote => {
+            let addr = spec
+                .addr
+                .as_deref()
+                .expect("remote transport requires a shard_addrs entry per shard");
+            let mut conn = remote::connect_retry(addr, remote::RECONNECT_DEADLINE)
+                .unwrap_or_else(|| {
+                    panic!(
+                        "shard {}: no shard-server reachable at {addr} within {:?}",
+                        spec.index,
+                        remote::RECONNECT_DEADLINE
+                    )
+                });
+            install_checkpoint(&mut conn, spec, ckpt).unwrap_or_else(|e| {
+                panic!("shard {}: installing checkpoint at {addr}: {e}", spec.index)
+            });
+            (Box::new(conn), None)
+        }
+    }
+}
+
+/// Bring a freshly-accepted remote shard to checkpoint state over the
+/// wire: the `Hello` identity/shape handshake first (a swapped
+/// `shard_addrs` entry or a mode whose optimizer shape differs must
+/// fail loudly at connect, not silently diverge — the server asserts
+/// and the dropped connection surfaces here as an error), then dense
+/// slices (which resets the optimizer slots), then the slots, then
+/// every materialized row in one bulk frame.
+fn install_checkpoint(
+    conn: &mut SocketConn,
+    spec: &ShardSpawnSpec,
+    ckpt: &ShardCheckpoint,
+) -> Result<(), CodecError> {
+    let mut reqs = vec![
+        ShardRequest::Hello {
+            shard: spec.index as u64,
+            dense_slots: spec.opt_dense.slots() as u32,
+            emb_slots: spec.opt_emb.slots() as u32,
+            emb_dim: spec.emb_cfg.dim as u32,
+        },
+        ShardRequest::SetDense { dense: ckpt.dense.clone() },
+        ShardRequest::SetSlots { slots: ckpt.slots.clone() },
+    ];
+    if !ckpt.rows.is_empty() {
+        reqs.push(ShardRequest::InsertRows { rows: ckpt.rows.clone() });
+    }
+    for req in reqs {
+        match rpc(conn, req)? {
+            ShardReply::Ok => {}
+            _ => return Err(CodecError::Malformed("expected Ok installing checkpoint")),
+        }
+    }
+    Ok(())
+}
+
+/// Monotonic source for unique journal-spill file names (several
+/// supervisors can coexist in one test process).
+static JOURNAL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// The mutating-request journal for one shard: an in-memory tail plus an
+/// optional on-disk spill segment. When the tail's (approximate) byte
+/// size exceeds the configured cap, it is drained to the spill file as
+/// already-encoded codec frames — so a long checkpoint cadence costs
+/// disk, not resident memory, and replay order (disk segment first,
+/// oldest to newest, then the tail) is preserved exactly.
+struct Journal {
+    mem: Vec<ShardRequest>,
+    mem_bytes: usize,
+    /// Frames in the spill file, all older than anything in `mem`.
+    spilled: u64,
+    path: PathBuf,
+    writer: Option<BufWriter<std::fs::File>>,
+}
+
+/// Approximate in-memory footprint of a journaled request — cheap to
+/// compute (no encoding) and close enough to meter the spill cap.
+fn approx_req_bytes(req: &ShardRequest) -> usize {
+    let vecs = |xss: &[Vec<f32>]| xss.iter().map(|xs| 32 + xs.len() * 4).sum::<usize>();
+    32 + match req {
+        ShardRequest::Apply { dense, emb, .. } => {
+            vecs(dense) + emb.iter().map(|(_, g, _)| 48 + g.len() * 4).sum::<usize>()
+        }
+        ShardRequest::SetDense { dense } => vecs(dense),
+        ShardRequest::SetSlots { slots } => vecs(slots),
+        ShardRequest::InsertRow { vec, state, .. } => 48 + (vec.len() + state.len()) * 4,
+        ShardRequest::InsertRows { rows } => {
+            rows.iter().map(|(_, v, s, _)| 80 + (v.len() + s.len()) * 4).sum::<usize>()
+        }
+        _ => 0,
+    }
+}
+
+impl Journal {
+    fn new(shard: usize) -> Journal {
+        let seq = JOURNAL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir()
+            .join(format!("gba-journal-{}-{seq}-shard{shard}.wal", std::process::id()));
+        Journal { mem: Vec::new(), mem_bytes: 0, spilled: 0, path, writer: None }
+    }
+
+    /// Append one request; spill the whole in-memory tail once it
+    /// outgrows `cap` bytes (`cap == 0` disables spilling).
+    fn push(&mut self, req: ShardRequest, cap: usize) {
+        self.mem_bytes += approx_req_bytes(&req);
+        self.mem.push(req);
+        if cap > 0 && self.mem_bytes > cap {
+            let writer = self.writer.get_or_insert_with(|| {
+                BufWriter::new(
+                    std::fs::File::create(&self.path).expect("creating journal spill file"),
+                )
+            });
+            for req in self.mem.drain(..) {
+                codec::write_frame(writer, &WireMsg::Req(req)).expect("journal spill write");
+                self.spilled += 1;
+            }
+            self.mem_bytes = 0;
+        }
+    }
+
+    /// Visit every journaled request in execution order: the on-disk
+    /// segment (streamed, never fully resident), then the memory tail.
+    fn for_each(&mut self, mut f: impl FnMut(ShardRequest)) {
+        if self.spilled > 0 {
+            if let Some(w) = self.writer.as_mut() {
+                w.flush().expect("flushing journal spill");
+            }
+            let mut r = BufReader::new(
+                std::fs::File::open(&self.path).expect("opening journal spill"),
+            );
+            for _ in 0..self.spilled {
+                match codec::read_frame(&mut r) {
+                    Ok(WireMsg::Req(req)) => f(req),
+                    other => panic!("journal spill corrupt: {other:?}"),
+                }
+            }
+        }
+        for req in &self.mem {
+            f(req.clone());
+        }
+    }
+
+    fn clear(&mut self) {
+        self.mem.clear();
+        self.mem_bytes = 0;
+        if self.spilled > 0 {
+            self.writer = None;
+            let _ = std::fs::remove_file(&self.path);
+            self.spilled = 0;
+        }
+    }
+
+    /// Frames currently sitting in the spill file (test observability).
+    fn spilled_frames(&self) -> u64 {
+        self.spilled
+    }
+}
+
+impl Drop for Journal {
+    fn drop(&mut self) {
+        if self.spilled > 0 {
+            self.writer = None;
+            let _ = std::fs::remove_file(&self.path);
         }
     }
 }
@@ -147,7 +328,7 @@ struct ShardSlot {
     handle: Option<JoinHandle<()>>,
     ckpt: ShardCheckpoint,
     /// Mutating requests since `ckpt`, in execution order.
-    wal: Vec<ShardRequest>,
+    wal: Journal,
     applies_since_ckpt: usize,
 }
 
@@ -157,6 +338,8 @@ pub struct ShardSupervisor {
     slots: Vec<Mutex<ShardSlot>>,
     lost_events: AtomicU64,
     ckpt_every: AtomicUsize,
+    /// In-memory journal cap before spilling to disk (0 = never spill).
+    journal_spill_bytes: AtomicUsize,
 }
 
 fn is_mutating(req: &ShardRequest) -> bool {
@@ -166,6 +349,7 @@ fn is_mutating(req: &ShardRequest) -> bool {
             | ShardRequest::SetDense { .. }
             | ShardRequest::SetSlots { .. }
             | ShardRequest::InsertRow { .. }
+            | ShardRequest::InsertRows { .. }
     )
 }
 
@@ -183,9 +367,9 @@ impl ShardSupervisor {
                 let (conn, handle) = spawn_service(kind, spec, &ckpt);
                 Mutex::new(ShardSlot {
                     conn,
-                    handle: Some(handle),
+                    handle,
                     ckpt,
-                    wal: Vec::new(),
+                    wal: Journal::new(spec.index),
                     applies_since_ckpt: 0,
                 })
             })
@@ -196,6 +380,7 @@ impl ShardSupervisor {
             slots,
             lost_events: AtomicU64::new(0),
             ckpt_every: AtomicUsize::new(DEFAULT_CKPT_EVERY),
+            journal_spill_bytes: AtomicUsize::new(0),
         }
     }
 
@@ -222,6 +407,18 @@ impl ShardSupervisor {
         self.ckpt_every.store(n.max(1), Ordering::Relaxed);
     }
 
+    /// In-memory cap (approximate bytes) per shard journal before it
+    /// spills to a temp file on disk; 0 disables spilling. With a cap
+    /// set, stretching `ckpt_every` costs disk instead of memory.
+    pub fn set_journal_spill_bytes(&self, bytes: usize) {
+        self.journal_spill_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    /// Frames currently spilled to disk for shard `s` (test hook).
+    pub fn journal_spilled_frames(&self, s: usize) -> u64 {
+        self.slots[s].lock().unwrap().wal.spilled_frames()
+    }
+
     /// One RPC to shard `s`, with journaling and lost-shard recovery.
     pub fn call(&self, s: usize, req: ShardRequest) -> ShardReply {
         let mut guard = self.slots[s].lock().unwrap();
@@ -235,7 +432,7 @@ impl ShardSupervisor {
         // clone (the journal replay *is* their retry), reads keep a
         // clone only because a failed send consumes the original.
         let retry = if is_mutating(&req) {
-            slot.wal.push(req.clone());
+            slot.wal.push(req.clone(), self.journal_spill_bytes.load(Ordering::Relaxed));
             None
         } else {
             Some(req.clone())
@@ -275,7 +472,7 @@ impl ShardSupervisor {
         for (i, req) in reqs.into_iter().enumerate() {
             let slot = &mut *guards[i];
             debug_assert!(is_mutating(&req));
-            slot.wal.push(req.clone());
+            slot.wal.push(req.clone(), self.journal_spill_bytes.load(Ordering::Relaxed));
             sent[i] = slot.conn.send(WireMsg::Req(req)).is_ok();
         }
         let mut ok = vec![false; n];
@@ -341,10 +538,14 @@ impl ShardSupervisor {
         Ok(())
     }
 
-    /// The lost-shard path: respawn from the shard-local checkpoint and
-    /// replay the journal. Panics only on a double fault (the respawned
-    /// shard dying during replay), which no caller can meaningfully
-    /// survive.
+    /// The lost-shard path: respawn (or, for a remote peer, reconnect to)
+    /// the shard from the shard-local checkpoint and replay the journal.
+    /// For `Remote` this is the reconnect-and-replay protocol — the
+    /// shard-server hands every new connection a fresh shard, the
+    /// checkpoint is installed over the wire, and the journal brings it
+    /// back to the exact lost state. Panics only on a double fault (the
+    /// respawned shard dying during replay), which no caller can
+    /// meaningfully survive.
     fn recover(&self, s: usize, slot: &mut ShardSlot) {
         self.lost_events.fetch_add(1, Ordering::Relaxed);
         let _ = std::mem::replace(&mut slot.conn, Box::new(DeadConn));
@@ -353,13 +554,12 @@ impl ShardSupervisor {
         }
         let (conn, handle) = spawn_service(self.kind, &self.specs[s], &slot.ckpt);
         slot.conn = conn;
-        slot.handle = Some(handle);
-        for req in &slot.wal {
-            match rpc(slot.conn.as_mut(), req.clone()) {
-                Ok(ShardReply::Ok) => {}
-                other => panic!("shard {s}: journal replay after respawn failed: {other:?}"),
-            }
-        }
+        slot.handle = handle;
+        let ShardSlot { conn, wal, .. } = &mut *slot;
+        wal.for_each(|req| match rpc(conn.as_mut(), req) {
+            Ok(ShardReply::Ok) => {}
+            other => panic!("shard {s}: journal replay after respawn failed: {other:?}"),
+        });
         if self.refresh_ckpt(slot).is_err() {
             panic!("shard {s}: checkpoint refresh after respawn failed");
         }

@@ -1,6 +1,13 @@
 //! Worker runtime (Algorithm 1): pull → generate/download batch → gather
 //! embeddings → compute fwd/bwd → pre-reduce per-ID gradients →
 //! non-blocking push. Plus the compute-backend abstraction.
+//!
+//! The worker plane speaks the wire codec's vocabulary directly: the
+//! [`GradPush`] it builds and the [`PullReply`] it consumes *are* the
+//! frame structs defined in [`crate::transport::codec`] — there is no
+//! worker-local gradient or pull type to convert through, so the same
+//! `run_worker` drives in-process, socket and remote shard planes
+//! unchanged.
 
 pub mod session;
 
@@ -12,7 +19,8 @@ use anyhow::Result;
 use crate::cluster::StragglerModel;
 use crate::data::DataGen;
 use crate::model::NativeModel;
-use crate::ps::{reduce_emb_grads, GradPush, PsServer, PullReply};
+use crate::ps::{reduce_emb_grads, PsServer};
+use crate::transport::codec::{GradPush, PullReply};
 use crate::runtime::{EngineHandle, HostTensor, TrainOut};
 use crate::util::rng::Pcg64;
 

@@ -20,7 +20,8 @@ use crate::model::NativeModel;
 use crate::optim::make_optimizer;
 use crate::ps::PsServer;
 use crate::runtime::{EnginePool, Manifest, VariantDims};
-use crate::shard::PsBuild;
+use crate::shard::{PsBuild, ShardRouter};
+use crate::transport::{RowRecord, ShardSpawnSpec};
 use crate::worker::{run_worker, Backend, BackendKind, WorkerParams};
 
 /// Options beyond the config file.
@@ -77,7 +78,8 @@ pub struct TrainSession {
     straggler: Option<Arc<StragglerModel>>,
 }
 
-fn dims_of(cfg: &ExperimentConfig) -> VariantDims {
+/// Model dimensions a config describes.
+pub fn dims_of(cfg: &ExperimentConfig) -> VariantDims {
     VariantDims {
         fields: cfg.model.fields,
         emb_dim: cfg.model.emb_dim,
@@ -94,6 +96,47 @@ fn optim_for(cfg: &ExperimentConfig, kind: ModeKind) -> (crate::config::OptimKin
     } else {
         (cfg.train.optimizer, cfg.train.lr)
     }
+}
+
+/// The embedding-table config a session derives from `cfg`. Public
+/// because a `shard-server` process must derive the *same* table (same
+/// key-seeded init) from the same config file, or lazily-materialized
+/// rows would diverge between in-process and remote runs.
+pub fn emb_cfg_of(cfg: &ExperimentConfig) -> EmbeddingConfig {
+    EmbeddingConfig {
+        dim: cfg.model.emb_dim,
+        init_scale: 0.05,
+        seed: cfg.seed ^ 0xE0B,
+        shards: 16,
+    }
+}
+
+/// Everything a `gba-train shard-server` process needs to serve shard
+/// `shard_id` of the PS plane that a front built from the same config
+/// will expect: the dense range partition (must agree with the front's
+/// router), the embedding config, the mode's optimizer pair, and the
+/// config-seeded initial parameters. The front still installs its own
+/// checkpoint over the wire on every connect — the spec only fixes the
+/// *shape* (and the lazy-init seed) both sides must share.
+pub fn shard_server_spec(
+    cfg: &ExperimentConfig,
+    kind: ModeKind,
+    shard_id: usize,
+) -> (ShardSpawnSpec, Vec<crate::runtime::HostTensor>) {
+    assert!(shard_id < cfg.ps.n_shards, "shard id {} of {} shards", shard_id, cfg.ps.n_shards);
+    let dims = dims_of(cfg);
+    let init = NativeModel::new(dims).init_params(cfg.seed);
+    let (okind, lr) = optim_for(cfg, kind);
+    let router = ShardRouter::new(cfg.ps.n_shards);
+    let spec = ShardSpawnSpec {
+        index: shard_id,
+        ranges: init.iter().map(|t| router.dense_range(shard_id, t.numel())).collect(),
+        emb_cfg: emb_cfg_of(cfg),
+        opt_dense: make_optimizer(okind, lr),
+        opt_emb: make_optimizer(okind, lr),
+        addr: None,
+    };
+    (spec, init)
 }
 
 impl TrainSession {
@@ -130,25 +173,29 @@ impl TrainSession {
             PsBuild {
                 dims,
                 init_params: init_dense,
-                emb_cfg: EmbeddingConfig {
-                    dim: cfg.model.emb_dim,
-                    init_scale: 0.05,
-                    seed: cfg.seed ^ 0xE0B,
-                    shards: 16,
-                },
+                emb_cfg: emb_cfg_of(&cfg),
                 opt_dense: make_optimizer(okind, lr),
                 opt_emb: make_optimizer(okind, lr),
                 policy,
                 n_shards: cfg.ps.n_shards,
                 transport: cfg.ps.transport,
+                shard_addrs: cfg.ps.shard_addrs.clone(),
             }
             .build(),
         );
+        ps.set_journal_spill_bytes(cfg.ps.journal_spill_bytes);
         if let Some(ckpt) = ckpt {
+            // One bulk InsertRows frame per shard — the restore path that
+            // stays tractable when the shards sit across a wire.
             let emb_slots = make_optimizer(okind, lr).slots();
-            for (key, vec, meta) in &ckpt.emb_rows {
-                ps.insert_emb_row(*key, vec.clone(), vec![0.0; vec.len() * emb_slots], *meta);
-            }
+            let rows: Vec<RowRecord> = ckpt
+                .emb_rows
+                .iter()
+                .map(|(key, vec, meta)| {
+                    (*key, vec.clone(), vec![0.0; vec.len() * emb_slots], *meta)
+                })
+                .collect();
+            ps.insert_emb_rows(rows);
         }
         let gen = Arc::new(DataGen::new(&cfg.model, &cfg.data, cfg.seed));
 

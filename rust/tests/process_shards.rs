@@ -1,0 +1,317 @@
+//! The multi-process PS plane, end to end (ISSUE 3 acceptance): real
+//! `gba-train shard-server` child processes serve the shards over TCP
+//! while this process runs the front.
+//!
+//! Three pins:
+//!
+//! * **Bit-identity** — a deterministic single-threaded GBA epoch driven
+//!   against two shard-server *processes* produces bit-for-bit the same
+//!   dense parameters, embedding rows and loss curve as the same epoch
+//!   against in-process shards. (The codec ships `f32`s as raw bits and
+//!   both sides derive the same spec from the same config file.)
+//! * **Reconnect-and-replay** — killing one child mid-epoch (SIGKILL, a
+//!   real process death) and starting a replacement on the same address
+//!   lets the supervisor reconnect, install the shard-local checkpoint
+//!   over the wire and replay its journal: the run completes
+//!   bit-identical to a no-failure run, with exactly one recovery.
+//! * **A real training epoch** — `TrainSession` with `transport =
+//!   "remote"` trains a day across ≥ 2 OS processes and evaluates sanely.
+//!
+//! Child stderr goes to `$CARGO_TARGET_TMPDIR/process-shards-logs/` so a
+//! CI failure can upload what the shard servers saw.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use gba::config::{ExperimentConfig, ModeKind, TransportKind};
+use gba::coordinator::modes::make_policy;
+use gba::ps::{GradPush, PullReply};
+use gba::runtime::HostTensor;
+use gba::shard::{PsBuild, ShardedPs};
+use gba::worker::session::{dims_of, shard_server_spec, SessionOptions, TrainSession};
+
+const BIN: &str = env!("CARGO_BIN_EXE_gba-train");
+const N_SHARDS: usize = 2;
+
+const CONFIG: &str = r#"
+name = "process-shards-test"
+seed = 21
+
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 16
+hidden2 = 8
+vocab_size = 500
+zipf_s = 1.1
+
+[data]
+days_base = 1
+days_eval = 1
+samples_per_day = 4096
+teacher_seed = 3
+label_noise = 0.02
+
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+lr_async = 0.05
+eval_batch = 256
+eval_samples = 1024
+
+[mode.sync]
+workers = 2
+local_batch = 32
+
+[mode.gba]
+workers = 4
+local_batch = 16
+iota = 3
+
+[ps]
+n_shards = 2
+"#;
+
+fn log_dir() -> PathBuf {
+    let dir = Path::new(env!("CARGO_TARGET_TMPDIR")).join("process-shards-logs");
+    std::fs::create_dir_all(&dir).expect("creating shard-server log dir");
+    dir
+}
+
+fn write_config(tag: &str) -> PathBuf {
+    let path = log_dir().join(format!("{tag}.toml"));
+    std::fs::write(&path, CONFIG).expect("writing test config");
+    path
+}
+
+/// One shard-server child. Killed (and reaped) on drop so a panicking
+/// test never leaks processes.
+struct ShardProc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn `gba-train shard-server` and block until it announces its bound
+/// address on stdout (the readiness protocol the CLI guarantees).
+fn spawn_shard(config: &Path, shard: usize, listen: &str, log_tag: &str) -> ShardProc {
+    let log = std::fs::File::create(log_dir().join(format!("{log_tag}-shard{shard}.log")))
+        .expect("creating shard-server log file");
+    let mut child = Command::new(BIN)
+        .args([
+            "shard-server",
+            "--config",
+            config.to_str().unwrap(),
+            "--shard-id",
+            &shard.to_string(),
+            "--listen",
+            listen,
+            "--mode",
+            "gba",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::from(log))
+        .spawn()
+        .expect("spawning shard-server child");
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().expect("child stdout"))
+        .read_line(&mut line)
+        .expect("reading shard-server banner");
+    let addr = line
+        .strip_prefix("shard-server listening on ")
+        .unwrap_or_else(|| panic!("unexpected shard-server banner: {line:?}"))
+        .split_whitespace()
+        .next()
+        .expect("address token")
+        .to_string();
+    ShardProc { child, addr }
+}
+
+fn spawn_plane(config: &Path, log_tag: &str) -> Vec<ShardProc> {
+    (0..N_SHARDS).map(|s| spawn_shard(config, s, "127.0.0.1:0", log_tag)).collect()
+}
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig::from_toml(CONFIG).expect("test config parses")
+}
+
+fn remote_cfg(addrs: Vec<String>) -> ExperimentConfig {
+    let mut cfg = base_cfg();
+    cfg.ps.transport = TransportKind::Remote;
+    cfg.ps.shard_addrs = addrs;
+    cfg
+}
+
+/// Build a front exactly the way a session would, but driveable
+/// deterministically from one thread. The spec helper is the same one
+/// `shard-server` uses, so front and children agree on ranges,
+/// embedding seed and optimizers by construction.
+fn build_front(cfg: &ExperimentConfig) -> ShardedPs {
+    let (spec, init) = shard_server_spec(cfg, ModeKind::Gba, 0);
+    let mode = cfg.mode(ModeKind::Gba);
+    PsBuild {
+        dims: dims_of(cfg),
+        init_params: init,
+        emb_cfg: spec.emb_cfg.clone(),
+        opt_dense: spec.opt_dense.boxed_clone(),
+        opt_emb: spec.opt_emb.boxed_clone(),
+        policy: make_policy(ModeKind::Gba, &mode, cfg.gba_m_effective()),
+        n_shards: cfg.ps.n_shards,
+        transport: cfg.ps.transport,
+        shard_addrs: cfg.ps.shard_addrs.clone(),
+    }
+    .build()
+}
+
+fn grad(cfg: &ExperimentConfig, token: u64, keys: &[u64], g: f32) -> GradPush {
+    GradPush {
+        worker: 0,
+        token,
+        dense: dims_of(cfg)
+            .param_shapes()
+            .into_iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                HostTensor { shape: s, data: (0..n).map(|i| g + i as f32 * 1e-3).collect() }
+            })
+            .collect(),
+        emb: keys.iter().map(|&k| (k, vec![g; 4])).collect(),
+        n_samples: 16,
+        loss: 0.5 + g * 0.1,
+    }
+}
+
+struct EpochResult {
+    dense_bits: Vec<Vec<u32>>,
+    rows_bits: Vec<Vec<u32>>,
+    loss_curve: Vec<(u64, f32)>,
+    global_steps: u64,
+    lost_events: u64,
+}
+
+/// Drive 6 GBA global batches (M = 4) plus a partial flush from a single
+/// thread — fully deterministic. `after_push(step, j)` runs after each
+/// push; the fault tests use it to kill/replace a child at an exact
+/// point in program order.
+fn run_epoch(cfg: &ExperimentConfig, mut after_push: impl FnMut(u64, u64)) -> EpochResult {
+    let m = cfg.gba_m_effective() as u64;
+    assert_eq!(m, 4);
+    let keys: Vec<u64> = (0..24).map(|i| i * 104_729 + 11).collect();
+    let ps = build_front(cfg);
+    ps.set_day(0, 1000);
+    for step in 0..6u64 {
+        for j in 0..m {
+            let it = match ps.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            let g = 0.2 + step as f32 * 0.03 + j as f32 * 0.01;
+            ps.push(grad(cfg, it.token, &keys[..(6 + step as usize)], g));
+            after_push(step, j);
+        }
+    }
+    let it = match ps.pull(0) {
+        PullReply::Work(it) => it,
+        other => panic!("{other:?}"),
+    };
+    ps.push(grad(cfg, it.token, &keys[..4], 0.9));
+    assert!(ps.flush_partial());
+    assert!(ps.quiescent());
+    EpochResult {
+        dense_bits: ps
+            .dense_params()
+            .into_iter()
+            .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+            .collect(),
+        rows_bits: keys
+            .iter()
+            .map(|&k| ps.emb_row(k).iter().map(|x| x.to_bits()).collect())
+            .collect(),
+        loss_curve: ps.loss_curve(),
+        global_steps: ps.counters().global_steps,
+        lost_events: ps.lost_shard_events(),
+    }
+}
+
+fn assert_bit_identical(a: &EpochResult, b: &EpochResult) {
+    assert_eq!(a.global_steps, b.global_steps);
+    assert_eq!(a.loss_curve, b.loss_curve, "loss curves diverged");
+    assert_eq!(a.dense_bits, b.dense_bits, "dense parameters diverged");
+    assert_eq!(a.rows_bits, b.rows_bits, "embedding rows diverged");
+}
+
+/// Acceptance core: shards in real child processes are bit-identical to
+/// in-process shards on an identical pull/push schedule.
+#[test]
+fn remote_processes_bit_identical_to_inproc() {
+    let inproc = run_epoch(&base_cfg(), |_, _| {});
+    assert_eq!(inproc.lost_events, 0);
+
+    let config = write_config("bitident");
+    let plane = spawn_plane(&config, "bitident");
+    let addrs: Vec<String> = plane.iter().map(|p| p.addr.clone()).collect();
+    let remote = run_epoch(&remote_cfg(addrs), |_, _| {});
+    assert_eq!(remote.lost_events, 0, "clean remote run must not recover");
+    assert_bit_identical(&remote, &inproc);
+}
+
+/// Kill one shard-server with SIGKILL mid-epoch (mid-global-batch), put
+/// a replacement on the same address, and finish: exactly one
+/// reconnect-and-replay recovery, results bit-identical to both the
+/// clean remote run and the in-process run.
+#[test]
+fn killed_shard_server_process_recovers_bit_identically() {
+    let inproc = run_epoch(&base_cfg(), |_, _| {});
+
+    let config = write_config("killrestart");
+    let mut plane = spawn_plane(&config, "killrestart");
+    let addrs: Vec<String> = plane.iter().map(|p| p.addr.clone()).collect();
+    let victim_addr = addrs[0].clone();
+    let cfg = remote_cfg(addrs);
+    let config2 = config.clone();
+    let mut killed = false;
+    let faulty = run_epoch(&cfg, |step, j| {
+        // After the second push of global batch 3: the flush that
+        // completes this batch is the one that finds the corpse.
+        if step == 3 && j == 1 && !killed {
+            killed = true;
+            plane[0].child.kill().expect("killing shard-server child");
+            plane[0].child.wait().expect("reaping shard-server child");
+            // The replacement binds the same address the front dials.
+            plane[0] = spawn_shard(&config2, 0, &victim_addr, "killrestart-respawn");
+        }
+    });
+    assert!(killed, "fault injection never ran");
+    assert_eq!(faulty.lost_events, 1, "exactly one lost-shard recovery");
+    assert_bit_identical(&faulty, &inproc);
+}
+
+/// A real multi-worker training day over ≥ 2 OS processes: the session
+/// layer only changed its config, and the model still learns.
+#[test]
+fn session_trains_an_epoch_across_real_processes() {
+    let config = write_config("session");
+    let plane = spawn_plane(&config, "session");
+    let addrs: Vec<String> = plane.iter().map(|p| p.addr.clone()).collect();
+    let cfg = remote_cfg(addrs);
+    let session = TrainSession::new(cfg, ModeKind::Gba, SessionOptions::default())
+        .expect("building remote session");
+    assert_eq!(session.ps().transport(), TransportKind::Remote);
+    assert_eq!(session.ps().n_shards(), N_SHARDS);
+    let before = session.eval_auc(1).expect("eval before");
+    let stats = session.train_day(0).expect("training a day across processes");
+    assert!(stats.counters.global_steps > 0);
+    let after = session.eval_auc(1).expect("eval after");
+    assert!(after > before, "auc did not improve: {before} -> {after}");
+    assert!(after > 0.55, "auc after one remote day = {after}");
+    assert_eq!(session.ps().lost_shard_events(), 0);
+}

@@ -42,6 +42,7 @@ fn build(n_shards: usize, transport: TransportKind) -> ShardedPs {
         policy: Box::new(GbaPolicy::with_iota(2, 3)),
         n_shards,
         transport,
+        shard_addrs: Vec::new(),
     }
     .build()
 }

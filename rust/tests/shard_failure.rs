@@ -76,6 +76,7 @@ fn build(transport: TransportKind) -> ShardedPs {
         policy: Box::new(GbaPolicy::with_iota(2, 3)),
         n_shards: N_SHARDS,
         transport,
+        shard_addrs: Vec::new(),
     }
     .build()
 }
@@ -179,6 +180,57 @@ fn killing_every_shard_in_turn_is_survivable() {
         let faulty = run_epoch(TransportKind::InProc, Some(shard));
         assert_recovered(&clean, &faulty);
     }
+}
+
+/// ROADMAP follow-up (e): with `[ps] journal_spill_bytes` set, a long
+/// checkpoint cadence keeps the journal on disk instead of in memory —
+/// and a kill must replay the spilled segment plus the in-memory tail
+/// to the exact same state as the never-spilling run.
+#[test]
+fn journal_spill_to_disk_replays_bit_identically() {
+    let keys: Vec<u64> = (0..16).map(|i| i * 104_729 + 11).collect();
+    let drive = |spill_bytes: usize| {
+        let ps = build(TransportKind::InProc);
+        // Cadence far beyond the epoch: nothing truncates the journal,
+        // so with a tiny cap the spill path must engage.
+        ps.set_shard_ckpt_every(1_000_000);
+        ps.set_journal_spill_bytes(spill_bytes);
+        ps.set_day(0, 1000);
+        for step in 0..8u64 {
+            for j in 0..2u64 {
+                let it = match ps.pull(0) {
+                    PullReply::Work(it) => it,
+                    other => panic!("{other:?}"),
+                };
+                ps.push(grad(it.token, &keys[..(4 + step as usize)], 0.2 + step as f32 * 0.03 + j as f32 * 0.01));
+            }
+        }
+        if spill_bytes > 0 {
+            assert!(
+                (0..N_SHARDS).any(|s| ps.journal_spilled_frames(s) > 0),
+                "spill cap of {spill_bytes} bytes never engaged"
+            );
+        }
+        // Kill one shard: recovery replays the whole journal (disk
+        // segment first, then the tail) from the initial checkpoint.
+        ps.kill_shard(1);
+        let dense: Vec<Vec<u32>> = ps
+            .dense_params()
+            .into_iter()
+            .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        let rows: Vec<Vec<u32>> = keys
+            .iter()
+            .map(|&k| ps.emb_row(k).iter().map(|x| x.to_bits()).collect())
+            .collect();
+        (dense, rows, ps.lost_shard_events())
+    };
+    let in_memory = drive(0);
+    let spilled = drive(128);
+    assert_eq!(in_memory.2, 1);
+    assert_eq!(spilled.2, 1);
+    assert_eq!(spilled.0, in_memory.0, "dense params diverged after spilled replay");
+    assert_eq!(spilled.1, in_memory.1, "embedding rows diverged after spilled replay");
 }
 
 /// The lost-token path composes with the lost-shard path: a worker whose

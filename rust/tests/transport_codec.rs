@@ -118,7 +118,7 @@ fn prop_pull_reply_roundtrip() {
 #[test]
 fn prop_shard_rpc_roundtrip() {
     check("shard_rpc_roundtrip", 200, |rng| {
-        let msg = match rng.gen_range(4) {
+        let msg = match rng.gen_range(5) {
             0 => WireMsg::Req(ShardRequest::Apply {
                 opt_step: rng.next_u64(),
                 dense: gen::vec_of(rng, 0, 4, |rng| gen::vec_of(rng, 0, 8, weird_f32)),
@@ -132,7 +132,20 @@ fn prop_shard_rpc_roundtrip() {
                 state: gen::vec_of(rng, 0, 12, weird_f32),
                 meta: RowMeta { last_update_step: rng.next_u64(), update_count: rng.next_u32() },
             }),
-            2 => WireMsg::Reply(ShardReply::RowDump {
+            2 => WireMsg::Req(ShardRequest::InsertRows {
+                rows: gen::vec_of(rng, 0, 6, |rng| {
+                    (
+                        weird_key(rng),
+                        gen::vec_of(rng, 0, 4, weird_f32),
+                        gen::vec_of(rng, 0, 8, weird_f32),
+                        RowMeta {
+                            last_update_step: rng.next_u64(),
+                            update_count: rng.next_u32(),
+                        },
+                    )
+                }),
+            }),
+            3 => WireMsg::Reply(ShardReply::RowDump {
                 rows: gen::vec_of(rng, 0, 4, |rng| {
                     (
                         weird_key(rng),
