@@ -19,6 +19,8 @@ fn main() {
         hetero_sigma: 0.5,
         ps_apply_ms: 0.5,
         wire_ms: 0.0,
+        workers: gba::config::WorkerPlane::InProc,
+        worker_listen: String::new(),
     };
     let trace = LoadTrace::from_name(&cluster.trace);
     let workers = 16;

@@ -31,6 +31,8 @@ fn sim_scaleout(b: &mut Bencher) {
         hetero_sigma: 0.5,
         ps_apply_ms: 0.6,
         wire_ms: 0.0,
+        workers: gba::config::WorkerPlane::InProc,
+        worker_listen: String::new(),
     };
     let global = 400 * 1000;
     for workers in [100usize, 200, 400, 800] {

@@ -179,6 +179,8 @@ mod tests {
             hetero_sigma: 0.0,
             ps_apply_ms: 0.5,
             wire_ms: 0.0,
+            workers: crate::config::WorkerPlane::InProc,
+            worker_listen: String::new(),
         };
         let m = StragglerModel::new(&cfg, 4, 1);
         let mut rng = Pcg64::seeded(2);
@@ -197,6 +199,8 @@ mod tests {
             hetero_sigma: 0.5,
             ps_apply_ms: 0.5,
             wire_ms: 0.0,
+            workers: crate::config::WorkerPlane::InProc,
+            worker_listen: String::new(),
         };
         let m = StragglerModel::new(&cfg, 64, 7);
         let mut rng = Pcg64::seeded(3);

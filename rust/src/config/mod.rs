@@ -201,6 +201,36 @@ ps_apply_ms = 0.5
     }
 
     #[test]
+    fn cluster_workers_plane_default_parse_and_reject() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.cluster.workers, WorkerPlane::InProc, "absent defaults to inproc");
+        assert_eq!(cfg.cluster.worker_listen, "127.0.0.1:0");
+        let remote = SAMPLE.replace(
+            "trace = \"diurnal\"",
+            "trace = \"diurnal\"\nworkers = \"remote\"\nworker_listen = \"127.0.0.1:7100\"",
+        );
+        let cfg = ExperimentConfig::from_toml(&remote).unwrap();
+        assert_eq!(cfg.cluster.workers, WorkerPlane::Remote);
+        assert_eq!(cfg.cluster.worker_listen, "127.0.0.1:7100");
+        let bad = SAMPLE.replace("trace = \"diurnal\"", "trace = \"diurnal\"\nworkers = \"threads\"");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        let not_str = SAMPLE.replace("trace = \"diurnal\"", "trace = \"diurnal\"\nworkers = 4");
+        assert!(ExperimentConfig::from_toml(&not_str).is_err());
+    }
+
+    #[test]
+    fn ps_connect_deadline_parses_with_default_and_rejects_zero() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.ps.connect_deadline_ms, 20_000);
+        let short = format!("{SAMPLE}\n[ps]\nn_shards = 2\nconnect_deadline_ms = 500\n");
+        assert_eq!(ExperimentConfig::from_toml(&short).unwrap().ps.connect_deadline_ms, 500);
+        let zero = format!("{SAMPLE}\n[ps]\nconnect_deadline_ms = 0\n");
+        assert!(ExperimentConfig::from_toml(&zero).is_err());
+        let bad = format!("{SAMPLE}\n[ps]\nconnect_deadline_ms = \"soon\"\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
     fn cluster_wire_ms_parses_with_default() {
         let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
         assert_eq!(cfg.cluster.wire_ms, 0.0);

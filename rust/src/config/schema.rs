@@ -203,6 +203,36 @@ impl TransportKind {
     }
 }
 
+/// Where the Algorithm-1 worker loops run (`[cluster] workers`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerPlane {
+    /// Worker loops are threads of the trainer front (default).
+    InProc,
+    /// Workers are *separate OS processes* (`gba-train worker`), dialing
+    /// the front at `[cluster] worker_listen` and driving the identical
+    /// `run_worker` loop over the wire codec. Results are bit-for-bit
+    /// identical to in-thread workers (pinned by
+    /// `tests/process_workers.rs`).
+    Remote,
+}
+
+impl WorkerPlane {
+    pub fn parse(s: &str) -> Result<WorkerPlane> {
+        Ok(match s {
+            "inproc" => WorkerPlane::InProc,
+            "remote" => WorkerPlane::Remote,
+            _ => bail!("unknown worker plane '{s}' (inproc|remote)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkerPlane::InProc => "inproc",
+            WorkerPlane::Remote => "remote",
+        }
+    }
+}
+
 /// Parameter-server plane shape (`[ps]` table).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PsConfig {
@@ -221,6 +251,11 @@ pub struct PsConfig {
     /// disk so the checkpoint cadence can stretch without memory
     /// growth. 0 (the default) never spills.
     pub journal_spill_bytes: usize,
+    /// How long (ms) the front keeps dialing a `shard-server` address —
+    /// at session build and when recovering a dropped peer — before the
+    /// shard is declared unreachable. At build the failure surfaces as
+    /// `Err` from `TrainSession::new`; mid-training it is fatal.
+    pub connect_deadline_ms: u64,
 }
 
 impl Default for PsConfig {
@@ -230,6 +265,7 @@ impl Default for PsConfig {
             transport: TransportKind::InProc,
             shard_addrs: Vec::new(),
             journal_spill_bytes: 0,
+            connect_deadline_ms: 20_000,
         }
     }
 }
@@ -248,6 +284,13 @@ pub struct ClusterConfig {
     /// socket transport (ms); the simulator adds it to the apply cost
     /// when `[ps] transport = "socket"`.
     pub wire_ms: f64,
+    /// Worker plane: in-thread loops or remote `gba-train worker`
+    /// processes.
+    pub workers: WorkerPlane,
+    /// Address the front's worker service listens on (`Remote` plane
+    /// only). `host:0` picks a free port; the front prints the bound
+    /// address.
+    pub worker_listen: String,
 }
 
 #[derive(Clone, Debug)]
@@ -349,6 +392,21 @@ impl ExperimentConfig {
             hetero_sigma: doc.get_f64("cluster.hetero_sigma").unwrap_or(0.3),
             ps_apply_ms: doc.get_f64("cluster.ps_apply_ms").unwrap_or(0.5),
             wire_ms: doc.get_f64("cluster.wire_ms").unwrap_or(0.0),
+            // A malformed worker plane must error, not silently fall
+            // back to in-thread workers (same rule as [ps] below).
+            workers: match doc.get("cluster.workers") {
+                None => WorkerPlane::InProc,
+                Some(v) => WorkerPlane::parse(
+                    v.as_str().context("cluster.workers must be a string")?,
+                )?,
+            },
+            worker_listen: match doc.get("cluster.worker_listen") {
+                None => "127.0.0.1:0".to_string(),
+                Some(v) => v
+                    .as_str()
+                    .context("cluster.worker_listen must be a \"host:port\" string")?
+                    .to_string(),
+            },
         };
         // Absent [ps] defaults to one in-process shard; a *malformed*
         // value must error, not silently fall back (a "4-shard" or
@@ -385,6 +443,13 @@ impl ExperimentConfig {
                 Some(v) => v
                     .as_usize()
                     .context("ps.journal_spill_bytes must be a non-negative integer")?,
+            },
+            connect_deadline_ms: match doc.get("ps.connect_deadline_ms") {
+                None => 20_000,
+                Some(v) => v
+                    .as_usize()
+                    .context("ps.connect_deadline_ms must be a positive integer")?
+                    as u64,
             },
         };
         Ok(ExperimentConfig {
@@ -447,6 +512,12 @@ impl ExperimentConfig {
         }
         if self.ps.transport != TransportKind::Remote && !self.ps.shard_addrs.is_empty() {
             bail!("ps.shard_addrs is only meaningful with ps.transport = \"remote\"");
+        }
+        if self.ps.connect_deadline_ms == 0 {
+            bail!("ps.connect_deadline_ms must be positive");
+        }
+        if self.cluster.workers == WorkerPlane::Remote && self.cluster.worker_listen.is_empty() {
+            bail!("cluster.workers = \"remote\" needs a cluster.worker_listen address");
         }
         Ok(())
     }

@@ -5,6 +5,8 @@
 //!   train                 run continual training from a config
 //!   shard-server          serve one PS shard on a TCP socket (the
 //!                         multi-process deployment; see docs/DEPLOY.md)
+//!   worker                run one training worker as this process,
+//!                         dialing a front with [cluster] workers="remote"
 //!   datagen               inspect the synthetic data generator
 //!   inspect               dump the AOT artifact manifest
 //!
@@ -14,12 +16,13 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use gba::config::{ExperimentConfig, ModeKind, TransportKind};
+use gba::config::{ExperimentConfig, ModeKind, TransportKind, WorkerPlane};
 use gba::data::DataGen;
 use gba::experiments::{self, ExpCtx};
 use gba::metrics::report::fmt_auc;
 use gba::runtime::Manifest;
 use gba::transport::serve_shard;
+use gba::worker::remote::{run_worker_process, WorkerProcOptions};
 use gba::worker::session::{shard_server_spec, SessionOptions, TrainSession};
 use gba::worker::BackendKind;
 
@@ -76,10 +79,19 @@ USAGE:
                                  over TCP, or in shard-server processes)
                   [--shard-addrs HOST:PORT,...]   (connect to remote
                                  shard-servers; implies --transport remote)
+                  [--workers inproc|remote]   (override [cluster] workers:
+                                 worker loops in-thread or as gba-train
+                                 worker processes dialing this front)
+                  [--worker-listen ADDR]   (override [cluster] worker_listen)
   gba-train shard-server --config FILE --shard-id K [--listen ADDR]
                   [--mode MODE] [--shards N]
                   (serve shard K of the PS plane on a listening socket;
                    prints "shard-server listening on ADDR" once bound)
+  gba-train worker --config FILE --connect ADDR --worker-id W
+                  [--mode MODE] [--fail-prob P] [--batch-sleep-ms T]
+                  (run worker W's Algorithm-1 loop as this process,
+                   against a front started with --workers remote; exits 0
+                   when the front ends the session)
   gba-train datagen --config FILE [--day D] [--samples N]
   gba-train inspect [--artifacts DIR]
 
@@ -99,6 +111,7 @@ fn main() {
         "experiment" => cmd_experiment(&args),
         "train" => cmd_train(&args),
         "shard-server" => cmd_shard_server(&args),
+        "worker" => cmd_worker(&args),
         "datagen" => cmd_datagen(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
@@ -149,6 +162,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     if cfg.ps.transport == TransportKind::Remote {
         cfg.validate()?; // addr count must match the shard count
     }
+    if let Some(plane) = args.get("workers") {
+        cfg.cluster.workers = WorkerPlane::parse(plane)?;
+    }
+    if let Some(listen) = args.get("worker-listen") {
+        cfg.cluster.worker_listen = listen.to_string();
+        cfg.validate()?;
+    }
     let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
     let days: usize = args
         .get("days")
@@ -156,6 +176,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         .transpose()?
         .unwrap_or(cfg.data.days_base + cfg.data.days_eval - 1);
     let switch_to = args.get("switch-to").map(ModeKind::parse).transpose()?;
+    // switch_mode would reject this at the switch day — fail before
+    // day 0 instead of after hours of training.
+    anyhow::ensure!(
+        switch_to.is_none() || cfg.cluster.workers == WorkerPlane::InProc,
+        "--switch-to is not supported with --workers remote (remote workers hold their \
+         launch-time mode's shape); restart the session and workers in the new mode instead"
+    );
     let switch_day: usize =
         args.get("switch-day").map(|s| s.parse()).transpose()?.unwrap_or(days / 2);
     let opts = SessionOptions {
@@ -166,16 +193,25 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     println!(
-        "task {} | mode {} | G_sync = {} | M = {} | ps shards = {} ({}) | backend {:?}",
+        "task {} | mode {} | G_sync = {} | M = {} | ps shards = {} ({}) | workers {} | backend {:?}",
         cfg.name,
         kind.paper_name(),
         cfg.global_batch_sync(),
         cfg.gba_m_effective(),
         cfg.ps.n_shards,
         cfg.ps.transport.as_str(),
+        cfg.cluster.workers.as_str(),
         opts.backend
     );
+    let n_workers = cfg.mode(kind).workers;
     let mut session = TrainSession::new(cfg, kind, opts)?;
+    if let Some(addr) = session.worker_addr() {
+        // One parseable line, mirroring the shard-server banner: process
+        // supervisors (and tests) scrape the bound address from it.
+        println!("worker front listening on {addr} (waiting for {n_workers} workers)");
+        use std::io::Write;
+        std::io::stdout().flush()?;
+    }
     for d in 0..days {
         if let Some(to) = switch_to {
             if d == switch_day {
@@ -200,6 +236,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             stats.counters.dense_staleness.max(),
         );
     }
+    // Clean end of training: remote workers get the SessionOver
+    // farewell and exit 0. Error paths skip this, so workers exit
+    // nonzero when the front fails — restart policies see both.
+    session.shutdown_workers();
     Ok(())
 }
 
@@ -251,6 +291,35 @@ fn cmd_shard_server(args: &Args) -> Result<()> {
         cfg.model.emb_dim
     );
     serve_shard(listener, spec, &init).context("shard-server accept loop failed")?;
+    Ok(())
+}
+
+/// Run one training worker as this process: dial the front announced by
+/// `gba-train train --workers remote`, handshake, then serve days until
+/// the front closes the session. The config file and `--mode` must
+/// match the front's — the `Hello` handshake pins the shape-critical
+/// keys, docs/DEPLOY.md documents the rest of the operator contract.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let config = args.get("config").context("--config FILE required")?;
+    let cfg = ExperimentConfig::load(config)?;
+    let addr = args.get("connect").context("--connect ADDR required")?;
+    let worker_id: usize = args
+        .get("worker-id")
+        .context("--worker-id W required")?
+        .parse()
+        .context("--worker-id wants a worker index")?;
+    let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
+    let opts = WorkerProcOptions {
+        fail_prob: args.get("fail-prob").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
+        batch_sleep_ms: args
+            .get("batch-sleep-ms")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(0.0),
+        ..WorkerProcOptions::default()
+    };
+    let days = run_worker_process(&cfg, kind, worker_id, addr, opts)?;
+    eprintln!("worker {worker_id}: session over after {days} day(s)");
     Ok(())
 }
 

@@ -72,7 +72,9 @@ pub use shard::{DenseShardState, PsShard, ShardStats};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
 
 use crate::config::TransportKind;
 use crate::coordinator::{ModePolicy, WorkerId};
@@ -139,10 +141,21 @@ pub struct PsBuild {
     /// `host:port` per shard-server process; length must equal
     /// `n_shards` for the `Remote` transport, empty otherwise.
     pub shard_addrs: Vec<String>,
+    /// Redial window per shard-server (initial connect and recovery);
+    /// `None` uses [`RECONNECT_DEADLINE`](crate::transport::RECONNECT_DEADLINE).
+    pub connect_deadline: Option<Duration>,
 }
 
 impl PsBuild {
+    /// [`try_build`](Self::try_build) for infallible configurations
+    /// (every in-process transport). Panics where `try_build` errors —
+    /// for `Remote`, prefer `try_build` so an unreachable shard-server
+    /// reports instead of aborting.
     pub fn build(self) -> ShardedPs {
+        self.try_build().expect("building the PS plane")
+    }
+
+    pub fn try_build(self) -> Result<ShardedPs> {
         assert_eq!(self.init_params.len(), 6, "dense params are (w1,b1,w2,b2,w3,b3)");
         assert!(self.n_shards >= 1, "need at least one shard");
         if self.transport == TransportKind::Remote {
@@ -169,8 +182,11 @@ impl PsBuild {
                 addr: self.shard_addrs.get(s).cloned(),
             })
             .collect();
-        let supervisor = ShardSupervisor::start(self.transport, specs, &self.init_params);
-        ShardedPs {
+        let deadline =
+            self.connect_deadline.unwrap_or(crate::transport::RECONNECT_DEADLINE);
+        let supervisor =
+            ShardSupervisor::start(self.transport, specs, &self.init_params, deadline)?;
+        Ok(ShardedPs {
             dims: self.dims,
             control: ControlPlane::new(self.policy),
             router,
@@ -180,7 +196,7 @@ impl PsBuild {
             snapshot: RwLock::new(()),
             pull_stall_ns: AtomicU64::new(0),
             supervisor,
-        }
+        })
     }
 }
 
@@ -244,6 +260,7 @@ impl ShardedPs {
             n_shards,
             transport: TransportKind::InProc,
             shard_addrs: Vec::new(),
+            connect_deadline: None,
         }
         .build()
     }
@@ -414,6 +431,9 @@ impl ShardedPs {
             }
         }
         let mut guard = FinishGuard { control: &self.control, norm: None };
+        // Shards whose shard-local checkpoint cadence comes due in this
+        // flush; refreshed *after* the gate and snapshot lock drop.
+        let mut ckpt_due = Vec::new();
 
         if job.included > 0 {
             // --- dense aggregation: sum_i w_i * g_i / divisor --------------
@@ -476,9 +496,16 @@ impl ShardedPs {
             // Exclude dense readers for the whole apply so every
             // `dense_params()` snapshot is a coherent global step.
             let _apply_excl = self.snapshot.write().unwrap();
-            self.supervisor.apply_all(reqs);
+            ckpt_due = self.supervisor.apply_all(reqs);
         }
         drop(guard); // normal path: finish_apply with any collected norm
+        // Off the critical path: the apply gate is down and the snapshot
+        // lock released, so the O(shard state) checkpoint sweep overlaps
+        // pulls, pushes and other shards' gathers instead of stalling
+        // them (ROADMAP follow-up (e), remaining half).
+        if !ckpt_due.is_empty() {
+            self.supervisor.refresh_due(&ckpt_due);
+        }
     }
 
     /// Cut an aggregated dense gradient into shard `s`'s range slices.
@@ -962,6 +989,7 @@ mod tests {
             n_shards: 2,
             transport: TransportKind::Socket,
             shard_addrs: Vec::new(),
+            connect_deadline: None,
         }
         .build();
         assert_eq!(ps.transport(), TransportKind::Socket);

@@ -256,6 +256,8 @@ mod tests {
                 hetero_sigma: 0.6,
                 ps_apply_ms: 0.1,
                 wire_ms: 0.0,
+                workers: crate::config::WorkerPlane::InProc,
+                worker_listen: String::new(),
             };
             StragglerModel::new(&cfg, workers, seed)
         } else {

@@ -128,6 +128,72 @@ pub enum WireMsg {
     Req(ShardRequest),
     /// Shard → front RPC reply.
     Reply(ShardReply),
+    /// Remote worker → front session request.
+    WorkerReq(WorkerRequest),
+    /// Front → remote worker session reply.
+    WorkerRep(WorkerReply),
+}
+
+/// The worker-plane session RPC: everything a `gba-train worker`
+/// process sends the front's worker service
+/// ([`WorkerFront`](super::WorkerFront)). The in-day verbs mirror
+/// [`PsClient`](crate::worker::PsClient) one-to-one — `Pull`, `Push`,
+/// `Gather`, `DenseParams`, `Reset` — wrapped by the session frames:
+/// a connect-time `Hello` identity/shape handshake, `BeginDay` (blocks
+/// server-side until the front starts a day), and `EndOfDay` returning
+/// the worker's [`WorkerStats`](crate::worker::WorkerStats) fields.
+#[derive(Clone, Debug)]
+pub enum WorkerRequest {
+    /// Identity/shape handshake: the worker declares who it is and the
+    /// config-derived shape it will train with. The front asserts
+    /// agreement so a worker launched with the wrong config, mode or id
+    /// fails loudly at connect instead of silently diverging (learning
+    /// rates and data details beyond `samples_per_day` stay the
+    /// operator's contract — see docs/DEPLOY.md).
+    Hello {
+        worker: u64,
+        local_batch: u64,
+        fields: u32,
+        emb_dim: u32,
+        seed: u64,
+        samples_per_day: u64,
+    },
+    /// Ask for the next training day; the reply arrives when the front
+    /// starts one (or the connection closes — the session is over).
+    BeginDay,
+    /// Algorithm 1 pull; the front answers with blocking semantics, so
+    /// `PullReply::Wait` never crosses the wire.
+    Pull { worker: u64 },
+    /// Gradient push (the same frame struct the shard plane ships).
+    Push(GradPush),
+    /// Embedding gather for one batch's flattened key block.
+    Gather { keys: Vec<u64>, batch: u64, fields: u64 },
+    /// Dense parameter snapshot.
+    DenseParams,
+    /// Worker-side failure: forget the in-flight claim (Appendix B).
+    Reset { worker: u64 },
+    /// Day finished: stats back to the front, field-for-field
+    /// [`WorkerStats`](crate::worker::WorkerStats).
+    EndOfDay { batches: u64, samples: u64, failures: u64, busy_sec: f64 },
+}
+
+/// Replies to [`WorkerRequest`], one per request shape.
+#[derive(Clone, Debug)]
+pub enum WorkerReply {
+    /// Generic ack (`Hello` / `Push` / `Reset` / `EndOfDay`).
+    Ok,
+    /// `BeginDay`: a day started.
+    Day { day: u64 },
+    /// `BeginDay`: the session ended cleanly — the worker exits 0. An
+    /// abrupt connection loss is *not* a clean end (the front crashed);
+    /// this farewell frame is what distinguishes the two.
+    SessionOver,
+    /// `Pull` payload.
+    Pull(PullReply),
+    /// `Gather` payload: the `[batch, fields, dim]` tensor.
+    Emb(HostTensor),
+    /// `DenseParams` payload.
+    Dense(Vec<HostTensor>),
 }
 
 /// The shard-plane RPC: every way the front touches a data-plane shard.
@@ -208,6 +274,10 @@ fn put_f32(b: &mut Vec<u8>, x: f32) {
     put_u32(b, x.to_bits());
 }
 
+fn put_f64(b: &mut Vec<u8>, x: f64) {
+    put_u64(b, x.to_bits());
+}
+
 fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
     put_u32(b, xs.len() as u32);
     for &x in xs {
@@ -245,6 +315,36 @@ fn put_row_records(b: &mut Vec<u8>, rows: &[RowRecord]) {
     }
 }
 
+fn put_grad_push(b: &mut Vec<u8>, g: &GradPush) {
+    put_u64(b, g.worker as u64);
+    put_u64(b, g.token);
+    put_u32(b, g.dense.len() as u32);
+    for t in &g.dense {
+        put_tensor(b, t);
+    }
+    put_u32(b, g.emb.len() as u32);
+    for (key, gsum) in &g.emb {
+        put_u64(b, *key);
+        put_f32s(b, gsum);
+    }
+    put_u64(b, g.n_samples as u64);
+    put_f32(b, g.loss);
+}
+
+fn put_pull_reply(b: &mut Vec<u8>, p: &PullReply) {
+    match p {
+        PullReply::Work(it) => {
+            put_u8(b, 0);
+            put_u64(b, it.token);
+            put_u64(b, it.version);
+            put_u64(b, it.day as u64);
+            put_u64(b, it.batch_index as u64);
+        }
+        PullReply::Wait => put_u8(b, 1),
+        PullReply::EndOfData => put_u8(b, 2),
+    }
+}
+
 /// Encode one message body (version + tag + payload, no length prefix).
 pub fn encode(msg: &WireMsg) -> Vec<u8> {
     let mut b = Vec::with_capacity(64);
@@ -252,33 +352,11 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
     match msg {
         WireMsg::Push(g) => {
             put_u8(&mut b, 1);
-            put_u64(&mut b, g.worker as u64);
-            put_u64(&mut b, g.token);
-            put_u32(&mut b, g.dense.len() as u32);
-            for t in &g.dense {
-                put_tensor(&mut b, t);
-            }
-            put_u32(&mut b, g.emb.len() as u32);
-            for (key, gsum) in &g.emb {
-                put_u64(&mut b, *key);
-                put_f32s(&mut b, gsum);
-            }
-            put_u64(&mut b, g.n_samples as u64);
-            put_f32(&mut b, g.loss);
+            put_grad_push(&mut b, g);
         }
         WireMsg::Pull(p) => {
             put_u8(&mut b, 2);
-            match p {
-                PullReply::Work(it) => {
-                    put_u8(&mut b, 0);
-                    put_u64(&mut b, it.token);
-                    put_u64(&mut b, it.version);
-                    put_u64(&mut b, it.day as u64);
-                    put_u64(&mut b, it.batch_index as u64);
-                }
-                PullReply::Wait => put_u8(&mut b, 1),
-                PullReply::EndOfData => put_u8(&mut b, 2),
-            }
+            put_pull_reply(&mut b, p);
         }
         WireMsg::Req(r) => {
             put_u8(&mut b, 3);
@@ -288,8 +366,86 @@ pub fn encode(msg: &WireMsg) -> Vec<u8> {
             put_u8(&mut b, 4);
             encode_reply(&mut b, r);
         }
+        WireMsg::WorkerReq(r) => {
+            put_u8(&mut b, 5);
+            encode_worker_req(&mut b, r);
+        }
+        WireMsg::WorkerRep(r) => {
+            put_u8(&mut b, 6);
+            encode_worker_reply(&mut b, r);
+        }
     }
     b
+}
+
+fn encode_worker_req(b: &mut Vec<u8>, r: &WorkerRequest) {
+    match r {
+        WorkerRequest::Hello { worker, local_batch, fields, emb_dim, seed, samples_per_day } => {
+            put_u8(b, 0);
+            put_u64(b, *worker);
+            put_u64(b, *local_batch);
+            put_u32(b, *fields);
+            put_u32(b, *emb_dim);
+            put_u64(b, *seed);
+            put_u64(b, *samples_per_day);
+        }
+        WorkerRequest::BeginDay => put_u8(b, 1),
+        WorkerRequest::Pull { worker } => {
+            put_u8(b, 2);
+            put_u64(b, *worker);
+        }
+        WorkerRequest::Push(g) => {
+            put_u8(b, 3);
+            put_grad_push(b, g);
+        }
+        WorkerRequest::Gather { keys, batch, fields } => {
+            put_u8(b, 4);
+            put_u32(b, keys.len() as u32);
+            for &k in keys {
+                put_u64(b, k);
+            }
+            put_u64(b, *batch);
+            put_u64(b, *fields);
+        }
+        WorkerRequest::DenseParams => put_u8(b, 5),
+        WorkerRequest::Reset { worker } => {
+            put_u8(b, 6);
+            put_u64(b, *worker);
+        }
+        WorkerRequest::EndOfDay { batches, samples, failures, busy_sec } => {
+            put_u8(b, 7);
+            put_u64(b, *batches);
+            put_u64(b, *samples);
+            put_u64(b, *failures);
+            put_f64(b, *busy_sec);
+        }
+    }
+}
+
+fn encode_worker_reply(b: &mut Vec<u8>, r: &WorkerReply) {
+    match r {
+        WorkerReply::Ok => put_u8(b, 0),
+        WorkerReply::Day { day } => {
+            put_u8(b, 1);
+            put_u64(b, *day);
+        }
+        WorkerReply::Pull(p) => {
+            put_u8(b, 2);
+            put_pull_reply(b, p);
+        }
+        WorkerReply::Emb(t) => {
+            put_u8(b, 3);
+            put_tensor(b, t);
+        }
+        WorkerReply::Dense(ts) => {
+            put_u8(b, 4);
+            put_u32(b, ts.len() as u32);
+            for t in ts {
+                put_tensor(b, t);
+            }
+        }
+        WorkerReply::SessionOver => put_u8(b, 5),
+    }
 }
 
 fn encode_req(b: &mut Vec<u8>, r: &ShardRequest) {
@@ -424,6 +580,10 @@ impl<'a> Rd<'a> {
         Ok(f32::from_bits(self.u32()?))
     }
 
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
     fn usize64(&mut self) -> Result<usize, CodecError> {
         usize::try_from(self.u64()?).map_err(|_| CodecError::Malformed("usize overflow"))
     }
@@ -432,6 +592,20 @@ impl<'a> Rd<'a> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
         Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// A `u32`-counted vector of `u64`s, length-checked before any
+    /// allocation (shared by both `Gather` request shapes).
+    fn u64s(&mut self) -> Result<Vec<u64>, CodecError> {
+        let n = self.u32()? as usize;
+        if self.b.len() - self.i < n * 8 {
+            return Err(CodecError::Truncated);
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
     }
 
     fn f32_vecs(&mut self) -> Result<Vec<Vec<f32>>, CodecError> {
@@ -481,6 +655,39 @@ impl<'a> Rd<'a> {
         Ok(HostTensor { shape, data })
     }
 
+    fn grad_push(&mut self) -> Result<GradPush, CodecError> {
+        let worker = self.usize64()?;
+        let token = self.u64()?;
+        let n_dense = self.u32()? as usize;
+        let mut dense = Vec::new();
+        for _ in 0..n_dense {
+            dense.push(self.tensor()?);
+        }
+        let n_emb = self.u32()? as usize;
+        let mut emb = Vec::new();
+        for _ in 0..n_emb {
+            let key = self.u64()?;
+            emb.push((key, self.f32s()?));
+        }
+        let n_samples = self.usize64()?;
+        let loss = self.f32()?;
+        Ok(GradPush { worker, token, dense, emb, n_samples, loss })
+    }
+
+    fn pull_reply(&mut self) -> Result<PullReply, CodecError> {
+        Ok(match self.u8()? {
+            0 => PullReply::Work(WorkItem {
+                token: self.u64()?,
+                version: self.u64()?,
+                day: self.usize64()?,
+                batch_index: self.usize64()?,
+            }),
+            1 => PullReply::Wait,
+            2 => PullReply::EndOfData,
+            _ => return Err(CodecError::Malformed("pull reply tag")),
+        })
+    }
+
     fn done(&self) -> Result<(), CodecError> {
         if self.i == self.b.len() {
             Ok(())
@@ -499,41 +706,65 @@ pub fn decode(body: &[u8]) -> Result<WireMsg, CodecError> {
     }
     let tag = rd.u8()?;
     let msg = match tag {
-        1 => {
-            let worker = rd.usize64()?;
-            let token = rd.u64()?;
-            let n_dense = rd.u32()? as usize;
-            let mut dense = Vec::new();
-            for _ in 0..n_dense {
-                dense.push(rd.tensor()?);
-            }
-            let n_emb = rd.u32()? as usize;
-            let mut emb = Vec::new();
-            for _ in 0..n_emb {
-                let key = rd.u64()?;
-                emb.push((key, rd.f32s()?));
-            }
-            let n_samples = rd.usize64()?;
-            let loss = rd.f32()?;
-            WireMsg::Push(GradPush { worker, token, dense, emb, n_samples, loss })
-        }
-        2 => WireMsg::Pull(match rd.u8()? {
-            0 => PullReply::Work(WorkItem {
-                token: rd.u64()?,
-                version: rd.u64()?,
-                day: rd.usize64()?,
-                batch_index: rd.usize64()?,
-            }),
-            1 => PullReply::Wait,
-            2 => PullReply::EndOfData,
-            _ => return Err(CodecError::Malformed("pull reply tag")),
-        }),
+        1 => WireMsg::Push(rd.grad_push()?),
+        2 => WireMsg::Pull(rd.pull_reply()?),
         3 => WireMsg::Req(decode_req(&mut rd)?),
         4 => WireMsg::Reply(decode_reply(&mut rd)?),
+        5 => WireMsg::WorkerReq(decode_worker_req(&mut rd)?),
+        6 => WireMsg::WorkerRep(decode_worker_reply(&mut rd)?),
         other => return Err(CodecError::BadTag(other)),
     };
     rd.done()?;
     Ok(msg)
+}
+
+fn decode_worker_req(rd: &mut Rd) -> Result<WorkerRequest, CodecError> {
+    Ok(match rd.u8()? {
+        0 => WorkerRequest::Hello {
+            worker: rd.u64()?,
+            local_batch: rd.u64()?,
+            fields: rd.u32()?,
+            emb_dim: rd.u32()?,
+            seed: rd.u64()?,
+            samples_per_day: rd.u64()?,
+        },
+        1 => WorkerRequest::BeginDay,
+        2 => WorkerRequest::Pull { worker: rd.u64()? },
+        3 => WorkerRequest::Push(rd.grad_push()?),
+        4 => WorkerRequest::Gather {
+            keys: rd.u64s()?,
+            batch: rd.u64()?,
+            fields: rd.u64()?,
+        },
+        5 => WorkerRequest::DenseParams,
+        6 => WorkerRequest::Reset { worker: rd.u64()? },
+        7 => WorkerRequest::EndOfDay {
+            batches: rd.u64()?,
+            samples: rd.u64()?,
+            failures: rd.u64()?,
+            busy_sec: rd.f64()?,
+        },
+        _ => return Err(CodecError::Malformed("worker request tag")),
+    })
+}
+
+fn decode_worker_reply(rd: &mut Rd) -> Result<WorkerReply, CodecError> {
+    Ok(match rd.u8()? {
+        0 => WorkerReply::Ok,
+        1 => WorkerReply::Day { day: rd.u64()? },
+        2 => WorkerReply::Pull(rd.pull_reply()?),
+        3 => WorkerReply::Emb(rd.tensor()?),
+        4 => {
+            let n = rd.u32()? as usize;
+            let mut ts = Vec::new();
+            for _ in 0..n {
+                ts.push(rd.tensor()?);
+            }
+            WorkerReply::Dense(ts)
+        }
+        5 => WorkerReply::SessionOver,
+        _ => return Err(CodecError::Malformed("worker reply tag")),
+    })
 }
 
 fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
@@ -556,17 +787,7 @@ fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
         3 => ShardRequest::ReadSlots,
         4 => ShardRequest::SetDense { dense: rd.f32_vecs()? },
         5 => ShardRequest::SetSlots { slots: rd.f32_vecs()? },
-        6 => {
-            let n = rd.u32()? as usize;
-            if rd.b.len() - rd.i < n * 8 {
-                return Err(CodecError::Truncated);
-            }
-            let mut keys = Vec::with_capacity(n);
-            for _ in 0..n {
-                keys.push(rd.u64()?);
-            }
-            ShardRequest::Gather { keys }
-        }
+        6 => ShardRequest::Gather { keys: rd.u64s()? },
         7 => ShardRequest::GetMeta { key: rd.u64()? },
         8 => {
             let key = rd.u64()?;
@@ -775,6 +996,121 @@ mod tests {
         }
         for cut in 0..body.len() {
             assert!(decode(&body[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn worker_request_roundtrip_all_variants() {
+        let reqs = vec![
+            WorkerRequest::Hello {
+                worker: 3,
+                local_batch: 16,
+                fields: 4,
+                emb_dim: 8,
+                seed: u64::MAX,
+                samples_per_day: 4096,
+            },
+            WorkerRequest::BeginDay,
+            WorkerRequest::Pull { worker: u64::MAX },
+            WorkerRequest::Push(push()),
+            WorkerRequest::Gather { keys: vec![u64::MAX, 0, 7], batch: 2, fields: 3 },
+            WorkerRequest::DenseParams,
+            WorkerRequest::Reset { worker: 9 },
+            WorkerRequest::EndOfDay {
+                batches: 12,
+                samples: 192,
+                failures: 1,
+                busy_sec: 0.125,
+            },
+        ];
+        for req in reqs {
+            let body = encode(&WireMsg::WorkerReq(req.clone()));
+            let back = match decode(&body).unwrap() {
+                WireMsg::WorkerReq(back) => back,
+                other => panic!("{other:?}"),
+            };
+            // GradPush carries floats (compared as raw bits); everything
+            // else is integers — Debug equality pins both faithfully.
+            match (&back, &req) {
+                (WorkerRequest::Push(a), WorkerRequest::Push(w)) => {
+                    assert_eq!(a.worker, w.worker);
+                    assert_eq!(a.token, w.token);
+                    assert_eq!(a.n_samples, w.n_samples);
+                    assert_eq!(a.loss.to_bits(), w.loss.to_bits());
+                    assert_eq!(a.dense.len(), w.dense.len());
+                    for (x, y) in a.dense.iter().zip(&w.dense) {
+                        assert_eq!(x.shape, y.shape);
+                        assert_eq!(bits(&x.data), bits(&y.data));
+                    }
+                    assert_eq!(a.emb.len(), w.emb.len());
+                    for ((ka, va), (kw, vw)) in a.emb.iter().zip(&w.emb) {
+                        assert_eq!(ka, kw);
+                        assert_eq!(bits(va), bits(vw));
+                    }
+                }
+                _ => assert_eq!(format!("{back:?}"), format!("{req:?}")),
+            }
+            for cut in 0..body.len() {
+                assert!(decode(&body[..cut]).is_err(), "decoded truncated worker req at {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_reply_roundtrip_preserves_bits() {
+        let t = HostTensor { shape: vec![2, 2, 2], data: vec![1.0, f32::NAN, -0.0, 2.5, 0.0, -1.0, 3.0, f32::INFINITY] };
+        let replies = vec![
+            WorkerReply::Ok,
+            WorkerReply::Day { day: 41 },
+            WorkerReply::SessionOver,
+            WorkerReply::Pull(PullReply::Work(WorkItem { token: 5, version: 2, day: 1, batch_index: 7 })),
+            WorkerReply::Emb(t.clone()),
+            WorkerReply::Dense(vec![t.clone(), HostTensor { shape: vec![0], data: vec![] }]),
+        ];
+        for rep in replies {
+            let body = encode(&WireMsg::WorkerRep(rep.clone()));
+            match (decode(&body).unwrap(), &rep) {
+                (WireMsg::WorkerRep(WorkerReply::Ok), WorkerReply::Ok) => {}
+                (WireMsg::WorkerRep(WorkerReply::SessionOver), WorkerReply::SessionOver) => {}
+                (WireMsg::WorkerRep(WorkerReply::Day { day }), WorkerReply::Day { day: w }) => {
+                    assert_eq!(day, *w)
+                }
+                (WireMsg::WorkerRep(WorkerReply::Pull(p)), WorkerReply::Pull(w)) => {
+                    assert_eq!(p, *w)
+                }
+                (WireMsg::WorkerRep(WorkerReply::Emb(a)), WorkerReply::Emb(w)) => {
+                    assert_eq!(a.shape, w.shape);
+                    assert_eq!(bits(&a.data), bits(&w.data));
+                }
+                (WireMsg::WorkerRep(WorkerReply::Dense(a)), WorkerReply::Dense(w)) => {
+                    assert_eq!(a.len(), w.len());
+                    for (x, y) in a.iter().zip(w) {
+                        assert_eq!(x.shape, y.shape);
+                        assert_eq!(bits(&x.data), bits(&y.data));
+                    }
+                }
+                (other, _) => panic!("{other:?}"),
+            }
+            for cut in 0..body.len() {
+                assert!(decode(&body[..cut]).is_err(), "decoded truncated worker reply at {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn end_of_day_busy_sec_travels_as_f64_bits() {
+        let req = WorkerRequest::EndOfDay {
+            batches: 1,
+            samples: 2,
+            failures: 0,
+            busy_sec: f64::NAN,
+        };
+        let body = encode(&WireMsg::WorkerReq(req));
+        match decode(&body).unwrap() {
+            WireMsg::WorkerReq(WorkerRequest::EndOfDay { busy_sec, .. }) => {
+                assert_eq!(busy_sec.to_bits(), f64::NAN.to_bits());
+            }
+            other => panic!("{other:?}"),
         }
     }
 

@@ -33,6 +33,12 @@
 //!   addresses from `[ps] shard_addrs`), and [`serve_shard`] is that
 //!   process's accept loop — a fresh shard per connection, state
 //!   installed over the wire by the front.
+//! * [`worker_front`] — the *worker* plane's front half (`[cluster]
+//!   workers = "remote"`): [`WorkerFront`] accepts `gba-train worker`
+//!   processes after a `Hello` identity/shape handshake and serves each
+//!   one's training day — `Pull`/`Push`/`Gather`/`DenseParams`/`Reset`
+//!   against the PS front, `BeginDay`/`EndOfDay` around it — over the
+//!   same codec. The worker-side half is `worker::remote`.
 //!
 //! The front (`shard::ShardedPs`) performs admission, aggregation and
 //! reassembly exactly as before; every parameter byte it reads or writes
@@ -45,12 +51,14 @@ pub mod endpoint;
 pub mod remote;
 pub mod service;
 pub mod supervisor;
+pub mod worker_front;
 
 pub use codec::{
     CodecError, EmbGradEntry, GradPush, PullReply, RowRecord, ShardReply, ShardRequest,
-    WireMsg, WorkItem,
+    WireMsg, WorkItem, WorkerReply, WorkerRequest,
 };
 pub use endpoint::{ChanConn, Conn, DeadConn, SocketConn};
 pub use remote::{connect_retry, serve_shard, RECONNECT_DEADLINE};
 pub use service::{serve, serve_counting, ShardService};
 pub use supervisor::{ShardCheckpoint, ShardSpawnSpec, ShardSupervisor, DEFAULT_CKPT_EVERY};
+pub use worker_front::{WorkerFront, WorkerShape, WORKER_ACCEPT_DEADLINE};

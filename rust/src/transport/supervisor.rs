@@ -122,14 +122,19 @@ impl ShardCheckpoint {
 /// front's endpoint and, for in-process transports, the service
 /// thread's handle. For the `Remote` transport nothing is spawned —
 /// the shard-server process already exists; its fresh shard is brought
-/// to `ckpt` by installing the state over the wire.
+/// to `ckpt` by installing the state over the wire. An unreachable or
+/// mis-shaped remote peer is an `Err` (the in-process transports can
+/// only fail on environment exhaustion, which stays a panic): at
+/// session build the error surfaces through `TrainSession::new`, while
+/// mid-training recovery turns it into the fatal double-fault panic.
 fn spawn_service(
     kind: TransportKind,
     spec: &ShardSpawnSpec,
     ckpt: &ShardCheckpoint,
-) -> (Box<dyn Conn>, Option<JoinHandle<()>>) {
+    connect_deadline: std::time::Duration,
+) -> Result<(Box<dyn Conn>, Option<JoinHandle<()>>), String> {
     let name = format!("ps-shard-{}", spec.index);
-    match kind {
+    Ok(match kind {
         TransportKind::InProc => {
             let service = spec.service_at(ckpt);
             let (client, server) = chan::duplex::<WireMsg>();
@@ -161,20 +166,18 @@ fn spawn_service(
                 .addr
                 .as_deref()
                 .expect("remote transport requires a shard_addrs entry per shard");
-            let mut conn = remote::connect_retry(addr, remote::RECONNECT_DEADLINE)
-                .unwrap_or_else(|| {
-                    panic!(
-                        "shard {}: no shard-server reachable at {addr} within {:?}",
-                        spec.index,
-                        remote::RECONNECT_DEADLINE
-                    )
-                });
-            install_checkpoint(&mut conn, spec, ckpt).unwrap_or_else(|e| {
-                panic!("shard {}: installing checkpoint at {addr}: {e}", spec.index)
-            });
+            let mut conn = remote::connect_retry(addr, connect_deadline).ok_or_else(|| {
+                format!(
+                    "shard {}: no shard-server reachable at {addr} within {:?}",
+                    spec.index, connect_deadline
+                )
+            })?;
+            install_checkpoint(&mut conn, spec, ckpt).map_err(|e| {
+                format!("shard {}: installing checkpoint at {addr}: {e}", spec.index)
+            })?;
             (Box::new(conn), None)
         }
-    }
+    })
 }
 
 /// Bring a freshly-accepted remote shard to checkpoint state over the
@@ -340,6 +343,9 @@ pub struct ShardSupervisor {
     ckpt_every: AtomicUsize,
     /// In-memory journal cap before spilling to disk (0 = never spill).
     journal_spill_bytes: AtomicUsize,
+    /// Redial window for remote shard-servers (initial connect and
+    /// recovery); `[ps] connect_deadline_ms`.
+    connect_deadline: std::time::Duration,
 }
 
 fn is_mutating(req: &ShardRequest) -> bool {
@@ -354,34 +360,40 @@ fn is_mutating(req: &ShardRequest) -> bool {
 }
 
 impl ShardSupervisor {
-    /// Spawn every shard's service from its initial parameters.
+    /// Spawn every shard's service from its initial parameters. For the
+    /// `Remote` transport an unreachable shard-server within
+    /// `connect_deadline` is an `Err` — the caller (ultimately
+    /// `TrainSession::new`) reports it instead of panicking.
     pub fn start(
         kind: TransportKind,
         specs: Vec<ShardSpawnSpec>,
         init_params: &[HostTensor],
-    ) -> Self {
+        connect_deadline: std::time::Duration,
+    ) -> anyhow::Result<Self> {
         let slots = specs
             .iter()
             .map(|spec| {
                 let ckpt = ShardCheckpoint::initial(spec, init_params);
-                let (conn, handle) = spawn_service(kind, spec, &ckpt);
-                Mutex::new(ShardSlot {
+                let (conn, handle) = spawn_service(kind, spec, &ckpt, connect_deadline)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                Ok(Mutex::new(ShardSlot {
                     conn,
                     handle,
                     ckpt,
                     wal: Journal::new(spec.index),
                     applies_since_ckpt: 0,
-                })
+                }))
             })
-            .collect();
-        ShardSupervisor {
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ShardSupervisor {
             kind,
             specs,
             slots,
             lost_events: AtomicU64::new(0),
             ckpt_every: AtomicUsize::new(DEFAULT_CKPT_EVERY),
             journal_spill_bytes: AtomicUsize::new(0),
-        }
+            connect_deadline,
+        })
     }
 
     pub fn n_shards(&self) -> usize {
@@ -399,10 +411,13 @@ impl ShardSupervisor {
 
     /// Applies between shard-local checkpoint refreshes. This is the
     /// durability/throughput knob: a refresh reads the shard's full
-    /// state (dense, slots, every row) on the flush critical path, so
-    /// small values bound the journal tightly but stall every `n`-th
-    /// flush; large values make flushes uniformly fast but grow the
-    /// journal and the replay window.
+    /// state (dense, slots, every row), so small values bound the
+    /// journal tightly at the cost of frequent snapshot sweeps; large
+    /// values grow the journal and the replay window. Since the
+    /// deferred-refresh change the sweep runs *after* the triggering
+    /// flush releases the apply gate ([`refresh_due`](Self::refresh_due))
+    /// — it holds one slot lock, not the whole plane, so other shards'
+    /// gathers and every pull proceed during it.
     pub fn set_ckpt_every(&self, n: usize) {
         self.ckpt_every.store(n.max(1), Ordering::Relaxed);
     }
@@ -463,7 +478,14 @@ impl ShardSupervisor {
     /// recover any shard that died. Callers hold the PS snapshot lock, so
     /// locking every slot in index order here cannot deadlock against the
     /// single-slot paths.
-    pub fn apply_all(&self, reqs: Vec<ShardRequest>) {
+    ///
+    /// Returns the shards whose checkpoint-refresh cadence came due.
+    /// The refresh itself — an O(shard state) `ReadDense`/`ReadSlots`/
+    /// `DumpRows` sweep — deliberately does *not* happen here: it would
+    /// run with every slot locked and the apply gate up, stalling every
+    /// gather and pull behind it. The flush driver calls
+    /// [`refresh_due`](Self::refresh_due) after releasing the gate.
+    pub fn apply_all(&self, reqs: Vec<ShardRequest>) -> Vec<usize> {
         assert_eq!(reqs.len(), self.slots.len());
         let mut guards: Vec<MutexGuard<'_, ShardSlot>> =
             self.slots.iter().map(|m| m.lock().unwrap()).collect();
@@ -480,12 +502,39 @@ impl ShardSupervisor {
             let slot = &mut *guards[i];
             ok[i] = sent[i] && matches!(slot.conn.recv(), Ok(WireMsg::Reply(ShardReply::Ok)));
         }
+        let mut due = Vec::new();
         for i in 0..n {
             let slot = &mut *guards[i];
             if ok[i] {
-                self.note_apply(i, slot);
+                slot.applies_since_ckpt += 1;
+                if slot.applies_since_ckpt >= self.ckpt_every.load(Ordering::Relaxed) {
+                    due.push(i);
+                }
             } else {
+                // Recovery refreshes the checkpoint itself; no deferral.
                 self.recover(i, slot);
+            }
+        }
+        due
+    }
+
+    /// Refresh the shard-local checkpoints of the shards [`apply_all`]
+    /// reported due — one slot lock at a time, with the apply gate
+    /// already down, so the snapshot reads overlap normal traffic on
+    /// every other shard instead of blocking the whole plane. The
+    /// cadence is re-checked under the lock: a concurrent recovery may
+    /// already have refreshed (and so truncated the journal).
+    ///
+    /// [`apply_all`]: Self::apply_all
+    pub fn refresh_due(&self, due: &[usize]) {
+        for &s in due {
+            let mut guard = self.slots[s].lock().unwrap();
+            let slot = &mut *guard;
+            if slot.applies_since_ckpt >= self.ckpt_every.load(Ordering::Relaxed)
+                && self.refresh_ckpt(slot).is_err()
+            {
+                // Died between the apply ack and the snapshot reads.
+                self.recover(s, slot);
             }
         }
     }
@@ -552,7 +601,9 @@ impl ShardSupervisor {
         if let Some(h) = slot.handle.take() {
             let _ = h.join();
         }
-        let (conn, handle) = spawn_service(self.kind, &self.specs[s], &slot.ckpt);
+        let (conn, handle) =
+            spawn_service(self.kind, &self.specs[s], &slot.ckpt, self.connect_deadline)
+                .unwrap_or_else(|e| panic!("shard {s}: respawn after loss failed: {e}"));
         slot.conn = conn;
         slot.handle = handle;
         let ShardSlot { conn, wal, .. } = &mut *slot;

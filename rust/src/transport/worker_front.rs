@@ -1,0 +1,612 @@
+//! Front-side worker service: the half of the remote worker plane that
+//! lives in the trainer process.
+//!
+//! With `[cluster] workers = "remote"` the session's Algorithm-1 loops
+//! run in separate `gba-train worker` OS processes. The front binds one
+//! listening socket ([`WorkerFront::bind`]), waits for `mode.workers`
+//! connect-time `Hello` identity/shape handshakes
+//! ([`WorkerFront::ensure_connected`]), and then serves each worker's
+//! day over the existing length-prefixed codec
+//! ([`WorkerFront::run_day`]): one serving thread per worker executes
+//! `Pull`/`Push`/`Gather`/`DenseParams`/`Reset` requests against the
+//! shared PS front — the token-control plane is driven *unchanged*, by
+//! the same five verbs the in-thread workers call — and collects the
+//! `EndOfDay` stats. Because the verbs, their ordering per worker, and
+//! the codec's raw-bit `f32` framing are identical to the in-thread
+//! plane, a remote day is bit-for-bit identical to an in-thread day on
+//! the same schedule (pinned by `tests/process_workers.rs`).
+//!
+//! Failure model (the worker-plane face of Appendix B): a worker
+//! process that dies mid-day surfaces as a receive/send error on its
+//! connection. If the worker held an unpushed claim, the serving thread
+//! reclaims it with `worker_reset` — the token returns to the control
+//! plane's books, the day completes on the surviving workers, and the
+//! lost claim is accounted as one `failure` in the day's stats (so
+//! `applied + dropped + failures == batches` still balances). The dead
+//! worker's slot reopens: a replacement process may `Hello` with the
+//! same id before the next day.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::codec::{PullReply, WireMsg, WorkerReply, WorkerRequest};
+use super::endpoint::{Conn, SocketConn};
+use crate::config::{ExperimentConfig, ModeKind};
+use crate::coordinator::WorkerId;
+use crate::shard::ShardedPs;
+use crate::worker::WorkerStats;
+
+/// How long `ensure_connected` waits for the full worker complement
+/// before declaring the plane under-provisioned.
+pub const WORKER_ACCEPT_DEADLINE: Duration = Duration::from_secs(120);
+
+/// Per-connection bound on the `Hello` read: caps how long one slow or
+/// silent peer can stall the accept loop (and the slots lock).
+const HELLO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// How long `shutdown` waits for each worker's pending `BeginDay`
+/// before giving up on the farewell. Generous because the normal case
+/// costs nothing — the frame is already buffered when training ends —
+/// and only a dead or descheduled worker pays the wait; too short a
+/// window would make a *successful* session look like a crash to a
+/// worker that was briefly descheduled.
+const FAREWELL_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// The config-derived shape every connecting worker must declare in its
+/// `Hello` — identity (worker id in range, no duplicates) plus the keys
+/// whose silent disagreement would *not* fail fast elsewhere: the batch
+/// the worker cuts (`local_batch`), the tensor shapes it trains
+/// (`fields`, `emb_dim`), and the data stream it generates (`seed`,
+/// `samples_per_day`). Remaining config keys are the operator's
+/// contract — see docs/DEPLOY.md.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WorkerShape {
+    pub workers: usize,
+    pub local_batch: u64,
+    pub fields: u32,
+    pub emb_dim: u32,
+    pub seed: u64,
+    pub samples_per_day: u64,
+}
+
+impl WorkerShape {
+    /// The *one* definition of the handshake contract: the front's
+    /// expectation and the worker's declaration (via
+    /// [`hello`](Self::hello)) are both derived here, from the same
+    /// config file + mode, so extending the contract is a single edit.
+    pub fn of(cfg: &ExperimentConfig, kind: ModeKind) -> WorkerShape {
+        let mode = cfg.mode(kind);
+        WorkerShape {
+            workers: mode.workers,
+            local_batch: mode.local_batch as u64,
+            fields: cfg.model.fields as u32,
+            emb_dim: cfg.model.emb_dim as u32,
+            seed: cfg.seed,
+            samples_per_day: cfg.data.samples_per_day as u64,
+        }
+    }
+
+    /// The `Hello` a worker with this shape sends at connect.
+    pub fn hello(&self, worker: WorkerId) -> WorkerRequest {
+        WorkerRequest::Hello {
+            worker: worker as u64,
+            local_batch: self.local_batch,
+            fields: self.fields,
+            emb_dim: self.emb_dim,
+            seed: self.seed,
+            samples_per_day: self.samples_per_day,
+        }
+    }
+}
+
+/// One connection slot per worker id (`None` = not yet connected, or
+/// lost and awaiting a replacement).
+type WorkerSlots = Vec<Option<SocketConn>>;
+
+/// Outcome of one accepted connection's handshake: a worker admitted to
+/// a slot, or a peer that never presented a well-formed `Hello` (a port
+/// scanner, a health probe, a crashed process) — dropped and logged,
+/// never fatal. Only a *valid* `Hello` that disagrees with the front's
+/// config is an error, because that peer is a real worker about to
+/// train a diverging model.
+enum Admitted {
+    Worker(usize),
+    Junk(String),
+}
+
+/// The front's listening socket plus one connection slot per worker id.
+pub struct WorkerFront {
+    listener: TcpListener,
+    addr: SocketAddr,
+    shape: WorkerShape,
+    slots: Mutex<WorkerSlots>,
+    /// Whether a day has been served: the first day demands the full
+    /// worker complement; later days continue on survivors.
+    served_once: AtomicBool,
+}
+
+impl WorkerFront {
+    /// Bind the worker service. Workers dial this address and are
+    /// admitted lazily by [`ensure_connected`](Self::ensure_connected).
+    pub fn bind(listen: &str, shape: WorkerShape) -> Result<WorkerFront> {
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding worker front listener on {listen}"))?;
+        // Non-blocking accept lets `ensure_connected` enforce a deadline
+        // instead of parking forever on a missing worker.
+        listener.set_nonblocking(true).context("worker listener nonblocking")?;
+        let addr = listener.local_addr().context("worker listener addr")?;
+        let slots = (0..shape.workers).map(|_| None).collect();
+        Ok(WorkerFront {
+            listener,
+            addr,
+            shape,
+            slots: Mutex::new(slots),
+            served_once: AtomicBool::new(false),
+        })
+    }
+
+    /// The bound address (`host:0` in the config resolves here).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of worker slots currently holding a live connection.
+    pub fn connected(&self) -> usize {
+        self.slots.lock().unwrap().iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Admit workers for a day. The session's *first* day demands the
+    /// full complement (blocking up to `deadline` — the experiment's
+    /// worker count is part of its shape); later days drain any queued
+    /// replacement `Hello`s without blocking and continue on the
+    /// survivors. Errors when no live worker remains at all.
+    pub fn admit_for_day(&self, deadline: Duration) -> Result<()> {
+        if !self.served_once.load(Ordering::Relaxed) {
+            self.ensure_connected(deadline)?;
+            self.served_once.store(true, Ordering::Relaxed);
+            return Ok(());
+        }
+        self.accept_pending()?;
+        let live = self.connected();
+        anyhow::ensure!(
+            live > 0,
+            "no live workers remain of {} (all died and no replacement said Hello on {})",
+            self.shape.workers,
+            self.addr
+        );
+        if live < self.shape.workers {
+            eprintln!(
+                "worker front: continuing on {live} of {} workers (replacements may \
+                 Hello before any later day)",
+                self.shape.workers
+            );
+        }
+        Ok(())
+    }
+
+    /// Accept and handshake workers until every slot is filled (new
+    /// sessions and replacements for workers that died). A `Hello`
+    /// whose identity or shape disagrees with the front's config fails
+    /// the call — a mis-launched worker must stop the run, not train a
+    /// diverging model.
+    pub fn ensure_connected(&self, deadline: Duration) -> Result<()> {
+        let mut slots = self.slots.lock().unwrap();
+        let t0 = Instant::now();
+        while slots.iter().any(|s| s.is_none()) {
+            // Checked every iteration — not only when the queue is
+            // empty — so a stream of slow junk peers (each costing up
+            // to one HELLO_TIMEOUT) cannot push the wait arbitrarily
+            // past the deadline; worst-case overshoot is one handshake.
+            if t0.elapsed() > deadline {
+                let missing: Vec<usize> = slots
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(w, s)| s.is_none().then_some(w))
+                    .collect();
+                bail!(
+                    "waited {deadline:?} for {} worker(s) {missing:?} of {} to say \
+                     Hello on {}",
+                    missing.len(),
+                    self.shape.workers,
+                    self.addr
+                );
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => self.admit(stream, peer, &mut slots)?,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                // A connection that aborted between arrival and accept
+                // is the peer's problem; only listener-level failures
+                // are fatal.
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e).context("accepting a worker connection"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain queued connections without blocking (replacement workers
+    /// dialing in between days).
+    fn accept_pending(&self) -> Result<()> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => self.admit(stream, peer, &mut slots)?,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::ConnectionReset
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(e).context("accepting a worker connection"),
+            }
+        }
+    }
+
+    /// Handshake one accepted connection into its slot. Junk peers are
+    /// logged and dropped; only a well-formed `Hello` with the wrong
+    /// identity/shape errors.
+    fn admit(
+        &self,
+        stream: TcpStream,
+        peer: SocketAddr,
+        slots: &mut WorkerSlots,
+    ) -> Result<()> {
+        // A handshake that cannot even configure its socket is junk,
+        // not fatal: keep accepting.
+        if stream.set_nonblocking(false).is_err()
+            || stream.set_read_timeout(Some(HELLO_TIMEOUT)).is_err()
+        {
+            eprintln!("worker front: dropping {peer}: socket setup failed");
+            return Ok(());
+        }
+        let mut conn = SocketConn::new(stream);
+        match self
+            .handshake(&mut conn, slots)
+            .with_context(|| format!("worker hello from {peer}"))?
+        {
+            Admitted::Worker(w) => {
+                conn.stream.set_read_timeout(None).context("clearing hello timeout")?;
+                eprintln!("worker front: worker {w} connected from {peer}");
+                slots[w] = Some(conn);
+            }
+            Admitted::Junk(why) => {
+                // A scanner, probe or vanished peer must not abort a
+                // training run; drop it and go on.
+                eprintln!("worker front: ignoring connection from {peer}: {why}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate one `Hello` against the front's shape. A peer that never
+    /// sends a well-formed `Hello` is [`Admitted::Junk`]; a *valid*
+    /// `Hello` with the wrong identity or shape is an `Err` that fails
+    /// the run (that peer is a mis-launched worker, and training on
+    /// would silently diverge).
+    fn handshake(&self, conn: &mut SocketConn, slots: &[Option<SocketConn>]) -> Result<Admitted> {
+        let (worker, local_batch, fields, emb_dim, seed, samples_per_day) = match conn.recv() {
+            Ok(WireMsg::WorkerReq(WorkerRequest::Hello {
+                worker,
+                local_batch,
+                fields,
+                emb_dim,
+                seed,
+                samples_per_day,
+            })) => (worker, local_batch, fields, emb_dim, seed, samples_per_day),
+            Ok(other) => return Ok(Admitted::Junk(format!("expected Hello, got {other:?}"))),
+            Err(e) => return Ok(Admitted::Junk(format!("no Hello: {e}"))),
+        };
+        let s = &self.shape;
+        let w = worker as usize;
+        if w >= s.workers {
+            bail!("worker id {w} out of range for {} workers", s.workers);
+        }
+        if slots[w].is_some() {
+            bail!("duplicate worker id {w} (already connected)");
+        }
+        if local_batch != s.local_batch {
+            bail!(
+                "local_batch mismatch: worker trains {local_batch}, front expects {} \
+                 (front/worker --mode or config disagree)",
+                s.local_batch
+            );
+        }
+        if (fields, emb_dim) != (s.fields, s.emb_dim) {
+            bail!(
+                "model shape mismatch: worker ({fields} fields, emb {emb_dim}), front \
+                 ({} fields, emb {})",
+                s.fields,
+                s.emb_dim
+            );
+        }
+        if seed != s.seed {
+            bail!("config seed mismatch: worker {seed}, front {}", s.seed);
+        }
+        if samples_per_day != s.samples_per_day {
+            bail!(
+                "samples_per_day mismatch: worker {samples_per_day}, front {}",
+                s.samples_per_day
+            );
+        }
+        if let Err(e) = conn.send(WireMsg::WorkerRep(WorkerReply::Ok)) {
+            return Ok(Admitted::Junk(format!("vanished during the Hello ack: {e}")));
+        }
+        Ok(Admitted::Worker(w))
+    }
+
+    /// Serve one training day to every connected worker: announce the
+    /// day, execute each worker's PS verbs against `ps`, collect
+    /// `EndOfDay` stats. Returns per-worker stats (a worker that died
+    /// mid-day contributes zero batches and one `failure` per reclaimed
+    /// claim; its slot reopens for a replacement).
+    pub fn run_day(&self, day: usize, ps: &ShardedPs) -> Result<Vec<WorkerStats>> {
+        let conns: WorkerSlots = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.iter_mut().map(|s| s.take()).collect()
+        };
+        anyhow::ensure!(
+            conns.iter().any(|c| c.is_some()),
+            "no live worker connections for day {day}"
+        );
+        let mut results = Vec::new();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = conns
+                .into_iter()
+                .enumerate()
+                .map(|(w, conn)| {
+                    scope.spawn(move || match conn {
+                        Some(mut c) => {
+                            let (alive, stats) = serve_worker_day(w, day, &mut c, ps);
+                            (alive.then_some(c), stats)
+                        }
+                        None => (None, WorkerStats::default()),
+                    })
+                })
+                .collect();
+            results = handles
+                .into_iter()
+                .map(|h| h.join().expect("worker serving thread panicked"))
+                .collect();
+        });
+        let mut slots = self.slots.lock().unwrap();
+        let mut stats_out = Vec::with_capacity(results.len());
+        for (w, (conn, stats)) in results.into_iter().enumerate() {
+            if conn.is_none() {
+                eprintln!(
+                    "worker front: worker {w} lost during day {day}; slot reopened \
+                     ({} claim(s) reclaimed)",
+                    stats.failures
+                );
+            }
+            slots[w] = conn;
+            stats_out.push(stats);
+        }
+        Ok(stats_out)
+    }
+
+    /// Session finished *successfully*: answer each worker's pending
+    /// `BeginDay` with the `SessionOver` farewell (so it exits 0) and
+    /// drop the connection. Deliberately NOT done in `Drop` — a front
+    /// that unwinds on an error must leave workers seeing an abrupt
+    /// close, which they report as a nonzero exit so an on-failure
+    /// restart policy restarts both sides; only a deliberate, clean end
+    /// of training earns the farewell. Bounded best-effort: a worker
+    /// that has not asked for a day within the timeout just sees the
+    /// closed socket.
+    pub fn shutdown(&self) {
+        let mut slots = self.slots.lock().unwrap();
+        for slot in slots.iter_mut() {
+            if let Some(mut conn) = slot.take() {
+                let _ = conn.stream.set_read_timeout(Some(FAREWELL_TIMEOUT));
+                if matches!(conn.recv(), Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay))) {
+                    let _ = conn.send(WireMsg::WorkerRep(WorkerReply::SessionOver));
+                }
+            }
+        }
+    }
+}
+
+/// Serve one worker's day on its connection. Returns whether the
+/// connection is still good and the worker's stats (synthesized, with
+/// any reclaimed claim counted as a failure, when the worker died).
+fn serve_worker_day(
+    w: WorkerId,
+    day: usize,
+    conn: &mut dyn Conn,
+    ps: &ShardedPs,
+) -> (bool, WorkerStats) {
+    let mut stats = WorkerStats::default();
+    // Whether the worker holds a pulled-but-unpushed claim; on death it
+    // must go back to the control plane or the day never quiesces.
+    let mut claim = false;
+
+    // The worker is gone (or spoke nonsense): reclaim any in-flight
+    // claim — the token returns to the control plane's books, counted
+    // as one failure — and report the connection dead.
+    let lost = |claim: bool, stats: &mut WorkerStats, why: String| {
+        eprintln!("worker front: worker {w} day {day}: {why}");
+        if claim {
+            ps.worker_reset(w);
+            stats.failures += 1;
+        }
+    };
+
+    // The day opens on the worker's pending BeginDay request.
+    match conn.recv() {
+        Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay)) => {}
+        Ok(other) => {
+            lost(claim, &mut stats, format!("expected BeginDay, got {other:?}"));
+            return (false, stats);
+        }
+        Err(e) => {
+            lost(claim, &mut stats, format!("connection lost before BeginDay: {e}"));
+            return (false, stats);
+        }
+    }
+    if let Err(e) = conn.send(WireMsg::WorkerRep(WorkerReply::Day { day: day as u64 })) {
+        lost(claim, &mut stats, format!("announcing day: {e}"));
+        return (false, stats);
+    }
+
+    loop {
+        let req = match conn.recv() {
+            Ok(WireMsg::WorkerReq(req)) => req,
+            Ok(other) => {
+                lost(claim, &mut stats, format!("expected a worker request, got {other:?}"));
+                return (false, stats);
+            }
+            Err(e) => {
+                lost(claim, &mut stats, format!("connection lost mid-day: {e}"));
+                return (false, stats);
+            }
+        };
+        let reply = match req {
+            WorkerRequest::Pull { worker } if worker as usize == w => {
+                let r = ps.pull_blocking(w);
+                // The token is issued *before* the send: a send failure
+                // with work in flight must reclaim it.
+                claim = claim || matches!(r, PullReply::Work(_));
+                WorkerReply::Pull(r)
+            }
+            WorkerRequest::Push(grad) if grad.worker == w => {
+                // The claim is consumed whatever the policy decides
+                // (apply, buffer or drop). If this push completes the
+                // global batch, this serving thread runs the flush —
+                // exactly as the in-thread worker would have. A push
+                // claiming another worker's id falls through to the
+                // protocol-violation arm below — it would corrupt that
+                // worker's claim accounting.
+                claim = false;
+                ps.push(grad);
+                WorkerReply::Ok
+            }
+            WorkerRequest::Gather { keys, batch, fields } => {
+                WorkerReply::Emb(ps.gather(&keys, batch as usize, fields as usize))
+            }
+            WorkerRequest::DenseParams => WorkerReply::Dense(ps.dense_params()),
+            WorkerRequest::Reset { worker } if worker as usize == w => {
+                ps.worker_reset(w);
+                claim = false;
+                WorkerReply::Ok
+            }
+            WorkerRequest::EndOfDay { batches, samples, failures, busy_sec } => {
+                stats.batches = batches;
+                stats.samples = samples;
+                stats.failures += failures;
+                stats.busy_sec = busy_sec;
+                // Ack so the worker can move on to its next BeginDay; a
+                // failed ack only matters for the *next* day's accept.
+                let alive = conn.send(WireMsg::WorkerRep(WorkerReply::Ok)).is_ok();
+                return (alive, stats);
+            }
+            other => {
+                lost(claim, &mut stats, format!("protocol violation: {other:?}"));
+                return (false, stats);
+            }
+        };
+        if let Err(e) = conn.send(WireMsg::WorkerRep(reply)) {
+            lost(claim, &mut stats, format!("reply failed: {e}"));
+            return (false, stats);
+        }
+        // A successfully delivered Work token is the worker's problem
+        // now — but only until its next push/reset, tracked above.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::codec::CodecError;
+    use std::net::TcpStream;
+
+    fn shape() -> WorkerShape {
+        WorkerShape {
+            workers: 1,
+            local_batch: 16,
+            fields: 4,
+            emb_dim: 4,
+            seed: 7,
+            samples_per_day: 512,
+        }
+    }
+
+    #[test]
+    fn hello_handshake_admits_matching_worker() {
+        let front = WorkerFront::bind("127.0.0.1:0", shape()).unwrap();
+        let addr = front.addr();
+        let t = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape().hello(0))).unwrap();
+            match conn.recv().unwrap() {
+                WireMsg::WorkerRep(WorkerReply::Ok) => {}
+                other => panic!("{other:?}"),
+            }
+            conn // keep alive until the front has admitted us
+        });
+        front.ensure_connected(Duration::from_secs(10)).unwrap();
+        assert_eq!(front.connected(), 1);
+        let _conn = t.join().unwrap();
+    }
+
+    /// A scanner or probe that connects and hangs up (or speaks a
+    /// non-Hello frame) must be ignored, not abort the training run.
+    #[test]
+    fn junk_connections_are_ignored_not_fatal() {
+        let front = WorkerFront::bind("127.0.0.1:0", shape()).unwrap();
+        let addr = front.addr();
+        drop(TcpStream::connect(addr).unwrap()); // connect-and-vanish
+        let mut probe = SocketConn::new(TcpStream::connect(addr).unwrap());
+        probe.send(WireMsg::WorkerReq(WorkerRequest::BeginDay)).unwrap(); // not a Hello
+        let t = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape().hello(0))).unwrap();
+            match conn.recv().unwrap() {
+                WireMsg::WorkerRep(WorkerReply::Ok) => {}
+                other => panic!("{other:?}"),
+            }
+            conn
+        });
+        front.ensure_connected(Duration::from_secs(10)).unwrap();
+        assert_eq!(front.connected(), 1);
+        let _conn = t.join().unwrap();
+    }
+
+    #[test]
+    fn hello_shape_mismatch_fails_the_front_loudly() {
+        let front = WorkerFront::bind("127.0.0.1:0", shape()).unwrap();
+        let addr = front.addr();
+        let t = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            let mut s = shape();
+            s.local_batch = 999; // launched with the wrong mode/config
+            conn.send(WireMsg::WorkerReq(s.hello(0))).unwrap();
+            // The front drops us without an ack.
+            matches!(conn.recv(), Err(CodecError::Closed | CodecError::Io(_)))
+        });
+        let err = front.ensure_connected(Duration::from_secs(10)).unwrap_err();
+        assert!(format!("{err:#}").contains("local_batch"), "unhelpful error: {err:#}");
+        assert!(t.join().unwrap(), "mismatched worker saw an ack");
+    }
+
+    #[test]
+    fn missing_worker_times_out_with_a_named_slot() {
+        let front = WorkerFront::bind("127.0.0.1:0", shape()).unwrap();
+        let err = front.ensure_connected(Duration::from_millis(100)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("[0]"), "which worker is missing? {msg}");
+    }
+}

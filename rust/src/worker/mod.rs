@@ -5,10 +5,16 @@
 //! The worker plane speaks the wire codec's vocabulary directly: the
 //! [`GradPush`] it builds and the [`PullReply`] it consumes *are* the
 //! frame structs defined in [`crate::transport::codec`] — there is no
-//! worker-local gradient or pull type to convert through, so the same
-//! `run_worker` drives in-process, socket and remote shard planes
-//! unchanged.
+//! worker-local gradient or pull type to convert through. Since the
+//! remote-worker refactor the PS itself sits behind the [`PsClient`]
+//! trait: [`run_worker`] is written exactly once against it and drives
+//! both the in-process front ([`ShardedPs`](crate::shard::ShardedPs),
+//! any shard count/transport) and the wire-backed client a
+//! `gba-train worker` process holds ([`remote::FrontClient`]) — the
+//! deployment shape of the paper's Figure 2, where every worker is its
+//! own machine.
 
+pub mod remote;
 pub mod session;
 
 use std::sync::Arc;
@@ -17,12 +23,66 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cluster::StragglerModel;
+use crate::coordinator::WorkerId;
 use crate::data::DataGen;
 use crate::model::NativeModel;
-use crate::ps::{reduce_emb_grads, PsServer};
+use crate::ps::reduce_emb_grads;
 use crate::transport::codec::{GradPush, PullReply};
 use crate::runtime::{EngineHandle, HostTensor, TrainOut};
 use crate::util::rng::Pcg64;
+
+/// The worker's view of the parameter-server plane: the five verbs of
+/// Algorithm 1. The in-process implementation is infallible by
+/// construction (every method wraps an inherent `ShardedPs` call); for
+/// the wire-backed client an `Err` means the front is gone, which ends
+/// the worker's day.
+pub trait PsClient {
+    /// Claim the next batch; parks while the mode's gate is closed, so
+    /// `PullReply::Wait` is never returned.
+    fn pull_blocking(&self, w: WorkerId) -> Result<PullReply>;
+    /// Push a gradient (never parks waiting for other workers).
+    fn push(&self, grad: GradPush) -> Result<()>;
+    /// Forget this worker's in-flight claim (Appendix B).
+    fn worker_reset(&self, w: WorkerId) -> Result<()>;
+    /// Snapshot of the dense parameters.
+    fn dense_params(&self) -> Result<Vec<HostTensor>>;
+    /// Gather embedding rows for a flattened key block.
+    fn gather(&self, keys: &[u64], batch: usize, fields: usize) -> Result<HostTensor>;
+}
+
+// (Inherent methods win resolution over same-named trait methods, so
+// these delegations cannot recurse.)
+impl PsClient for crate::shard::ShardedPs {
+    fn pull_blocking(&self, w: WorkerId) -> Result<PullReply> {
+        Ok(crate::shard::ShardedPs::pull_blocking(self, w))
+    }
+
+    fn push(&self, grad: GradPush) -> Result<()> {
+        crate::shard::ShardedPs::push(self, grad);
+        Ok(())
+    }
+
+    fn worker_reset(&self, w: WorkerId) -> Result<()> {
+        crate::shard::ShardedPs::worker_reset(self, w);
+        Ok(())
+    }
+
+    fn dense_params(&self) -> Result<Vec<HostTensor>> {
+        Ok(crate::shard::ShardedPs::dense_params(self))
+    }
+
+    fn gather(&self, keys: &[u64], batch: usize, fields: usize) -> Result<HostTensor> {
+        Ok(crate::shard::ShardedPs::gather(self, keys, batch, fields))
+    }
+}
+
+/// Seed of a worker's per-day RNG stream. One definition shared by the
+/// in-thread session and the remote `gba-train worker` process — both
+/// sides must derive identical streams from the same config file for
+/// the worker planes to be bit-identical.
+pub fn worker_day_seed(cfg_seed: u64, day: usize) -> u64 {
+    cfg_seed ^ ((day as u64) << 8)
+}
 
 /// Which engine executes the model (identical numerics — pinned by the
 /// `train_integration` test).
@@ -88,6 +148,9 @@ pub struct WorkerParams {
     pub start_sec: f64,
     /// Probability of a simulated crash per batch (failure injection).
     pub fail_prob: f64,
+    /// Fixed extra compute time per batch (ms) — a deterministic slow-
+    /// worker injection, independent of the traced straggler model.
+    pub batch_sleep_ms: f64,
     pub seed: u64,
 }
 
@@ -102,8 +165,11 @@ pub struct WorkerStats {
 }
 
 /// Run one worker until the PS data list is exhausted (Algorithm 1).
-pub fn run_worker(
-    ps: &PsServer,
+/// This is the *only* implementation of the worker loop: generic over
+/// [`PsClient`], it drives in-thread workers against the front directly
+/// and remote `gba-train worker` processes over the wire, unchanged.
+pub fn run_worker<C: PsClient + ?Sized>(
+    ps: &C,
     gen: &DataGen,
     backend: &Backend,
     wp: &WorkerParams,
@@ -112,7 +178,7 @@ pub fn run_worker(
     let mut rng = Pcg64::new(wp.seed, wp.id as u64 + 1000);
     let t0 = Instant::now();
     loop {
-        let item = match ps.pull_blocking(wp.id) {
+        let item = match ps.pull_blocking(wp.id)? {
             PullReply::Work(item) => item,
             PullReply::EndOfData => break,
             PullReply::Wait => unreachable!("pull_blocking resolves waits"),
@@ -120,7 +186,7 @@ pub fn run_worker(
 
         // Failure injection: lose the claim (and its token) mid-flight.
         if wp.fail_prob > 0.0 && rng.bernoulli(wp.fail_prob) {
-            ps.worker_reset(wp.id);
+            ps.worker_reset(wp.id)?;
             stats.failures += 1;
             continue;
         }
@@ -129,8 +195,8 @@ pub fn run_worker(
         // "Download" + pack the batch (deterministic generation).
         let batch = gen.batch_by_index(item.day, item.batch_index, wp.local_batch);
         // Pull parameters: dense snapshot + embedding gather.
-        let params = ps.dense_params();
-        let emb = ps.gather(&batch.keys, wp.local_batch, batch.fields);
+        let params = ps.dense_params()?;
+        let emb = ps.gather(&batch.keys, wp.local_batch, batch.fields)?;
         // Compute fwd/bwd.
         let out = backend.train_step(wp.local_batch, &emb, &params, &batch.labels)?;
         // Straggler model: emulate the shared-cluster compute time.
@@ -138,6 +204,9 @@ pub fn run_worker(
             let t_virtual = wp.start_sec + t0.elapsed().as_secs_f64();
             let ms = m.compute_ms_batch(wp.id, t_virtual, wp.local_batch, &mut rng);
             std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1000.0));
+        }
+        if wp.batch_sleep_ms > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wp.batch_sleep_ms / 1000.0));
         }
         // Pre-reduce per-ID embedding gradients, then push (non-blocking
         // from the worker's perspective: push never parks this thread).
@@ -149,7 +218,7 @@ pub fn run_worker(
             emb: emb_grads,
             n_samples: wp.local_batch,
             loss: out.loss,
-        });
+        })?;
         stats.batches += 1;
         stats.samples += wp.local_batch as u64;
         stats.busy_sec += busy_start.elapsed().as_secs_f64();
@@ -164,6 +233,7 @@ mod tests {
     use crate::coordinator::modes::GbaPolicy;
     use crate::embedding::EmbeddingConfig;
     use crate::optim::Sgd;
+    use crate::ps::PsServer;
     use crate::runtime::VariantDims;
 
     fn tiny_cfg() -> ExperimentConfig {
@@ -234,9 +304,12 @@ iota = 3
                 straggler: None,
                 start_sec: 0.0,
                 fail_prob: 0.0,
+                batch_sleep_ms: 0.0,
                 seed: 9,
             };
-            handles.push(std::thread::spawn(move || run_worker(&ps, &gen, &backend, &wp).unwrap()));
+            handles.push(std::thread::spawn(move || {
+                run_worker(ps.as_ref(), &gen, &backend, &wp).unwrap()
+            }));
         }
         let stats: Vec<WorkerStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         ps.flush_partial();
@@ -279,9 +352,12 @@ iota = 3
                 straggler: None,
                 start_sec: 0.0,
                 fail_prob: 0.2,
+                batch_sleep_ms: 0.0,
                 seed: 5,
             };
-            handles.push(std::thread::spawn(move || run_worker(&ps, &gen, &backend, &wp).unwrap()));
+            handles.push(std::thread::spawn(move || {
+                run_worker(ps.as_ref(), &gen, &backend, &wp).unwrap()
+            }));
         }
         let stats: Vec<WorkerStats> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         ps.flush_partial();

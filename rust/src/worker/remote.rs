@@ -1,0 +1,213 @@
+//! The remote worker plane, worker side: what a `gba-train worker`
+//! process runs.
+//!
+//! [`FrontClient`] is the wire-backed [`PsClient`]: each of the five
+//! Algorithm-1 verbs is one request/reply exchange with the front's
+//! [`WorkerFront`](crate::transport::WorkerFront) over the length-
+//! prefixed codec, so [`run_worker`] drives it exactly as it drives the
+//! in-process front — there is no second worker loop. Around the verbs
+//! sits the session protocol: a connect-time `Hello` identity/shape
+//! handshake, then `BeginDay` → train → `EndOfDay` until the front
+//! answers a `BeginDay` with the `SessionOver` farewell (a clean exit);
+//! an abrupt connection loss means the front crashed and is an error.
+//!
+//! Everything the worker derives locally — the data stream, the model
+//! dims, the per-day RNG seed — comes from the *same config file* the
+//! front reads; the `Hello` pins the shape-critical keys and the rest
+//! is the operator contract documented in docs/DEPLOY.md.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ExperimentConfig, ModeKind};
+use crate::coordinator::WorkerId;
+use crate::data::DataGen;
+use crate::model::NativeModel;
+use crate::runtime::HostTensor;
+use crate::transport::codec::{GradPush, PullReply, WireMsg, WorkerReply, WorkerRequest};
+use crate::transport::{connect_retry, Conn, SocketConn, WorkerShape, RECONNECT_DEADLINE};
+use crate::worker::session::dims_of;
+use crate::worker::{run_worker, worker_day_seed, Backend, PsClient, WorkerParams, WorkerStats};
+
+/// The worker process's connection to the front: a [`PsClient`] over
+/// the wire plus the session frames around it.
+pub struct FrontClient {
+    conn: Mutex<SocketConn>,
+}
+
+impl FrontClient {
+    /// Dial the front, retrying with backoff up to `deadline` (the
+    /// front may still be binding when the worker launches).
+    pub fn connect(addr: &str, deadline: Duration) -> Result<FrontClient> {
+        let conn = connect_retry(addr, deadline)
+            .with_context(|| format!("no worker front reachable at {addr} within {deadline:?}"))?;
+        Ok(FrontClient { conn: Mutex::new(conn) })
+    }
+
+    /// One request/reply exchange (the slot lock enforces alternation).
+    fn call(&self, req: WorkerRequest) -> Result<WorkerReply> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.send(WireMsg::WorkerReq(req)).map_err(|e| anyhow::anyhow!("front send: {e}"))?;
+        match conn.recv() {
+            Ok(WireMsg::WorkerRep(r)) => Ok(r),
+            Ok(other) => bail!("front protocol: expected a worker reply, got {other:?}"),
+            Err(e) => bail!("front connection lost: {e}"),
+        }
+    }
+
+    fn expect_ok(&self, req: WorkerRequest, what: &str) -> Result<()> {
+        match self.call(req)? {
+            WorkerReply::Ok => Ok(()),
+            other => bail!("front protocol: expected Ok to {what}, got {other:?}"),
+        }
+    }
+
+    /// The identity/shape handshake; the declared shape comes from the
+    /// same [`WorkerShape::of`] the front checks against. The front
+    /// hangs up instead of acking when we disagree with its config —
+    /// surfaced here as a connection error with the front's log holding
+    /// the reason.
+    pub fn hello(&self, worker: WorkerId, cfg: &ExperimentConfig, kind: ModeKind) -> Result<()> {
+        self.expect_ok(WorkerShape::of(cfg, kind).hello(worker), "Hello")
+            .context("front rejected the Hello handshake (front/worker config or mode disagree?)")
+    }
+
+    /// Ask for the next day. `Ok(None)` means the front sent the
+    /// `SessionOver` farewell — the session is over and the worker
+    /// exits cleanly. An abrupt connection loss is an `Err` (and a
+    /// nonzero process exit): the front crashed, and a supervisor
+    /// should restart us, not read "session over".
+    pub fn begin_day(&self) -> Result<Option<usize>> {
+        let mut conn = self.conn.lock().unwrap();
+        conn.send(WireMsg::WorkerReq(WorkerRequest::BeginDay))
+            .map_err(|e| anyhow::anyhow!("front lost asking for a day (front crashed?): {e}"))?;
+        match conn.recv() {
+            Ok(WireMsg::WorkerRep(WorkerReply::Day { day })) => Ok(Some(day as usize)),
+            Ok(WireMsg::WorkerRep(WorkerReply::SessionOver)) => Ok(None),
+            Ok(other) => bail!("front protocol: expected Day or SessionOver, got {other:?}"),
+            Err(e) => bail!("front lost waiting for a day (front crashed?): {e}"),
+        }
+    }
+
+    /// Report the day's stats back to the front.
+    pub fn end_of_day(&self, stats: &WorkerStats) -> Result<()> {
+        self.expect_ok(
+            WorkerRequest::EndOfDay {
+                batches: stats.batches,
+                samples: stats.samples,
+                failures: stats.failures,
+                busy_sec: stats.busy_sec,
+            },
+            "EndOfDay",
+        )
+    }
+}
+
+impl PsClient for FrontClient {
+    fn pull_blocking(&self, w: WorkerId) -> Result<PullReply> {
+        match self.call(WorkerRequest::Pull { worker: w as u64 })? {
+            WorkerReply::Pull(r) => Ok(r),
+            other => bail!("front protocol: expected Pull reply, got {other:?}"),
+        }
+    }
+
+    fn push(&self, grad: GradPush) -> Result<()> {
+        self.expect_ok(WorkerRequest::Push(grad), "Push")
+    }
+
+    fn worker_reset(&self, w: WorkerId) -> Result<()> {
+        self.expect_ok(WorkerRequest::Reset { worker: w as u64 }, "Reset")
+    }
+
+    fn dense_params(&self) -> Result<Vec<HostTensor>> {
+        match self.call(WorkerRequest::DenseParams)? {
+            WorkerReply::Dense(ts) => Ok(ts),
+            other => bail!("front protocol: expected Dense reply, got {other:?}"),
+        }
+    }
+
+    fn gather(&self, keys: &[u64], batch: usize, fields: usize) -> Result<HostTensor> {
+        let req = WorkerRequest::Gather {
+            keys: keys.to_vec(),
+            batch: batch as u64,
+            fields: fields as u64,
+        };
+        match self.call(req)? {
+            WorkerReply::Emb(t) => Ok(t),
+            other => bail!("front protocol: expected Emb reply, got {other:?}"),
+        }
+    }
+}
+
+/// Extra knobs of the `gba-train worker` subcommand.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerProcOptions {
+    /// Per-batch simulated crash probability (failure injection).
+    pub fail_prob: f64,
+    /// Fixed extra compute per batch (ms) — deterministic slow worker.
+    pub batch_sleep_ms: f64,
+    /// How long to keep dialing the front before giving up.
+    pub connect_deadline: Duration,
+}
+
+impl Default for WorkerProcOptions {
+    fn default() -> Self {
+        WorkerProcOptions {
+            fail_prob: 0.0,
+            batch_sleep_ms: 0.0,
+            connect_deadline: RECONNECT_DEADLINE,
+        }
+    }
+}
+
+/// The whole life of a `gba-train worker` process: dial, handshake,
+/// then `BeginDay` → [`run_worker`] → `EndOfDay` until the front closes
+/// the session. Returns the number of days served.
+pub fn run_worker_process(
+    cfg: &ExperimentConfig,
+    kind: ModeKind,
+    worker_id: WorkerId,
+    addr: &str,
+    opts: WorkerProcOptions,
+) -> Result<u64> {
+    let mode = cfg.mode(kind);
+    anyhow::ensure!(
+        worker_id < mode.workers,
+        "--worker-id {worker_id} out of range for {} {} workers",
+        mode.workers,
+        kind.as_str()
+    );
+    let client = FrontClient::connect(addr, opts.connect_deadline)?;
+    client.hello(worker_id, cfg, kind)?;
+    eprintln!(
+        "worker {worker_id}: connected to front {addr} (task {}, mode {})",
+        cfg.name,
+        kind.as_str()
+    );
+
+    let dims = dims_of(cfg);
+    let gen = DataGen::new(&cfg.model, &cfg.data, cfg.seed);
+    let backend = Backend::Native(NativeModel::new(dims));
+    let mut days = 0u64;
+    while let Some(day) = client.begin_day()? {
+        let wp = WorkerParams {
+            id: worker_id,
+            local_batch: mode.local_batch,
+            straggler: None,
+            start_sec: 0.0,
+            fail_prob: opts.fail_prob,
+            batch_sleep_ms: opts.batch_sleep_ms,
+            seed: worker_day_seed(cfg.seed, day),
+        };
+        let stats = run_worker(&client, &gen, &backend, &wp)?;
+        eprintln!(
+            "worker {worker_id}: day {day} done ({} batches, {} samples, {} failures)",
+            stats.batches, stats.samples, stats.failures
+        );
+        client.end_of_day(&stats)?;
+        days += 1;
+    }
+    Ok(days)
+}

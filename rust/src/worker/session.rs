@@ -5,13 +5,13 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::cluster::StragglerModel;
-use crate::config::{ExperimentConfig, ModeKind};
+use crate::config::{ExperimentConfig, ModeKind, WorkerPlane};
 use crate::coordinator::modes::make_policy;
 use crate::data::DataGen;
 use crate::embedding::EmbeddingConfig;
@@ -21,8 +21,12 @@ use crate::optim::make_optimizer;
 use crate::ps::PsServer;
 use crate::runtime::{EnginePool, Manifest, VariantDims};
 use crate::shard::{PsBuild, ShardRouter};
-use crate::transport::{RowRecord, ShardSpawnSpec};
-use crate::worker::{run_worker, Backend, BackendKind, WorkerParams};
+use crate::transport::{
+    RowRecord, ShardSpawnSpec, WorkerFront, WorkerShape, WORKER_ACCEPT_DEADLINE,
+};
+use crate::worker::{
+    run_worker, worker_day_seed, Backend, BackendKind, WorkerParams, WorkerStats,
+};
 
 /// Options beyond the config file.
 #[derive(Clone)]
@@ -76,6 +80,11 @@ pub struct TrainSession {
     _engine: Option<EnginePool>,
     opts: SessionOptions,
     straggler: Option<Arc<StragglerModel>>,
+    /// The remote worker plane's accept/serve half (`[cluster] workers
+    /// = "remote"` only): bound at session build so operators and tests
+    /// can learn the address before launching `gba-train worker`
+    /// processes; workers are admitted lazily at the first `train_day`.
+    worker_front: Option<WorkerFront>,
 }
 
 /// Model dimensions a config describes.
@@ -180,8 +189,12 @@ impl TrainSession {
                 n_shards: cfg.ps.n_shards,
                 transport: cfg.ps.transport,
                 shard_addrs: cfg.ps.shard_addrs.clone(),
+                connect_deadline: Some(Duration::from_millis(cfg.ps.connect_deadline_ms)),
             }
-            .build(),
+            // An unreachable shard-server is an `Err` here (and a clean
+            // nonzero exit from `gba-train train`), not a panic.
+            .try_build()
+            .context("building the PS plane")?,
         );
         ps.set_journal_spill_bytes(cfg.ps.journal_spill_bytes);
         if let Some(ckpt) = ckpt {
@@ -222,6 +235,25 @@ impl TrainSession {
         let straggler = opts
             .straggler
             .then(|| Arc::new(StragglerModel::new(&cfg.cluster, mode.workers, cfg.seed ^ 0x57)));
+        let worker_front = match cfg.cluster.workers {
+            WorkerPlane::InProc => None,
+            WorkerPlane::Remote => {
+                // Worker-side injections live in the worker processes
+                // (`gba-train worker --fail-prob/--batch-sleep-ms`);
+                // accepting these session options here would silently
+                // run a straggler/failure experiment with no injection.
+                anyhow::ensure!(
+                    !opts.straggler && opts.fail_prob == 0.0 && opts.start_sec == 0.0,
+                    "--straggler / fail_prob / start_sec are in-thread worker options; \
+                     with [cluster] workers = \"remote\" pass the equivalent flags to the \
+                     gba-train worker processes instead"
+                );
+                Some(
+                    WorkerFront::bind(&cfg.cluster.worker_listen, WorkerShape::of(&cfg, kind))
+                        .context("binding the worker front")?,
+                )
+            }
+        };
         Ok(TrainSession {
             cfg,
             kind,
@@ -232,6 +264,7 @@ impl TrainSession {
             _engine: engine,
             opts,
             straggler,
+            worker_front,
         })
     }
 
@@ -243,37 +276,78 @@ impl TrainSession {
         &self.gen
     }
 
+    /// Where remote `gba-train worker` processes connect (`[cluster]
+    /// workers = "remote"` only).
+    pub fn worker_addr(&self) -> Option<String> {
+        self.worker_front.as_ref().map(|f| f.addr().to_string())
+    }
+
+    /// Training finished successfully: send remote workers the
+    /// `SessionOver` farewell so they exit 0. Not called on error paths
+    /// (and deliberately not on drop) — workers seeing an abrupt close
+    /// exit nonzero, telling a supervisor the run failed. No-op for the
+    /// in-thread plane.
+    pub fn shutdown_workers(&self) {
+        if let Some(front) = &self.worker_front {
+            front.shutdown();
+        }
+    }
+
     /// Train on one day of data; returns the day's statistics.
+    ///
+    /// The worker plane is a config dispatch: in-thread loops
+    /// (`[cluster] workers = "inproc"`, the default) or remote
+    /// `gba-train worker` processes served over the wire (`"remote"`).
+    /// Both planes drive the identical `run_worker` body against the
+    /// token-control plane, so the resulting parameters, rows and
+    /// counters are bit-for-bit identical on the same schedule.
     pub fn train_day(&self, day: usize) -> Result<DayStats> {
         let mode = self.cfg.mode(self.kind);
         let n_batches = self.gen.batches_per_day(mode.local_batch);
         self.ps.reset_counters();
         self.ps.set_day(day, n_batches);
         let t0 = Instant::now();
-        let mut handles = Vec::new();
-        for w in 0..mode.workers {
-            let ps = self.ps.clone();
-            let gen = self.gen.clone();
-            let backend = self.backend.clone();
-            let wp = WorkerParams {
-                id: w,
-                local_batch: mode.local_batch,
-                straggler: self.straggler.clone(),
-                start_sec: self.opts.start_sec,
-                fail_prob: self.opts.fail_prob,
-                seed: self.cfg.seed ^ (day as u64) << 8,
-            };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("worker-{w}"))
-                    .spawn(move || run_worker(&ps, &gen, &backend, &wp))?,
-            );
-        }
+        let stats: Vec<WorkerStats> = match &self.worker_front {
+            None => {
+                let mut handles = Vec::new();
+                for w in 0..mode.workers {
+                    let ps = self.ps.clone();
+                    let gen = self.gen.clone();
+                    let backend = self.backend.clone();
+                    let wp = WorkerParams {
+                        id: w,
+                        local_batch: mode.local_batch,
+                        straggler: self.straggler.clone(),
+                        start_sec: self.opts.start_sec,
+                        fail_prob: self.opts.fail_prob,
+                        batch_sleep_ms: 0.0,
+                        seed: worker_day_seed(self.cfg.seed, day),
+                    };
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("worker-{w}"))
+                            .spawn(move || run_worker(ps.as_ref(), &gen, &backend, &wp))?,
+                    );
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("worker panicked"))
+                    .collect::<Result<_>>()?
+            }
+            Some(front) => {
+                // First day: wait for the full complement. Later days:
+                // admit any replacement hellos and continue on the
+                // survivors. Then stream the day over the wire — the
+                // token-control plane is driven unchanged, by serving
+                // threads instead of worker threads.
+                front.admit_for_day(WORKER_ACCEPT_DEADLINE)?;
+                front.run_day(day, &self.ps)?
+            }
+        };
         let mut samples = 0u64;
         let mut failures = 0u64;
         let mut busy = 0.0f64;
-        for h in handles {
-            let s = h.join().expect("worker panicked")?;
+        for s in &stats {
             samples += s.samples;
             failures += s.failures;
             busy += s.busy_sec;
@@ -282,6 +356,21 @@ impl TrainSession {
         self.ps.flush_partial();
         let wall = t0.elapsed().as_secs_f64();
         let counters = self.ps.counters();
+        if self.worker_front.is_some() {
+            // Conservation audit: every issued batch must have resolved
+            // as applied, dropped, or a reclaimed claim. A shortfall
+            // means the worker fleet died mid-day and part of the data
+            // list was never trained — that is a failed day, not a
+            // quiet DayStats. (In-thread workers can't die silently:
+            // their panics and Errs propagate through the joins above.)
+            let resolved =
+                counters.applied_gradients + counters.dropped_batches + failures;
+            anyhow::ensure!(
+                resolved == n_batches as u64,
+                "day {day} incomplete: {resolved} of {n_batches} batches resolved — \
+                 worker processes died mid-day with no survivors to finish the data list"
+            );
+        }
         Ok(DayStats {
             day,
             wall_sec: wall,
@@ -321,6 +410,17 @@ impl TrainSession {
     /// tuning-free switch: same hyper-parameters, new coordination).
     /// Optimizer slots reset — exactly what checkpoint-inherit does.
     pub fn switch_mode(&mut self, kind: ModeKind) -> Result<()> {
+        // Remote workers hold the *old* mode's shape (local batch,
+        // worker count) from their own launch flags; carrying their
+        // connections into a new mode would train silently wrong
+        // batches. Until workers learn to re-handshake on switch
+        // (ROADMAP follow-up), the switch requires in-thread workers.
+        anyhow::ensure!(
+            self.worker_front.is_none(),
+            "switch_mode is not supported with [cluster] workers = \"remote\": restart \
+             the session and the worker processes in mode '{}'",
+            kind.as_str()
+        );
         let ckpt = self.checkpoint();
         let new = TrainSession::from_checkpoint(
             self.cfg.clone(),

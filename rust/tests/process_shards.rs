@@ -23,6 +23,7 @@
 use std::io::{BufRead, BufReader};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
 
 use gba::config::{ExperimentConfig, ModeKind, TransportKind};
 use gba::coordinator::modes::make_policy;
@@ -168,6 +169,7 @@ fn build_front(cfg: &ExperimentConfig) -> ShardedPs {
         n_shards: cfg.ps.n_shards,
         transport: cfg.ps.transport,
         shard_addrs: cfg.ps.shard_addrs.clone(),
+        connect_deadline: None,
     }
     .build()
 }
@@ -293,6 +295,32 @@ fn killed_shard_server_process_recovers_bit_identically() {
     assert!(killed, "fault injection never ran");
     assert_eq!(faulty.lost_events, 1, "exactly one lost-shard recovery");
     assert_bit_identical(&faulty, &inproc);
+}
+
+/// ROADMAP follow-up (v): a shard-server that never answers within the
+/// (configurable) connect deadline surfaces as `Err` through
+/// `TrainSession::new` — with a message naming the shard — instead of
+/// panicking after the redial window. `gba-train train` turns that into
+/// a clean nonzero exit.
+#[test]
+fn unreachable_shard_server_is_an_err_not_a_panic() {
+    // A dynamic-range port with nothing bound: bind, read, drop.
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let mut cfg = remote_cfg(vec![addr.clone(), addr.clone()]);
+    cfg.ps.connect_deadline_ms = 300;
+    let t0 = Instant::now();
+    let err = match TrainSession::new(cfg, ModeKind::Gba, SessionOptions::default()) {
+        Err(e) => e,
+        Ok(_) => panic!("session built against a never-bound shard address"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 0"), "error does not name the shard: {msg}");
+    assert!(msg.contains(&addr), "error does not name the address: {msg}");
+    // The short deadline bounds the build; far under the default 20 s.
+    assert!(t0.elapsed() < Duration::from_secs(10), "took {:?}", t0.elapsed());
 }
 
 /// A real multi-worker training day over ≥ 2 OS processes: the session

@@ -1,0 +1,331 @@
+//! The remote worker plane, end to end (ISSUE 4 acceptance): real
+//! `gba-train worker` child processes drive Algorithm 1 over the wire
+//! against a front running in this process.
+//!
+//! Three pins:
+//!
+//! * **Bit-identity** — a full training day with `[cluster] workers =
+//!   "remote"` (one real worker child, so the pull/push schedule is
+//!   fully ordered) produces bit-for-bit the same dense parameters,
+//!   embedding rows and counters as the identical config with in-thread
+//!   workers. There is exactly one `run_worker`, generic over
+//!   `PsClient`; the transports must not change a single bit.
+//! * **Worker-process failure** — SIGKILL one of four worker children
+//!   mid-day: the front's `worker_reset` path reclaims the in-flight
+//!   claim, the day completes on the survivors, and conservation holds
+//!   (`applied + dropped + reclaimed == batches`), mirroring
+//!   `shard_failure.rs` on the worker side.
+//! * **Operator contract** — a worker launched with the wrong `--mode`
+//!   (different local batch) is rejected at the `Hello` handshake and
+//!   fails the day loudly instead of training a diverging model.
+//!
+//! Child stderr goes to `$CARGO_TARGET_TMPDIR/process-workers-logs/` so
+//! a CI failure can upload what the workers saw.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use gba::config::{ExperimentConfig, ModeKind, WorkerPlane};
+use gba::worker::session::{SessionOptions, TrainSession};
+
+const BIN: &str = env!("CARGO_BIN_EXE_gba-train");
+
+/// One in-thread-deterministic worker (the bit-identity pin needs a
+/// fully ordered schedule; multi-worker interleaving is load-dependent
+/// in *both* planes, so determinism — not the wire — is what one worker
+/// buys). M = G_sync / B_gba = 64/16 = 4.
+const CONFIG_1W: &str = r#"
+name = "process-workers-1w"
+seed = 33
+
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 16
+hidden2 = 8
+vocab_size = 500
+zipf_s = 1.1
+
+[data]
+days_base = 1
+days_eval = 1
+samples_per_day = 2048
+teacher_seed = 3
+label_noise = 0.02
+
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+lr_async = 0.05
+eval_batch = 256
+eval_samples = 1024
+
+[mode.sync]
+workers = 2
+local_batch = 32
+
+[mode.gba]
+workers = 1
+local_batch = 16
+iota = 3
+
+[cluster]
+workers = "remote"
+worker_listen = "127.0.0.1:0"
+"#;
+
+/// Four workers and a long day (1024 batches) so a SIGKILL lands
+/// mid-day with margin; children run with --batch-sleep-ms to stretch
+/// compute deterministically.
+const CONFIG_4W: &str = r#"
+name = "process-workers-4w"
+seed = 34
+
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 16
+hidden2 = 8
+vocab_size = 500
+zipf_s = 1.1
+
+[data]
+days_base = 1
+days_eval = 1
+samples_per_day = 16384
+teacher_seed = 3
+label_noise = 0.02
+
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+lr_async = 0.05
+eval_batch = 256
+eval_samples = 1024
+
+[mode.sync]
+workers = 4
+local_batch = 32
+
+[mode.gba]
+workers = 4
+local_batch = 16
+iota = 3
+
+[cluster]
+workers = "remote"
+worker_listen = "127.0.0.1:0"
+"#;
+
+fn log_dir() -> PathBuf {
+    let dir = Path::new(env!("CARGO_TARGET_TMPDIR")).join("process-workers-logs");
+    std::fs::create_dir_all(&dir).expect("creating worker log dir");
+    dir
+}
+
+fn write_config(tag: &str, toml: &str) -> PathBuf {
+    let path = log_dir().join(format!("{tag}.toml"));
+    std::fs::write(&path, toml).expect("writing test config");
+    path
+}
+
+/// One worker child. Killed (and reaped) on drop so a panicking test
+/// never leaks processes.
+struct WorkerProc {
+    child: Child,
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_worker(
+    config: &Path,
+    worker_id: usize,
+    addr: &str,
+    log_tag: &str,
+    extra: &[&str],
+) -> WorkerProc {
+    let log = std::fs::File::create(log_dir().join(format!("{log_tag}-worker{worker_id}.log")))
+        .expect("creating worker log file");
+    let child = Command::new(BIN)
+        .args([
+            "worker",
+            "--config",
+            config.to_str().unwrap(),
+            "--connect",
+            addr,
+            "--worker-id",
+            &worker_id.to_string(),
+        ])
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::from(log))
+        .spawn()
+        .expect("spawning worker child");
+    WorkerProc { child }
+}
+
+/// Fingerprint a trained session: raw bits of every dense parameter and
+/// embedding row, plus the control-plane counters.
+struct DayFingerprint {
+    dense_bits: Vec<Vec<u32>>,
+    rows: Vec<(u64, Vec<u32>, u64, u32)>,
+    applied: u64,
+    dropped: u64,
+    steps: u64,
+    samples_trained: u64,
+}
+
+fn fingerprint(session: &TrainSession, stats: &gba::worker::session::DayStats) -> DayFingerprint {
+    let ckpt = session.checkpoint();
+    DayFingerprint {
+        dense_bits: ckpt
+            .dense
+            .iter()
+            .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+            .collect(),
+        rows: ckpt
+            .emb_rows
+            .iter()
+            .map(|(k, v, m)| {
+                (*k, v.iter().map(|x| x.to_bits()).collect(), m.last_update_step, m.update_count)
+            })
+            .collect(),
+        applied: stats.counters.applied_gradients,
+        dropped: stats.counters.dropped_batches,
+        steps: stats.counters.global_steps,
+        samples_trained: stats.counters.samples_trained,
+    }
+}
+
+fn assert_bit_identical(a: &DayFingerprint, b: &DayFingerprint) {
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.applied, b.applied);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.samples_trained, b.samples_trained);
+    assert_eq!(a.dense_bits, b.dense_bits, "dense parameters diverged");
+    assert_eq!(a.rows, b.rows, "embedding rows diverged");
+}
+
+/// Acceptance core: a day trained by a real `gba-train worker` child is
+/// bit-identical to the same day trained by an in-thread worker.
+#[test]
+fn remote_worker_day_bit_identical_to_inproc() {
+    // In-thread reference: same config, worker plane flipped.
+    let mut cfg = ExperimentConfig::from_toml(CONFIG_1W).unwrap();
+    cfg.cluster.workers = WorkerPlane::InProc;
+    let inproc_session = TrainSession::new(cfg, ModeKind::Gba, SessionOptions::default()).unwrap();
+    assert!(inproc_session.worker_addr().is_none());
+    let inproc_stats = inproc_session.train_day(0).unwrap();
+    let inproc = fingerprint(&inproc_session, &inproc_stats);
+
+    // Remote: the child derives data, model and seeds from the same
+    // config file it is handed.
+    let config = write_config("bitident", CONFIG_1W);
+    let cfg = ExperimentConfig::from_toml(CONFIG_1W).unwrap();
+    let session = TrainSession::new(cfg, ModeKind::Gba, SessionOptions::default()).unwrap();
+    let addr = session.worker_addr().expect("remote plane binds at build");
+    let mut w0 = spawn_worker(&config, 0, &addr, "bitident", &[]);
+    let stats = session.train_day(0).unwrap();
+    let remote = fingerprint(&session, &stats);
+    assert!(session.ps().quiescent());
+    let n_batches = session.gen().batches_per_day(16) as u64;
+
+    // Clean end of session: the explicit shutdown answers the worker's
+    // pending BeginDay with the SessionOver farewell and the worker
+    // exits 0 — a crashed front (no farewell, abrupt close) would
+    // instead leave it exiting nonzero.
+    session.shutdown_workers();
+    drop(session);
+    let status = w0.child.wait().expect("waiting for the worker child");
+    assert!(status.success(), "worker did not exit cleanly after SessionOver: {status:?}");
+
+    assert_bit_identical(&remote, &inproc);
+    // Conservation on the clean day: every batch pushed, none reclaimed.
+    assert_eq!(stats.failures, 0);
+    assert_eq!(remote.applied + remote.dropped, n_batches);
+}
+
+/// SIGKILL one of four worker children mid-day: the front reclaims any
+/// in-flight claim via `worker_reset`, the survivors finish the data
+/// list, and the books balance — every issued batch was pushed
+/// (applied or dropped) or reclaimed (a `failure`).
+#[test]
+fn killed_worker_process_reclaims_claim_and_day_completes() {
+    let config = write_config("killworker", CONFIG_4W);
+    let cfg = ExperimentConfig::from_toml(CONFIG_4W).unwrap();
+    let session = TrainSession::new(cfg, ModeKind::Gba, SessionOptions::default()).unwrap();
+    let addr = session.worker_addr().unwrap();
+    let mut workers: Vec<WorkerProc> = (0..4)
+        .map(|w| spawn_worker(&config, w, &addr, "killworker", &["--batch-sleep-ms", "3"]))
+        .collect();
+    let before = session.eval_auc(1).unwrap();
+
+    let stats = std::thread::scope(|scope| {
+        let handle = scope.spawn(|| session.train_day(0));
+        // Let the day get going, then SIGKILL worker 3 mid-flight. The
+        // 3 ms per-batch sleep makes "mid-day" a ~0.8 s window.
+        let t0 = Instant::now();
+        while session.ps().counters().global_steps < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(60), "day never started");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        workers[3].child.kill().expect("killing worker child");
+        workers[3].child.wait().expect("reaping worker child");
+        handle.join().expect("train_day thread panicked")
+    })
+    .expect("day failed after worker loss");
+
+    assert!(session.ps().quiescent(), "claims or buffered grads leaked");
+    let n_batches = session.gen().batches_per_day(16) as u64;
+    // Conservation: issued = pushed + reclaimed; pushed = applied + dropped.
+    // (Whether the victim held a claim at the instant SIGKILL landed is a
+    // race — failures may be 0 or 1 — but the books must balance either
+    // way, and quiescence above proves no claim leaked.)
+    assert_eq!(
+        stats.counters.applied_gradients + stats.counters.dropped_batches + stats.failures,
+        n_batches,
+        "a batch was lost without being reclaimed"
+    );
+    // Training still happened, on fewer shoulders.
+    let after = session.eval_auc(1).unwrap();
+    assert!(after > before, "auc did not improve: {before} -> {after}");
+
+    // Later days continue on the survivors: the full complement is only
+    // required for the session's first day, so the dead worker must not
+    // stall day 1 (no replacement is launched).
+    let stats1 = session.train_day(1).expect("day on 3 surviving workers");
+    let n_batches = session.gen().batches_per_day(16) as u64;
+    assert_eq!(
+        stats1.counters.applied_gradients + stats1.counters.dropped_batches + stats1.failures,
+        n_batches
+    );
+    assert!(session.ps().quiescent());
+}
+
+/// A worker launched with the wrong `--mode` has a different local
+/// batch; the `Hello` handshake rejects it and the day fails loudly.
+#[test]
+fn hello_mode_mismatch_fails_the_day_loudly() {
+    let config = write_config("badmode", CONFIG_1W);
+    let cfg = ExperimentConfig::from_toml(CONFIG_1W).unwrap();
+    let session = TrainSession::new(cfg, ModeKind::Gba, SessionOptions::default()).unwrap();
+    let addr = session.worker_addr().unwrap();
+    // sync's local_batch (32) != gba's (16): shape mismatch at Hello.
+    let _w0 = spawn_worker(&config, 0, &addr, "badmode", &["--mode", "sync"]);
+    let err = match session.train_day(0) {
+        Err(e) => e,
+        Ok(_) => panic!("a mis-moded worker was admitted"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("local_batch"), "unhelpful rejection: {msg}");
+}

@@ -43,6 +43,7 @@ fn build(n_shards: usize, transport: TransportKind) -> ShardedPs {
         n_shards,
         transport,
         shard_addrs: Vec::new(),
+        connect_deadline: None,
     }
     .build()
 }

@@ -77,6 +77,7 @@ fn build(transport: TransportKind) -> ShardedPs {
         n_shards: N_SHARDS,
         transport,
         shard_addrs: Vec::new(),
+        connect_deadline: None,
     }
     .build()
 }
