@@ -242,7 +242,36 @@ ps_apply_ms = 0.5
     fn mode_kind_roundtrip() {
         for k in ModeKind::ALL {
             assert_eq!(ModeKind::parse(k.as_str()).unwrap(), k);
+            assert_eq!(ModeKind::from_wire(k.wire_id()).unwrap(), k);
         }
         assert!(ModeKind::parse("nope").is_err());
+        assert!(ModeKind::from_wire(250).is_err());
+    }
+
+    #[test]
+    fn switch_config_defaults_parse_and_watermark_validation() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.switch.policy, SwitchPolicyKind::Manual, "absent [switch] is manual");
+        assert_eq!(cfg.switch.high_watermark, 0.60);
+        assert_eq!(cfg.switch.low_watermark, 0.40);
+        let adaptive = format!(
+            "{SAMPLE}\n[switch]\npolicy = \"adaptive\"\nhigh_watermark = 0.7\nlow_watermark = 0.2\n"
+        );
+        let cfg = ExperimentConfig::from_toml(&adaptive).unwrap();
+        assert_eq!(cfg.switch.policy, SwitchPolicyKind::Adaptive);
+        assert_eq!(cfg.switch.high_watermark, 0.7);
+        assert_eq!(cfg.switch.low_watermark, 0.2);
+        // A malformed policy errors instead of silently running manual.
+        let bad = format!("{SAMPLE}\n[switch]\npolicy = \"vibes\"\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err());
+        // Watermarks must leave a hysteresis band (low < high) in [0, 1].
+        let inverted = format!("{SAMPLE}\n[switch]\nhigh_watermark = 0.3\nlow_watermark = 0.5\n");
+        assert!(ExperimentConfig::from_toml(&inverted).is_err());
+        let out_of_range = format!("{SAMPLE}\n[switch]\nhigh_watermark = 1.5\n");
+        assert!(ExperimentConfig::from_toml(&out_of_range).is_err());
+        // A malformed watermark errors too — silently running the
+        // default 0.60 would invalidate the experiment just as badly.
+        let not_a_number = format!("{SAMPLE}\n[switch]\nhigh_watermark = \"high\"\n");
+        assert!(ExperimentConfig::from_toml(&not_a_number).is_err());
     }
 }

@@ -59,6 +59,31 @@ impl ModeKind {
     pub fn is_fully_async(&self) -> bool {
         matches!(self, ModeKind::Async)
     }
+
+    /// Stable one-byte encoding for the wire (the worker-plane mode
+    /// re-handshake announces the new epoch's mode in a frame).
+    pub fn wire_id(&self) -> u8 {
+        match self {
+            ModeKind::Sync => 0,
+            ModeKind::Async => 1,
+            ModeKind::HopBs => 2,
+            ModeKind::Bsp => 3,
+            ModeKind::HopBw => 4,
+            ModeKind::Gba => 5,
+        }
+    }
+
+    pub fn from_wire(id: u8) -> Result<ModeKind> {
+        Ok(match id {
+            0 => ModeKind::Sync,
+            1 => ModeKind::Async,
+            2 => ModeKind::HopBs,
+            3 => ModeKind::Bsp,
+            4 => ModeKind::HopBw,
+            5 => ModeKind::Gba,
+            _ => bail!("unknown mode wire id {id}"),
+        })
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -84,6 +109,25 @@ impl OptimKind {
             OptimKind::Adagrad => "adagrad",
             OptimKind::Adam => "adam",
         }
+    }
+
+    /// Stable one-byte encoding for the wire (the `SwapPolicy` shard RPC
+    /// carries the mode epoch's optimizer kind).
+    pub fn wire_id(&self) -> u8 {
+        match self {
+            OptimKind::Sgd => 0,
+            OptimKind::Adagrad => 1,
+            OptimKind::Adam => 2,
+        }
+    }
+
+    pub fn from_wire(id: u8) -> Result<OptimKind> {
+        Ok(match id {
+            0 => OptimKind::Sgd,
+            1 => OptimKind::Adagrad,
+            2 => OptimKind::Adam,
+            _ => bail!("unknown optimizer wire id {id}"),
+        })
     }
 }
 
@@ -233,6 +277,60 @@ impl WorkerPlane {
     }
 }
 
+/// Who decides when the session switches training modes (`[switch]
+/// policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchPolicyKind {
+    /// Switches happen only when the operator asks (`--switch-to` /
+    /// explicit `switch_mode` calls). The default.
+    Manual,
+    /// The session's `SwitchPlane` watches per-day straggler telemetry
+    /// (per-worker batch-latency p95 vs. median from `DayStats`) and
+    /// advances the mode epoch itself: GBA when the cluster turns
+    /// straggler-heavy, back to sync when it clears — the paper's
+    /// "adaptive to the cluster status" direction (§6) made live.
+    Adaptive,
+}
+
+impl SwitchPolicyKind {
+    pub fn parse(s: &str) -> Result<SwitchPolicyKind> {
+        Ok(match s {
+            "manual" => SwitchPolicyKind::Manual,
+            "adaptive" => SwitchPolicyKind::Adaptive,
+            _ => bail!("unknown switch policy '{s}' (manual|adaptive)"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SwitchPolicyKind::Manual => "manual",
+            SwitchPolicyKind::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Live mode-switch control (`[switch]` table).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SwitchConfig {
+    pub policy: SwitchPolicyKind,
+    /// Adaptive: switch sync → GBA when the straggler signal
+    /// (1 − median/p95 of per-worker batch latency) rises above this.
+    pub high_watermark: f64,
+    /// Adaptive: switch GBA → sync when the signal falls below this
+    /// (hysteresis: `low < high` keeps the controller from flapping).
+    pub low_watermark: f64,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        SwitchConfig {
+            policy: SwitchPolicyKind::Manual,
+            high_watermark: 0.60,
+            low_watermark: 0.40,
+        }
+    }
+}
+
 /// Parameter-server plane shape (`[ps]` table).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PsConfig {
@@ -303,6 +401,7 @@ pub struct ExperimentConfig {
     pub modes: Vec<(ModeKind, ModeConfig)>,
     pub cluster: ClusterConfig,
     pub ps: PsConfig,
+    pub switch: SwitchConfig,
 }
 
 impl ExperimentConfig {
@@ -452,6 +551,26 @@ impl ExperimentConfig {
                     as u64,
             },
         };
+        // Same rule as [ps]/[cluster]: absent keys default, malformed
+        // keys error (a run that silently fell back to "manual" would
+        // invalidate an adaptive-switching experiment).
+        let defaults = SwitchConfig::default();
+        let switch = SwitchConfig {
+            policy: match doc.get("switch.policy") {
+                None => defaults.policy,
+                Some(v) => SwitchPolicyKind::parse(
+                    v.as_str().context("switch.policy must be a string")?,
+                )?,
+            },
+            high_watermark: match doc.get("switch.high_watermark") {
+                None => defaults.high_watermark,
+                Some(v) => v.as_f64().context("switch.high_watermark must be a number")?,
+            },
+            low_watermark: match doc.get("switch.low_watermark") {
+                None => defaults.low_watermark,
+                Some(v) => v.as_f64().context("switch.low_watermark must be a number")?,
+            },
+        };
         Ok(ExperimentConfig {
             name: req_str("name")?,
             seed: req_usize("seed")? as u64,
@@ -461,6 +580,7 @@ impl ExperimentConfig {
             modes,
             cluster,
             ps,
+            switch,
         })
     }
 
@@ -518,6 +638,18 @@ impl ExperimentConfig {
         }
         if self.cluster.workers == WorkerPlane::Remote && self.cluster.worker_listen.is_empty() {
             bail!("cluster.workers = \"remote\" needs a cluster.worker_listen address");
+        }
+        let sw = &self.switch;
+        if !(0.0..=1.0).contains(&sw.low_watermark) || !(0.0..=1.0).contains(&sw.high_watermark) {
+            bail!("switch watermarks must be in [0, 1]");
+        }
+        if sw.low_watermark >= sw.high_watermark {
+            bail!(
+                "switch.low_watermark ({}) must be below switch.high_watermark ({}) \
+                 — the gap is the adaptive controller's hysteresis band",
+                sw.low_watermark,
+                sw.high_watermark
+            );
         }
         Ok(())
     }

@@ -24,6 +24,7 @@ pub mod modes;
 pub mod switch;
 
 pub use modes::{make_policy, AsyncPolicy, BspPolicy, GbaPolicy, HopBsPolicy, HopBwPolicy, SyncPolicy};
+pub use switch::{AdaptiveSwitcher, ModeEpoch, SwitchEvent, SwitchPlane, SwitchTrace};
 
 use crate::config::ModeKind;
 

@@ -1,8 +1,18 @@
-//! Mode-switch bookkeeping: records a switch trace (when, from, to) so
-//! experiments can annotate AUC curves with switch points, and implements
-//! the *adaptive* switching controller sketched in the paper's conclusion
-//! ("make GBA adaptive to the cluster status" — future work there,
-//! implemented here as an extension).
+//! The switch plane: mode ownership, switch bookkeeping, and the
+//! adaptive switching controller.
+//!
+//! Since the in-place switching redesign the training mode is not a
+//! field a session mutates ad hoc — it is a *sequence of mode epochs*
+//! owned by a [`SwitchPlane`]. Every epoch pins (id, [`ModeKind`],
+//! starting day); advancing the epoch is the paper's §1 *switch*
+//! operation, driven down through the layers that already exist
+//! (`ControlPlane::swap_policy` for the shard plane, the
+//! `SwitchMode`/`Epoch` re-handshake for remote workers) instead of
+//! rebuilding the session around them. The plane also records the
+//! [`SwitchTrace`] experiments annotate AUC curves with, and hosts the
+//! [`AdaptiveSwitcher`] — the paper's conclusion ("make GBA adaptive to
+//! the cluster status") implemented as a live hysteresis controller fed
+//! by per-day straggler telemetry.
 
 use crate::config::ModeKind;
 
@@ -26,9 +36,17 @@ impl SwitchTrace {
         self.events.push(SwitchEvent { day, from, to });
     }
 
+    /// The mode in effect on `day`, given the mode the run started in.
+    /// Events may have been recorded out of day order (e.g. merged from
+    /// several sources); the fold sorts first — an unsorted fold would
+    /// silently return whichever mode happened to be recorded last.
+    /// Same-day events keep their record order (stable sort), so the
+    /// last switch recorded for a day wins.
     pub fn mode_on_day(&self, initial: ModeKind, day: usize) -> ModeKind {
+        let mut events: Vec<&SwitchEvent> = self.events.iter().collect();
+        events.sort_by_key(|e| e.day);
         let mut mode = initial;
-        for e in &self.events {
+        for e in events {
             if e.day <= day {
                 mode = e.to;
             }
@@ -37,14 +55,115 @@ impl SwitchTrace {
     }
 }
 
+/// One entry of the mode sequence: the mode the session trains in from
+/// `start_day` until the next epoch begins. Epoch ids are dense and
+/// monotonic; the id is what crosses the wire in the worker-plane
+/// re-handshake, so both ends can assert they agree on *which* switch
+/// they are performing.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModeEpoch {
+    pub epoch: u64,
+    pub kind: ModeKind,
+    pub start_day: usize,
+}
+
+/// Owns the mode as a sequence of [`ModeEpoch`]s and decides (manually
+/// or adaptively) when to start a new one. The session consults
+/// `current()` for the live mode and calls [`advance`](Self::advance)
+/// at each switch; experiments read the accumulated [`SwitchTrace`].
+#[derive(Clone, Debug)]
+pub struct SwitchPlane {
+    epochs: Vec<ModeEpoch>,
+    trace: SwitchTrace,
+    /// `Some` when `[switch] policy = "adaptive"`.
+    switcher: Option<AdaptiveSwitcher>,
+}
+
+impl SwitchPlane {
+    /// Manual switching: epochs advance only on explicit request.
+    pub fn manual(initial: ModeKind) -> SwitchPlane {
+        SwitchPlane {
+            epochs: vec![ModeEpoch { epoch: 0, kind: initial, start_day: 0 }],
+            trace: SwitchTrace::default(),
+            switcher: None,
+        }
+    }
+
+    /// Adaptive switching with the given hysteresis watermarks.
+    pub fn adaptive(initial: ModeKind, high: f64, low: f64) -> SwitchPlane {
+        let mut plane = SwitchPlane::manual(initial);
+        let mut switcher = AdaptiveSwitcher::new(initial);
+        switcher.high_watermark = high;
+        switcher.low_watermark = low;
+        plane.switcher = Some(switcher);
+        plane
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.switcher.is_some()
+    }
+
+    /// The epoch currently in effect.
+    pub fn current(&self) -> &ModeEpoch {
+        self.epochs.last().expect("a switch plane always has an epoch")
+    }
+
+    pub fn kind(&self) -> ModeKind {
+        self.current().kind
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.current().epoch
+    }
+
+    /// The full epoch sequence (epoch 0 is the launch mode).
+    pub fn epochs(&self) -> &[ModeEpoch] {
+        &self.epochs
+    }
+
+    pub fn trace(&self) -> &SwitchTrace {
+        &self.trace
+    }
+
+    /// Start a new mode epoch on `day`. Records the switch event and
+    /// returns the new epoch id. A same-mode "switch" is a no-op (no
+    /// event, same epoch) — callers need not special-case it.
+    pub fn advance(&mut self, day: usize, to: ModeKind) -> u64 {
+        let cur = *self.current();
+        if cur.kind == to {
+            return cur.epoch;
+        }
+        self.trace.record(day, cur.kind, to);
+        // Keep an adaptive controller's notion of "current" honest even
+        // when the operator forces a manual switch mid-run.
+        if let Some(sw) = &mut self.switcher {
+            sw.force(to);
+        }
+        let epoch = cur.epoch + 1;
+        self.epochs.push(ModeEpoch { epoch, kind: to, start_day: day });
+        epoch
+    }
+
+    /// Feed one day's straggler signal (`1 − median/p95` of per-worker
+    /// batch latency, 0 = homogeneous fleet). Returns the mode the
+    /// adaptive controller wants to switch to, if any; the *caller*
+    /// performs the switch (it owns the layers the switch must drive)
+    /// and then calls [`advance`](Self::advance). `None` always under
+    /// manual policy.
+    pub fn observe(&mut self, signal: f64) -> Option<ModeKind> {
+        self.switcher.as_mut()?.observe(signal)
+    }
+}
+
 /// Adaptive switching controller (paper §6 future work): choose the mode
-/// from the observed cluster utilization with hysteresis — synchronous HPC
-/// when the cluster is vacant, GBA when it is busy.
+/// from the observed cluster-straggler signal with hysteresis —
+/// synchronous training while the fleet is homogeneous, GBA when
+/// stragglers dominate.
 #[derive(Clone, Debug)]
 pub struct AdaptiveSwitcher {
-    /// Switch to GBA above this utilization.
+    /// Switch to GBA above this signal level.
     pub high_watermark: f64,
-    /// Switch back to sync below this utilization.
+    /// Switch back to sync below this signal level.
     pub low_watermark: f64,
     current: ModeKind,
 }
@@ -58,11 +177,17 @@ impl AdaptiveSwitcher {
         self.current
     }
 
-    /// Feed a utilization observation; returns Some(new_mode) on a switch.
-    pub fn observe(&mut self, utilization: f64) -> Option<ModeKind> {
+    /// An external (manual) switch happened; track it so hysteresis is
+    /// judged against the mode actually running.
+    pub fn force(&mut self, kind: ModeKind) {
+        self.current = kind;
+    }
+
+    /// Feed a signal observation; returns Some(new_mode) on a switch.
+    pub fn observe(&mut self, signal: f64) -> Option<ModeKind> {
         let next = match self.current {
-            ModeKind::Sync if utilization > self.high_watermark => ModeKind::Gba,
-            ModeKind::Gba if utilization < self.low_watermark => ModeKind::Sync,
+            ModeKind::Sync if signal > self.high_watermark => ModeKind::Gba,
+            ModeKind::Gba if signal < self.low_watermark => ModeKind::Sync,
             other => other,
         };
         if next != self.current {
@@ -89,6 +214,22 @@ mod tests {
         assert_eq!(t.mode_on_day(ModeKind::Sync, 9), ModeKind::Sync);
     }
 
+    /// The satellite fix: events recorded out of day order must resolve
+    /// identically to the sorted trace — the old unsorted fold returned
+    /// whichever event was *recorded* last, silently.
+    #[test]
+    fn trace_out_of_order_records_resolve_correctly() {
+        let mut t = SwitchTrace::default();
+        t.record(7, ModeKind::Gba, ModeKind::Sync);
+        t.record(3, ModeKind::Sync, ModeKind::Gba);
+        assert_eq!(t.mode_on_day(ModeKind::Sync, 0), ModeKind::Sync);
+        assert_eq!(t.mode_on_day(ModeKind::Sync, 4), ModeKind::Gba, "day-3 switch applies");
+        assert_eq!(t.mode_on_day(ModeKind::Sync, 8), ModeKind::Sync, "day-7 switch wins later");
+        // Same-day events: the last recorded wins (stable sort).
+        t.record(7, ModeKind::Sync, ModeKind::Async);
+        assert_eq!(t.mode_on_day(ModeKind::Sync, 7), ModeKind::Async);
+    }
+
     #[test]
     fn adaptive_hysteresis() {
         let mut a = AdaptiveSwitcher::new(ModeKind::Sync);
@@ -97,5 +238,43 @@ mod tests {
         assert_eq!(a.observe(0.5), None); // hysteresis holds GBA
         assert_eq!(a.observe(0.3), Some(ModeKind::Sync));
         assert_eq!(a.observe(0.3), None);
+    }
+
+    #[test]
+    fn switch_plane_advances_epochs_and_records_trace() {
+        let mut p = SwitchPlane::manual(ModeKind::Sync);
+        assert_eq!(p.epoch(), 0);
+        assert_eq!(p.kind(), ModeKind::Sync);
+        // Same-mode switch: no new epoch, no event.
+        assert_eq!(p.advance(1, ModeKind::Sync), 0);
+        assert!(p.trace().events.is_empty());
+        assert_eq!(p.advance(2, ModeKind::Gba), 1);
+        assert_eq!(p.advance(5, ModeKind::Sync), 2);
+        assert_eq!(p.kind(), ModeKind::Sync);
+        assert_eq!(p.epochs().len(), 3);
+        assert_eq!(p.epochs()[1], ModeEpoch { epoch: 1, kind: ModeKind::Gba, start_day: 2 });
+        assert_eq!(
+            p.trace().events,
+            vec![
+                SwitchEvent { day: 2, from: ModeKind::Sync, to: ModeKind::Gba },
+                SwitchEvent { day: 5, from: ModeKind::Gba, to: ModeKind::Sync },
+            ]
+        );
+        // Manual plane never volunteers a switch.
+        assert_eq!(p.observe(0.99), None);
+    }
+
+    #[test]
+    fn adaptive_plane_proposes_and_manual_advance_keeps_controller_synced() {
+        let mut p = SwitchPlane::adaptive(ModeKind::Sync, 0.6, 0.4);
+        assert!(p.is_adaptive());
+        assert_eq!(p.observe(0.7), Some(ModeKind::Gba));
+        p.advance(1, ModeKind::Gba);
+        assert_eq!(p.observe(0.7), None, "already in GBA");
+        // Operator forces sync manually; controller follows, so the next
+        // straggler storm proposes GBA again instead of thinking it is
+        // still in GBA.
+        p.advance(2, ModeKind::Sync);
+        assert_eq!(p.observe(0.9), Some(ModeKind::Gba));
     }
 }

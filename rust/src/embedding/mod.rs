@@ -189,6 +189,22 @@ impl EmbeddingStore {
         shard.write().unwrap().insert(key, Row { vec, state, meta });
     }
 
+    /// Re-shape every materialized row's optimizer state for a new
+    /// optimizer with `slots` state floats per weight, zeroing it (the
+    /// old optimizer's accumulators are meaningless to the new one).
+    /// The mode-switch (`SwapPolicy`) path for optimizer-changing
+    /// epochs; vectors and metadata are untouched.
+    pub fn reset_state(&mut self, slots: usize) {
+        self.slots = slots;
+        let n = self.cfg.dim * slots;
+        for shard in &self.shards {
+            let mut guard = shard.write().unwrap();
+            for row in guard.values_mut() {
+                row.state = vec![0.0; n];
+            }
+        }
+    }
+
     /// Drop all rows (tests).
     pub fn clear(&self) {
         for shard in &self.shards {
@@ -313,6 +329,29 @@ mod tests {
             assert_eq!(s.row(k), s2.row(k));
             assert_eq!(s.meta(k).unwrap().update_count, s2.meta(k).unwrap().update_count);
         }
+    }
+
+    #[test]
+    fn reset_state_reshapes_and_zeroes_every_row() {
+        let mut s = store(1);
+        let opt = Adagrad::new(0.1);
+        for k in 0..8u64 {
+            s.apply_grads(&[(k, vec![1.0; 4], 1)], &opt, 1);
+        }
+        let mut any_nonzero = false;
+        s.for_each_row(|_, _, st, _| any_nonzero |= st.iter().any(|&x| x != 0.0));
+        assert!(any_nonzero, "adagrad accumulators should be live");
+        let vec_before = s.row(3);
+        let meta_before = s.meta(3).unwrap();
+        s.reset_state(2);
+        s.for_each_row(|_, _, st, _| {
+            assert_eq!(st.len(), 8, "state reshaped to dim * new_slots");
+            assert!(st.iter().all(|&x| x == 0.0), "state zeroed");
+        });
+        // Vectors and metadata survive; inserts now expect the new shape.
+        assert_eq!(s.row(3), vec_before);
+        assert_eq!(s.meta(3).unwrap().update_count, meta_before.update_count);
+        s.insert_row(99, vec![0.0; 4], vec![0.0; 8], RowMeta::default());
     }
 
     #[test]

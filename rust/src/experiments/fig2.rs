@@ -29,7 +29,7 @@ fn arm(
     from: ModeKind,
     to: Option<ModeKind>,
     days_each: usize,
-) -> Result<Vec<f64>> {
+) -> Result<(Vec<f64>, Vec<Json>)> {
     let mut s = TrainSession::new(cfg.clone(), from, SessionOptions::default())?;
     let mut aucs = Vec::new();
     for d in 0..days_each {
@@ -37,13 +37,27 @@ fn arm(
         aucs.push(s.eval_auc(d + 1)?);
     }
     if let Some(to) = to {
+        // In-place switch: the session records the event on its own
+        // SwitchTrace, which we emit so the figure can annotate the
+        // switch point instead of hard-coding `days_each`.
         s.switch_mode(to)?;
     }
     for d in days_each..2 * days_each {
         s.train_day(d)?;
         aucs.push(s.eval_auc(d + 1)?);
     }
-    Ok(aucs)
+    let events = s
+        .switch_trace()
+        .events
+        .iter()
+        .map(|e| {
+            Json::obj()
+                .set("day", e.day)
+                .set("from", e.from.as_str())
+                .set("to", e.to.as_str())
+        })
+        .collect();
+    Ok((aucs, events))
 }
 
 pub fn run(ctx: &ExpCtx) -> Result<()> {
@@ -56,7 +70,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     }
     let days_each = if ctx.quick { 1 } else { 2 };
 
-    let arms: Vec<(&str, Vec<f64>)> = vec![
+    let arms: Vec<(&str, (Vec<f64>, Vec<Json>))> = vec![
         ("sync (no switch)", arm(&cfg, ModeKind::Sync, None, days_each)?),
         ("sync -> async, set A", arm(&cfg, ModeKind::Sync, Some(ModeKind::Async), days_each)?),
         (
@@ -75,19 +89,24 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new("Fig. 2 — AUC around a mid-run mode switch (criteo task)", &hrefs);
     let mut jrows = Vec::new();
-    for (name, aucs) in &arms {
+    for (name, (aucs, events)) in &arms {
         let mut row = vec![name.to_string()];
         row.extend(aucs.iter().map(|a| fmt_auc(*a)));
         table.row(row);
-        jrows.push(Json::obj().set("arm", *name).set("auc", aucs.clone()));
+        jrows.push(
+            Json::obj()
+                .set("arm", *name)
+                .set("auc", aucs.clone())
+                .set("switch_trace", Json::Arr(events.clone())),
+        );
     }
     table.print();
 
     // Shape checks: naive switches dip relative to the un-switched arm at
     // the first post-switch eval; the GBA switch does not.
-    let base = arms[0].1[days_each];
-    let naive_a = arms[1].1[days_each];
-    let gba = arms[3].1[days_each];
+    let base = arms[0].1 .0[days_each];
+    let naive_a = arms[1].1 .0[days_each];
+    let gba = arms[3].1 .0[days_each];
     println!(
         "\nfirst post-switch AUC: baseline {:.4}, sync->async(setA) {:.4} (drop {:+.4}), \
          sync->GBA {:.4} (drop {:+.4})",

@@ -16,7 +16,7 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use gba::config::{ExperimentConfig, ModeKind, TransportKind, WorkerPlane};
+use gba::config::{ExperimentConfig, ModeKind, SwitchPolicyKind, TransportKind, WorkerPlane};
 use gba::data::DataGen;
 use gba::experiments::{self, ExpCtx};
 use gba::metrics::report::fmt_auc;
@@ -73,6 +73,10 @@ USAGE:
   gba-train train --config FILE --mode <sync|async|hop_bs|bsp|hop_bw|gba>
                   [--days N] [--backend native|pjrt] [--artifacts DIR]
                   [--straggler] [--switch-to MODE] [--switch-day D]
+                  [--switch-policy manual|adaptive]   (override [switch]
+                                 policy: adaptive watches per-day straggler
+                                 telemetry and switches sync<->gba in place,
+                                 with remote workers re-handshaking live)
                   [--shards N]   (override [ps] n_shards: PS plane width)
                   [--transport inproc|socket|remote]   (override [ps]
                                  transport: shard endpoints in-process,
@@ -169,6 +173,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.cluster.worker_listen = listen.to_string();
         cfg.validate()?;
     }
+    if let Some(policy) = args.get("switch-policy") {
+        cfg.switch.policy = SwitchPolicyKind::parse(policy)?;
+    }
     let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
     let days: usize = args
         .get("days")
@@ -176,13 +183,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         .transpose()?
         .unwrap_or(cfg.data.days_base + cfg.data.days_eval - 1);
     let switch_to = args.get("switch-to").map(ModeKind::parse).transpose()?;
-    // switch_mode would reject this at the switch day — fail before
-    // day 0 instead of after hours of training.
-    anyhow::ensure!(
-        switch_to.is_none() || cfg.cluster.workers == WorkerPlane::InProc,
-        "--switch-to is not supported with --workers remote (remote workers hold their \
-         launch-time mode's shape); restart the session and workers in the new mode instead"
-    );
+    // A switch that switch_mode would reject at the switch day is fully
+    // decidable here — fail before day 0, not hours into training.
+    if let Some(to) = switch_to {
+        anyhow::ensure!(
+            cfg.has_mode(to),
+            "--switch-to {}: the config does not define [mode.{}]",
+            to.as_str(),
+            to.as_str()
+        );
+        anyhow::ensure!(
+            cfg.switch.policy != SwitchPolicyKind::Adaptive
+                || matches!(to, ModeKind::Sync | ModeKind::Gba),
+            "--switch-to {} is incompatible with --switch-policy adaptive (the controller \
+             drives sync <-> gba only); use --switch-policy manual",
+            to.as_str()
+        );
+    }
     let switch_day: usize =
         args.get("switch-day").map(|s| s.parse()).transpose()?.unwrap_or(days / 2);
     let opts = SessionOptions {
@@ -216,7 +233,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         if let Some(to) = switch_to {
             if d == switch_day {
                 println!(
-                    "--- switching {} -> {} (tuning-free) ---",
+                    "--- switching {} -> {} (tuning-free, in place) ---",
                     session.kind.paper_name(),
                     to.paper_name()
                 );
@@ -226,15 +243,37 @@ fn cmd_train(args: &Args) -> Result<()> {
         let stats = session.train_day(d)?;
         let auc = session.eval_auc(d + 1)?;
         println!(
-            "day {d}: auc(day{}) = {}  qps = {:.0}  steps = {}  dropped = {}  stale(mean/max) = {:.2}/{}",
+            "day {d} [{} e{}]: auc(day{}) = {}  qps = {:.0}  steps = {}  dropped = {}  \
+             reissued = {}  stale(mean/max) = {:.2}/{}  straggler = {:.2}",
+            session.kind.as_str(),
+            session.mode_epoch(),
             d + 1,
             fmt_auc(auc),
             stats.qps,
             stats.counters.global_steps,
             stats.counters.dropped_batches,
+            stats.reissued(),
             stats.counters.dense_staleness.mean(),
             stats.counters.dense_staleness.max(),
+            stats.straggler_signal(),
         );
+        // Adaptive policy: let the switch plane read the day's straggler
+        // telemetry and advance the mode epoch if the watermarks say so
+        // (remote workers re-handshake inside switch_mode).
+        if session.is_adaptive() {
+            if let Some(to) = session.observe_day(&stats)? {
+                println!(
+                    "--- adaptive switch -> {} (epoch {}, straggler signal {:.2}) ---",
+                    to.paper_name(),
+                    session.mode_epoch(),
+                    stats.straggler_signal()
+                );
+            }
+        }
+    }
+    // Run metrics: the switch trace, one parseable line per event.
+    for e in &session.switch_trace().events {
+        println!("switch-trace: day {} {} -> {}", e.day, e.from.as_str(), e.to.as_str());
     }
     // Clean end of training: remote workers get the SessionOver
     // farewell and exit 0. Error paths skip this, so workers exit

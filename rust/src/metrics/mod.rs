@@ -155,6 +155,10 @@ impl StalenessStats {
 pub struct TrainCounters {
     /// Batches whose gradients were discarded (Hop-BW drops, GBA decay).
     pub dropped_batches: u64,
+    /// Batch indices re-issued after their claiming worker was reset
+    /// (the claim died with the worker; the batch goes back on the data
+    /// list so end-of-day coverage stays complete).
+    pub reissued_batches: u64,
     /// Gradients applied to parameters.
     pub applied_gradients: u64,
     /// Global steps (aggregated updates).

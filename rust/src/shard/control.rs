@@ -18,6 +18,7 @@
 //! enforced, but with the heavy aggregation/apply arithmetic outside
 //! the lock and fanned out across shards.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
@@ -51,6 +52,14 @@ struct CtrlState {
     day_batches: usize,
     /// Claims handed out but not yet pushed back.
     outstanding: usize,
+    /// The batch index each worker's in-flight claim covers (at most one
+    /// claim per worker — Algorithm 1 alternates pull/push). A reset
+    /// moves the entry to `requeue` so the batch is *re-issued*, not
+    /// lost: a dead worker must not leave a hole in the day's data list.
+    claims: HashMap<WorkerId, usize>,
+    /// Batch indices reclaimed from reset workers, served (FIFO) before
+    /// the day cursor advances further.
+    requeue: VecDeque<usize>,
     /// Flushes admitted but not yet applied to the shards.
     applying: usize,
     /// While `applying > 0`: the worker whose push triggered the flush
@@ -90,6 +99,8 @@ impl ControlPlane {
                 next_batch: 0,
                 day_batches: 0,
                 outstanding: 0,
+                claims: HashMap::new(),
+                requeue: VecDeque::new(),
                 applying: 0,
                 flusher: None,
                 grad_norms: None,
@@ -105,6 +116,10 @@ impl ControlPlane {
         c.day = day;
         c.next_batch = 0;
         c.day_batches = n_batches;
+        // Batch indices are day-relative: claims and requeued indices
+        // from a previous day are meaningless now.
+        c.claims.clear();
+        c.requeue.clear();
         drop(c);
         self.cv.notify_all();
     }
@@ -139,19 +154,45 @@ impl ControlPlane {
         if c.flusher != Some(w) {
             c = self.wait_not_applying(c);
         }
-        if c.next_batch >= c.day_batches {
+        if c.next_batch >= c.day_batches && c.requeue.is_empty() {
+            // The cursor is spent, but an outstanding claim may still
+            // come back as a re-issue (its worker died and the reclaim
+            // has not landed yet). Declaring EndOfData now would orphan
+            // that batch — the survivors would exit their day loops in
+            // the race window before `worker_reset` requeues it. Park
+            // instead: the claim resolves as a push (outstanding → 0,
+            // then EndOfData) or a reset (requeue refills, the next
+            // pull takes the batch).
+            if c.outstanding > 0 {
+                return PullReply::Wait;
+            }
             return PullReply::EndOfData;
         }
         match c.policy.on_pull(w) {
             PullDecision::Wait => PullReply::Wait,
             PullDecision::Token(token) => {
+                // Re-issued batches (reclaimed from reset workers) go
+                // out before the day cursor advances further.
+                let batch_index = match c.requeue.pop_front() {
+                    Some(b) => b,
+                    None => {
+                        let b = c.next_batch;
+                        c.next_batch += 1;
+                        b
+                    }
+                };
                 let item = WorkItem {
                     token,
                     version: c.policy.global_step(),
                     day: c.day,
-                    batch_index: c.next_batch,
+                    batch_index,
                 };
-                c.next_batch += 1;
+                // One recorded claim per worker id: Algorithm-1 drivers
+                // alternate pull/push, so a second pull before the push
+                // only happens in synthetic (test) schedules — there
+                // the newest claim shadows the older, matching the
+                // policies' own single-token-per-worker bookkeeping.
+                c.claims.insert(w, batch_index);
                 c.outstanding += 1;
                 PullReply::Work(item)
             }
@@ -183,6 +224,7 @@ impl ControlPlane {
         let mut c = self.wait_not_applying(self.state.lock().unwrap());
         c.outstanding = c.outstanding.saturating_sub(1);
         let pusher = grad.worker;
+        c.claims.remove(&pusher);
         let action = c.policy.on_push(grad.worker, grad.token);
         let job = match action {
             PushAction::Drop => {
@@ -203,10 +245,19 @@ impl ControlPlane {
         job
     }
 
-    /// Worker failed: forget its in-flight claim (Appendix B).
+    /// Worker failed: forget its in-flight claim (Appendix B) and
+    /// *re-issue* the claimed batch index — the next pull (any worker)
+    /// takes it before the day cursor advances, so a dead worker leaves
+    /// no hole in the day's coverage. Counted as `reissued_batches`.
     pub fn worker_reset(&self, w: WorkerId) {
         let mut c = self.wait_not_applying(self.state.lock().unwrap());
-        c.outstanding = c.outstanding.saturating_sub(1);
+        // A reset with no recorded claim (double reset, lost ack) must
+        // not drift the books: only a real claim releases a token.
+        if let Some(batch) = c.claims.remove(&w) {
+            c.outstanding = c.outstanding.saturating_sub(1);
+            c.requeue.push_back(batch);
+            c.counters.reissued_batches += 1;
+        }
         c.policy.on_worker_reset(w);
         drop(c);
         self.cv.notify_all();
@@ -542,6 +593,77 @@ mod tests {
         assert_eq!(c.dropped_batches, 2);
         assert_eq!(c.applied_gradients, 2);
         assert!(cp.quiescent());
+    }
+
+    /// A reset worker's claimed batch index is re-issued to the next
+    /// puller (FIFO, ahead of the day cursor) and counted as reissued —
+    /// a dead worker leaves no hole in the day's data list.
+    #[test]
+    fn worker_reset_reissues_the_claimed_batch_index() {
+        let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(4, 3)));
+        cp.set_day(0, 10);
+        let a = match cp.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        let b = match cp.pull(1) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((a.batch_index, b.batch_index), (0, 1));
+        cp.worker_reset(1);
+        assert_eq!(cp.counters().reissued_batches, 1);
+        assert_eq!(cp.outstanding(), 1);
+        // The reclaimed index goes out before the cursor advances …
+        let c = match cp.pull(2) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(c.batch_index, 1, "reclaimed batch re-issued first");
+        // … and the cursor then resumes where it left off.
+        let d = match cp.pull(1) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(d.batch_index, 2);
+        // A reset with no claim outstanding changes nothing.
+        cp.worker_reset(7);
+        assert_eq!(cp.counters().reissued_batches, 1);
+        assert_eq!(cp.outstanding(), 3);
+    }
+
+    /// The day stays open while a reclaimed batch awaits re-issue, even
+    /// after the cursor exhausted the data list.
+    #[test]
+    fn reissued_batch_keeps_day_open_past_cursor_end() {
+        let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(2, 3)));
+        cp.set_day(0, 1);
+        let a = match cp.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(a.batch_index, 0);
+        cp.worker_reset(0);
+        // Cursor is spent, but the reclaimed batch keeps the day alive.
+        let b = match cp.pull(1) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(b.batch_index, 0, "the lost batch is trained after all");
+        // Worker 1 now holds the only claim: the day must not end while
+        // it is outstanding (a late reset would orphan the re-issue) —
+        // other pullers park instead.
+        assert_eq!(cp.pull(0), PullReply::Wait);
+        assert!(cp.push(push_of(1, b.token)).is_none());
+        assert_eq!(cp.pull(0), PullReply::EndOfData);
+        // A new day clears any stale requeue state.
+        cp.set_day(1, 1);
+        assert_eq!(cp.counters().reissued_batches, 1);
+        let c = match cp.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!((c.day, c.batch_index), (1, 0));
     }
 
     #[test]

@@ -70,13 +70,13 @@ pub use control::{ControlPlane, FlushJob};
 pub use router::ShardRouter;
 pub use shard::{DenseShardState, PsShard, ShardStats};
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::RwLock;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::TransportKind;
+use crate::config::{OptimKind, TransportKind};
 use crate::coordinator::{ModePolicy, WorkerId};
 use crate::embedding::{EmbeddingConfig, RowMeta};
 use crate::metrics::TrainCounters;
@@ -192,7 +192,7 @@ impl PsBuild {
             router,
             shapes,
             emb_dim: self.emb_cfg.dim,
-            n_dense_slots: self.opt_dense.slots(),
+            n_dense_slots: AtomicUsize::new(self.opt_dense.slots()),
             snapshot: RwLock::new(()),
             pull_stall_ns: AtomicU64::new(0),
             supervisor,
@@ -210,7 +210,10 @@ pub struct ShardedPs {
     /// Full shapes of the dense tensors (for slicing and reassembly).
     shapes: Vec<Vec<usize>>,
     emb_dim: usize,
-    n_dense_slots: usize,
+    /// Slot floats per dense weight of the *current* optimizer — atomic
+    /// because an in-place mode switch to/from the async family swaps
+    /// the optimizer pair (and thus the planar slot layout) mid-run.
+    n_dense_slots: AtomicUsize,
     /// Apply-exclusion lock: dense readers (parameter pulls, slot
     /// export) take `read`, a flush's apply fan-out takes `write` for
     /// its whole duration. This is what keeps multi-tensor snapshots
@@ -384,6 +387,24 @@ impl ShardedPs {
         if let Some(job) = self.control.swap_policy(policy) {
             self.run_flush(job);
         }
+    }
+
+    /// Swap the optimizer pair on every shard (the in-place switch for
+    /// mode epochs whose optimizer differs — Table 5.1 pairs Adagrad
+    /// with Async., Adam with the rest). Callers must have drained the
+    /// old policy first ([`switch_policy`](Self::switch_policy)):
+    /// gradients admitted under the old epoch belong to the old
+    /// optimizer. `reset_slots` zeroes dense and per-row optimizer
+    /// state even when the shapes happen to match.
+    pub fn swap_optimizer(&self, opt: OptimKind, lr: f64, reset_slots: bool) {
+        // Exclude dense readers: a snapshot straddling the swap could
+        // see shard 0's slots reshaped and shard 1's not.
+        let _apply_excl = self.snapshot.write().unwrap();
+        self.supervisor.swap_optimizer(opt, lr, reset_slots);
+        self.n_dense_slots.store(
+            crate::optim::make_optimizer(opt, lr).slots(),
+            Ordering::Relaxed,
+        );
     }
 
     // ---- push / flush -----------------------------------------------------
@@ -564,7 +585,7 @@ impl ShardedPs {
     /// shard-local planar buffers.
     pub fn dense_slots(&self) -> Vec<Vec<f32>> {
         let _snap = self.snapshot.read().unwrap();
-        let n_slots = self.n_dense_slots;
+        let n_slots = self.n_dense_slots.load(Ordering::Relaxed);
         let mut out: Vec<Vec<f32>> = self
             .shapes
             .iter()
@@ -590,8 +611,12 @@ impl ShardedPs {
     /// [`dense_slots`]: ShardedPs::dense_slots
     pub fn set_dense_slots(&self, slots: Vec<Vec<f32>>) {
         assert_eq!(slots.len(), self.shapes.len());
-        let n_slots = self.n_dense_slots;
+        // Read the slot shape only *under* the snapshot lock — a
+        // concurrent `swap_optimizer` holds it for write while it
+        // reshapes the plane and updates `n_dense_slots`, so loading
+        // first could slice with a stale pre-swap count.
         let _apply_excl = self.snapshot.write().unwrap();
+        let n_slots = self.n_dense_slots.load(Ordering::Relaxed);
         for s in 0..self.n_shards() {
             let shard_slots: Vec<Vec<f32>> = slots
                 .iter()
@@ -972,6 +997,72 @@ mod tests {
                 single.emb_meta(*k).map(|m| (m.last_update_step, m.update_count)),
             );
         }
+    }
+
+    /// In-place optimizer swap (the async↔rest half of a mode switch):
+    /// slots reshape to the new optimizer's planar layout, training
+    /// continues, and a lost shard respawns with the *new* pair.
+    #[test]
+    fn swap_optimizer_reshapes_slots_and_survives_shard_loss() {
+        let ps = ps_with(3, Box::new(Adam::new(0.05)));
+        ps.set_day(0, 100);
+        for _ in 0..2 {
+            let it = match ps.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            ps.push(unit_push(it.token, &[1, 2, 3], 0.7));
+        }
+        let adam_slots = ps.dense_slots();
+        assert!(adam_slots.iter().any(|s| s.iter().any(|&x| x != 0.0)));
+        ps.swap_optimizer(crate::config::OptimKind::Adagrad, 0.05, true);
+        let ada_slots = ps.dense_slots();
+        for (t, s) in ada_slots.iter().enumerate() {
+            // Adagrad: 1 slot/weight vs Adam's 2.
+            assert_eq!(s.len(), adam_slots[t].len() / 2, "planar layout reshaped");
+            assert!(s.iter().all(|&x| x == 0.0), "accumulators reset");
+        }
+        // Training continues under the new pair …
+        for _ in 0..2 {
+            let it = match ps.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            ps.push(unit_push(it.token, &[1, 2, 3], 0.7));
+        }
+        assert!(ps.dense_slots().iter().any(|s| s.iter().any(|&x| x != 0.0)));
+        // … and a lost shard respawns with the swapped spec (a respawn
+        // from the launch pair would mismatch the checkpoint's shapes).
+        ps.kill_shard(1);
+        let _ = ps.dense_params();
+        assert_eq!(ps.lost_shard_events(), 1);
+        for _ in 0..2 {
+            let it = match ps.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            ps.push(unit_push(it.token, &[4], 0.1));
+        }
+        assert!(ps.quiescent());
+    }
+
+    /// A same-pair swap with `reset_slots = false` preserves the slot
+    /// state bit-for-bit — the true tuning-free inherit.
+    #[test]
+    fn swap_same_optimizer_without_reset_preserves_slots() {
+        let ps = ps_with(2, Box::new(Adam::new(0.05)));
+        ps.set_day(0, 100);
+        for _ in 0..2 {
+            let it = match ps.pull(0) {
+                PullReply::Work(it) => it,
+                other => panic!("{other:?}"),
+            };
+            ps.push(unit_push(it.token, &[5, 6], 0.3));
+        }
+        let before = ps.dense_slots();
+        assert!(before.iter().any(|s| s.iter().any(|&x| x != 0.0)));
+        ps.swap_optimizer(crate::config::OptimKind::Adam, 0.05, false);
+        assert_eq!(ps.dense_slots(), before, "same-shape swap kept the slots");
     }
 
     /// Socket endpoints behind the same front: build, push, read back.

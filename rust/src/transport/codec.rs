@@ -34,6 +34,7 @@
 
 use std::io::{Read, Write};
 
+use crate::config::{ModeKind, OptimKind};
 use crate::coordinator::WorkerId;
 use crate::embedding::RowMeta;
 use crate::runtime::HostTensor;
@@ -175,6 +176,25 @@ pub enum WorkerRequest {
     /// Day finished: stats back to the front, field-for-field
     /// [`WorkerStats`](crate::worker::WorkerStats).
     EndOfDay { batches: u64, samples: u64, failures: u64, busy_sec: f64 },
+    /// The mode re-handshake, worker half: after the front answers a
+    /// `BeginDay` with [`WorkerReply::Switch`], the worker re-derives
+    /// its shape from its own config file at the announced mode and
+    /// declares it here — the same keys as `Hello`, plus the epoch id
+    /// and the new mode's worker count, so both ends prove they agree
+    /// on *which* switch they are performing and what it trains. The
+    /// front answers [`WorkerReply::Epoch`]; any disagreement fails the
+    /// run loudly (a worker training the old shape would silently
+    /// corrupt the new epoch).
+    SwitchMode {
+        epoch: u64,
+        worker: u64,
+        workers: u64,
+        local_batch: u64,
+        fields: u32,
+        emb_dim: u32,
+        seed: u64,
+        samples_per_day: u64,
+    },
 }
 
 /// Replies to [`WorkerRequest`], one per request shape.
@@ -194,6 +214,14 @@ pub enum WorkerReply {
     Emb(HostTensor),
     /// `DenseParams` payload.
     Dense(Vec<HostTensor>),
+    /// `BeginDay`: the session advanced its mode epoch instead of
+    /// starting a day. The worker must re-derive its shape for `mode`
+    /// and answer with [`WorkerRequest::SwitchMode`] before any further
+    /// day is served.
+    Switch { epoch: u64, mode: ModeKind },
+    /// `SwitchMode` accepted: the worker is admitted to `epoch` and
+    /// loops back to `BeginDay`.
+    Epoch { epoch: u64 },
 }
 
 /// The shard-plane RPC: every way the front touches a data-plane shard.
@@ -239,6 +267,15 @@ pub enum ShardRequest {
     /// the wire; equal-kind different-lr configs remain the operator's
     /// contract.)
     Hello { shard: u64, dense_slots: u32, emb_slots: u32, emb_dim: u32 },
+    /// In-place mode switch, shard half: install a fresh optimizer pair
+    /// of `opt` at `lr` for every subsequent `Apply`. `reset_slots`
+    /// zeroes the dense slot buffers and every row's optimizer state
+    /// (always forced when the new optimizer's slot shape differs —
+    /// stale accumulators are meaningless across optimizer kinds);
+    /// a same-shape swap with `reset_slots = false` preserves them, the
+    /// true tuning-free inherit. Mutating: journaled and replayed like
+    /// any other state change.
+    SwapPolicy { opt: OptimKind, lr: f64, reset_slots: bool },
 }
 
 /// Replies, one per request shape.
@@ -419,6 +456,26 @@ fn encode_worker_req(b: &mut Vec<u8>, r: &WorkerRequest) {
             put_u64(b, *failures);
             put_f64(b, *busy_sec);
         }
+        WorkerRequest::SwitchMode {
+            epoch,
+            worker,
+            workers,
+            local_batch,
+            fields,
+            emb_dim,
+            seed,
+            samples_per_day,
+        } => {
+            put_u8(b, 8);
+            put_u64(b, *epoch);
+            put_u64(b, *worker);
+            put_u64(b, *workers);
+            put_u64(b, *local_batch);
+            put_u32(b, *fields);
+            put_u32(b, *emb_dim);
+            put_u64(b, *seed);
+            put_u64(b, *samples_per_day);
+        }
     }
 }
 
@@ -445,6 +502,15 @@ fn encode_worker_reply(b: &mut Vec<u8>, r: &WorkerReply) {
             }
         }
         WorkerReply::SessionOver => put_u8(b, 5),
+        WorkerReply::Switch { epoch, mode } => {
+            put_u8(b, 6);
+            put_u64(b, *epoch);
+            put_u8(b, mode.wire_id());
+        }
+        WorkerReply::Epoch { epoch } => {
+            put_u8(b, 7);
+            put_u64(b, *epoch);
+        }
     }
 }
 
@@ -502,6 +568,12 @@ fn encode_req(b: &mut Vec<u8>, r: &ShardRequest) {
             put_u32(b, *dense_slots);
             put_u32(b, *emb_slots);
             put_u32(b, *emb_dim);
+        }
+        ShardRequest::SwapPolicy { opt, lr, reset_slots } => {
+            put_u8(b, 13);
+            put_u8(b, opt.wire_id());
+            put_f64(b, *lr);
+            put_u8(b, *reset_slots as u8);
         }
     }
 }
@@ -744,6 +816,16 @@ fn decode_worker_req(rd: &mut Rd) -> Result<WorkerRequest, CodecError> {
             failures: rd.u64()?,
             busy_sec: rd.f64()?,
         },
+        8 => WorkerRequest::SwitchMode {
+            epoch: rd.u64()?,
+            worker: rd.u64()?,
+            workers: rd.u64()?,
+            local_batch: rd.u64()?,
+            fields: rd.u32()?,
+            emb_dim: rd.u32()?,
+            seed: rd.u64()?,
+            samples_per_day: rd.u64()?,
+        },
         _ => return Err(CodecError::Malformed("worker request tag")),
     })
 }
@@ -763,6 +845,12 @@ fn decode_worker_reply(rd: &mut Rd) -> Result<WorkerReply, CodecError> {
             WorkerReply::Dense(ts)
         }
         5 => WorkerReply::SessionOver,
+        6 => WorkerReply::Switch {
+            epoch: rd.u64()?,
+            mode: ModeKind::from_wire(rd.u8()?)
+                .map_err(|_| CodecError::Malformed("mode wire id"))?,
+        },
+        7 => WorkerReply::Epoch { epoch: rd.u64()? },
         _ => return Err(CodecError::Malformed("worker reply tag")),
     })
 }
@@ -804,6 +892,16 @@ fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
             dense_slots: rd.u32()?,
             emb_slots: rd.u32()?,
             emb_dim: rd.u32()?,
+        },
+        13 => ShardRequest::SwapPolicy {
+            opt: OptimKind::from_wire(rd.u8()?)
+                .map_err(|_| CodecError::Malformed("optimizer wire id"))?,
+            lr: rd.f64()?,
+            reset_slots: match rd.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(CodecError::Malformed("reset_slots flag")),
+            },
         },
         _ => return Err(CodecError::Malformed("shard request tag")),
     })
@@ -1022,6 +1120,16 @@ mod tests {
                 failures: 1,
                 busy_sec: 0.125,
             },
+            WorkerRequest::SwitchMode {
+                epoch: u64::MAX,
+                worker: 3,
+                workers: 8,
+                local_batch: 16,
+                fields: 4,
+                emb_dim: 8,
+                seed: 42,
+                samples_per_day: 4096,
+            },
         ];
         for req in reqs {
             let body = encode(&WireMsg::WorkerReq(req.clone()));
@@ -1063,6 +1171,8 @@ mod tests {
             WorkerReply::Ok,
             WorkerReply::Day { day: 41 },
             WorkerReply::SessionOver,
+            WorkerReply::Switch { epoch: 3, mode: crate::config::ModeKind::Gba },
+            WorkerReply::Epoch { epoch: u64::MAX },
             WorkerReply::Pull(PullReply::Work(WorkItem { token: 5, version: 2, day: 1, batch_index: 7 })),
             WorkerReply::Emb(t.clone()),
             WorkerReply::Dense(vec![t.clone(), HostTensor { shape: vec![0], data: vec![] }]),
@@ -1078,6 +1188,17 @@ mod tests {
                 (WireMsg::WorkerRep(WorkerReply::Pull(p)), WorkerReply::Pull(w)) => {
                     assert_eq!(p, *w)
                 }
+                (
+                    WireMsg::WorkerRep(WorkerReply::Switch { epoch, mode }),
+                    WorkerReply::Switch { epoch: we, mode: wm },
+                ) => {
+                    assert_eq!(epoch, *we);
+                    assert_eq!(mode, *wm);
+                }
+                (
+                    WireMsg::WorkerRep(WorkerReply::Epoch { epoch }),
+                    WorkerReply::Epoch { epoch: we },
+                ) => assert_eq!(epoch, *we),
                 (WireMsg::WorkerRep(WorkerReply::Emb(a)), WorkerReply::Emb(w)) => {
                     assert_eq!(a.shape, w.shape);
                     assert_eq!(bits(&a.data), bits(&w.data));
@@ -1095,6 +1216,38 @@ mod tests {
                 assert!(decode(&body[..cut]).is_err(), "decoded truncated worker reply at {cut}");
             }
         }
+    }
+
+    #[test]
+    fn swap_policy_roundtrip_and_truncation_rejected() {
+        for (opt, lr, reset) in [
+            (OptimKind::Adam, 0.001, false),
+            (OptimKind::Adagrad, 0.05, true),
+            (OptimKind::Sgd, f64::MIN_POSITIVE, true),
+        ] {
+            let body =
+                encode(&WireMsg::Req(ShardRequest::SwapPolicy { opt, lr, reset_slots: reset }));
+            match decode(&body).unwrap() {
+                WireMsg::Req(ShardRequest::SwapPolicy { opt: o, lr: l, reset_slots: r }) => {
+                    assert_eq!(o, opt);
+                    assert_eq!(l.to_bits(), lr.to_bits());
+                    assert_eq!(r, reset);
+                }
+                other => panic!("{other:?}"),
+            }
+            for cut in 0..body.len() {
+                assert!(decode(&body[..cut]).is_err(), "decoded truncated SwapPolicy at {cut}");
+            }
+        }
+        // A junk reset flag or optimizer id is Malformed, not a bool cast.
+        let mut body =
+            encode(&WireMsg::Req(ShardRequest::SwapPolicy {
+                opt: OptimKind::Adam,
+                lr: 0.01,
+                reset_slots: true,
+            }));
+        *body.last_mut().unwrap() = 7;
+        assert_eq!(decode(&body).unwrap_err(), CodecError::Malformed("reset_slots flag"));
     }
 
     #[test]

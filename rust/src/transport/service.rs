@@ -11,7 +11,7 @@
 
 use super::codec::{CodecError, RowRecord, ShardReply, ShardRequest, WireMsg};
 use super::endpoint::Conn;
-use crate::optim::Optimizer;
+use crate::optim::{make_optimizer, Optimizer};
 use crate::shard::PsShard;
 
 pub struct ShardService {
@@ -26,8 +26,10 @@ impl ShardService {
     }
 
     /// Execute one request. Every request produces exactly one reply —
-    /// the strict alternation the endpoints rely on.
-    pub fn handle(&self, req: ShardRequest) -> ShardReply {
+    /// the strict alternation the endpoints rely on. (`&mut self`
+    /// because `SwapPolicy` replaces the service's optimizer pair; every
+    /// other verb touches only shard state behind its own locks.)
+    pub fn handle(&mut self, req: ShardRequest) -> ShardReply {
         match req {
             ShardRequest::Ping => ShardReply::Ok,
             ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim } => {
@@ -126,6 +128,29 @@ impl ShardService {
                 stats: self.shard.stats(),
                 emb_mem_bytes: self.shard.emb.memory_bytes() as u64,
             },
+            ShardRequest::SwapPolicy { opt, lr, reset_slots } => {
+                // In-place mode switch (§1): install the new epoch's
+                // optimizer pair. Slot state survives only a same-shape
+                // swap that did not ask for a reset — across optimizer
+                // kinds the old accumulators are meaningless and are
+                // zeroed at the new shape.
+                let opt_dense = make_optimizer(opt, lr);
+                let opt_emb = make_optimizer(opt, lr);
+                let same_shape = opt_dense.slots() == self.opt_dense.slots()
+                    && opt_emb.slots() == self.opt_emb.slots();
+                if reset_slots || !same_shape {
+                    let n_slots = opt_dense.slots();
+                    let mut d = self.shard.dense.write().unwrap();
+                    for (slot, &(lo, hi)) in d.slots.iter_mut().zip(&self.shard.ranges) {
+                        *slot = vec![0.0; (hi - lo) * n_slots];
+                    }
+                    drop(d);
+                    self.shard.emb.reset_state(opt_emb.slots());
+                }
+                self.opt_dense = opt_dense;
+                self.opt_emb = opt_emb;
+                ShardReply::Ok
+            }
         }
     }
 }
@@ -139,7 +164,7 @@ pub fn serve(service: ShardService, conn: Box<dyn Conn>) {
 
 /// [`serve`], but reporting how many requests were handled and why the
 /// loop exited (tests assert on the exit cause).
-pub fn serve_counting(service: ShardService, mut conn: Box<dyn Conn>) -> (u64, CodecError) {
+pub fn serve_counting(mut service: ShardService, mut conn: Box<dyn Conn>) -> (u64, CodecError) {
     let mut handled = 0u64;
     loop {
         match conn.recv() {

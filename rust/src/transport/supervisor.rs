@@ -46,9 +46,9 @@ use super::codec::{self, CodecError, RowRecord, ShardReply, ShardRequest, WireMs
 use super::endpoint::{rpc, ChanConn, Conn, DeadConn, SocketConn};
 use super::remote;
 use super::service::{serve, ShardService};
-use crate::config::TransportKind;
+use crate::config::{OptimKind, TransportKind};
 use crate::embedding::EmbeddingConfig;
-use crate::optim::Optimizer;
+use crate::optim::{make_optimizer, Optimizer};
 use crate::runtime::HostTensor;
 use crate::shard::PsShard;
 use crate::util::chan;
@@ -74,6 +74,14 @@ impl ShardSpawnSpec {
     /// Materialize a service holding this shard at checkpoint `ckpt` —
     /// the one construction path shared by every transport's (re)spawn
     /// and by the `shard-server` accept loop.
+    ///
+    /// The embedding store is shaped by the *checkpoint's* `emb_slots`,
+    /// not the spec's current optimizer: across an in-place optimizer
+    /// swap there is a window where the latest checkpoint still holds
+    /// pre-swap row state while the spec already carries the new pair —
+    /// a recovery in that window must install the rows it has (the
+    /// journaled `SwapPolicy` replay then reshapes them), not panic on
+    /// a state-length assert.
     pub fn service_at(&self, ckpt: &ShardCheckpoint) -> ShardService {
         let shard = PsShard::from_parts(
             self.index,
@@ -81,7 +89,7 @@ impl ShardSpawnSpec {
             ckpt.dense.clone(),
             ckpt.slots.clone(),
             self.emb_cfg.clone(),
-            self.opt_emb.slots(),
+            ckpt.emb_slots,
         );
         for (key, vec, state, meta) in &ckpt.rows {
             shard.emb.insert_row(*key, vec.clone(), state.clone(), *meta);
@@ -99,6 +107,12 @@ pub struct ShardCheckpoint {
     pub dense: Vec<Vec<f32>>,
     pub slots: Vec<Vec<f32>>,
     pub rows: Vec<RowRecord>,
+    /// Optimizer-state floats per embedding weight *at snapshot time* —
+    /// the shape `rows` carry. Recorded in the checkpoint (rather than
+    /// read off the spec at restore time) so a recovery landing in the
+    /// window of an in-flight optimizer swap rebuilds the store at the
+    /// rows' actual shape.
+    pub emb_slots: usize,
 }
 
 impl ShardCheckpoint {
@@ -114,7 +128,7 @@ impl ShardCheckpoint {
             .collect();
         let slots: Vec<Vec<f32>> =
             spec.ranges.iter().map(|&(lo, hi)| vec![0.0f32; (hi - lo) * n_slots]).collect();
-        ShardCheckpoint { dense, slots, rows: Vec::new() }
+        ShardCheckpoint { dense, slots, rows: Vec::new(), emb_slots: spec.opt_emb.slots() }
     }
 }
 
@@ -337,7 +351,14 @@ struct ShardSlot {
 
 pub struct ShardSupervisor {
     kind: TransportKind,
-    specs: Vec<ShardSpawnSpec>,
+    /// (Re)spawn recipes, one per shard. Behind per-shard mutexes
+    /// because an in-place mode switch ([`swap_optimizer`]) replaces a
+    /// spec's optimizer pair mid-run — a later respawn must rebuild the
+    /// shard with the *current* epoch's optimizers, not the launch
+    /// pair. Lock order where both are held: slot, then spec.
+    ///
+    /// [`swap_optimizer`]: Self::swap_optimizer
+    specs: Vec<Mutex<ShardSpawnSpec>>,
     slots: Vec<Mutex<ShardSlot>>,
     lost_events: AtomicU64,
     ckpt_every: AtomicUsize,
@@ -356,6 +377,7 @@ fn is_mutating(req: &ShardRequest) -> bool {
             | ShardRequest::SetSlots { .. }
             | ShardRequest::InsertRow { .. }
             | ShardRequest::InsertRows { .. }
+            | ShardRequest::SwapPolicy { .. }
     )
 }
 
@@ -387,7 +409,7 @@ impl ShardSupervisor {
             .collect::<anyhow::Result<Vec<_>>>()?;
         Ok(ShardSupervisor {
             kind,
-            specs,
+            specs: specs.into_iter().map(Mutex::new).collect(),
             slots,
             lost_events: AtomicU64::new(0),
             ckpt_every: AtomicUsize::new(DEFAULT_CKPT_EVERY),
@@ -531,9 +553,58 @@ impl ShardSupervisor {
             let mut guard = self.slots[s].lock().unwrap();
             let slot = &mut *guard;
             if slot.applies_since_ckpt >= self.ckpt_every.load(Ordering::Relaxed)
-                && self.refresh_ckpt(slot).is_err()
+                && self.refresh_ckpt(s, slot).is_err()
             {
                 // Died between the apply ack and the snapshot reads.
+                self.recover(s, slot);
+            }
+        }
+    }
+
+    /// In-place mode switch, shard plane: install the new epoch's
+    /// optimizer pair (`SwapPolicy` RPC) on every shard and update the
+    /// respawn specs so a later lost-shard recovery rebuilds with the
+    /// *current* optimizers. Three steps per shard, each leaving the
+    /// journal consistent with what a replay would need:
+    ///
+    /// 1. refresh the shard-local checkpoint (truncating the journal) —
+    ///    pre-swap `Apply` frames must never be replayed under the new
+    ///    optimizer;
+    /// 2. send the journaled `SwapPolicy` (a shard lost mid-RPC replays
+    ///    it from the journal during recovery, on a service already
+    ///    rebuilt from the not-yet-updated spec — i.e. the old pair —
+    ///    so the replay lands on the same state the live shard had);
+    /// 3. update the spec and refresh again, so the checkpoint's slot
+    ///    shapes match the spec the next respawn will use.
+    ///
+    /// Remote caveat (documented in docs/DEPLOY.md): a `shard-server`
+    /// process derives its *fresh-connection* optimizer pair from its
+    /// launch `--mode`. Swaps within an optimizer family (every
+    /// non-async mode shares one pair, Table 5.1) recover transparently;
+    /// after a swap that changes the family, restart the shard-server
+    /// with the new mode before the next recovery or the connect-time
+    /// `Hello` shape check will fail loudly.
+    pub fn swap_optimizer(&self, opt: OptimKind, lr: f64, reset_slots: bool) {
+        for s in 0..self.n_shards() {
+            {
+                let mut guard = self.slots[s].lock().unwrap();
+                let slot = &mut *guard;
+                if self.refresh_ckpt(s, slot).is_err() {
+                    self.recover(s, slot);
+                }
+            }
+            match self.call(s, ShardRequest::SwapPolicy { opt, lr, reset_slots }) {
+                ShardReply::Ok => {}
+                other => panic!("shard {s}: SwapPolicy rejected: {other:?}"),
+            }
+            {
+                let mut spec = self.specs[s].lock().unwrap();
+                spec.opt_dense = make_optimizer(opt, lr);
+                spec.opt_emb = make_optimizer(opt, lr);
+            }
+            let mut guard = self.slots[s].lock().unwrap();
+            let slot = &mut *guard;
+            if self.refresh_ckpt(s, slot).is_err() {
                 self.recover(s, slot);
             }
         }
@@ -560,7 +631,7 @@ impl ShardSupervisor {
     fn note_apply(&self, s: usize, slot: &mut ShardSlot) {
         slot.applies_since_ckpt += 1;
         if slot.applies_since_ckpt >= self.ckpt_every.load(Ordering::Relaxed)
-            && self.refresh_ckpt(slot).is_err()
+            && self.refresh_ckpt(s, slot).is_err()
         {
             // Died between the apply ack and the snapshot reads.
             self.recover(s, slot);
@@ -568,7 +639,7 @@ impl ShardSupervisor {
     }
 
     /// Snapshot the live shard into `slot.ckpt` and truncate the journal.
-    fn refresh_ckpt(&self, slot: &mut ShardSlot) -> Result<(), ()> {
+    fn refresh_ckpt(&self, s: usize, slot: &mut ShardSlot) -> Result<(), ()> {
         let dense = match rpc(slot.conn.as_mut(), ShardRequest::ReadDense) {
             Ok(ShardReply::Dense { dense }) => dense,
             _ => return Err(()),
@@ -581,7 +652,14 @@ impl ShardSupervisor {
             Ok(ShardReply::RowDump { rows }) => rows,
             _ => return Err(()),
         };
-        slot.ckpt = ShardCheckpoint { dense, slots, rows };
+        // The shape the dumped rows actually carry. Derived from the
+        // rows themselves when any exist (authoritative even mid-swap);
+        // from the spec otherwise. Lock order: slot (held), then spec.
+        let emb_slots = match rows.first() {
+            Some((_, vec, state, _)) if !vec.is_empty() => state.len() / vec.len(),
+            _ => self.specs[s].lock().unwrap().opt_emb.slots(),
+        };
+        slot.ckpt = ShardCheckpoint { dense, slots, rows, emb_slots };
         slot.wal.clear();
         slot.applies_since_ckpt = 0;
         Ok(())
@@ -601,9 +679,11 @@ impl ShardSupervisor {
         if let Some(h) = slot.handle.take() {
             let _ = h.join();
         }
+        let spec = self.specs[s].lock().unwrap();
         let (conn, handle) =
-            spawn_service(self.kind, &self.specs[s], &slot.ckpt, self.connect_deadline)
+            spawn_service(self.kind, &spec, &slot.ckpt, self.connect_deadline)
                 .unwrap_or_else(|e| panic!("shard {s}: respawn after loss failed: {e}"));
+        drop(spec);
         slot.conn = conn;
         slot.handle = handle;
         let ShardSlot { conn, wal, .. } = &mut *slot;
@@ -611,7 +691,7 @@ impl ShardSupervisor {
             Ok(ShardReply::Ok) => {}
             other => panic!("shard {s}: journal replay after respawn failed: {other:?}"),
         });
-        if self.refresh_ckpt(slot).is_err() {
+        if self.refresh_ckpt(s, slot).is_err() {
             panic!("shard {s}: checkpoint refresh after respawn failed");
         }
     }

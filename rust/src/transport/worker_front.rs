@@ -122,10 +122,15 @@ enum Admitted {
 pub struct WorkerFront {
     listener: TcpListener,
     addr: SocketAddr,
-    shape: WorkerShape,
+    /// The *current epoch's* shape — a mode switch replaces it
+    /// ([`begin_epoch`](Self::begin_epoch)), so replacement workers are
+    /// always validated against the mode actually running.
+    shape: Mutex<WorkerShape>,
     slots: Mutex<WorkerSlots>,
     /// Whether a day has been served: the first day demands the full
-    /// worker complement; later days continue on survivors.
+    /// worker complement; later days continue on survivors. An epoch
+    /// switch that *grows* the complement re-arms this — the new mode's
+    /// worker count is part of its shape.
     served_once: AtomicBool,
 }
 
@@ -143,7 +148,7 @@ impl WorkerFront {
         Ok(WorkerFront {
             listener,
             addr,
-            shape,
+            shape: Mutex::new(shape),
             slots: Mutex::new(slots),
             served_once: AtomicBool::new(false),
         })
@@ -171,18 +176,17 @@ impl WorkerFront {
             return Ok(());
         }
         self.accept_pending()?;
+        let workers = self.shape.lock().unwrap().workers;
         let live = self.connected();
         anyhow::ensure!(
             live > 0,
-            "no live workers remain of {} (all died and no replacement said Hello on {})",
-            self.shape.workers,
+            "no live workers remain of {workers} (all died and no replacement said Hello on {})",
             self.addr
         );
-        if live < self.shape.workers {
+        if live < workers {
             eprintln!(
-                "worker front: continuing on {live} of {} workers (replacements may \
-                 Hello before any later day)",
-                self.shape.workers
+                "worker front: continuing on {live} of {workers} workers (replacements may \
+                 Hello before any later day)"
             );
         }
         Ok(())
@@ -211,7 +215,7 @@ impl WorkerFront {
                     "waited {deadline:?} for {} worker(s) {missing:?} of {} to say \
                      Hello on {}",
                     missing.len(),
-                    self.shape.workers,
+                    self.shape.lock().unwrap().workers,
                     self.addr
                 );
             }
@@ -310,7 +314,8 @@ impl WorkerFront {
             Ok(other) => return Ok(Admitted::Junk(format!("expected Hello, got {other:?}"))),
             Err(e) => return Ok(Admitted::Junk(format!("no Hello: {e}"))),
         };
-        let s = &self.shape;
+        let s = self.shape.lock().unwrap().clone();
+        let s = &s;
         let w = worker as usize;
         if w >= s.workers {
             bail!("worker id {w} out of range for {} workers", s.workers);
@@ -398,6 +403,93 @@ impl WorkerFront {
         Ok(stats_out)
     }
 
+    /// Advance the worker plane to mode epoch `epoch` — the wire-level
+    /// re-handshake of the in-place switch, run between days (the epoch
+    /// boundary holds no in-flight tokens; `train_day` drains its day
+    /// first). For every live worker the front answers the pending
+    /// `BeginDay` with `Switch { epoch, mode }`; the worker re-derives
+    /// its [`WorkerShape`] from its own config file at the announced
+    /// mode and declares it back (`SwitchMode`), the front validates
+    /// the declaration against `shape` and confirms with `Epoch`. After
+    /// that the worker loops back to `BeginDay` and the next day is
+    /// served in the new mode.
+    ///
+    /// Complement changes are part of the switch: workers whose id
+    /// falls outside the new mode's range are retired with the
+    /// `SessionOver` farewell (they exit 0 — being switched away is a
+    /// clean end, not a crash); a *grown* complement re-arms the
+    /// full-complement requirement, so the next day blocks until the
+    /// extra `gba-train worker` processes Hello against the new shape.
+    ///
+    /// A worker that dies (or disagrees) mid-re-handshake fails the
+    /// switch loudly: a half-switched fleet training mixed shapes would
+    /// silently corrupt the new epoch, and since no tokens are in
+    /// flight at the boundary, conservation is intact when the error
+    /// surfaces.
+    pub fn begin_epoch(&self, epoch: u64, kind: ModeKind, shape: WorkerShape) -> Result<()> {
+        let mut slots = self.slots.lock().unwrap();
+        let old_workers = slots.len();
+        let new_workers = shape.workers;
+        // Re-handshake every surviving in-range worker *first*: a
+        // failure here must leave the front's own state (shape, slot
+        // count, retired workers) untouched, so the session's "failed
+        // switch changes nothing" contract extends to the front. Only
+        // connections are lost on failure: the dead worker's, and those
+        // of workers that had already confirmed the doomed epoch (a
+        // mixed-epoch fleet must never serve a day).
+        let keep = new_workers.min(old_workers);
+        for w in 0..keep {
+            let Some(conn) = slots[w].as_mut() else { continue };
+            if let Err(e) = rehandshake(conn, w, epoch, kind, &shape) {
+                // The failed connection is unusable mid-protocol — and
+                // every *earlier* worker already confirmed the new
+                // epoch, so carrying those connections into a front
+                // still shaped for the old mode would train a
+                // mixed-shape fleet if the caller survives the Err.
+                // Sever them all (they see an abrupt close and exit
+                // nonzero, the crash contract); their slots reopen for
+                // replacements. Workers not yet re-handshaken are still
+                // parked in the old epoch and stay.
+                for confirmed in slots.iter_mut().take(w + 1) {
+                    *confirmed = None;
+                }
+                return Err(e.context(format!(
+                    "worker {w} failed the epoch-{epoch} mode re-handshake \
+                     (workers 0..{w} had confirmed the new epoch and were disconnected)"
+                )));
+            }
+        }
+        // Every survivor confirmed the epoch: commit the plane to the
+        // new shape. Retire out-of-range workers (a shrinking switch) —
+        // being switched away is a clean end, not a crash, so failures
+        // here are logged, never fatal.
+        for (w, slot) in slots.iter_mut().enumerate().skip(new_workers) {
+            if let Some(mut conn) = slot.take() {
+                match conn.recv() {
+                    Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay)) => {
+                        let _ = conn.send(WireMsg::WorkerRep(WorkerReply::SessionOver));
+                        eprintln!(
+                            "worker front: worker {w} retired by the epoch-{epoch} switch \
+                             (mode {} runs {} workers)",
+                            kind.as_str(),
+                            new_workers
+                        );
+                    }
+                    other => eprintln!(
+                        "worker front: worker {w} dropped at retirement \
+                         (no pending BeginDay: {other:?})"
+                    ),
+                }
+            }
+        }
+        slots.resize_with(new_workers, || None);
+        *self.shape.lock().unwrap() = shape.clone();
+        if new_workers > old_workers {
+            self.served_once.store(false, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
     /// Session finished *successfully*: answer each worker's pending
     /// `BeginDay` with the `SessionOver` farewell (so it exits 0) and
     /// drop the connection. Deliberately NOT done in `Drop` — a front
@@ -418,6 +510,60 @@ impl WorkerFront {
             }
         }
     }
+}
+
+/// One worker's half of the mode re-handshake, front side: consume the
+/// pending `BeginDay`, announce the switch, validate the worker's
+/// re-derived shape, confirm the epoch. Any wire failure or
+/// disagreement is an error — the caller fails the switch.
+fn rehandshake(
+    conn: &mut SocketConn,
+    w: WorkerId,
+    epoch: u64,
+    kind: ModeKind,
+    shape: &WorkerShape,
+) -> Result<()> {
+    match conn.recv() {
+        Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay)) => {}
+        Ok(other) => bail!("expected BeginDay before the switch, got {other:?}"),
+        Err(e) => bail!("connection lost awaiting BeginDay: {e}"),
+    }
+    conn.send(WireMsg::WorkerRep(WorkerReply::Switch { epoch, mode: kind }))
+        .map_err(|e| anyhow::anyhow!("announcing the switch: {e}"))?;
+    let (e, worker, workers, local_batch, fields, emb_dim, seed, samples_per_day) =
+        match conn.recv() {
+            Ok(WireMsg::WorkerReq(WorkerRequest::SwitchMode {
+                epoch,
+                worker,
+                workers,
+                local_batch,
+                fields,
+                emb_dim,
+                seed,
+                samples_per_day,
+            })) => (epoch, worker, workers, local_batch, fields, emb_dim, seed, samples_per_day),
+            Ok(other) => bail!("expected the SwitchMode declaration, got {other:?}"),
+            Err(e) => bail!("connection lost mid re-handshake: {e}"),
+        };
+    anyhow::ensure!(e == epoch, "worker re-handshook epoch {e}, front is switching to {epoch}");
+    anyhow::ensure!(worker as usize == w, "worker {w} declared id {worker}");
+    let declared = WorkerShape {
+        workers: workers as usize,
+        local_batch,
+        fields,
+        emb_dim,
+        seed,
+        samples_per_day,
+    };
+    anyhow::ensure!(
+        &declared == shape,
+        "worker {w} re-derived {declared:?} for mode {}, front expects {shape:?} \
+         (front/worker config files disagree)",
+        kind.as_str()
+    );
+    conn.send(WireMsg::WorkerRep(WorkerReply::Epoch { epoch }))
+        .map_err(|e| anyhow::anyhow!("confirming epoch {epoch}: {e}"))?;
+    Ok(())
 }
 
 /// Serve one worker's day on its connection. Returns whether the
@@ -608,5 +754,91 @@ mod tests {
         let err = front.ensure_connected(Duration::from_millis(100)).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("[0]"), "which worker is missing? {msg}");
+    }
+
+    /// The epoch re-handshake end to end against a scripted worker: the
+    /// pending `BeginDay` is answered with `Switch`, the re-derived
+    /// shape is validated, the epoch confirmed, and the connection
+    /// survives into the new mode.
+    #[test]
+    fn epoch_rehandshake_switches_a_live_worker() {
+        let front = WorkerFront::bind("127.0.0.1:0", shape()).unwrap();
+        let addr = front.addr();
+        let new_shape = WorkerShape { local_batch: 8, ..shape() };
+        let declared = new_shape.clone();
+        let t = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape().hello(0))).unwrap();
+            assert!(matches!(conn.recv().unwrap(), WireMsg::WorkerRep(WorkerReply::Ok)));
+            conn.send(WireMsg::WorkerReq(WorkerRequest::BeginDay)).unwrap();
+            let epoch = match conn.recv().unwrap() {
+                WireMsg::WorkerRep(WorkerReply::Switch { epoch, mode }) => {
+                    assert_eq!(mode, ModeKind::Gba);
+                    epoch
+                }
+                other => panic!("expected Switch, got {other:?}"),
+            };
+            conn.send(WireMsg::WorkerReq(WorkerRequest::SwitchMode {
+                epoch,
+                worker: 0,
+                workers: declared.workers as u64,
+                local_batch: declared.local_batch,
+                fields: declared.fields,
+                emb_dim: declared.emb_dim,
+                seed: declared.seed,
+                samples_per_day: declared.samples_per_day,
+            }))
+            .unwrap();
+            match conn.recv().unwrap() {
+                WireMsg::WorkerRep(WorkerReply::Epoch { epoch: e }) => assert_eq!(e, epoch),
+                other => panic!("expected Epoch, got {other:?}"),
+            }
+            conn
+        });
+        front.ensure_connected(Duration::from_secs(10)).unwrap();
+        front.begin_epoch(1, ModeKind::Gba, new_shape).unwrap();
+        assert_eq!(front.connected(), 1, "worker survived the switch");
+        let _conn = t.join().unwrap();
+    }
+
+    /// A worker whose re-derived shape disagrees (wrong config file on
+    /// its host) fails the switch loudly instead of training the old
+    /// shape into the new epoch.
+    #[test]
+    fn epoch_rehandshake_shape_disagreement_fails_loudly() {
+        let front = WorkerFront::bind("127.0.0.1:0", shape()).unwrap();
+        let addr = front.addr();
+        let t = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape().hello(0))).unwrap();
+            assert!(matches!(conn.recv().unwrap(), WireMsg::WorkerRep(WorkerReply::Ok)));
+            conn.send(WireMsg::WorkerReq(WorkerRequest::BeginDay)).unwrap();
+            let epoch = match conn.recv().unwrap() {
+                WireMsg::WorkerRep(WorkerReply::Switch { epoch, .. }) => epoch,
+                other => panic!("expected Switch, got {other:?}"),
+            };
+            let s = shape(); // stale shape: not the new epoch's
+            conn.send(WireMsg::WorkerReq(WorkerRequest::SwitchMode {
+                epoch,
+                worker: 0,
+                workers: s.workers as u64,
+                local_batch: 999,
+                fields: s.fields,
+                emb_dim: s.emb_dim,
+                seed: s.seed,
+                samples_per_day: s.samples_per_day,
+            }))
+            .unwrap();
+            // The front bails without confirming; we see the close.
+            matches!(conn.recv(), Err(_))
+        });
+        front.ensure_connected(Duration::from_secs(10)).unwrap();
+        let err = front
+            .begin_epoch(1, ModeKind::Gba, WorkerShape { local_batch: 8, ..shape() })
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("re-derived"), "unhelpful disagreement error: {msg}");
+        assert_eq!(front.connected(), 0, "the slot reopened for a replacement");
+        assert!(t.join().unwrap());
     }
 }

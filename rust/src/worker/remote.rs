@@ -31,6 +31,18 @@ use crate::transport::{connect_retry, Conn, SocketConn, WorkerShape, RECONNECT_D
 use crate::worker::session::dims_of;
 use crate::worker::{run_worker, worker_day_seed, Backend, PsClient, WorkerParams, WorkerStats};
 
+/// What the front answered a `BeginDay` with.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NextStep {
+    /// Train this day.
+    Day(usize),
+    /// The session advanced its mode epoch: re-derive the shape for
+    /// `kind` and re-handshake before asking for a day again.
+    Switch { epoch: u64, kind: ModeKind },
+    /// Clean end of the session.
+    Over,
+}
+
 /// The worker process's connection to the front: a [`PsClient`] over
 /// the wire plus the session frames around it.
 pub struct FrontClient {
@@ -74,20 +86,64 @@ impl FrontClient {
             .context("front rejected the Hello handshake (front/worker config or mode disagree?)")
     }
 
-    /// Ask for the next day. `Ok(None)` means the front sent the
-    /// `SessionOver` farewell — the session is over and the worker
-    /// exits cleanly. An abrupt connection loss is an `Err` (and a
+    /// Ask for the next day. Three clean outcomes: a day to train
+    /// ([`NextStep::Day`]), a mode switch to re-handshake
+    /// ([`NextStep::Switch`] — the session advanced its mode epoch; the
+    /// worker must re-derive its shape and call
+    /// [`switch_epoch`](Self::switch_epoch) before asking again), or
+    /// the `SessionOver` farewell ([`NextStep::Over`] — the worker
+    /// exits cleanly). An abrupt connection loss is an `Err` (and a
     /// nonzero process exit): the front crashed, and a supervisor
     /// should restart us, not read "session over".
-    pub fn begin_day(&self) -> Result<Option<usize>> {
+    pub fn begin_day(&self) -> Result<NextStep> {
         let mut conn = self.conn.lock().unwrap();
         conn.send(WireMsg::WorkerReq(WorkerRequest::BeginDay))
             .map_err(|e| anyhow::anyhow!("front lost asking for a day (front crashed?): {e}"))?;
         match conn.recv() {
-            Ok(WireMsg::WorkerRep(WorkerReply::Day { day })) => Ok(Some(day as usize)),
-            Ok(WireMsg::WorkerRep(WorkerReply::SessionOver)) => Ok(None),
-            Ok(other) => bail!("front protocol: expected Day or SessionOver, got {other:?}"),
+            Ok(WireMsg::WorkerRep(WorkerReply::Day { day })) => Ok(NextStep::Day(day as usize)),
+            Ok(WireMsg::WorkerRep(WorkerReply::Switch { epoch, mode })) => {
+                Ok(NextStep::Switch { epoch, kind: mode })
+            }
+            Ok(WireMsg::WorkerRep(WorkerReply::SessionOver)) => Ok(NextStep::Over),
+            Ok(other) => {
+                bail!("front protocol: expected Day, Switch or SessionOver, got {other:?}")
+            }
             Err(e) => bail!("front lost waiting for a day (front crashed?): {e}"),
+        }
+    }
+
+    /// The worker half of the mode re-handshake: declare the shape this
+    /// worker re-derived from its own config file for the announced
+    /// mode, and wait for the front's `Epoch` confirmation. The front
+    /// hangs up instead of confirming when the declaration disagrees
+    /// with its config — the same loud-failure contract as `Hello`.
+    pub fn switch_epoch(
+        &self,
+        epoch: u64,
+        worker: WorkerId,
+        cfg: &ExperimentConfig,
+        kind: ModeKind,
+    ) -> Result<()> {
+        let shape = WorkerShape::of(cfg, kind);
+        let req = WorkerRequest::SwitchMode {
+            epoch,
+            worker: worker as u64,
+            workers: shape.workers as u64,
+            local_batch: shape.local_batch,
+            fields: shape.fields,
+            emb_dim: shape.emb_dim,
+            seed: shape.seed,
+            samples_per_day: shape.samples_per_day,
+        };
+        match self.call(req).with_context(|| {
+            format!(
+                "front rejected the epoch-{epoch} re-handshake to mode {} \
+                 (front/worker config files disagree?)",
+                kind.as_str()
+            )
+        })? {
+            WorkerReply::Epoch { epoch: e } if e == epoch => Ok(()),
+            other => bail!("front protocol: expected Epoch {epoch}, got {other:?}"),
         }
     }
 
@@ -172,7 +228,8 @@ pub fn run_worker_process(
     addr: &str,
     opts: WorkerProcOptions,
 ) -> Result<u64> {
-    let mode = cfg.mode(kind);
+    let mut kind = kind;
+    let mut mode = cfg.mode(kind);
     anyhow::ensure!(
         worker_id < mode.workers,
         "--worker-id {worker_id} out of range for {} {} workers",
@@ -191,23 +248,49 @@ pub fn run_worker_process(
     let gen = DataGen::new(&cfg.model, &cfg.data, cfg.seed);
     let backend = Backend::Native(NativeModel::new(dims));
     let mut days = 0u64;
-    while let Some(day) = client.begin_day()? {
-        let wp = WorkerParams {
-            id: worker_id,
-            local_batch: mode.local_batch,
-            straggler: None,
-            start_sec: 0.0,
-            fail_prob: opts.fail_prob,
-            batch_sleep_ms: opts.batch_sleep_ms,
-            seed: worker_day_seed(cfg.seed, day),
-        };
-        let stats = run_worker(&client, &gen, &backend, &wp)?;
-        eprintln!(
-            "worker {worker_id}: day {day} done ({} batches, {} samples, {} failures)",
-            stats.batches, stats.samples, stats.failures
-        );
-        client.end_of_day(&stats)?;
-        days += 1;
+    loop {
+        match client.begin_day()? {
+            NextStep::Over => break,
+            NextStep::Day(day) => {
+                let wp = WorkerParams {
+                    id: worker_id,
+                    local_batch: mode.local_batch,
+                    straggler: None,
+                    start_sec: 0.0,
+                    fail_prob: opts.fail_prob,
+                    batch_sleep_ms: opts.batch_sleep_ms,
+                    seed: worker_day_seed(cfg.seed, day),
+                };
+                let stats = run_worker(&client, &gen, &backend, &wp)?;
+                eprintln!(
+                    "worker {worker_id}: day {day} done ({} batches, {} samples, {} failures)",
+                    stats.batches, stats.samples, stats.failures
+                );
+                client.end_of_day(&stats)?;
+                days += 1;
+            }
+            NextStep::Switch { epoch, kind: to } => {
+                // The session advanced its mode epoch in place: survive
+                // the switch by re-deriving our shape from the *same
+                // config file* at the new mode and re-handshaking. A
+                // config that does not define the mode is the loud
+                // failure, not a panic.
+                anyhow::ensure!(
+                    cfg.has_mode(to),
+                    "front switched to mode {} which this worker's config does not define",
+                    to.as_str()
+                );
+                client.switch_epoch(epoch, worker_id, cfg, to)?;
+                kind = to;
+                mode = cfg.mode(kind);
+                eprintln!(
+                    "worker {worker_id}: switched to mode {} (epoch {epoch}, \
+                     local batch {})",
+                    kind.as_str(),
+                    mode.local_batch
+                );
+            }
+        }
     }
     Ok(days)
 }

@@ -2,8 +2,22 @@
 //! policy, backend and workers together. Implements the paper's continual
 //! protocol (train day d, evaluate day d+1) and the *switch* operation
 //! (inherit parameters, change mode — §5.2 / Fig. 6).
+//!
+//! # In-place switching
+//!
+//! `switch_mode` advances a mode epoch *in place* instead of rebuilding
+//! the session: the [`SwitchPlane`] owns the mode as a sequence of
+//! epochs, the shard plane swaps its coordination policy (draining any
+//! buffered gradients under the old one) and — only when the epoch
+//! changes the optimizer pair (async ↔ the rest, Table 5.1) — its
+//! optimizers, and remote `gba-train worker` processes survive the
+//! switch through the wire-level `SwitchMode`/`Epoch` re-handshake.
+//! Dense parameters, embedding rows and (across same-pair switches)
+//! optimizer slots are inherited untouched — the paper's tuning-free
+//! switch with nothing torn down around it.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -11,8 +25,9 @@ use anyhow::{Context, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::cluster::StragglerModel;
-use crate::config::{ExperimentConfig, ModeKind, WorkerPlane};
+use crate::config::{ExperimentConfig, ModeKind, SwitchPolicyKind, WorkerPlane};
 use crate::coordinator::modes::make_policy;
+use crate::coordinator::{SwitchPlane, SwitchTrace};
 use crate::data::DataGen;
 use crate::embedding::EmbeddingConfig;
 use crate::metrics::{auc, TrainCounters};
@@ -24,6 +39,7 @@ use crate::shard::{PsBuild, ShardRouter};
 use crate::transport::{
     RowRecord, ShardSpawnSpec, WorkerFront, WorkerShape, WORKER_ACCEPT_DEADLINE,
 };
+use crate::util::stats::percentile;
 use crate::worker::{
     run_worker, worker_day_seed, Backend, BackendKind, WorkerParams, WorkerStats,
 };
@@ -67,6 +83,30 @@ pub struct DayStats {
     pub failures: u64,
     /// Mean local (per-worker) QPS.
     pub local_qps: f64,
+    /// p95 across workers of mean per-batch latency (busy seconds per
+    /// batch) — the straggler telemetry the adaptive switcher watches.
+    pub batch_latency_p95: f64,
+    /// Median across workers of mean per-batch latency.
+    pub batch_latency_med: f64,
+}
+
+impl DayStats {
+    /// Batch indices re-issued after a worker reset reclaimed their
+    /// claim — the day's coverage stayed complete despite those
+    /// workers. (A view over the counters, not a second copy.)
+    pub fn reissued(&self) -> u64 {
+        self.counters.reissued_batches
+    }
+
+    /// Straggler signal in [0, 1): 0 for a homogeneous fleet, → 1 as
+    /// the p95 worker falls ever further behind the median. This is
+    /// what feeds `AdaptiveSwitcher::observe` between days.
+    pub fn straggler_signal(&self) -> f64 {
+        if self.batch_latency_p95 <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.batch_latency_med / self.batch_latency_p95).max(0.0)
+    }
 }
 
 pub struct TrainSession {
@@ -85,6 +125,13 @@ pub struct TrainSession {
     /// can learn the address before launching `gba-train worker`
     /// processes; workers are admitted lazily at the first `train_day`.
     worker_front: Option<WorkerFront>,
+    /// Owns the mode as a sequence of epochs, records the switch trace,
+    /// and (under `[switch] policy = "adaptive"`) proposes switches
+    /// from the per-day straggler telemetry.
+    switch: SwitchPlane,
+    /// `last trained day + 1` — where a switch lands on the continual
+    /// time axis (atomic: `train_day` takes `&self`).
+    next_day: AtomicUsize,
 }
 
 /// Model dimensions a config describes.
@@ -254,6 +301,26 @@ impl TrainSession {
                 )
             }
         };
+        let switch = match cfg.switch.policy {
+            SwitchPolicyKind::Manual => SwitchPlane::manual(kind),
+            SwitchPolicyKind::Adaptive => {
+                // The controller drives the sync ↔ GBA pair (the
+                // paper's switch); from any other launch mode it would
+                // never fire — reject instead of silently running a
+                // manual session the operator believes is adaptive.
+                anyhow::ensure!(
+                    matches!(kind, ModeKind::Sync | ModeKind::Gba),
+                    "[switch] policy = \"adaptive\" drives sync <-> gba switches; \
+                     launch in one of those modes (got '{}')",
+                    kind.as_str()
+                );
+                SwitchPlane::adaptive(
+                    kind,
+                    cfg.switch.high_watermark,
+                    cfg.switch.low_watermark,
+                )
+            }
+        };
         Ok(TrainSession {
             cfg,
             kind,
@@ -265,6 +332,8 @@ impl TrainSession {
             opts,
             straggler,
             worker_front,
+            switch,
+            next_day: AtomicUsize::new(0),
         })
     }
 
@@ -326,7 +395,36 @@ impl TrainSession {
                     handles.push(
                         std::thread::Builder::new()
                             .name(format!("worker-{w}"))
-                            .spawn(move || run_worker(ps.as_ref(), &gen, &backend, &wp))?,
+                            .spawn(move || {
+                                // A worker that aborts (Err or panic)
+                                // between pull and push dies holding a
+                                // claim; since day-end now *waits out*
+                                // outstanding claims (so late reclaims
+                                // can re-issue), an unreleased claim
+                                // would park the survivors forever
+                                // instead of surfacing the abort. The
+                                // guard reclaims it on any abnormal
+                                // exit — a no-op when no claim is held.
+                                struct ReclaimOnAbort<'a> {
+                                    ps: &'a PsServer,
+                                    id: usize,
+                                    armed: bool,
+                                }
+                                impl Drop for ReclaimOnAbort<'_> {
+                                    fn drop(&mut self) {
+                                        if self.armed {
+                                            self.ps.worker_reset(self.id);
+                                        }
+                                    }
+                                }
+                                let mut guard =
+                                    ReclaimOnAbort { ps: ps.as_ref(), id: w, armed: true };
+                                let out = run_worker(ps.as_ref(), &gen, &backend, &wp);
+                                if out.is_ok() {
+                                    guard.armed = false;
+                                }
+                                out
+                            })?,
                     );
                 }
                 handles
@@ -357,20 +455,36 @@ impl TrainSession {
         let wall = t0.elapsed().as_secs_f64();
         let counters = self.ps.counters();
         if self.worker_front.is_some() {
-            // Conservation audit: every issued batch must have resolved
-            // as applied, dropped, or a reclaimed claim. A shortfall
-            // means the worker fleet died mid-day and part of the data
-            // list was never trained — that is a failed day, not a
-            // quiet DayStats. (In-thread workers can't die silently:
-            // their panics and Errs propagate through the joins above.)
-            let resolved =
-                counters.applied_gradients + counters.dropped_batches + failures;
+            // Conservation audit: every batch of the data list must have
+            // resolved as applied or dropped — a reclaimed claim is
+            // *re-issued* (and the replacement resolution is counted),
+            // so even a day with failures covers the whole list. A
+            // shortfall means the worker fleet died mid-day with
+            // re-issued batches nobody was left to train — that is a
+            // failed day, not a quiet DayStats. (In-thread workers
+            // can't die silently: their panics and Errs propagate
+            // through the joins above.)
+            let resolved = counters.applied_gradients + counters.dropped_batches;
             anyhow::ensure!(
                 resolved == n_batches as u64,
                 "day {day} incomplete: {resolved} of {n_batches} batches resolved — \
                  worker processes died mid-day with no survivors to finish the data list"
             );
         }
+        // Straggler telemetry: per-worker mean batch latency, p95 vs.
+        // median across the fleet (workers that trained nothing — died
+        // at day start — contribute no latency sample).
+        let lat: Vec<f64> = stats
+            .iter()
+            .filter(|s| s.batches > 0)
+            .map(|s| s.busy_sec / s.batches as f64)
+            .collect();
+        let (p95, med) = if lat.is_empty() {
+            (0.0, 0.0)
+        } else {
+            (percentile(&lat, 95.0), percentile(&lat, 50.0))
+        };
+        self.next_day.store(day + 1, Ordering::Relaxed);
         Ok(DayStats {
             day,
             wall_sec: wall,
@@ -379,6 +493,8 @@ impl TrainSession {
             local_qps: samples as f64 / busy.max(1e-9) / mode.workers as f64,
             counters,
             failures,
+            batch_latency_p95: p95,
+            batch_latency_med: med,
         })
     }
 
@@ -406,30 +522,138 @@ impl TrainSession {
         Checkpoint::from_ps(self.dims, &self.ps)
     }
 
-    /// Switch the training mode, inheriting all parameters (the paper's
-    /// tuning-free switch: same hyper-parameters, new coordination).
-    /// Optimizer slots reset — exactly what checkpoint-inherit does.
+    /// Switch the training mode **in place**, inheriting all parameters
+    /// (the paper's tuning-free switch: same hyper-parameters, new
+    /// coordination). Nothing is rebuilt:
+    ///
+    /// 1. remote `gba-train worker` processes re-derive their
+    ///    [`WorkerShape`] for the new mode through the wire-level
+    ///    `SwitchMode`/`Epoch` re-handshake between days — the switch
+    ///    works on the one topology where it matters, and a worker that
+    ///    dies or disagrees fails the switch before any state changed;
+    /// 2. the [`SwitchPlane`] advances the mode epoch (recording the
+    ///    [`SwitchTrace`] event at the next training day);
+    /// 3. the shard plane's `ControlPlane::swap_policy` drains any
+    ///    buffered gradients under the *old* policy and installs the
+    ///    new one — identical behavior on in-process and remote shards,
+    ///    since the flush travels the normal `Apply` path;
+    /// 4. only when the new epoch changes the optimizer pair (async ↔
+    ///    the rest, Table 5.1) the shards swap optimizers over the
+    ///    journaled `SwapPolicy` RPC, resetting slot state; a same-pair
+    ///    switch (sync ↔ GBA, the paper's headline case) preserves the
+    ///    optimizer slots — a *stronger* inherit than checkpoint
+    ///    restore, which zeroed them.
+    ///
+    /// A same-mode switch is a no-op. Must be called between days (the
+    /// continual protocol's switch point): the epoch boundary then
+    /// holds no in-flight tokens, and in-flight gradients of the old
+    /// epoch are flushed, not carried over.
     pub fn switch_mode(&mut self, kind: ModeKind) -> Result<()> {
-        // Remote workers hold the *old* mode's shape (local batch,
-        // worker count) from their own launch flags; carrying their
-        // connections into a new mode would train silently wrong
-        // batches. Until workers learn to re-handshake on switch
-        // (ROADMAP follow-up), the switch requires in-thread workers.
+        if kind == self.kind {
+            return Ok(());
+        }
         anyhow::ensure!(
-            self.worker_front.is_none(),
-            "switch_mode is not supported with [cluster] workers = \"remote\": restart \
-             the session and the worker processes in mode '{}'",
+            self.cfg.has_mode(kind),
+            "cannot switch to mode {}: the config does not define [mode.{}]",
+            kind.as_str(),
             kind.as_str()
         );
-        let ckpt = self.checkpoint();
-        let new = TrainSession::from_checkpoint(
-            self.cfg.clone(),
-            kind,
-            self.opts.clone(),
-            &ckpt,
-        )?;
-        *self = new;
+        // Under the adaptive policy a manual switch out of the sync/gba
+        // pair would strand the controller (it only drives those two):
+        // every later storm would silently propose nothing — the exact
+        // failure the build-time launch-mode guard rejects. Reject the
+        // target here for the same reason.
+        anyhow::ensure!(
+            !self.switch.is_adaptive() || matches!(kind, ModeKind::Sync | ModeKind::Gba),
+            "[switch] policy = \"adaptive\" drives sync <-> gba switches; switching to \
+             '{}' would silently disable the controller (use --switch-policy manual)",
+            kind.as_str()
+        );
+        let mode = self.cfg.mode(kind);
+        // PJRT executes AOT artifacts per (variant, batch): refuse a
+        // switch whose local batch has no artifact *before* touching
+        // any state, not at the first train step of the new epoch.
+        if self.opts.backend == BackendKind::Pjrt {
+            let manifest = Manifest::load(&self.opts.artifacts_dir)?;
+            anyhow::ensure!(
+                manifest.batches(&self.cfg.model.variant)?.contains(&mode.local_batch),
+                "no artifact for local batch {} of variant {} (mode {})",
+                mode.local_batch,
+                self.cfg.model.variant,
+                kind.as_str()
+            );
+        }
+        let day = self.next_day.load(Ordering::Relaxed);
+
+        // Worker plane first: remote processes re-handshake (in-thread
+        // loops just pick the new mode up from `cfg.mode(self.kind)`
+        // next day). Running this *before* any state changes means a
+        // worker that dies or disagrees mid-re-handshake fails the
+        // switch with the session's own state untouched — the epoch
+        // boundary holds no in-flight tokens, so nothing leaks.
+        let epoch = self.switch.epoch() + 1;
+        if let Some(front) = &self.worker_front {
+            front
+                .begin_epoch(epoch, kind, WorkerShape::of(&self.cfg, kind))
+                .with_context(|| {
+                    format!("switching the remote worker plane to {}", kind.as_str())
+                })?;
+        }
+        let advanced = self.switch.advance(day, kind);
+        debug_assert_eq!(advanced, epoch);
+
+        // Shard plane: drain buffered gradients under the old policy,
+        // install the new one; swap optimizers only when the pair
+        // actually changes (Table 5.1: only the async family differs).
+        let (old_okind, old_lr) = optim_for(&self.cfg, self.kind);
+        let (new_okind, new_lr) = optim_for(&self.cfg, kind);
+        self.ps.switch_policy(make_policy(kind, &mode, self.cfg.gba_m_effective()));
+        if (old_okind, old_lr) != (new_okind, new_lr) {
+            self.ps.swap_optimizer(new_okind, new_lr, true);
+        }
+        // The straggler model is shaped by the mode's worker count.
+        if self.straggler.is_some() {
+            self.straggler = Some(Arc::new(StragglerModel::new(
+                &self.cfg.cluster,
+                mode.workers,
+                self.cfg.seed ^ 0x57,
+            )));
+        }
+        self.kind = kind;
         Ok(())
+    }
+
+    /// The switch trace accumulated so far (every epoch advance, manual
+    /// or adaptive) — emitted into run metrics by the launcher and the
+    /// switching experiments.
+    pub fn switch_trace(&self) -> &SwitchTrace {
+        self.switch.trace()
+    }
+
+    /// Current mode epoch id (0 = the launch mode).
+    pub fn mode_epoch(&self) -> u64 {
+        self.switch.epoch()
+    }
+
+    /// Whether the session decides switches itself (`[switch] policy =
+    /// "adaptive"`).
+    pub fn is_adaptive(&self) -> bool {
+        self.switch.is_adaptive()
+    }
+
+    /// Feed one finished day's telemetry to the adaptive switcher and
+    /// perform the switch it proposes, if any. Call between days (after
+    /// `train_day`); returns the new mode when a switch happened. A
+    /// no-op (always `Ok(None)`) under `[switch] policy = "manual"`.
+    pub fn observe_day(&mut self, stats: &DayStats) -> Result<Option<ModeKind>> {
+        let signal = stats.straggler_signal();
+        match self.switch.observe(signal) {
+            None => Ok(None),
+            Some(to) => {
+                self.switch_mode(to)?;
+                Ok(Some(to))
+            }
+        }
     }
 
     /// Train `days`, evaluating on the subsequent day after each (the
@@ -538,6 +762,108 @@ backup = 1
         s.train_day(1).unwrap();
         let after = s.eval_auc(2).unwrap();
         assert!(after > before - 0.05, "switch degraded: {before} -> {after}");
+    }
+
+    /// The in-place switch: parameters AND optimizer slots survive a
+    /// same-pair switch (sync → GBA both run Adam at `lr`), the epoch
+    /// advances, and the trace lands on the next training day.
+    #[test]
+    fn inplace_switch_inherits_slots_and_records_trace() {
+        let mut s = TrainSession::new(cfg(), ModeKind::Sync, SessionOptions::default()).unwrap();
+        s.train_day(0).unwrap();
+        let params = s.ps().dense_params();
+        let slots = s.ps().dense_slots();
+        assert!(slots.iter().any(|t| t.iter().any(|&x| x != 0.0)), "Adam slots live");
+        s.switch_mode(ModeKind::Gba).unwrap();
+        assert_eq!(s.kind, ModeKind::Gba);
+        assert_eq!(s.mode_epoch(), 1);
+        assert_eq!(s.ps().mode(), ModeKind::Gba, "control plane swapped in place");
+        assert_eq!(s.ps().dense_params(), params, "parameters inherited");
+        assert_eq!(s.ps().dense_slots(), slots, "same-pair switch keeps optimizer slots");
+        let trace = s.switch_trace();
+        assert_eq!(trace.events.len(), 1);
+        assert_eq!(
+            (trace.events[0].day, trace.events[0].from, trace.events[0].to),
+            (1, ModeKind::Sync, ModeKind::Gba)
+        );
+        // Same-mode switch is a no-op: no event, no epoch.
+        s.switch_mode(ModeKind::Gba).unwrap();
+        assert_eq!(s.mode_epoch(), 1);
+        assert_eq!(s.switch_trace().events.len(), 1);
+        // And the new epoch trains.
+        let stats = s.train_day(1).unwrap();
+        assert!(stats.counters.global_steps > 0);
+    }
+
+    /// Switching into the async family swaps the optimizer pair on the
+    /// shards (Adam → Adagrad, `lr_async`) and resets slot state; the
+    /// parameters themselves are inherited untouched.
+    #[test]
+    fn switch_to_async_swaps_optimizer_and_resets_slots() {
+        let mut s = TrainSession::new(cfg(), ModeKind::Sync, SessionOptions::default()).unwrap();
+        s.train_day(0).unwrap();
+        let params = s.ps().dense_params();
+        let adam_slots = s.ps().dense_slots();
+        s.switch_mode(ModeKind::Async).unwrap();
+        assert_eq!(s.ps().dense_params(), params, "parameters inherited");
+        let ada_slots = s.ps().dense_slots();
+        for (t, slot) in ada_slots.iter().enumerate() {
+            assert_eq!(slot.len(), adam_slots[t].len() / 2, "Adagrad: 1 slot vs Adam's 2");
+            assert!(slot.iter().all(|&x| x == 0.0), "cross-pair switch resets state");
+        }
+        let stats = s.train_day(1).unwrap();
+        assert!(stats.counters.global_steps > 0, "async epoch trains");
+        // And back: another in-place swap, back to Adam shapes.
+        s.switch_mode(ModeKind::Sync).unwrap();
+        assert_eq!(s.mode_epoch(), 2);
+        let stats = s.train_day(2).unwrap();
+        assert!(stats.counters.global_steps > 0);
+    }
+
+    /// The adaptive plane switches the live session from day telemetry:
+    /// a straggler-heavy day proposes GBA, a calm one proposes sync.
+    #[test]
+    fn adaptive_policy_switches_from_day_telemetry() {
+        let mut c = cfg();
+        c.switch.policy = crate::config::SwitchPolicyKind::Adaptive;
+        let mut s = TrainSession::new(c, ModeKind::Sync, SessionOptions::default()).unwrap();
+        assert!(s.is_adaptive());
+        let day = |p95: f64, med: f64| DayStats {
+            day: 0,
+            wall_sec: 1.0,
+            samples: 0,
+            qps: 0.0,
+            counters: TrainCounters::default(),
+            failures: 0,
+            local_qps: 0.0,
+            batch_latency_p95: p95,
+            batch_latency_med: med,
+        };
+        // Storm: p95 10× median → signal 0.9 > high watermark.
+        assert_eq!(s.observe_day(&day(0.1, 0.01)).unwrap(), Some(ModeKind::Gba));
+        assert_eq!(s.kind, ModeKind::Gba);
+        // Still stormy: hysteresis holds GBA.
+        assert_eq!(s.observe_day(&day(0.1, 0.05)).unwrap(), None);
+        // Calm fleet → signal 0.1 < low watermark → back to sync.
+        assert_eq!(s.observe_day(&day(0.1, 0.09)).unwrap(), Some(ModeKind::Sync));
+        assert_eq!(s.switch_trace().events.len(), 2);
+        // A manual switch out of the sync/gba pair would strand the
+        // controller — rejected, and the session state is untouched.
+        assert!(s.switch_mode(ModeKind::Async).is_err());
+        assert_eq!(s.kind, ModeKind::Sync);
+        assert_eq!(s.switch_trace().events.len(), 2);
+    }
+
+    /// Adaptive policy from a mode the controller cannot drive is a
+    /// build-time error, not a silent manual session.
+    #[test]
+    fn adaptive_policy_rejects_non_switchable_launch_mode() {
+        let mut c = cfg();
+        c.switch.policy = crate::config::SwitchPolicyKind::Adaptive;
+        let err = TrainSession::new(c, ModeKind::Async, SessionOptions::default())
+            .err()
+            .expect("async + adaptive must be rejected");
+        assert!(format!("{err:#}").contains("adaptive"), "unhelpful error: {err:#}");
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! In-place mode switching over real processes (ISSUE 5 acceptance):
+//! the session advances its mode epoch while remote `gba-train
+//! shard-server` and `gba-train worker` children keep running — no
+//! teardown, no restart, the paper's headline switch on the one
+//! topology where it matters.
+//!
+//! Three pins:
+//!
+//! * **Bit-identity across the switch** — a sync → gba → sync day
+//!   sequence trained by one real worker process against two real
+//!   shard-server processes is bit-for-bit identical to the same
+//!   sequence with in-thread workers and in-process shards. The switch
+//!   re-handshake and the `SwapPolicy`/`swap_policy` plumbing must not
+//!   change a single bit of what is computed.
+//! * **Re-handshake failure is loud** — a worker SIGKILLed while parked
+//!   between days fails the *switch* (and with it the next day) with a
+//!   named error instead of training a half-switched fleet; the control
+//!   plane holds no leaked claims (the epoch boundary is drained).
+//! * **Adaptive switching, live** — a 2-day `[switch] policy =
+//!   "adaptive"` session over a real shard-server and four real worker
+//!   processes (one a deterministic straggler) records a SwitchEvent
+//!   and finishes the second day in GBA.
+//!
+//! Child stderr goes to `$CARGO_TARGET_TMPDIR/process-switch-logs/` so
+//! a CI failure can upload what the children saw.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+use gba::config::{ExperimentConfig, ModeKind, SwitchPolicyKind, TransportKind, WorkerPlane};
+use gba::worker::session::{SessionOptions, TrainSession};
+
+const BIN: &str = env!("CARGO_BIN_EXE_gba-train");
+
+/// One worker for the bit-identity arm (a fully ordered schedule, as in
+/// `process_workers.rs`): sync trains 32-batches, gba 16-batches with
+/// M = 32/16 = 2, so every mode's shape differs and the re-handshake
+/// carries real information.
+const CONFIG_SWITCH: &str = r#"
+name = "process-switch-test"
+seed = 51
+
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 16
+hidden2 = 8
+vocab_size = 500
+zipf_s = 1.1
+
+[data]
+days_base = 3
+days_eval = 1
+samples_per_day = 2048
+teacher_seed = 3
+label_noise = 0.02
+
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+lr_async = 0.05
+eval_batch = 256
+eval_samples = 1024
+
+[mode.sync]
+workers = 1
+local_batch = 32
+
+[mode.gba]
+workers = 1
+local_batch = 16
+iota = 3
+
+[ps]
+n_shards = 2
+"#;
+
+/// Two workers for the loud-failure pin; four for the adaptive storm.
+const CONFIG_FLEET: &str = r#"
+name = "process-switch-fleet"
+seed = 52
+
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 16
+hidden2 = 8
+vocab_size = 500
+zipf_s = 1.1
+
+[data]
+days_base = 2
+days_eval = 1
+samples_per_day = 1024
+teacher_seed = 3
+label_noise = 0.02
+
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+lr_async = 0.05
+eval_batch = 256
+eval_samples = 1024
+
+[mode.sync]
+workers = 4
+local_batch = 32
+
+[mode.gba]
+workers = 4
+local_batch = 16
+iota = 3
+
+[switch]
+policy = "adaptive"
+"#;
+
+fn log_dir() -> PathBuf {
+    let dir = Path::new(env!("CARGO_TARGET_TMPDIR")).join("process-switch-logs");
+    std::fs::create_dir_all(&dir).expect("creating switch log dir");
+    dir
+}
+
+fn write_config(tag: &str, toml: &str) -> PathBuf {
+    let path = log_dir().join(format!("{tag}.toml"));
+    std::fs::write(&path, toml).expect("writing test config");
+    path
+}
+
+/// A child process killed (and reaped) on drop so a panicking test
+/// never leaks processes.
+struct Proc {
+    child: Child,
+    addr: String,
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn a shard-server child and block until it announces its bound
+/// address. Launched with `--mode sync` — sync and gba share the
+/// optimizer pair (Table 5.1), so the live switch never has to restart
+/// the server.
+fn spawn_shard(config: &Path, shard: usize, log_tag: &str) -> Proc {
+    let log = std::fs::File::create(log_dir().join(format!("{log_tag}-shard{shard}.log")))
+        .expect("creating shard-server log file");
+    let mut child = Command::new(BIN)
+        .args([
+            "shard-server",
+            "--config",
+            config.to_str().unwrap(),
+            "--shard-id",
+            &shard.to_string(),
+            "--listen",
+            "127.0.0.1:0",
+            "--mode",
+            "sync",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::from(log))
+        .spawn()
+        .expect("spawning shard-server child");
+    let mut line = String::new();
+    BufReader::new(child.stdout.take().expect("child stdout"))
+        .read_line(&mut line)
+        .expect("reading shard-server banner");
+    let addr = line
+        .strip_prefix("shard-server listening on ")
+        .unwrap_or_else(|| panic!("unexpected shard-server banner: {line:?}"))
+        .split_whitespace()
+        .next()
+        .expect("address token")
+        .to_string();
+    Proc { child, addr }
+}
+
+fn spawn_worker(config: &Path, worker_id: usize, addr: &str, log_tag: &str, extra: &[&str]) -> Proc {
+    let log = std::fs::File::create(log_dir().join(format!("{log_tag}-worker{worker_id}.log")))
+        .expect("creating worker log file");
+    let child = Command::new(BIN)
+        .args([
+            "worker",
+            "--config",
+            config.to_str().unwrap(),
+            "--connect",
+            addr,
+            "--worker-id",
+            &worker_id.to_string(),
+            "--mode",
+            "sync",
+        ])
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::from(log))
+        .spawn()
+        .expect("spawning worker child");
+    Proc { child, addr: addr.to_string() }
+}
+
+/// Raw-bit fingerprint of the session's trained state plus counters.
+#[derive(PartialEq, Debug)]
+struct Fingerprint {
+    dense_bits: Vec<Vec<u32>>,
+    rows: Vec<(u64, Vec<u32>, u64, u32)>,
+    applied: u64,
+    dropped: u64,
+    steps: u64,
+}
+
+fn fingerprint(session: &TrainSession, applied: u64, dropped: u64, steps: u64) -> Fingerprint {
+    let ckpt = session.checkpoint();
+    Fingerprint {
+        dense_bits: ckpt
+            .dense
+            .iter()
+            .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+            .collect(),
+        rows: ckpt
+            .emb_rows
+            .iter()
+            .map(|(k, v, m)| {
+                (*k, v.iter().map(|x| x.to_bits()).collect(), m.last_update_step, m.update_count)
+            })
+            .collect(),
+        applied,
+        dropped,
+        steps,
+    }
+}
+
+/// Run the day sequence sync → (switch) gba → (switch) sync on an
+/// existing session, returning the accumulated counters.
+fn run_switch_sequence(session: &mut TrainSession) -> (u64, u64, u64) {
+    let (mut applied, mut dropped, mut steps) = (0u64, 0u64, 0u64);
+    for (day, switch_to) in [(0usize, None), (1, Some(ModeKind::Gba)), (2, Some(ModeKind::Sync))] {
+        if let Some(to) = switch_to {
+            session.switch_mode(to).expect("in-place switch");
+        }
+        let stats = session.train_day(day).expect("training day");
+        applied += stats.counters.applied_gradients;
+        dropped += stats.counters.dropped_batches;
+        steps += stats.counters.global_steps;
+        assert_eq!(stats.failures, 0, "clean day {day}");
+    }
+    (applied, dropped, steps)
+}
+
+/// Acceptance core: a mid-run sync ↔ gba switch with remote workers and
+/// remote shards is bit-identical to the equivalent in-process run —
+/// `switch_mode` neither rebuilds the session nor rejects `[cluster]
+/// workers = "remote"` anymore.
+#[test]
+fn switch_over_real_processes_bit_identical_to_inproc() {
+    // In-process reference.
+    let cfg = ExperimentConfig::from_toml(CONFIG_SWITCH).unwrap();
+    let mut reference = TrainSession::new(cfg, ModeKind::Sync, SessionOptions::default()).unwrap();
+    let (applied, dropped, steps) = run_switch_sequence(&mut reference);
+    let want = fingerprint(&reference, applied, dropped, steps);
+    assert_eq!(reference.switch_trace().events.len(), 2, "two switch events recorded");
+
+    // Real processes: two shard servers + one worker, all children.
+    let config = write_config("bitident", CONFIG_SWITCH);
+    let shards: Vec<Proc> = (0..2).map(|s| spawn_shard(&config, s, "bitident")).collect();
+    let mut cfg = ExperimentConfig::from_toml(CONFIG_SWITCH).unwrap();
+    cfg.ps.transport = TransportKind::Remote;
+    cfg.ps.shard_addrs = shards.iter().map(|p| p.addr.clone()).collect();
+    cfg.cluster.workers = WorkerPlane::Remote;
+    cfg.validate().unwrap();
+    let mut session = TrainSession::new(cfg, ModeKind::Sync, SessionOptions::default()).unwrap();
+    let front_addr = session.worker_addr().expect("remote plane binds at build");
+    let mut w0 = spawn_worker(&config, 0, &front_addr, "bitident", &[]);
+    let (applied, dropped, steps) = run_switch_sequence(&mut session);
+    assert!(session.ps().quiescent());
+    let got = fingerprint(&session, applied, dropped, steps);
+
+    // Clean end: the worker survived two live switches and exits 0 on
+    // the SessionOver farewell.
+    session.shutdown_workers();
+    drop(session);
+    let status = w0.child.wait().expect("waiting for the worker child");
+    assert!(status.success(), "worker did not exit cleanly after the switches: {status:?}");
+
+    assert_eq!(got, want, "process planes diverged from in-process across the switch");
+}
+
+/// A worker SIGKILLed between days dies with its `BeginDay` pending;
+/// the next switch's re-handshake finds the corpse and fails the day
+/// loudly — no half-switched fleet — with conservation intact (the
+/// boundary holds no claims).
+#[test]
+fn worker_killed_at_rehandshake_fails_the_switch_loudly() {
+    let config = write_config("killswitch", CONFIG_FLEET);
+    // Manual policy for this arm: the test drives the switch itself.
+    let mut cfg = ExperimentConfig::from_toml(CONFIG_FLEET).unwrap();
+    cfg.switch.policy = SwitchPolicyKind::Manual;
+    cfg.cluster.workers = WorkerPlane::Remote;
+    let mut session = TrainSession::new(cfg, ModeKind::Sync, SessionOptions::default()).unwrap();
+    let addr = session.worker_addr().unwrap();
+    let mut workers: Vec<Proc> =
+        (0..4).map(|w| spawn_worker(&config, w, &addr, "killswitch", &[])).collect();
+
+    session.train_day(0).expect("clean first day");
+    assert!(session.ps().quiescent(), "epoch boundary must hold no claims");
+
+    // The victim is parked in BeginDay; SIGKILL it and switch.
+    workers[3].child.kill().expect("killing worker child");
+    workers[3].child.wait().expect("reaping worker child");
+    let err = match session.switch_mode(ModeKind::Gba) {
+        Err(e) => e,
+        Ok(()) => panic!("switch succeeded over a dead worker"),
+    };
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("re-handshake") && msg.contains("worker 3"),
+        "unhelpful switch failure: {msg}"
+    );
+    // Conservation intact: nothing was issued for the aborted epoch.
+    assert!(session.ps().quiescent(), "claims leaked across the failed switch");
+}
+
+/// The live adaptive controller over real processes: day 0 (sync) sees
+/// one deterministic straggler among four workers, the switch plane
+/// proposes GBA, the worker fleet re-handshakes, and day 1 trains in
+/// GBA — at least one SwitchEvent recorded, exactly as the acceptance
+/// criteria demand.
+#[test]
+fn adaptive_policy_switches_on_straggler_storm_over_processes() {
+    let config = write_config("adaptive", CONFIG_FLEET);
+    let shard = spawn_shard(&config, 0, "adaptive");
+    let mut cfg = ExperimentConfig::from_toml(CONFIG_FLEET).unwrap();
+    cfg.ps.n_shards = 1;
+    cfg.ps.transport = TransportKind::Remote;
+    cfg.ps.shard_addrs = vec![shard.addr.clone()];
+    cfg.cluster.workers = WorkerPlane::Remote;
+    cfg.validate().unwrap();
+    assert_eq!(cfg.switch.policy, SwitchPolicyKind::Adaptive, "config drives the policy");
+    let mut session = TrainSession::new(cfg, ModeKind::Sync, SessionOptions::default()).unwrap();
+    let addr = session.worker_addr().unwrap();
+    let mut workers = Vec::new();
+    for w in 0..4 {
+        // Worker 3 is a deterministic straggler: 25 ms per batch vs the
+        // sub-millisecond tiny-model compute of the other three.
+        let extra: &[&str] = if w == 3 { &["--batch-sleep-ms", "25"] } else { &[] };
+        workers.push(spawn_worker(&config, w, &addr, "adaptive", extra));
+    }
+
+    let stats0 = session.train_day(0).expect("straggler-storm day");
+    assert!(
+        stats0.straggler_signal() > 0.6,
+        "storm not visible in telemetry: signal {:.3} (p95 {:.5}s, med {:.5}s)",
+        stats0.straggler_signal(),
+        stats0.batch_latency_p95,
+        stats0.batch_latency_med
+    );
+    let switched = session.observe_day(&stats0).expect("adaptive switch");
+    assert_eq!(switched, Some(ModeKind::Gba), "controller must fire on the storm");
+    assert_eq!(session.kind, ModeKind::Gba);
+
+    let stats1 = session.train_day(1).expect("GBA day after the live switch");
+    assert!(stats1.counters.global_steps > 0);
+    assert!(session.ps().quiescent());
+
+    let trace = session.switch_trace();
+    assert_eq!(trace.events.len(), 1, "exactly one SwitchEvent in the storm scenario");
+    assert_eq!(
+        (trace.events[0].day, trace.events[0].from, trace.events[0].to),
+        (1, ModeKind::Sync, ModeKind::Gba)
+    );
+
+    // Clean shutdown: all four workers survived the switch and exit 0.
+    session.shutdown_workers();
+    drop(session);
+    for (w, mut proc) in workers.into_iter().enumerate() {
+        let status = proc.child.wait().expect("waiting for worker child");
+        assert!(status.success(), "worker {w} did not exit cleanly: {status:?}");
+    }
+}

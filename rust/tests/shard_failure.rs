@@ -263,6 +263,8 @@ fn worker_reset_after_shard_kill_keeps_control_plane_sane() {
     ps.worker_reset(1);
     assert_eq!(ps.outstanding(), 0);
     // Training continues: the next full batch flushes through recovery.
+    // The reset claim's batch index is *re-issued* (end-of-day coverage
+    // stays complete), so the next pull picks it up first.
     let d = match ps.pull(0) {
         PullReply::Work(it) => it,
         other => panic!("{other:?}"),
@@ -271,7 +273,9 @@ fn worker_reset_after_shard_kill_keeps_control_plane_sane() {
         PullReply::Work(it) => it,
         other => panic!("{other:?}"),
     };
-    assert_ne!(c.batch_index, d.batch_index, "reset claim's batch is not reissued");
+    assert_eq!(c.batch_index, d.batch_index, "reset claim's batch re-issued first");
+    assert_ne!(d.batch_index, e.batch_index);
+    assert_eq!(ps.counters().reissued_batches, 1);
     ps.push(grad(d.token, &keys, 0.3));
     ps.push(grad(e.token, &keys, 0.4));
     assert_eq!(ps.global_step(), 2);
