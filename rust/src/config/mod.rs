@@ -239,6 +239,24 @@ ps_apply_ms = 0.5
     }
 
     #[test]
+    fn obs_config_defaults_parse_and_reject() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.obs.listen, None, "absent [obs] exports nothing");
+        assert_eq!(cfg.obs.trace_dir, None);
+        let on = format!(
+            "{SAMPLE}\n[obs]\nlisten = \"127.0.0.1:0\"\ntrace_dir = \"/tmp/gba-trace\"\n"
+        );
+        let cfg = ExperimentConfig::from_toml(&on).unwrap();
+        assert_eq!(cfg.obs.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(cfg.obs.trace_dir.as_deref(), Some("/tmp/gba-trace"));
+        // Malformed values error instead of silently exporting nothing.
+        let not_str = format!("{SAMPLE}\n[obs]\nlisten = 9100\n");
+        assert!(ExperimentConfig::from_toml(&not_str).is_err());
+        let empty = format!("{SAMPLE}\n[obs]\nlisten = \"\"\n");
+        assert!(ExperimentConfig::from_toml(&empty).is_err());
+    }
+
+    #[test]
     fn mode_kind_roundtrip() {
         for k in ModeKind::ALL {
             assert_eq!(ModeKind::parse(k.as_str()).unwrap(), k);

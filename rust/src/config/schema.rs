@@ -331,6 +331,23 @@ impl Default for SwitchConfig {
     }
 }
 
+/// Observability export surfaces (`[obs]` table).
+///
+/// Instrumentation itself is always on — the atomic counters never
+/// touch training arithmetic, so the bit-identity pins hold regardless.
+/// These knobs only enable the *export* surfaces; the default (both
+/// `None`) serves and writes nothing.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// `host:port` for the per-process `/metrics` exposition listener
+    /// (`host:0` picks a free port; each process prints its bound
+    /// address). `None` serves nothing.
+    pub listen: Option<String>,
+    /// Directory for trace-span JSONL streams; each process appends to
+    /// `<dir>/<role>-<pid>.jsonl`. `None` writes nothing.
+    pub trace_dir: Option<String>,
+}
+
 /// Parameter-server plane shape (`[ps]` table).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PsConfig {
@@ -402,6 +419,7 @@ pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
     pub ps: PsConfig,
     pub switch: SwitchConfig,
+    pub obs: ObsConfig,
 }
 
 impl ExperimentConfig {
@@ -571,6 +589,25 @@ impl ExperimentConfig {
                 Some(v) => v.as_f64().context("switch.low_watermark must be a number")?,
             },
         };
+        // Absent [obs] keys leave both export surfaces off; malformed
+        // keys error (an "observed" run that silently served nothing
+        // would be debugged for the wrong reason).
+        let obs = ObsConfig {
+            listen: match doc.get("obs.listen") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .context("obs.listen must be a \"host:port\" string")?
+                        .to_string(),
+                ),
+            },
+            trace_dir: match doc.get("obs.trace_dir") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str().context("obs.trace_dir must be a directory string")?.to_string(),
+                ),
+            },
+        };
         Ok(ExperimentConfig {
             name: req_str("name")?,
             seed: req_usize("seed")? as u64,
@@ -581,6 +618,7 @@ impl ExperimentConfig {
             cluster,
             ps,
             switch,
+            obs,
         })
     }
 
@@ -638,6 +676,12 @@ impl ExperimentConfig {
         }
         if self.cluster.workers == WorkerPlane::Remote && self.cluster.worker_listen.is_empty() {
             bail!("cluster.workers = \"remote\" needs a cluster.worker_listen address");
+        }
+        if self.obs.listen.as_deref() == Some("") {
+            bail!("obs.listen must be a \"host:port\" address, not empty");
+        }
+        if self.obs.trace_dir.as_deref() == Some("") {
+            bail!("obs.trace_dir must be a directory path, not empty");
         }
         let sw = &self.switch;
         if !(0.0..=1.0).contains(&sw.low_watermark) || !(0.0..=1.0).contains(&sw.high_watermark) {

@@ -23,6 +23,10 @@ pub struct SwitchEvent {
     pub day: usize,
     pub from: ModeKind,
     pub to: ModeKind,
+    /// The straggler signal that drove the decision (`1 − median/p95`
+    /// of per-worker batch latency) — `Some` only for switches the
+    /// adaptive controller proposed; manual switches have no signal.
+    pub signal: Option<f64>,
 }
 
 /// Trace of mode switches over a continual run.
@@ -33,7 +37,17 @@ pub struct SwitchTrace {
 
 impl SwitchTrace {
     pub fn record(&mut self, day: usize, from: ModeKind, to: ModeKind) {
-        self.events.push(SwitchEvent { day, from, to });
+        self.record_with_signal(day, from, to, None);
+    }
+
+    pub fn record_with_signal(
+        &mut self,
+        day: usize,
+        from: ModeKind,
+        to: ModeKind,
+        signal: Option<f64>,
+    ) {
+        self.events.push(SwitchEvent { day, from, to, signal });
     }
 
     /// The mode in effect on `day`, given the mode the run started in.
@@ -129,11 +143,18 @@ impl SwitchPlane {
     /// returns the new epoch id. A same-mode "switch" is a no-op (no
     /// event, same epoch) — callers need not special-case it.
     pub fn advance(&mut self, day: usize, to: ModeKind) -> u64 {
+        self.advance_with_signal(day, to, None)
+    }
+
+    /// [`advance`](Self::advance), annotating the recorded event with
+    /// the straggler signal that drove the decision (adaptive switches;
+    /// manual switches pass `None`).
+    pub fn advance_with_signal(&mut self, day: usize, to: ModeKind, signal: Option<f64>) -> u64 {
         let cur = *self.current();
         if cur.kind == to {
             return cur.epoch;
         }
-        self.trace.record(day, cur.kind, to);
+        self.trace.record_with_signal(day, cur.kind, to, signal);
         // Keep an adaptive controller's notion of "current" honest even
         // when the operator forces a manual switch mid-run.
         if let Some(sw) = &mut self.switcher {
@@ -256,8 +277,8 @@ mod tests {
         assert_eq!(
             p.trace().events,
             vec![
-                SwitchEvent { day: 2, from: ModeKind::Sync, to: ModeKind::Gba },
-                SwitchEvent { day: 5, from: ModeKind::Gba, to: ModeKind::Sync },
+                SwitchEvent { day: 2, from: ModeKind::Sync, to: ModeKind::Gba, signal: None },
+                SwitchEvent { day: 5, from: ModeKind::Gba, to: ModeKind::Sync, signal: None },
             ]
         );
         // Manual plane never volunteers a switch.
@@ -276,5 +297,18 @@ mod tests {
         // still in GBA.
         p.advance(2, ModeKind::Sync);
         assert_eq!(p.observe(0.9), Some(ModeKind::Gba));
+    }
+
+    /// Adaptive switches carry the signal that drove them into the
+    /// trace; manual advances record no signal.
+    #[test]
+    fn advance_with_signal_annotates_the_event() {
+        let mut p = SwitchPlane::adaptive(ModeKind::Sync, 0.6, 0.4);
+        assert_eq!(p.observe(0.8), Some(ModeKind::Gba));
+        p.advance_with_signal(4, ModeKind::Gba, Some(0.8));
+        assert_eq!(p.trace().events.len(), 1);
+        assert_eq!(p.trace().events[0].signal, Some(0.8));
+        p.advance(6, ModeKind::Sync);
+        assert_eq!(p.trace().events[1].signal, None);
     }
 }

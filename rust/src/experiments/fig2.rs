@@ -55,6 +55,7 @@ fn arm(
                 .set("day", e.day)
                 .set("from", e.from.as_str())
                 .set("to", e.to.as_str())
+                .set("signal", e.signal.map_or(Json::Null, Json::from))
         })
         .collect();
     Ok((aucs, events))
@@ -119,7 +120,13 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     write_result(
         &ctx.out_dir,
         "fig2",
-        &Json::obj().set("days_each", days_each).set("arms", Json::Arr(jrows)),
+        &Json::obj()
+            .set("days_each", days_each)
+            .set("arms", Json::Arr(jrows))
+            // All six arms run in-process, so the global registry is the
+            // run-wide telemetry: per-RPC counters, batch-latency
+            // quantiles, and the switch counters accumulated above.
+            .set("telemetry", crate::obs::snapshot_to_json(&crate::obs::global().snapshot())),
     )?;
     Ok(())
 }

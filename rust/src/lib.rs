@@ -33,6 +33,7 @@ pub mod embedding;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod ps;
 pub mod runtime;

@@ -19,8 +19,9 @@ use anyhow::{Context, Result};
 use gba::config::{ExperimentConfig, ModeKind, SwitchPolicyKind, TransportKind, WorkerPlane};
 use gba::data::DataGen;
 use gba::experiments::{self, ExpCtx};
-use gba::metrics::report::fmt_auc;
+use gba::metrics::report::{fmt_auc, write_result};
 use gba::runtime::Manifest;
+use gba::util::json::Json;
 use gba::transport::serve_shard;
 use gba::worker::remote::{run_worker_process, WorkerProcOptions};
 use gba::worker::session::{shard_server_spec, SessionOptions, TrainSession};
@@ -87,12 +88,21 @@ USAGE:
                                  worker loops in-thread or as gba-train
                                  worker processes dialing this front)
                   [--worker-listen ADDR]   (override [cluster] worker_listen)
+                  [--obs-listen ADDR] [--obs-trace-dir DIR]   (override
+                                 [obs]: /metrics exposition and trace-span
+                                 JSONL export; docs/OBSERVABILITY.md)
+                  [--out DIR]    (where train.json — per-day stats plus the
+                                 run-wide telemetry block — lands;
+                                 default results/)
   gba-train shard-server --config FILE --shard-id K [--listen ADDR]
                   [--mode MODE] [--shards N]
+                  [--obs-listen ADDR] [--obs-trace-dir DIR]
                   (serve shard K of the PS plane on a listening socket;
-                   prints "shard-server listening on ADDR" once bound)
+                   prints \"shard-server listening on ADDR\" once bound,
+                   then the obs metrics address if enabled)
   gba-train worker --config FILE --connect ADDR --worker-id W
                   [--mode MODE] [--fail-prob P] [--batch-sleep-ms T]
+                  [--obs-listen ADDR] [--obs-trace-dir DIR]
                   (run worker W's Algorithm-1 loop as this process,
                    against a front started with --workers remote; exits 0
                    when the front ends the session)
@@ -131,6 +141,39 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Fold the `--obs-listen` / `--obs-trace-dir` CLI overrides into
+/// `cfg.obs`, then turn on whichever export surfaces ended up
+/// configured. The metrics announcement is one parseable stdout line
+/// (`obs metrics listening on ADDR`); `shard-server` calls this *after*
+/// its address banner so the banner stays the first line its
+/// supervisors parse. Instrumentation itself is always on — with both
+/// surfaces off this changes nothing about the run.
+fn init_obs(cfg: &mut ExperimentConfig, args: &Args, role: &str) -> Result<()> {
+    if let Some(listen) = args.get("obs-listen") {
+        cfg.obs.listen = Some(listen.to_string());
+    }
+    if let Some(dir) = args.get("obs-trace-dir") {
+        cfg.obs.trace_dir = Some(dir.to_string());
+    }
+    if let Some(listen) = &cfg.obs.listen {
+        let addr = gba::obs::serve::start(listen)
+            .with_context(|| format!("binding obs metrics listener on {listen}"))?;
+        // Standard `*_up` liveness gauge, so the exposition is non-empty
+        // the moment the listener binds (a freshly booted, idle process
+        // has not registered anything else yet).
+        gba::obs::global().gauge(&gba::obs::labeled("gba_process_up", "role", role)).set(1.0);
+        println!("obs metrics listening on {addr}");
+        use std::io::Write;
+        std::io::stdout().flush()?;
+    }
+    if let Some(dir) = &cfg.obs.trace_dir {
+        let path = gba::obs::trace::init(dir, role)
+            .with_context(|| format!("opening obs trace sink in {dir}"))?;
+        eprintln!("obs trace spans -> {}", path.display());
+    }
+    Ok(())
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
@@ -176,6 +219,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(policy) = args.get("switch-policy") {
         cfg.switch.policy = SwitchPolicyKind::parse(policy)?;
     }
+    init_obs(&mut cfg, args, "trainer")?;
+    let task_name = cfg.name.clone();
     let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
     let days: usize = args
         .get("days")
@@ -229,6 +274,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         use std::io::Write;
         std::io::stdout().flush()?;
     }
+    let mut day_rows: Vec<Json> = Vec::new();
     for d in 0..days {
         if let Some(to) = switch_to {
             if d == switch_day {
@@ -257,6 +303,18 @@ fn cmd_train(args: &Args) -> Result<()> {
             stats.counters.dense_staleness.max(),
             stats.straggler_signal(),
         );
+        day_rows.push(
+            Json::obj()
+                .set("day", d)
+                .set("mode", session.kind.as_str())
+                .set("epoch", session.mode_epoch())
+                .set("auc", auc)
+                .set("qps", stats.qps)
+                .set("global_steps", stats.counters.global_steps)
+                .set("batch_latency_med", stats.batch_latency_med)
+                .set("batch_latency_p95", stats.batch_latency_p95)
+                .set("straggler_signal", stats.straggler_signal()),
+        );
         // Adaptive policy: let the switch plane read the day's straggler
         // telemetry and advance the mode epoch if the watermarks say so
         // (remote workers re-handshake inside switch_mode).
@@ -271,10 +329,65 @@ fn cmd_train(args: &Args) -> Result<()> {
             }
         }
     }
-    // Run metrics: the switch trace, one parseable line per event.
+    // Run metrics: the switch trace, one parseable line per event,
+    // annotated with the straggler signal that drove adaptive switches.
+    let mut switch_events = Vec::new();
     for e in &session.switch_trace().events {
-        println!("switch-trace: day {} {} -> {}", e.day, e.from.as_str(), e.to.as_str());
+        match e.signal {
+            Some(s) => println!(
+                "switch-trace: day {} {} -> {} (signal {s:.2})",
+                e.day,
+                e.from.as_str(),
+                e.to.as_str()
+            ),
+            None => {
+                println!("switch-trace: day {} {} -> {}", e.day, e.from.as_str(), e.to.as_str())
+            }
+        }
+        switch_events.push(
+            Json::obj()
+                .set("day", e.day)
+                .set("from", e.from.as_str())
+                .set("to", e.to.as_str())
+                .set("signal", e.signal.map_or(Json::Null, Json::from)),
+        );
     }
+    // The run-wide telemetry block: this process's registry (worker
+    // batch-latency quantiles live here), every shard process's registry
+    // via the ObsScrape RPC, and the annotated switch trace.
+    let reg = gba::obs::global();
+    let batch = reg.histogram("gba_worker_batch_seconds", gba::obs::Histogram::latency_bounds());
+    let shard_scrapes: Vec<Json> = session
+        .ps()
+        .obs_scrape()
+        .into_iter()
+        .enumerate()
+        .map(|(s, entries)| {
+            Json::obj().set("shard", s).set("metrics", gba::obs::snapshot_to_json(&entries))
+        })
+        .collect();
+    let telemetry = Json::obj()
+        .set(
+            "worker_batch_seconds",
+            Json::obj()
+                .set("count", batch.count())
+                .set("p50", batch.quantile(0.50))
+                .set("p95", batch.quantile(0.95))
+                .set("p99", batch.quantile(0.99)),
+        )
+        .set("switch_events", Json::Arr(switch_events))
+        .set("registry", gba::obs::snapshot_to_json(&reg.snapshot()))
+        .set("shards", Json::Arr(shard_scrapes));
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("results"));
+    write_result(
+        &out_dir,
+        "train",
+        &Json::obj()
+            .set("task", task_name)
+            .set("mode", kind.as_str())
+            .set("days", Json::Arr(day_rows))
+            .set("telemetry", telemetry),
+    )?;
     // Clean end of training: remote workers get the SessionOver
     // farewell and exit 0. Error paths skip this, so workers exit
     // nonzero when the front fails — restart policies see both.
@@ -323,6 +436,9 @@ fn cmd_shard_server(args: &Args) -> Result<()> {
         cfg.ps.n_shards, cfg.name);
     use std::io::Write;
     std::io::stdout().flush()?;
+    // After the banner: supervisors and tests parse the first stdout
+    // line as the shard address, so the obs announcement comes second.
+    init_obs(&mut cfg, args, &format!("shard{shard_id}"))?;
     eprintln!(
         "shard {shard_id}: mode {} | {} dense ranges | emb dim {} | serving forever",
         kind.as_str(),
@@ -340,13 +456,14 @@ fn cmd_shard_server(args: &Args) -> Result<()> {
 /// keys, docs/DEPLOY.md documents the rest of the operator contract.
 fn cmd_worker(args: &Args) -> Result<()> {
     let config = args.get("config").context("--config FILE required")?;
-    let cfg = ExperimentConfig::load(config)?;
+    let mut cfg = ExperimentConfig::load(config)?;
     let addr = args.get("connect").context("--connect ADDR required")?;
     let worker_id: usize = args
         .get("worker-id")
         .context("--worker-id W required")?
         .parse()
         .context("--worker-id wants a worker index")?;
+    init_obs(&mut cfg, args, &format!("worker{worker_id}"))?;
     let kind = ModeKind::parse(args.get("mode").unwrap_or("gba"))?;
     let opts = WorkerProcOptions {
         fail_prob: args.get("fail-prob").map(|s| s.parse()).transpose()?.unwrap_or(0.0),

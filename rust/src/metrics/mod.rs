@@ -82,6 +82,14 @@ impl RateSeries {
     }
 
     /// Mean QPS over the whole series.
+    ///
+    /// A series with fewer than two distinct instants has
+    /// `duration() == 0`: a single point carries no rate information,
+    /// so this deliberately reports 0.0 rather than dividing by zero
+    /// (or inventing a time base). Real runs record one point per
+    /// global step, so the edge only appears in truncated/quick runs —
+    /// callers that must distinguish "no data" from "one instant" can
+    /// check `is_empty()` / `total_samples()`.
     pub fn mean_qps(&self) -> f64 {
         let d = self.duration();
         if d <= 0.0 {
@@ -221,6 +229,31 @@ mod tests {
         assert!((mean - 500.0).abs() < 55.0, "mean={mean}");
         assert!(std < 200.0);
         assert!((r.mean_qps() - 5000.0 / 9.9).abs() < 1.0);
+    }
+
+    #[test]
+    fn rate_series_degenerate_single_point() {
+        // No points: no rate, and no window stats.
+        let empty = RateSeries::new();
+        assert!(empty.is_empty());
+        assert_eq!(empty.mean_qps(), 0.0);
+        assert_eq!(empty.qps_mean_std(1.0), (0.0, 0.0));
+        // One instant: duration is 0, so the mean rate is pinned to the
+        // documented 0.0 fallback (not a division by zero, not +inf) —
+        // but the samples are still counted and windowed stats still
+        // see the one window.
+        let mut one = RateSeries::new();
+        one.record(3.0, 500);
+        assert_eq!(one.duration(), 0.0);
+        assert_eq!(one.total_samples(), 500);
+        assert_eq!(one.mean_qps(), 0.0, "single instant carries no rate information");
+        assert!(one.mean_qps().is_finite());
+        let (mean, _) = one.qps_mean_std(1.0);
+        assert_eq!(mean, 500.0, "windowed stats treat the instant as one window");
+        // Two coincident instants are still zero-duration.
+        one.record(3.0, 100);
+        assert_eq!(one.duration(), 0.0);
+        assert_eq!(one.mean_qps(), 0.0);
     }
 
     #[test]

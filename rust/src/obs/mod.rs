@@ -1,0 +1,481 @@
+//! Cluster-wide observability plane: a zero-dependency, lock-cheap
+//! metrics registry plus trace spans ([`trace`]) and a `/metrics`
+//! exposition listener ([`serve`]).
+//!
+//! Design rules (see docs/OBSERVABILITY.md for the operator view):
+//!
+//! * **Always-on counting, gated export.** Instrumented code paths
+//!   increment atomics unconditionally — an atomic add never touches
+//!   training arithmetic, so the bit-identity pins hold with or without
+//!   `[obs]` configured. Only the *export* surfaces (the TCP listener,
+//!   the trace JSONL sink) are opt-in.
+//! * **Lock-cheap hot paths.** [`Counter`], [`Gauge`] and [`Histogram`]
+//!   are plain atomics; the registry's map lock is only taken on
+//!   get-or-register and on scrape. Per-batch paths cache the `Arc`
+//!   handle at construction time; per-RPC paths (already a network
+//!   round-trip) may look up by name.
+//! * **One namespace.** Every process has one [`global()`] registry;
+//!   labels are folded into the stored key as `name{label="value"}`
+//!   so the map stays a flat `BTreeMap`.
+//!
+//! The exposition format is the Prometheus text format (counters,
+//! gauges, and cumulative `_bucket`/`_sum`/`_count` histogram series);
+//! [`Registry::snapshot`] is the flat numeric view the `ObsScrape`
+//! shard RPC ships to the coordinator for the run-wide telemetry block.
+
+pub mod serve;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins `f64` gauge (stored as IEEE-754 bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Lock-free add of an `f64` stored as bits in an `AtomicU64`.
+fn atomic_f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Fixed-bucket histogram with atomic per-bucket counts.
+///
+/// `bounds` are ascending upper bounds with `<=` semantics (a value
+/// exactly on a bound lands in that bound's bucket, matching the
+/// Prometheus `le` convention); values above the last bound land in an
+/// implicit overflow (`+Inf`) bucket. Quantiles are linearly
+/// interpolated inside the winning bucket, which is exact enough for
+/// p50/p95/p99 at the bucket resolutions used here.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// `bounds.len() + 1` cells; the last is the overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Running sum of recorded values, as `f64` bits.
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly ascending"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Default bounds for latency-in-seconds metrics: 1µs .. 10s.
+    pub fn latency_bounds() -> &'static [f64] {
+        &[
+            1e-6, 2.5e-6, 5e-6, 1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3,
+            1e-2, 2.5e-2, 5e-2, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+        ]
+    }
+
+    /// Default bounds for byte-size metrics: 64 B .. 1 GiB in powers of 4.
+    pub fn byte_bounds() -> &'static [f64] {
+        &[
+            64.0, 256.0, 1024.0, 4096.0, 16384.0, 65536.0, 262144.0, 1048576.0, 4194304.0,
+            16777216.0, 67108864.0, 268435456.0, 1073741824.0,
+        ]
+    }
+
+    pub fn record(&self, v: f64) {
+        // First bound >= v, i.e. the `le` bucket this value belongs to;
+        // `bounds.len()` selects the overflow bucket.
+        let idx = self.bounds.partition_point(|b| *b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.sum, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum.load(Ordering::Relaxed))
+    }
+
+    /// Per-bucket (non-cumulative) counts, overflow bucket last.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Quantile `q` in `[0, 1]`, linearly interpolated within the
+    /// winning bucket (the overflow bucket reports the last bound).
+    /// Returns 0.0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if (cum as f64) >= rank {
+                if i == self.bounds.len() {
+                    return *self.bounds.last().unwrap();
+                }
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let below = cum - c;
+                let frac = if *c == 0 { 1.0 } else { (rank - below as f64) / *c as f64 };
+                return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A process-wide metric namespace. Keys carry their labels inline
+/// (`gba_rpc_seconds{rpc="apply"}`), so one flat ordered map holds the
+/// whole exposition.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+/// Fold a single label into a metric key, Prometheus-style.
+pub fn labeled(name: &str, label: &str, value: &str) -> String {
+    format!("{name}{{{label}=\"{value}\"}}")
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-register a counter. Panics if `key` is already registered
+    /// as a different metric type (a programming error, not a runtime
+    /// condition).
+    pub fn counter(&self, key: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("obs metric {key:?} already registered as a non-counter"),
+        }
+    }
+
+    pub fn gauge(&self, key: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(key.to_string()).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new()))) {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("obs metric {key:?} already registered as a non-gauge"),
+        }
+    }
+
+    /// Get-or-register a histogram. The `bounds` only matter on first
+    /// registration; later calls return the existing instance.
+    pub fn histogram(&self, key: &str, bounds: &[f64]) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(key.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new(bounds))))
+        {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("obs metric {key:?} already registered as a non-histogram"),
+        }
+    }
+
+    /// Flat numeric snapshot: counters and gauges as-is, histograms
+    /// expanded to `_count` / `_sum` / `_p50` / `_p95` / `_p99` keys
+    /// (labels stay attached to the base key). This is what the
+    /// `ObsScrape` RPC ships.
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let m = self.metrics.lock().unwrap();
+        let mut out = Vec::with_capacity(m.len());
+        for (key, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => out.push((key.clone(), c.get() as f64)),
+                Metric::Gauge(g) => out.push((key.clone(), g.get())),
+                Metric::Histogram(h) => {
+                    let (base, labels) = split_key(key);
+                    let k = |suffix: &str| match labels {
+                        Some(l) => format!("{base}{suffix}{{{l}}}"),
+                        None => format!("{base}{suffix}"),
+                    };
+                    out.push((k("_count"), h.count() as f64));
+                    out.push((k("_sum"), h.sum()));
+                    out.push((k("_p50"), h.quantile(0.50)));
+                    out.push((k("_p95"), h.quantile(0.95)));
+                    out.push((k("_p99"), h.quantile(0.99)));
+                }
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition of every registered metric.
+    pub fn render(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        let mut typed: Vec<&str> = Vec::new();
+        for (key, metric) in m.iter() {
+            let (base, labels) = split_key(key);
+            let kind = match metric {
+                Metric::Counter(_) => "counter",
+                Metric::Gauge(_) => "gauge",
+                Metric::Histogram(_) => "histogram",
+            };
+            if !typed.contains(&base) {
+                out.push_str(&format!("# TYPE {base} {kind}\n"));
+                typed.push(base);
+            }
+            match metric {
+                Metric::Counter(c) => out.push_str(&format!("{key} {}\n", c.get())),
+                Metric::Gauge(g) => out.push_str(&format!("{key} {}\n", fmt_f64(g.get()))),
+                Metric::Histogram(h) => {
+                    let bucket_key = |le: &str| match labels {
+                        Some(l) => format!("{base}_bucket{{{l},le=\"{le}\"}}"),
+                        None => format!("{base}_bucket{{le=\"{le}\"}}"),
+                    };
+                    let plain = |suffix: &str| match labels {
+                        Some(l) => format!("{base}{suffix}{{{l}}}"),
+                        None => format!("{base}{suffix}"),
+                    };
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, c) in counts.iter().enumerate() {
+                        cum += c;
+                        let le = if i == h.bounds.len() {
+                            "+Inf".to_string()
+                        } else {
+                            fmt_f64(h.bounds[i])
+                        };
+                        out.push_str(&format!("{} {cum}\n", bucket_key(&le)));
+                    }
+                    out.push_str(&format!("{} {}\n", plain("_sum"), fmt_f64(h.sum())));
+                    out.push_str(&format!("{} {}\n", plain("_count"), h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Split a stored key into its base name and the label body (the text
+/// between the braces), if any.
+fn split_key(key: &str) -> (&str, Option<&str>) {
+    match key.find('{') {
+        Some(i) => (&key[..i], Some(key[i + 1..].trim_end_matches('}'))),
+        None => (key, None),
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    // f64 Display is the shortest round-trip decimal ("0.5", "1",
+    // "0.000001") — exactly what the exposition should show.
+    v.to_string()
+}
+
+/// The process-wide registry every instrumentation site uses.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// A flat snapshot (as produced by [`Registry::snapshot`] or shipped by
+/// the `ObsScrape` RPC) rendered as one JSON object keyed by metric
+/// name — the shape the run-wide `telemetry` block embeds.
+pub fn snapshot_to_json(entries: &[(String, f64)]) -> crate::util::json::Json {
+    let mut obj = crate::util::json::Json::obj();
+    for (k, v) in entries {
+        obj = obj.set(k.as_str(), *v);
+    }
+    obj
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("test_total");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same key returns the same instance.
+        assert_eq!(r.counter("test_total").get(), 5);
+
+        let g = r.gauge("depth");
+        g.set(3.5);
+        assert_eq!(r.gauge("depth").get(), 3.5);
+        g.set(-1.0);
+        assert_eq!(g.get(), -1.0);
+    }
+
+    #[test]
+    fn concurrent_increment_stress_exact_totals() {
+        let r = Registry::new();
+        let threads = 8u64;
+        let per_thread = 10_000u64;
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let c = r.counter("stress_total");
+            let h = r.histogram("stress_seconds", Histogram::latency_bounds());
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    c.inc();
+                    // Deterministic spread across several buckets.
+                    h.record(1e-6 * ((t * per_thread + i) % 1000 + 1) as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = threads * per_thread;
+        assert_eq!(r.counter("stress_total").get(), total);
+        let h = r.histogram("stress_seconds", Histogram::latency_bounds());
+        assert_eq!(h.count(), total);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), total);
+        // The sum is an exact multiple set: each of the 1000 values
+        // 1µs..1000µs recorded exactly total/1000 times.
+        let expect: f64 = (1..=1000).map(|k| 1e-6 * k as f64).sum::<f64>() * (total / 1000) as f64;
+        assert!((h.sum() - expect).abs() / expect < 1e-9, "{} vs {expect}", h.sum());
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_le_semantics() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        h.record(1.0); // exactly on a bound -> that bucket (le semantics)
+        h.record(1.5);
+        h.record(2.0);
+        h.record(4.0);
+        h.record(4.0001); // above the last bound -> overflow
+        assert_eq!(h.bucket_counts(), vec![1, 2, 1, 1]);
+        assert_eq!(h.count(), 5);
+        h.record(0.0);
+        assert_eq!(h.bucket_counts()[0], 2, "values below the first bound share bucket 0");
+    }
+
+    #[test]
+    fn histogram_quantile_pins() {
+        let h = Histogram::new(&[10.0, 20.0, 30.0, 40.0]);
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram quantile is 0");
+        // 100 values uniform in (0, 40]: exactly 25 per bucket.
+        for i in 1..=100 {
+            h.record(0.4 * i as f64);
+        }
+        // Interpolated quantiles land on the exact uniform values.
+        assert!((h.quantile(0.50) - 20.0).abs() < 0.5, "p50 = {}", h.quantile(0.50));
+        assert!((h.quantile(0.95) - 38.0).abs() < 0.5, "p95 = {}", h.quantile(0.95));
+        assert!((h.quantile(0.25) - 10.0).abs() < 0.5, "p25 = {}", h.quantile(0.25));
+        assert_eq!(h.quantile(1.0), 40.0);
+        // Everything in the overflow bucket reports the last bound.
+        let h2 = Histogram::new(&[1.0, 2.0]);
+        h2.record(100.0);
+        assert_eq!(h2.quantile(0.5), 2.0);
+    }
+
+    #[test]
+    fn labeled_keys_and_render_format() {
+        let r = Registry::new();
+        r.counter(&labeled("rpc_total", "rpc", "push")).add(3);
+        r.counter(&labeled("rpc_total", "rpc", "pull")).add(7);
+        r.gauge("queue_depth").set(2.0);
+        let h = r.histogram(&labeled("lat_seconds", "rpc", "push"), &[0.5, 1.0]);
+        h.record(0.25);
+        h.record(0.75);
+        h.record(2.0);
+
+        let text = r.render();
+        assert!(text.contains("# TYPE rpc_total counter\n"), "{text}");
+        assert!(text.contains("rpc_total{rpc=\"push\"} 3\n"), "{text}");
+        assert!(text.contains("rpc_total{rpc=\"pull\"} 7\n"), "{text}");
+        assert!(text.contains("# TYPE queue_depth gauge\n"), "{text}");
+        assert!(text.contains("queue_depth 2\n"), "{text}");
+        assert!(text.contains("# TYPE lat_seconds histogram\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{rpc=\"push\",le=\"0.5\"} 1\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{rpc=\"push\",le=\"1\"} 2\n"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{rpc=\"push\",le=\"+Inf\"} 3\n"), "{text}");
+        assert!(text.contains("lat_seconds_count{rpc=\"push\"} 3\n"), "{text}");
+        // The # TYPE line for a base name is emitted once even with
+        // several labeled children.
+        assert_eq!(text.matches("# TYPE rpc_total").count(), 1);
+    }
+
+    #[test]
+    fn snapshot_expands_histograms() {
+        let r = Registry::new();
+        r.counter("a_total").add(2);
+        r.gauge("b").set(0.5);
+        let h = r.histogram("lat", &[1.0, 2.0]);
+        for _ in 0..10 {
+            h.record(0.5);
+        }
+        let snap: BTreeMap<String, f64> = r.snapshot().into_iter().collect();
+        assert_eq!(snap["a_total"], 2.0);
+        assert_eq!(snap["b"], 0.5);
+        assert_eq!(snap["lat_count"], 10.0);
+        assert!((snap["lat_sum"] - 5.0).abs() < 1e-12);
+        assert!(snap["lat_p50"] > 0.0 && snap["lat_p50"] <= 1.0);
+        assert!(snap.contains_key("lat_p95") && snap.contains_key("lat_p99"));
+    }
+}

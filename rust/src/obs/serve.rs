@@ -1,0 +1,70 @@
+//! The `[obs] listen` exposition endpoint: a deliberately tiny HTTP/1.0
+//! server (zero dependencies, one thread) that answers every request
+//! with the [`global`](super::global) registry rendered as Prometheus
+//! text. Point a browser, `curl`, or a Prometheus scraper at
+//! `http://<addr>/metrics`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+/// Bind `listen` (`host:port`; port 0 picks a free one), spawn the
+/// accept loop, and return the bound address. The thread runs for the
+/// life of the process — exposition is read-only, so there is nothing
+/// to shut down cleanly.
+pub fn start(listen: &str) -> std::io::Result<SocketAddr> {
+    let listener = TcpListener::bind(listen)?;
+    let addr = listener.local_addr()?;
+    std::thread::Builder::new().name("obs-metrics".into()).spawn(move || {
+        for conn in listener.incoming() {
+            if let Ok(stream) = conn {
+                let _ = serve_one(stream);
+            }
+        }
+    })?;
+    Ok(addr)
+}
+
+fn serve_one(mut s: TcpStream) -> std::io::Result<()> {
+    s.set_read_timeout(Some(Duration::from_secs(2)))?;
+    // Drain the request head; we serve the same document on any path.
+    let mut head = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = s.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 64 * 1024 {
+            break;
+        }
+    }
+    let body = super::global().render();
+    let resp = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    s.write_all(resp.as_bytes())?;
+    s.write_all(body.as_bytes())?;
+    s.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serves_global_registry_over_http() {
+        super::super::global().counter("obs_serve_test_total").add(11);
+        let addr = start("127.0.0.1:0").unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("# TYPE obs_serve_test_total counter"), "{resp}");
+        assert!(resp.contains("obs_serve_test_total 11"), "{resp}");
+    }
+}

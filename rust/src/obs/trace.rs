@@ -1,0 +1,170 @@
+//! Wire-level trace spans: a per-thread *current trace id* that the
+//! codec stamps into every frame header, plus an optional JSONL span
+//! sink so one gradient push can be followed worker → front → shard →
+//! apply across process boundaries.
+//!
+//! The id is a nonzero `u64` (0 means "no trace"). [`crate::transport::codec::encode`]
+//! writes the calling thread's current id into the frame header;
+//! `decode` installs the received id on the decoding thread — so a
+//! request's id is naturally in scope while the serving thread handles
+//! it (and is echoed back on the reply). Span emission is a no-op until
+//! [`init`] opens a per-process JSONL file; ids are *always* stamped so
+//! a downstream process with tracing enabled still correlates frames
+//! from an upstream one without it.
+
+use std::cell::Cell;
+use std::fs::OpenOptions;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+thread_local! {
+    static CURRENT: Cell<u64> = const { Cell::new(0) };
+}
+
+static SEQ: AtomicU64 = AtomicU64::new(1);
+static SEED: OnceLock<u64> = OnceLock::new();
+
+/// Allocate a fresh process-unique, run-unique trace id (never 0).
+/// High entropy comes from mixing a per-process wall-clock/pid seed
+/// through a bijective multiply, so ids from different processes in
+/// the same run don't collide.
+pub fn next_id() -> u64 {
+    let seed = *SEED.get_or_init(|| {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x9e37_79b9_7f4a_7c15);
+        nanos ^ (u64::from(std::process::id()).rotate_left(40))
+    });
+    let id = seed
+        .wrapping_add(SEQ.fetch_add(1, Ordering::Relaxed))
+        .wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Install `id` as this thread's current trace id (0 clears).
+pub fn set_current(id: u64) {
+    CURRENT.with(|c| c.set(id));
+}
+
+/// This thread's current trace id (0 = none).
+pub fn current() -> u64 {
+    CURRENT.with(|c| c.get())
+}
+
+/// Clear this thread's current trace id.
+pub fn clear() {
+    set_current(0);
+}
+
+struct Sink {
+    role: String,
+    w: BufWriter<std::fs::File>,
+}
+
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+/// Open the per-process span sink: `dir/<role>-<pid>.jsonl` (append
+/// mode, so restarts of the same role keep their history). Until this
+/// is called, [`span`] is a no-op.
+pub fn init(dir: &str, role: &str) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = Path::new(dir).join(format!("{role}-{}.jsonl", std::process::id()));
+    let f = OpenOptions::new().create(true).append(true).open(&path)?;
+    *SINK.lock().unwrap() = Some(Sink { role: role.to_string(), w: BufWriter::new(f) });
+    Ok(path)
+}
+
+/// Whether a span sink is open (export enabled).
+pub fn enabled() -> bool {
+    SINK.lock().unwrap().is_some()
+}
+
+/// Emit one span event as a JSONL line:
+/// `{"ts_us":…,"role":…,"trace":"<016x>","event":…,…fields}`.
+/// The trace id is serialized as a zero-padded hex string so the full
+/// 64 bits survive JSON number handling. No-op when no sink is open.
+pub fn span(event: &str, fields: Json) {
+    let mut guard = SINK.lock().unwrap();
+    let Some(sink) = guard.as_mut() else { return };
+    let ts_us = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0);
+    let mut doc = Json::obj()
+        .set("ts_us", ts_us)
+        .set("role", sink.role.as_str())
+        .set("trace", format!("{:016x}", current()))
+        .set("event", event);
+    if let (Json::Obj(doc_map), Json::Obj(extra)) = (&mut doc, fields) {
+        for (k, v) in extra {
+            doc_map.insert(k, v);
+        }
+    }
+    let _ = writeln!(sink.w, "{}", doc.to_string_compact());
+    let _ = sink.w.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_nonzero_and_distinct() {
+        let a = next_id();
+        let b = next_id();
+        let c = next_id();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn current_is_per_thread() {
+        set_current(42);
+        assert_eq!(current(), 42);
+        let other = std::thread::spawn(|| {
+            assert_eq!(current(), 0, "fresh thread starts untraced");
+            set_current(7);
+            current()
+        })
+        .join()
+        .unwrap();
+        assert_eq!(other, 7);
+        assert_eq!(current(), 42, "other thread's id must not leak");
+        clear();
+        assert_eq!(current(), 0);
+    }
+
+    #[test]
+    fn span_writes_parseable_jsonl() {
+        let dir = std::env::temp_dir().join(format!("gba-obs-trace-{}", std::process::id()));
+        let dir_s = dir.to_str().unwrap().to_string();
+        let path = init(&dir_s, "unit").unwrap();
+        assert!(enabled());
+        set_current(0xdead_beef);
+        span("push", Json::obj().set("worker", 3usize).set("bytes", 128usize));
+        clear();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let line = text.lines().last().unwrap();
+        let doc = crate::util::json::parse(line).unwrap();
+        assert_eq!(doc.get("event").and_then(|j| j.as_str()), Some("push"));
+        assert_eq!(doc.get("role").and_then(|j| j.as_str()), Some("unit"));
+        assert_eq!(doc.get("trace").and_then(|j| j.as_str()), Some("00000000deadbeef"));
+        assert_eq!(doc.get("worker").and_then(|j| j.as_usize()), Some(3));
+        assert!(doc.get("ts_us").and_then(|j| j.as_f64()).unwrap() > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

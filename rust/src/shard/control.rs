@@ -19,12 +19,13 @@
 //! the lock and fanned out across shards.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::config::ModeKind;
 use crate::coordinator::{ModePolicy, PullDecision, PushAction, WorkerId};
 use crate::metrics::TrainCounters;
+use crate::obs;
 use crate::ps::{GradPush, PullReply, WorkItem};
 
 /// An admitted aggregation, ready to be applied to the shards. Produced
@@ -83,14 +84,41 @@ struct CtrlState {
     loss_curve: Vec<(u64, f32)>,
 }
 
+/// Cached metric handles: resolved once at construction so the hot
+/// admission paths never touch the registry's name map.
+struct CtrlObs {
+    buffer_depth: Arc<obs::Gauge>,
+    outstanding: Arc<obs::Gauge>,
+    requeue_depth: Arc<obs::Gauge>,
+    applying: Arc<obs::Gauge>,
+    pushes: Arc<obs::Counter>,
+    flushes: Arc<obs::Counter>,
+}
+
+impl CtrlObs {
+    fn new() -> Self {
+        let r = obs::global();
+        CtrlObs {
+            buffer_depth: r.gauge("gba_ctrl_buffer_depth"),
+            outstanding: r.gauge("gba_ctrl_outstanding_claims"),
+            requeue_depth: r.gauge("gba_ctrl_requeue_depth"),
+            applying: r.gauge("gba_ctrl_applying"),
+            pushes: r.counter("gba_ctrl_pushes_total"),
+            flushes: r.counter("gba_ctrl_flushes_total"),
+        }
+    }
+}
+
 pub struct ControlPlane {
     state: Mutex<CtrlState>,
     cv: Condvar,
+    o: CtrlObs,
 }
 
 impl ControlPlane {
     pub fn new(policy: Box<dyn ModePolicy>) -> Self {
         ControlPlane {
+            o: CtrlObs::new(),
             state: Mutex::new(CtrlState {
                 policy,
                 buffer: Vec::new(),
@@ -122,6 +150,16 @@ impl ControlPlane {
         c.requeue.clear();
         drop(c);
         self.cv.notify_all();
+    }
+
+    /// Export the four control-plane queue depths from the state we are
+    /// already holding. Called at the tail of every mutating entry point
+    /// — cached handles, four relaxed stores, no registry lookup.
+    fn observe_queues(&self, c: &CtrlState) {
+        self.o.buffer_depth.set(c.buffer.len() as f64);
+        self.o.outstanding.set(c.outstanding as f64);
+        self.o.requeue_depth.set(c.requeue.len() as f64);
+        self.o.applying.set(c.applying as f64);
     }
 
     /// Block while an admitted flush is mid-apply. Every state-machine
@@ -194,6 +232,7 @@ impl ControlPlane {
                 // policies' own single-token-per-worker bookkeeping.
                 c.claims.insert(w, batch_index);
                 c.outstanding += 1;
+                self.observe_queues(&c);
                 PullReply::Work(item)
             }
         }
@@ -237,9 +276,12 @@ impl ControlPlane {
             }
             PushAction::FlushNow => {
                 c.buffer.push(grad);
+                self.o.flushes.inc();
                 Some(Self::begin_flush(&mut c, Some(pusher)))
             }
         };
+        self.o.pushes.inc();
+        self.observe_queues(&c);
         drop(c);
         self.cv.notify_all();
         job
@@ -259,6 +301,7 @@ impl ControlPlane {
             c.counters.reissued_batches += 1;
         }
         c.policy.on_worker_reset(w);
+        self.observe_queues(&c);
         drop(c);
         self.cv.notify_all();
     }
@@ -270,7 +313,10 @@ impl ControlPlane {
         if c.buffer.is_empty() {
             return None;
         }
-        Some(Self::begin_flush(&mut c, None))
+        self.o.flushes.inc();
+        let job = Self::begin_flush(&mut c, None);
+        self.observe_queues(&c);
+        Some(job)
     }
 
     /// Swap the coordination policy (the *switch* operation, §1). Any
@@ -278,9 +324,14 @@ impl ControlPlane {
     /// returned job (if any) must be applied by the caller.
     pub fn swap_policy(&self, policy: Box<dyn ModePolicy>) -> Option<FlushJob> {
         let mut c = self.wait_not_applying(self.state.lock().unwrap());
-        let job =
-            if c.buffer.is_empty() { None } else { Some(Self::begin_flush(&mut c, None)) };
+        let job = if c.buffer.is_empty() {
+            None
+        } else {
+            self.o.flushes.inc();
+            Some(Self::begin_flush(&mut c, None))
+        };
         c.policy = policy;
+        self.observe_queues(&c);
         drop(c);
         self.cv.notify_all();
         job
@@ -298,6 +349,7 @@ impl ControlPlane {
                 v.push(n);
             }
         }
+        self.observe_queues(&c);
         drop(c);
         self.cv.notify_all();
     }

@@ -284,6 +284,20 @@ impl ShardedPs {
             .collect()
     }
 
+    /// Scrape every shard's metrics registry (the `ObsScrape` RPC): one
+    /// flat `(metric name, value)` list per shard. Over the in-process
+    /// transports all shards share this process's registry, so the lists
+    /// repeat; over `remote` each list is that shard-server process's
+    /// own registry — the coordinator's fleet-scrape path.
+    pub fn obs_scrape(&self) -> Vec<Vec<(String, f64)>> {
+        (0..self.n_shards())
+            .map(|s| match self.supervisor.call(s, ShardRequest::ObsScrape) {
+                ShardReply::Obs { entries } => entries,
+                other => panic!("shard protocol: expected Obs, got {other:?}"),
+            })
+            .collect()
+    }
+
     /// Total nanoseconds parameter pulls spent stalled behind applies.
     pub fn pull_stall_ns(&self) -> u64 {
         self.pull_stall_ns.load(Ordering::Relaxed)

@@ -137,7 +137,14 @@ impl PsShard {
             self.emb.apply_grads(emb_group, opt_emb, opt_step);
             self.counters.emb_keys_applied.fetch_add(emb_group.len() as u64, Ordering::Relaxed);
         }
-        self.counters.apply_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let elapsed = t0.elapsed();
+        self.counters.apply_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        crate::obs::global()
+            .histogram(
+                &crate::obs::labeled("gba_shard_apply_seconds", "shard", &self.index.to_string()),
+                crate::obs::Histogram::latency_bounds(),
+            )
+            .record(elapsed.as_secs_f64());
     }
 
     /// Copy this shard's parameter slices into full-size flat buffers.

@@ -14,8 +14,13 @@
 //! encodes to a length-prefixed frame:
 //!
 //! ```text
-//! len: u32 LE  |  version: u8  |  tag: u8  |  payload
+//! len: u32 LE  |  version: u8  |  trace_id: u64 LE  |  tag: u8  |  payload
 //! ```
+//!
+//! `trace_id` (wire version 2) is the sending thread's current trace id
+//! ([`crate::obs::trace`], 0 = untraced): [`encode`] stamps it,
+//! [`decode`] installs it on the receiving thread, so one gradient push
+//! can be followed worker → front → shard → apply across processes.
 //!
 //! The payload is flat little-endian primitives (`f32` travels as its raw
 //! IEEE-754 bits, so NaN payloads and infinities round-trip exactly —
@@ -75,7 +80,10 @@ pub struct GradPush {
 }
 
 /// Bump on any incompatible layout change.
-pub const WIRE_VERSION: u8 = 1;
+/// History: 1 = original layout; 2 = a `trace_id: u64` header field
+/// between the version byte and the tag (mixed-version peers reject
+/// each other loudly with [`CodecError::BadVersion`]).
+pub const WIRE_VERSION: u8 = 2;
 
 /// Upper bound on a frame body (defense against corrupt length prefixes).
 pub const MAX_FRAME_BYTES: u32 = 1 << 30;
@@ -276,6 +284,50 @@ pub enum ShardRequest {
     /// true tuning-free inherit. Mutating: journaled and replayed like
     /// any other state change.
     SwapPolicy { opt: OptimKind, lr: f64, reset_slots: bool },
+    /// Scrape the serving process's obs registry (read-only, not
+    /// journaled): the coordinator folds every shard's snapshot into
+    /// the run-wide telemetry block.
+    ObsScrape,
+}
+
+impl ShardRequest {
+    /// Short stable label for per-RPC metrics (`{rpc="apply"}` etc.).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ShardRequest::Ping => "ping",
+            ShardRequest::Apply { .. } => "apply",
+            ShardRequest::ReadDense => "read_dense",
+            ShardRequest::ReadSlots => "read_slots",
+            ShardRequest::SetDense { .. } => "set_dense",
+            ShardRequest::SetSlots { .. } => "set_slots",
+            ShardRequest::Gather { .. } => "gather",
+            ShardRequest::GetMeta { .. } => "get_meta",
+            ShardRequest::InsertRow { .. } => "insert_row",
+            ShardRequest::DumpRows => "dump_rows",
+            ShardRequest::Stats => "stats",
+            ShardRequest::InsertRows { .. } => "insert_rows",
+            ShardRequest::Hello { .. } => "hello",
+            ShardRequest::SwapPolicy { .. } => "swap_policy",
+            ShardRequest::ObsScrape => "obs_scrape",
+        }
+    }
+}
+
+impl WorkerRequest {
+    /// Short stable label for per-RPC metrics (`{rpc="push"}` etc.).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            WorkerRequest::Hello { .. } => "hello",
+            WorkerRequest::BeginDay => "begin_day",
+            WorkerRequest::Pull { .. } => "pull",
+            WorkerRequest::Push(_) => "push",
+            WorkerRequest::Gather { .. } => "gather",
+            WorkerRequest::DenseParams => "dense_params",
+            WorkerRequest::Reset { .. } => "reset",
+            WorkerRequest::EndOfDay { .. } => "end_of_day",
+            WorkerRequest::SwitchMode { .. } => "switch_mode",
+        }
+    }
 }
 
 /// Replies, one per request shape.
@@ -291,6 +343,8 @@ pub enum ShardReply {
     /// `DumpRows` payload, sorted by key for stream stability.
     RowDump { rows: Vec<RowRecord> },
     Stats { stats: ShardStats, emb_mem_bytes: u64 },
+    /// `ObsScrape` payload: the registry's flat numeric snapshot.
+    Obs { entries: Vec<(String, f64)> },
 }
 
 // ---- encode -----------------------------------------------------------------
@@ -313,6 +367,11 @@ fn put_f32(b: &mut Vec<u8>, x: f32) {
 
 fn put_f64(b: &mut Vec<u8>, x: f64) {
     put_u64(b, x.to_bits());
+}
+
+fn put_str(b: &mut Vec<u8>, s: &str) {
+    put_u32(b, s.len() as u32);
+    b.extend_from_slice(s.as_bytes());
 }
 
 fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
@@ -382,10 +441,13 @@ fn put_pull_reply(b: &mut Vec<u8>, p: &PullReply) {
     }
 }
 
-/// Encode one message body (version + tag + payload, no length prefix).
+/// Encode one message body (version + trace id + tag + payload, no
+/// length prefix). The trace id is the encoding thread's current one
+/// ([`crate::obs::trace::current`], 0 when untraced).
 pub fn encode(msg: &WireMsg) -> Vec<u8> {
     let mut b = Vec::with_capacity(64);
     put_u8(&mut b, WIRE_VERSION);
+    put_u64(&mut b, crate::obs::trace::current());
     match msg {
         WireMsg::Push(g) => {
             put_u8(&mut b, 1);
@@ -575,6 +637,7 @@ fn encode_req(b: &mut Vec<u8>, r: &ShardRequest) {
             put_f64(b, *lr);
             put_u8(b, *reset_slots as u8);
         }
+        ShardRequest::ObsScrape => put_u8(b, 14),
     }
 }
 
@@ -613,6 +676,14 @@ fn encode_reply(b: &mut Vec<u8>, r: &ShardReply) {
             put_u64(b, stats.emb_rows as u64);
             put_u64(b, stats.dense_elems as u64);
             put_u64(b, *emb_mem_bytes);
+        }
+        ShardReply::Obs { entries } => {
+            put_u8(b, 6);
+            put_u32(b, entries.len() as u32);
+            for (name, value) in entries {
+                put_str(b, name);
+                put_f64(b, *value);
+            }
         }
     }
 }
@@ -658,6 +729,12 @@ impl<'a> Rd<'a> {
 
     fn usize64(&mut self) -> Result<usize, CodecError> {
         usize::try_from(self.u64()?).map_err(|_| CodecError::Malformed("usize overflow"))
+    }
+
+    fn str(&mut self) -> Result<String, CodecError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| CodecError::Malformed("non-utf8 string"))
     }
 
     fn f32s(&mut self) -> Result<Vec<f32>, CodecError> {
@@ -769,13 +846,17 @@ impl<'a> Rd<'a> {
     }
 }
 
-/// Decode one frame body produced by [`encode`].
+/// Decode one frame body produced by [`encode`]. The frame's trace id
+/// is installed as the decoding thread's current one, so span emission
+/// while handling the message correlates with the sender's.
 pub fn decode(body: &[u8]) -> Result<WireMsg, CodecError> {
     let mut rd = Rd { b: body, i: 0 };
     let version = rd.u8()?;
     if version != WIRE_VERSION {
         return Err(CodecError::BadVersion(version));
     }
+    let trace_id = rd.u64()?;
+    crate::obs::trace::set_current(trace_id);
     let tag = rd.u8()?;
     let msg = match tag {
         1 => WireMsg::Push(rd.grad_push()?),
@@ -903,6 +984,7 @@ fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
                 _ => return Err(CodecError::Malformed("reset_slots flag")),
             },
         },
+        14 => ShardRequest::ObsScrape,
         _ => return Err(CodecError::Malformed("shard request tag")),
     })
 }
@@ -935,11 +1017,44 @@ fn decode_reply(rd: &mut Rd) -> Result<ShardReply, CodecError> {
             let emb_mem_bytes = rd.u64()?;
             ShardReply::Stats { stats, emb_mem_bytes }
         }
+        6 => {
+            let n = rd.u32()? as usize;
+            let mut entries = Vec::new();
+            for _ in 0..n {
+                let name = rd.str()?;
+                let value = rd.f64()?;
+                entries.push((name, value));
+            }
+            ShardReply::Obs { entries }
+        }
         _ => return Err(CodecError::Malformed("shard reply tag")),
     })
 }
 
 // ---- stream framing ---------------------------------------------------------
+
+/// Short label for the outer message kind (wire byte-size metrics).
+pub fn wire_kind(msg: &WireMsg) -> &'static str {
+    match msg {
+        WireMsg::Push(_) => "push",
+        WireMsg::Pull(_) => "pull",
+        WireMsg::Req(_) => "req",
+        WireMsg::Reply(_) => "reply",
+        WireMsg::WorkerReq(_) => "worker_req",
+        WireMsg::WorkerRep(_) => "worker_rep",
+    }
+}
+
+fn record_frame_bytes(direction: &str, msg: &WireMsg, bytes: usize) {
+    let key = crate::obs::labeled(
+        if direction == "tx" { "gba_wire_tx_bytes" } else { "gba_wire_rx_bytes" },
+        "msg",
+        wire_kind(msg),
+    );
+    crate::obs::global()
+        .histogram(&key, crate::obs::Histogram::byte_bounds())
+        .record(bytes as f64);
+}
 
 /// Write one length-prefixed frame.
 pub fn write_frame<W: Write>(w: &mut W, msg: &WireMsg) -> Result<(), CodecError> {
@@ -953,7 +1068,9 @@ pub fn write_frame<W: Write>(w: &mut W, msg: &WireMsg) -> Result<(), CodecError>
     out.extend_from_slice(&len.to_le_bytes());
     out.extend_from_slice(&body);
     w.write_all(&out).map_err(|e| CodecError::Io(e.kind()))?;
-    w.flush().map_err(|e| CodecError::Io(e.kind()))
+    w.flush().map_err(|e| CodecError::Io(e.kind()))?;
+    record_frame_bytes("tx", msg, out.len());
+    Ok(())
 }
 
 /// Read one frame. Clean EOF *between* frames is [`CodecError::Closed`];
@@ -977,7 +1094,9 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<WireMsg, CodecError> {
             kind => CodecError::Io(kind),
         });
     }
-    decode(&body)
+    let msg = decode(&body)?;
+    record_frame_bytes("rx", &msg, body.len() + 4);
+    Ok(msg)
 }
 
 /// Encoded size of a message including its 4-byte length prefix —
@@ -1295,7 +1414,9 @@ mod tests {
     #[test]
     fn tensor_shape_mismatch_rejected() {
         // Hand-build a Push whose tensor claims more elements than sent.
-        let mut b = vec![WIRE_VERSION, 1];
+        let mut b = vec![WIRE_VERSION];
+        b.extend_from_slice(&0u64.to_le_bytes()); // trace id (untraced)
+        b.push(1); // outer tag: Push
         b.extend_from_slice(&0u64.to_le_bytes()); // worker
         b.extend_from_slice(&0u64.to_le_bytes()); // token
         b.extend_from_slice(&1u32.to_le_bytes()); // 1 dense tensor
@@ -1308,6 +1429,53 @@ mod tests {
         b.extend_from_slice(&0u64.to_le_bytes()); // n_samples
         b.extend_from_slice(&0.0f32.to_bits().to_le_bytes()); // loss
         assert_eq!(decode(&b).unwrap_err(), CodecError::Malformed("tensor shape/data mismatch"));
+    }
+
+    #[test]
+    fn trace_id_travels_in_the_header() {
+        crate::obs::trace::set_current(0xfeed_f00d_dead_beef);
+        let body = encode(&WireMsg::Req(ShardRequest::Ping));
+        crate::obs::trace::clear();
+        assert_eq!(crate::obs::trace::current(), 0);
+        // Decoding installs the frame's id on this thread.
+        assert!(matches!(decode(&body).unwrap(), WireMsg::Req(ShardRequest::Ping)));
+        assert_eq!(crate::obs::trace::current(), 0xfeed_f00d_dead_beef);
+        // Replies encoded while handling echo the same id.
+        let reply = encode(&WireMsg::Reply(ShardReply::Ok));
+        assert_eq!(&reply[1..9], &0xfeed_f00d_dead_beef_u64.to_le_bytes());
+        crate::obs::trace::clear();
+        // An untraced frame carries (and installs) id 0.
+        let body = encode(&WireMsg::Req(ShardRequest::Ping));
+        assert_eq!(&body[1..9], &[0u8; 8]);
+        for cut in 0..body.len() {
+            assert!(decode(&body[..cut]).is_err(), "decoded truncated Ping at {cut}");
+        }
+    }
+
+    #[test]
+    fn obs_scrape_roundtrip() {
+        let body = encode(&WireMsg::Req(ShardRequest::ObsScrape));
+        assert!(matches!(decode(&body).unwrap(), WireMsg::Req(ShardRequest::ObsScrape)));
+
+        let entries = vec![
+            ("gba_shard_requests_total{rpc=\"apply\"}".to_string(), 42.0),
+            ("gba_shard_apply_seconds_p95".to_string(), 0.00125),
+            ("empty".to_string(), f64::NEG_INFINITY),
+        ];
+        let body = encode(&WireMsg::Reply(ShardReply::Obs { entries: entries.clone() }));
+        match decode(&body).unwrap() {
+            WireMsg::Reply(ShardReply::Obs { entries: back }) => {
+                assert_eq!(back.len(), entries.len());
+                for ((n, v), (wn, wv)) in back.iter().zip(&entries) {
+                    assert_eq!(n, wn);
+                    assert_eq!(v.to_bits(), wv.to_bits());
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+        for cut in 0..body.len() {
+            assert!(decode(&body[..cut]).is_err(), "decoded truncated Obs at {cut}");
+        }
     }
 
     #[test]

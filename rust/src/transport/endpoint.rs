@@ -18,8 +18,10 @@
 //! protocol: liveness *is* the protocol.
 
 use std::net::TcpStream;
+use std::time::Instant;
 
 use super::codec::{self, CodecError, ShardReply, ShardRequest, WireMsg};
+use crate::obs;
 use crate::util::chan;
 
 /// A bidirectional, blocking message pipe. Calls must alternate
@@ -30,18 +32,23 @@ pub trait Conn: Send {
     fn recv(&mut self) -> Result<WireMsg, CodecError>;
 }
 
-/// In-process endpoint over a [`chan::duplex`] pair.
+/// In-process endpoint over a [`chan::duplex`] pair. The channel
+/// carries `(trace_id, msg)` so the sender's current trace id crosses
+/// the thread boundary exactly as the codec header carries it across a
+/// socket (no serialization of the message itself).
 pub struct ChanConn {
-    pub pipe: chan::Duplex<WireMsg>,
+    pub pipe: chan::Duplex<(u64, WireMsg)>,
 }
 
 impl Conn for ChanConn {
     fn send(&mut self, msg: WireMsg) -> Result<(), CodecError> {
-        self.pipe.tx.send(msg).map_err(|_| CodecError::Closed)
+        self.pipe.tx.send((obs::trace::current(), msg)).map_err(|_| CodecError::Closed)
     }
 
     fn recv(&mut self) -> Result<WireMsg, CodecError> {
-        self.pipe.rx.recv().map_err(|_| CodecError::Closed)
+        let (trace_id, msg) = self.pipe.rx.recv().map_err(|_| CodecError::Closed)?;
+        obs::trace::set_current(trace_id);
+        Ok(msg)
     }
 }
 
@@ -82,13 +89,24 @@ impl Conn for DeadConn {
     }
 }
 
-/// One blocking RPC: send the request, wait for its reply.
+/// One blocking RPC: send the request, wait for its reply. Every call
+/// lands in the client-side per-RPC latency histogram, labeled by the
+/// request kind.
 pub fn rpc(conn: &mut dyn Conn, req: ShardRequest) -> Result<ShardReply, CodecError> {
+    let kind = req.kind_name();
+    let t0 = Instant::now();
     conn.send(WireMsg::Req(req))?;
-    match conn.recv()? {
+    let reply = match conn.recv()? {
         WireMsg::Reply(r) => Ok(r),
         _ => Err(CodecError::Malformed("expected a reply frame")),
-    }
+    };
+    obs::global()
+        .histogram(
+            &obs::labeled("gba_shard_rpc_seconds", "rpc", kind),
+            obs::Histogram::latency_bounds(),
+        )
+        .record(t0.elapsed().as_secs_f64());
+    reply
 }
 
 #[cfg(test)]

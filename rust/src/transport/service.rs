@@ -11,8 +11,10 @@
 
 use super::codec::{CodecError, RowRecord, ShardReply, ShardRequest, WireMsg};
 use super::endpoint::Conn;
+use crate::obs;
 use crate::optim::{make_optimizer, Optimizer};
 use crate::shard::PsShard;
+use crate::util::json::Json;
 
 pub struct ShardService {
     shard: PsShard,
@@ -30,6 +32,9 @@ impl ShardService {
     /// because `SwapPolicy` replaces the service's optimizer pair; every
     /// other verb touches only shard state behind its own locks.)
     pub fn handle(&mut self, req: ShardRequest) -> ShardReply {
+        obs::global()
+            .counter(&obs::labeled("gba_shard_requests_total", "rpc", req.kind_name()))
+            .inc();
         match req {
             ShardRequest::Ping => ShardReply::Ok,
             ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim } => {
@@ -54,6 +59,10 @@ impl ShardService {
                 ShardReply::Ok
             }
             ShardRequest::Apply { opt_step, dense, emb } => {
+                obs::trace::span(
+                    "shard_apply",
+                    Json::obj().set("shard", self.shard.index).set("opt_step", opt_step),
+                );
                 self.shard.apply(
                     &dense,
                     &emb,
@@ -150,6 +159,12 @@ impl ShardService {
                 self.opt_dense = opt_dense;
                 self.opt_emb = opt_emb;
                 ShardReply::Ok
+            }
+            ShardRequest::ObsScrape => {
+                // Fleet scrape: hand the coordinator this process's whole
+                // registry (in a shard-server process that is exactly the
+                // shard's metrics; in-process it is the shared registry).
+                ShardReply::Obs { entries: obs::global().snapshot() }
             }
         }
     }

@@ -39,7 +39,7 @@
 use std::io::{BufReader, BufWriter, Write};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use super::codec::{self, CodecError, RowRecord, ShardReply, ShardRequest, WireMsg};
@@ -48,6 +48,7 @@ use super::remote;
 use super::service::{serve, ShardService};
 use crate::config::{OptimKind, TransportKind};
 use crate::embedding::EmbeddingConfig;
+use crate::obs;
 use crate::optim::{make_optimizer, Optimizer};
 use crate::runtime::HostTensor;
 use crate::shard::PsShard;
@@ -151,7 +152,7 @@ fn spawn_service(
     Ok(match kind {
         TransportKind::InProc => {
             let service = spec.service_at(ckpt);
-            let (client, server) = chan::duplex::<WireMsg>();
+            let (client, server) = chan::duplex::<(u64, WireMsg)>();
             let handle = std::thread::Builder::new()
                 .name(name)
                 .spawn(move || serve(service, Box::new(ChanConn { pipe: server })))
@@ -245,6 +246,10 @@ struct Journal {
     spilled: u64,
     path: PathBuf,
     writer: Option<BufWriter<std::fs::File>>,
+    /// Obs gauges (cached handles, set on every push/clear): resident
+    /// journal bytes and spilled frame count, labeled by shard.
+    g_mem_bytes: Arc<obs::Gauge>,
+    g_spilled: Arc<obs::Gauge>,
 }
 
 /// Approximate in-memory footprint of a journaled request — cheap to
@@ -270,7 +275,18 @@ impl Journal {
         let seq = JOURNAL_SEQ.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir()
             .join(format!("gba-journal-{}-{seq}-shard{shard}.wal", std::process::id()));
-        Journal { mem: Vec::new(), mem_bytes: 0, spilled: 0, path, writer: None }
+        let shard_label = shard.to_string();
+        Journal {
+            mem: Vec::new(),
+            mem_bytes: 0,
+            spilled: 0,
+            path,
+            writer: None,
+            g_mem_bytes: obs::global()
+                .gauge(&obs::labeled("gba_journal_mem_bytes", "shard", &shard_label)),
+            g_spilled: obs::global()
+                .gauge(&obs::labeled("gba_journal_spilled_frames", "shard", &shard_label)),
+        }
     }
 
     /// Append one request; spill the whole in-memory tail once it
@@ -290,6 +306,8 @@ impl Journal {
             }
             self.mem_bytes = 0;
         }
+        self.g_mem_bytes.set(self.mem_bytes as f64);
+        self.g_spilled.set(self.spilled as f64);
     }
 
     /// Visit every journaled request in execution order: the on-disk
@@ -322,6 +340,8 @@ impl Journal {
             let _ = std::fs::remove_file(&self.path);
             self.spilled = 0;
         }
+        self.g_mem_bytes.set(0.0);
+        self.g_spilled.set(0.0);
     }
 
     /// Frames currently sitting in the spill file (test observability).
@@ -675,6 +695,13 @@ impl ShardSupervisor {
     /// meaningfully survive.
     fn recover(&self, s: usize, slot: &mut ShardSlot) {
         self.lost_events.fetch_add(1, Ordering::Relaxed);
+        obs::global()
+            .counter(&obs::labeled("gba_shard_recoveries_total", "shard", &s.to_string()))
+            .inc();
+        obs::trace::span(
+            "shard_recover",
+            crate::util::json::Json::obj().set("shard", s),
+        );
         let _ = std::mem::replace(&mut slot.conn, Box::new(DeadConn));
         if let Some(h) = slot.handle.take() {
             let _ = h.join();

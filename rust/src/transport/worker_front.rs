@@ -37,7 +37,9 @@ use super::codec::{PullReply, WireMsg, WorkerReply, WorkerRequest};
 use super::endpoint::{Conn, SocketConn};
 use crate::config::{ExperimentConfig, ModeKind};
 use crate::coordinator::WorkerId;
+use crate::obs;
 use crate::shard::ShardedPs;
+use crate::util::json::Json;
 use crate::worker::WorkerStats;
 
 /// How long `ensure_connected` waits for the full worker complement
@@ -620,6 +622,9 @@ fn serve_worker_day(
                 return (false, stats);
             }
         };
+        obs::global()
+            .counter(&obs::labeled("gba_front_requests_total", "rpc", req.kind_name()))
+            .inc();
         let reply = match req {
             WorkerRequest::Pull { worker } if worker as usize == w => {
                 let r = ps.pull_blocking(w);
@@ -637,6 +642,14 @@ fn serve_worker_day(
                 // protocol-violation arm below — it would corrupt that
                 // worker's claim accounting.
                 claim = false;
+                // The decoded frame installed the worker's trace id on
+                // this serving thread, so this span — and the shard
+                // apply spans the flush may emit below it — correlate
+                // with the worker's own `worker_push` span.
+                obs::trace::span(
+                    "front_push",
+                    Json::obj().set("worker", w).set("token", grad.token),
+                );
                 ps.push(grad);
                 WorkerReply::Ok
             }

@@ -21,9 +21,23 @@ fn init_level() -> u8 {
     let lvl = match std::env::var("GBA_LOG").as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
         Ok("trace") => Level::Trace,
-        _ => Level::Info,
+        Ok(other) => {
+            // A typo'd GBA_LOG used to silently run at info; warn once
+            // (init runs once — the 255 sentinel is only seen here)
+            // naming the bad value so the operator sees why their
+            // `GBA_LOG=dbug` run isn't any chattier.
+            let mut err = std::io::stderr().lock();
+            let _ = writeln!(
+                err,
+                "[WARN gba::util::logging] unrecognized GBA_LOG={other:?} \
+                 (want error|warn|info|debug|trace); defaulting to info"
+            );
+            Level::Info
+        }
+        Err(_) => Level::Info,
     } as u8;
     LEVEL.store(lvl, Ordering::Relaxed);
     lvl

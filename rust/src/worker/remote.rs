@@ -17,7 +17,7 @@
 //! is the operator contract documented in docs/DEPLOY.md.
 
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -25,6 +25,7 @@ use crate::config::{ExperimentConfig, ModeKind};
 use crate::coordinator::WorkerId;
 use crate::data::DataGen;
 use crate::model::NativeModel;
+use crate::obs;
 use crate::runtime::HostTensor;
 use crate::transport::codec::{GradPush, PullReply, WireMsg, WorkerReply, WorkerRequest};
 use crate::transport::{connect_retry, Conn, SocketConn, WorkerShape, RECONNECT_DEADLINE};
@@ -59,14 +60,25 @@ impl FrontClient {
     }
 
     /// One request/reply exchange (the slot lock enforces alternation).
+    /// Every call lands in the worker-side per-RPC latency histogram,
+    /// labeled by the request kind.
     fn call(&self, req: WorkerRequest) -> Result<WorkerReply> {
+        let kind = req.kind_name();
+        let t0 = Instant::now();
         let mut conn = self.conn.lock().unwrap();
         conn.send(WireMsg::WorkerReq(req)).map_err(|e| anyhow::anyhow!("front send: {e}"))?;
-        match conn.recv() {
+        let reply = match conn.recv() {
             Ok(WireMsg::WorkerRep(r)) => Ok(r),
             Ok(other) => bail!("front protocol: expected a worker reply, got {other:?}"),
             Err(e) => bail!("front connection lost: {e}"),
-        }
+        };
+        obs::global()
+            .histogram(
+                &obs::labeled("gba_front_rpc_seconds", "rpc", kind),
+                obs::Histogram::latency_bounds(),
+            )
+            .record(t0.elapsed().as_secs_f64());
+        reply
     }
 
     fn expect_ok(&self, req: WorkerRequest, what: &str) -> Result<()> {
@@ -170,6 +182,14 @@ impl PsClient for FrontClient {
     }
 
     fn push(&self, grad: GradPush) -> Result<()> {
+        // A gradient push starts a trace: the fresh id rides the frame
+        // header to the front, whose serving thread carries it into the
+        // shard applies — one id correlates worker → front → shard.
+        obs::trace::set_current(obs::trace::next_id());
+        obs::trace::span(
+            "worker_push",
+            crate::util::json::Json::obj().set("worker", grad.worker).set("token", grad.token),
+        );
         self.expect_ok(WorkerRequest::Push(grad), "Push")
     }
 

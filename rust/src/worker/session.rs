@@ -32,6 +32,7 @@ use crate::data::DataGen;
 use crate::embedding::EmbeddingConfig;
 use crate::metrics::{auc, TrainCounters};
 use crate::model::NativeModel;
+use crate::obs;
 use crate::optim::make_optimizer;
 use crate::ps::PsServer;
 use crate::runtime::{EnginePool, Manifest, VariantDims};
@@ -484,8 +485,20 @@ impl TrainSession {
         } else {
             (percentile(&lat, 95.0), percentile(&lat, 50.0))
         };
+        // Observability: each worker's mean batch latency is one
+        // histogram sample (the scrape-side quantiles then mirror the
+        // fleet spread the switcher watches), and the day's reissue/drop
+        // resolutions accumulate into run-total counters.
+        let reg = obs::global();
+        let batch_hist =
+            reg.histogram("gba_worker_batch_seconds", obs::Histogram::latency_bounds());
+        for &l in &lat {
+            batch_hist.record(l);
+        }
+        reg.counter("gba_batches_reissued_total").add(counters.reissued_batches);
+        reg.counter("gba_batches_dropped_total").add(counters.dropped_batches);
         self.next_day.store(day + 1, Ordering::Relaxed);
-        Ok(DayStats {
+        let stats = DayStats {
             day,
             wall_sec: wall,
             samples,
@@ -495,7 +508,9 @@ impl TrainSession {
             failures,
             batch_latency_p95: p95,
             batch_latency_med: med,
-        })
+        };
+        reg.gauge("gba_straggler_signal").set(stats.straggler_signal());
+        Ok(stats)
     }
 
     /// AUC over `n` eval samples of `day` (the paper's next-day protocol:
@@ -549,6 +564,14 @@ impl TrainSession {
     /// holds no in-flight tokens, and in-flight gradients of the old
     /// epoch are flushed, not carried over.
     pub fn switch_mode(&mut self, kind: ModeKind) -> Result<()> {
+        self.switch_mode_with_signal(kind, None)
+    }
+
+    /// [`switch_mode`](Self::switch_mode), annotating the recorded
+    /// [`SwitchEvent`](crate::coordinator::SwitchEvent) with the
+    /// straggler signal that drove the decision (adaptive switches
+    /// only; manual switches record `None`).
+    fn switch_mode_with_signal(&mut self, kind: ModeKind, signal: Option<f64>) -> Result<()> {
         if kind == self.kind {
             return Ok(());
         }
@@ -599,8 +622,9 @@ impl TrainSession {
                     format!("switching the remote worker plane to {}", kind.as_str())
                 })?;
         }
-        let advanced = self.switch.advance(day, kind);
+        let advanced = self.switch.advance_with_signal(day, kind, signal);
         debug_assert_eq!(advanced, epoch);
+        obs::global().counter("gba_mode_switches_total").inc();
 
         // Shard plane: drain buffered gradients under the old policy,
         // install the new one; swap optimizers only when the pair
@@ -650,7 +674,7 @@ impl TrainSession {
         match self.switch.observe(signal) {
             None => Ok(None),
             Some(to) => {
-                self.switch_mode(to)?;
+                self.switch_mode_with_signal(to, Some(signal))?;
                 Ok(Some(to))
             }
         }

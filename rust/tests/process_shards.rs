@@ -141,6 +141,60 @@ fn spawn_plane(config: &Path, log_tag: &str) -> Vec<ShardProc> {
     (0..N_SHARDS).map(|s| spawn_shard(config, s, "127.0.0.1:0", log_tag)).collect()
 }
 
+/// Spawn a shard-server with `--obs-listen`: the first stdout line is
+/// still the address banner (that contract is pinned by every other
+/// test here), the second announces the obs metrics address.
+fn spawn_shard_with_obs(config: &Path, shard: usize, log_tag: &str) -> (ShardProc, String) {
+    let log = std::fs::File::create(log_dir().join(format!("{log_tag}-shard{shard}.log")))
+        .expect("creating shard-server log file");
+    let mut child = Command::new(BIN)
+        .args([
+            "shard-server",
+            "--config",
+            config.to_str().unwrap(),
+            "--shard-id",
+            &shard.to_string(),
+            "--listen",
+            "127.0.0.1:0",
+            "--mode",
+            "gba",
+            "--obs-listen",
+            "127.0.0.1:0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::from(log))
+        .spawn()
+        .expect("spawning shard-server child");
+    let mut reader = BufReader::new(child.stdout.take().expect("child stdout"));
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("reading shard-server banner");
+    let addr = line
+        .strip_prefix("shard-server listening on ")
+        .unwrap_or_else(|| panic!("unexpected shard-server banner: {line:?}"))
+        .split_whitespace()
+        .next()
+        .expect("address token")
+        .to_string();
+    let mut obs_line = String::new();
+    reader.read_line(&mut obs_line).expect("reading obs announcement");
+    let obs_addr = obs_line
+        .strip_prefix("obs metrics listening on ")
+        .unwrap_or_else(|| panic!("unexpected obs announcement: {obs_line:?}"))
+        .trim()
+        .to_string();
+    (ShardProc { child, addr }, obs_addr)
+}
+
+/// Raw HTTP/1.0 GET against a child process's obs listener.
+fn scrape_metrics(addr: &str) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::net::TcpStream::connect(addr).expect("connecting to obs listener");
+    s.write_all(b"GET /metrics HTTP/1.0\r\nHost: test\r\n\r\n").expect("sending scrape");
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).expect("reading exposition");
+    resp
+}
+
 fn base_cfg() -> ExperimentConfig {
     ExperimentConfig::from_toml(CONFIG).expect("test config parses")
 }
@@ -321,6 +375,34 @@ fn unreachable_shard_server_is_an_err_not_a_panic() {
     assert!(msg.contains(&addr), "error does not name the address: {msg}");
     // The short deadline bounds the build; far under the default 20 s.
     assert!(t0.elapsed() < Duration::from_secs(10), "took {:?}", t0.elapsed());
+}
+
+/// ISSUE 6 acceptance: with `--obs-listen` set, a shard-server child
+/// serves a Prometheus exposition whose per-RPC counters are consistent
+/// with the run the front just drove — every flush the front counted as
+/// a global step sent this shard exactly one Apply RPC, and the
+/// shard-side apply-latency histogram saw exactly that many samples.
+#[test]
+fn shard_server_metrics_exposition_matches_the_run() {
+    let config = write_config("obs-scrape");
+    let (observed, obs_addr) = spawn_shard_with_obs(&config, 0, "obs-scrape");
+    let plain = spawn_shard(&config, 1, "127.0.0.1:0", "obs-scrape");
+    let cfg = remote_cfg(vec![observed.addr.clone(), plain.addr.clone()]);
+    let result = run_epoch(&cfg, |_, _| {});
+    assert_eq!(result.lost_events, 0, "clean run must not recover");
+
+    let resp = scrape_metrics(&obs_addr);
+    assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "{resp}");
+    let want_apply =
+        format!("gba_shard_requests_total{{rpc=\"apply\"}} {}", result.global_steps);
+    assert!(resp.contains(&want_apply), "expected {want_apply:?} in exposition:\n{resp}");
+    let want_hist =
+        format!("gba_shard_apply_seconds_count{{shard=\"0\"}} {}", result.global_steps);
+    assert!(resp.contains(&want_hist), "expected {want_hist:?} in exposition:\n{resp}");
+    // The listener is a live view, not a one-shot dump: a second scrape
+    // still answers (and the counters have not gone backwards).
+    let again = scrape_metrics(&obs_addr);
+    assert!(again.contains(&want_apply), "second scrape lost the counters:\n{again}");
 }
 
 /// A real multi-worker training day over ≥ 2 OS processes: the session

@@ -197,8 +197,9 @@ fn prop_wrong_version_and_tag_rejected() {
         body[0] = if bad_version == WIRE_VERSION { WIRE_VERSION + 1 } else { bad_version };
         assert!(matches!(decode(&body), Err(CodecError::BadVersion(_))));
 
+        // The tag sits after the version byte and the u64 trace id.
         let mut body = encode(&WireMsg::Pull(PullReply::Wait));
-        body[1] = 5 + (rng.next_u32() % 250) as u8; // tags are 1..=4
+        body[9] = 7 + (rng.next_u32() % 240) as u8; // valid tags are 1..=6
         assert!(matches!(decode(&body), Err(CodecError::BadTag(_))));
     });
 }
