@@ -1,0 +1,118 @@
+//! ISSUE 7 trajectory bench: embedding-gather throughput on a shard
+//! whose primary connection is saturated by a stream of `Apply`s.
+//!
+//! Before this PR every read queued on the shard's single connection
+//! behind whatever `Apply` was in flight (`call`, still measured here
+//! as the "primary" row). The read-only companion connection
+//! (`read_call`) lets gathers overlap the apply — the store's own
+//! `RwLock`s become the only contention. The "idle" row is the
+//! no-contention ceiling for reference.
+//!
+//!     cargo bench --bench bench_gather_overlap
+//!
+//! CI stores the JSON report as the `BENCH_7.json` trajectory artifact.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use gba::config::TransportKind;
+use gba::embedding::EmbeddingConfig;
+use gba::optim::Sgd;
+use gba::runtime::HostTensor;
+use gba::transport::{ShardReply, ShardRequest, ShardSpawnSpec, ShardSupervisor};
+use gba::util::bench::{black_box, Bencher};
+
+const DENSE_LEN: usize = 256;
+const DIM: usize = 16;
+const ROWS: u64 = 1024;
+const GATHER_KEYS: usize = 256;
+/// Embedding keys touched per apply — sized so one apply is meaty
+/// enough that a queued gather actually waits on it.
+const APPLY_KEYS: u64 = 512;
+
+fn spec() -> ShardSpawnSpec {
+    ShardSpawnSpec {
+        index: 0,
+        ranges: vec![(0, DENSE_LEN)],
+        emb_cfg: EmbeddingConfig { dim: DIM, init_scale: 0.0, seed: 1, shards: 1 },
+        opt_dense: Box::new(Sgd { lr: 1e-6 }),
+        opt_emb: Box::new(Sgd { lr: 1e-6 }),
+        addr: None,
+    }
+}
+
+fn apply_req() -> ShardRequest {
+    ShardRequest::Apply {
+        opt_step: 1,
+        dense: vec![vec![1e-3; DENSE_LEN]],
+        emb: (0..APPLY_KEYS).map(|k| (k % ROWS, vec![1e-3; DIM], 1)).collect(),
+    }
+}
+
+fn gather_req() -> ShardRequest {
+    ShardRequest::Gather { keys: (0..GATHER_KEYS as u64).map(|k| k * 3 % ROWS).collect() }
+}
+
+fn expect_rows(reply: ShardReply) {
+    match reply {
+        ShardReply::Rows { .. } => {}
+        other => panic!("gather failed: {other:?}"),
+    }
+}
+
+/// Run `f` while a background thread keeps the primary connection busy
+/// with back-to-back applies.
+fn under_applies<R>(sup: &Arc<ShardSupervisor>, f: impl FnOnce() -> R) -> R {
+    let stop = Arc::new(AtomicBool::new(false));
+    let handle = {
+        let sup = sup.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                match sup.call(0, apply_req()) {
+                    ShardReply::Ok => {}
+                    other => panic!("apply failed: {other:?}"),
+                }
+            }
+        })
+    };
+    let r = f();
+    stop.store(true, Ordering::Relaxed);
+    handle.join().unwrap();
+    r
+}
+
+fn main() {
+    let init = vec![HostTensor { shape: vec![DENSE_LEN], data: vec![0.0; DENSE_LEN] }];
+    let sup = Arc::new(
+        ShardSupervisor::start(
+            TransportKind::Socket,
+            vec![spec()],
+            &init,
+            std::time::Duration::from_secs(5),
+        )
+        .expect("starting shard supervisor"),
+    );
+    let rows = (0..ROWS).map(|k| (k, vec![0.5; DIM], vec![], Default::default())).collect();
+    match sup.call(0, ShardRequest::InsertRows { rows }) {
+        ShardReply::Ok => {}
+        other => panic!("seeding rows failed: {other:?}"),
+    }
+
+    let mut b = Bencher::new();
+    println!("-- {GATHER_KEYS}-key gathers vs a saturated apply stream (socket transport) --");
+    b.bench_units("gather idle/primary", GATHER_KEYS as f64, || {
+        expect_rows(black_box(sup.call(0, gather_req())));
+    });
+    under_applies(&sup, || {
+        b.bench_units("gather under applies/primary (before)", GATHER_KEYS as f64, || {
+            expect_rows(black_box(sup.call(0, gather_req())));
+        });
+    });
+    under_applies(&sup, || {
+        b.bench_units("gather under applies/companion (after)", GATHER_KEYS as f64, || {
+            expect_rows(black_box(sup.read_call(0, gather_req())));
+        });
+    });
+    b.write_report("results/bench_gather_overlap.json").ok();
+}

@@ -31,7 +31,9 @@ use crate::ps::{GradPush, PullReply, WorkItem};
 /// An admitted aggregation, ready to be applied to the shards. Produced
 /// under the control lock; consumed (and the arithmetic done) outside it.
 pub struct FlushJob {
-    /// The drained gradient buffer, in admission order.
+    /// The drained gradient buffer, sorted by (token, claimed batch) —
+    /// canonical aggregation order, independent of which worker's push
+    /// raced into the buffer first.
     pub entries: Vec<GradPush>,
     /// Per-entry aggregation weight (0.0 = decayed out, already counted).
     pub weights: Vec<f32>,
@@ -46,7 +48,11 @@ pub struct FlushJob {
 
 struct CtrlState {
     policy: Box<dyn ModePolicy>,
-    buffer: Vec<GradPush>,
+    /// Buffered gradients awaiting the next flush, each paired with the
+    /// batch index its worker's claim covered — the canonical sort key
+    /// (with the token) that makes flush aggregation order-deterministic
+    /// regardless of which worker's push raced in first.
+    buffer: Vec<(usize, GradPush)>,
     counters: TrainCounters,
     day: usize,
     next_batch: usize,
@@ -263,7 +269,9 @@ impl ControlPlane {
         let mut c = self.wait_not_applying(self.state.lock().unwrap());
         c.outstanding = c.outstanding.saturating_sub(1);
         let pusher = grad.worker;
-        c.claims.remove(&pusher);
+        // The batch this grad trained, recovered from the claim ledger.
+        // Synthetic pushes with no recorded claim (tests) sort last.
+        let batch = c.claims.remove(&pusher).unwrap_or(usize::MAX);
         let action = c.policy.on_push(grad.worker, grad.token);
         let job = match action {
             PushAction::Drop => {
@@ -271,11 +279,11 @@ impl ControlPlane {
                 None
             }
             PushAction::Buffer => {
-                c.buffer.push(grad);
+                c.buffer.push((batch, grad));
                 None
             }
             PushAction::FlushNow => {
-                c.buffer.push(grad);
+                c.buffer.push((batch, grad));
                 self.o.flushes.inc();
                 Some(Self::begin_flush(&mut c, Some(pusher)))
             }
@@ -361,7 +369,17 @@ impl ControlPlane {
     /// whose push triggered the flush (read-your-writes fast path);
     /// partial and switch flushes have none.
     fn begin_flush(c: &mut CtrlState, flusher: Option<WorkerId>) -> FlushJob {
-        let entries = std::mem::take(&mut c.buffer);
+        let mut buffered = std::mem::take(&mut c.buffer);
+        // Canonical aggregation order: workers race each other into the
+        // buffer, so admission order depends on scheduling (thread
+        // fan-out vs. a single event loop). Sorting by (token, batch)
+        // before weights are assigned makes the flush arithmetic — and
+        // therefore the model bits — identical across worker planes.
+        // The token alone is not enough (a sync cohort shares one; GBA
+        // repeats each M times), but the batch index is unique per
+        // claim, so the pair is a total order.
+        buffered.sort_by_key(|(batch, g)| (g.token, *batch));
+        let entries: Vec<GradPush> = buffered.into_iter().map(|(_, g)| g).collect();
         let tokens: Vec<u64> = entries.iter().map(|g| g.token).collect();
         let spec = c.policy.flush_spec(&tokens);
         debug_assert_eq!(spec.weights.len(), entries.len());

@@ -280,7 +280,7 @@ impl ShardedPs {
     /// Per-shard load/contention snapshot (Fig. 7 shard sweep).
     pub fn shard_stats(&self) -> Vec<ShardStats> {
         (0..self.n_shards())
-            .map(|s| expect_stats(self.supervisor.call(s, ShardRequest::Stats)).0)
+            .map(|s| expect_stats(self.supervisor.read_call(s, ShardRequest::Stats)).0)
             .collect()
     }
 
@@ -291,7 +291,7 @@ impl ShardedPs {
     /// own registry — the coordinator's fleet-scrape path.
     pub fn obs_scrape(&self) -> Vec<Vec<(String, f64)>> {
         (0..self.n_shards())
-            .map(|s| match self.supervisor.call(s, ShardRequest::ObsScrape) {
+            .map(|s| match self.supervisor.read_call(s, ShardRequest::ObsScrape) {
                 ShardReply::Obs { entries } => entries,
                 other => panic!("shard protocol: expected Obs, got {other:?}"),
             })
@@ -564,7 +564,7 @@ impl ShardedPs {
         let mut flats: Vec<Vec<f32>> =
             self.shapes.iter().map(|s| vec![0.0f32; s.iter().product()]).collect();
         for s in 0..self.n_shards() {
-            let slices = expect_dense(self.supervisor.call(s, ShardRequest::ReadDense));
+            let slices = expect_dense(self.supervisor.read_call(s, ShardRequest::ReadDense));
             for (t, slice) in slices.iter().enumerate() {
                 let numel: usize = self.shapes[t].iter().product();
                 let (lo, hi) = self.router.dense_range(s, numel);
@@ -606,7 +606,7 @@ impl ShardedPs {
             .map(|s| vec![0.0f32; s.iter().product::<usize>() * n_slots])
             .collect();
         for s in 0..self.n_shards() {
-            let shard_slots = expect_dense(self.supervisor.call(s, ShardRequest::ReadSlots));
+            let shard_slots = expect_dense(self.supervisor.read_call(s, ShardRequest::ReadSlots));
             for (t, sl) in shard_slots.iter().enumerate() {
                 let numel: usize = self.shapes[t].iter().product();
                 let (lo, hi) = self.router.dense_range(s, numel);
@@ -676,7 +676,7 @@ impl ShardedPs {
                 continue;
             }
             let (rdim, rows) =
-                expect_rows(self.supervisor.call(s, ShardRequest::Gather { keys: skeys }));
+                expect_rows(self.supervisor.read_call(s, ShardRequest::Gather { keys: skeys }));
             debug_assert_eq!(rdim, dim);
             for (j, &i) in positions.iter().enumerate() {
                 data[i * dim..(i + 1) * dim].copy_from_slice(&rows[j * dim..(j + 1) * dim]);
@@ -689,14 +689,14 @@ impl ShardedPs {
     pub fn emb_row(&self, key: u64) -> Vec<f32> {
         let s = self.router.shard_of_key(key);
         let (dim, data) =
-            expect_rows(self.supervisor.call(s, ShardRequest::Gather { keys: vec![key] }));
+            expect_rows(self.supervisor.read_call(s, ShardRequest::Gather { keys: vec![key] }));
         debug_assert_eq!(dim, self.emb_dim);
         data
     }
 
     pub fn emb_meta(&self, key: u64) -> Option<RowMeta> {
         let s = self.router.shard_of_key(key);
-        match self.supervisor.call(s, ShardRequest::GetMeta { key }) {
+        match self.supervisor.read_call(s, ShardRequest::GetMeta { key }) {
             ShardReply::Meta { meta } => meta,
             other => panic!("shard protocol: expected Meta, got {other:?}"),
         }
@@ -734,7 +734,7 @@ impl ShardedPs {
     /// `Checkpoint` does).
     pub fn for_each_emb_row(&self, mut f: impl FnMut(u64, &[f32], &[f32], RowMeta)) {
         for s in 0..self.n_shards() {
-            let rows = expect_dump(self.supervisor.call(s, ShardRequest::DumpRows));
+            let rows = expect_dump(self.supervisor.read_call(s, ShardRequest::DumpRows));
             for (key, vec, state, meta) in rows {
                 f(key, &vec, &state, meta);
             }
@@ -743,7 +743,7 @@ impl ShardedPs {
 
     /// Per-shard row dump (shard-local checkpoint streams).
     pub fn dump_shard_rows(&self, s: usize) -> Vec<RowRecord> {
-        expect_dump(self.supervisor.call(s, ShardRequest::DumpRows))
+        expect_dump(self.supervisor.read_call(s, ShardRequest::DumpRows))
     }
 
     /// Per-shard dense slices in shard-local layout, with their ranges.
@@ -754,21 +754,21 @@ impl ShardedPs {
             .iter()
             .map(|shape| self.router.dense_range(s, shape.iter().product()))
             .collect();
-        let dense = expect_dense(self.supervisor.call(s, ShardRequest::ReadDense));
+        let dense = expect_dense(self.supervisor.read_call(s, ShardRequest::ReadDense));
         (ranges, dense)
     }
 
     /// Number of materialized embedding rows across all shards.
     pub fn emb_len(&self) -> usize {
         (0..self.n_shards())
-            .map(|s| expect_stats(self.supervisor.call(s, ShardRequest::Stats)).0.emb_rows)
+            .map(|s| expect_stats(self.supervisor.read_call(s, ShardRequest::Stats)).0.emb_rows)
             .sum()
     }
 
     /// Approximate resident bytes of the embedding plane.
     pub fn emb_memory_bytes(&self) -> usize {
         (0..self.n_shards())
-            .map(|s| expect_stats(self.supervisor.call(s, ShardRequest::Stats)).1 as usize)
+            .map(|s| expect_stats(self.supervisor.read_call(s, ShardRequest::Stats)).1 as usize)
             .sum()
     }
 }

@@ -288,6 +288,14 @@ pub enum ShardRequest {
     /// journaled): the coordinator folds every shard's snapshot into
     /// the run-wide telemetry block.
     ObsScrape,
+    /// Opens a *read-only* companion connection to an already-serving
+    /// shard (remote transport): the front declares which shard's read
+    /// plane it wants to attach to, the server acks and then serves
+    /// only non-mutating verbs on this connection, against the same
+    /// live shard state the primary connection mutates. This is what
+    /// lets `Gather`/`ReadDense` overlap an in-flight `Apply` instead
+    /// of queueing behind it on one socket.
+    ReadHello { shard: u64 },
 }
 
 impl ShardRequest {
@@ -309,6 +317,7 @@ impl ShardRequest {
             ShardRequest::Hello { .. } => "hello",
             ShardRequest::SwapPolicy { .. } => "swap_policy",
             ShardRequest::ObsScrape => "obs_scrape",
+            ShardRequest::ReadHello { .. } => "read_hello",
         }
     }
 }
@@ -638,6 +647,10 @@ fn encode_req(b: &mut Vec<u8>, r: &ShardRequest) {
             put_u8(b, *reset_slots as u8);
         }
         ShardRequest::ObsScrape => put_u8(b, 14),
+        ShardRequest::ReadHello { shard } => {
+            put_u8(b, 15);
+            put_u64(b, *shard);
+        }
     }
 }
 
@@ -985,6 +998,7 @@ fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
             },
         },
         14 => ShardRequest::ObsScrape,
+        15 => ShardRequest::ReadHello { shard: rd.u64()? },
         _ => return Err(CodecError::Malformed("shard request tag")),
     })
 }
@@ -1045,7 +1059,7 @@ pub fn wire_kind(msg: &WireMsg) -> &'static str {
     }
 }
 
-fn record_frame_bytes(direction: &str, msg: &WireMsg, bytes: usize) {
+pub(crate) fn record_frame_bytes(direction: &str, msg: &WireMsg, bytes: usize) {
     let key = crate::obs::labeled(
         if direction == "tx" { "gba_wire_tx_bytes" } else { "gba_wire_rx_bytes" },
         "msg",
@@ -1449,6 +1463,18 @@ mod tests {
         assert_eq!(&body[1..9], &[0u8; 8]);
         for cut in 0..body.len() {
             assert!(decode(&body[..cut]).is_err(), "decoded truncated Ping at {cut}");
+        }
+    }
+
+    #[test]
+    fn read_hello_roundtrip() {
+        let body = encode(&WireMsg::Req(ShardRequest::ReadHello { shard: 7 }));
+        match decode(&body).unwrap() {
+            WireMsg::Req(ShardRequest::ReadHello { shard }) => assert_eq!(shard, 7),
+            other => panic!("{other:?}"),
+        }
+        for cut in 0..body.len() {
+            assert!(decode(&body[..cut]).is_err(), "decoded truncated ReadHello at {cut}");
         }
     }
 

@@ -91,15 +91,16 @@ impl Conn for DeadConn {
 
 /// One blocking RPC: send the request, wait for its reply. Every call
 /// lands in the client-side per-RPC latency histogram, labeled by the
-/// request kind.
+/// request kind — *including* failed calls: a dead or wedged peer is
+/// exactly the tail the straggler signal needs, so the elapsed time is
+/// recorded before the error propagates.
 pub fn rpc(conn: &mut dyn Conn, req: ShardRequest) -> Result<ShardReply, CodecError> {
     let kind = req.kind_name();
     let t0 = Instant::now();
-    conn.send(WireMsg::Req(req))?;
-    let reply = match conn.recv()? {
+    let reply = conn.send(WireMsg::Req(req)).and_then(|()| conn.recv()).and_then(|msg| match msg {
         WireMsg::Reply(r) => Ok(r),
         _ => Err(CodecError::Malformed("expected a reply frame")),
-    };
+    });
     obs::global()
         .histogram(
             &obs::labeled("gba_shard_rpc_seconds", "rpc", kind),

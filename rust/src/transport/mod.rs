@@ -33,12 +33,18 @@
 //!   addresses from `[ps] shard_addrs`), and [`serve_shard`] is that
 //!   process's accept loop — a fresh shard per connection, state
 //!   installed over the wire by the front.
+//! * [`nbio`] — [`BufConn`], a nonblocking buffered connection speaking
+//!   the same codec frames: partial reads accumulate, writes queue and
+//!   drain opportunistically, so one readiness loop can sweep hundreds
+//!   of connections without a thread per peer. No tokio — std
+//!   `TcpStream` in nonblocking mode is the whole dependency.
 //! * [`worker_front`] — the *worker* plane's front half (`[cluster]
 //!   workers = "remote"`): [`WorkerFront`] accepts `gba-train worker`
-//!   processes after a `Hello` identity/shape handshake and serves each
-//!   one's training day — `Pull`/`Push`/`Gather`/`DenseParams`/`Reset`
-//!   against the PS front, `BeginDay`/`EndOfDay` around it — over the
-//!   same codec. The worker-side half is `worker::remote`.
+//!   processes after a `Hello` identity/shape handshake and serves
+//!   *every* worker's training day on **one event-loop thread** —
+//!   `Pull`/`Push`/`Gather`/`DenseParams`/`Reset` against the PS front,
+//!   `BeginDay`/`EndOfDay` around it — over the same codec. The
+//!   worker-side half is `worker::remote`.
 //!
 //! The front (`shard::ShardedPs`) performs admission, aggregation and
 //! reassembly exactly as before; every parameter byte it reads or writes
@@ -48,6 +54,7 @@
 
 pub mod codec;
 pub mod endpoint;
+pub mod nbio;
 pub mod remote;
 pub mod service;
 pub mod supervisor;
@@ -58,7 +65,8 @@ pub use codec::{
     WireMsg, WorkItem, WorkerReply, WorkerRequest,
 };
 pub use endpoint::{ChanConn, Conn, DeadConn, SocketConn};
+pub use nbio::BufConn;
 pub use remote::{connect_retry, serve_shard, RECONNECT_DEADLINE};
-pub use service::{serve, serve_counting, ShardService};
+pub use service::{serve, serve_counting, serve_reads, ShardService};
 pub use supervisor::{ShardCheckpoint, ShardSpawnSpec, ShardSupervisor, DEFAULT_CKPT_EVERY};
 pub use worker_front::{WorkerFront, WorkerShape, WORKER_ACCEPT_DEADLINE};

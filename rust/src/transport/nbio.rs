@@ -1,0 +1,385 @@
+//! Nonblocking buffered connections for the event-driven fronts.
+//!
+//! [`BufConn`] wraps a `TcpStream` kept permanently in nonblocking mode
+//! and speaks the same length-prefixed [`codec`] frames as
+//! [`SocketConn`](super::SocketConn) — but never parks a thread on the
+//! socket. Incoming bytes accumulate in an input buffer until a whole
+//! frame is present ([`try_recv`](BufConn::try_recv)); outgoing frames
+//! queue in an output buffer and drain opportunistically
+//! ([`try_flush`](BufConn::try_flush)). One readiness loop can therefore
+//! sweep hundreds of connections on a single thread: each sweep is a
+//! `try_flush` + `try_recv` per connection, with no per-connection
+//! thread, lock, or blocking read anywhere.
+//!
+//! The blocking helpers ([`recv_deadline`](BufConn::recv_deadline),
+//! [`send_all`](BufConn::send_all)) exist for the protocol edges that
+//! are genuinely sequential — handshakes, farewells, epoch switches —
+//! and are implemented as bounded poll-sleep loops, since OS read
+//! timeouts do not apply to a nonblocking socket. The [`Conn`] impl
+//! uses them with no deadline, so a `BufConn` can stand in anywhere a
+//! [`SocketConn`](super::SocketConn) did.
+//!
+//! Bit-identity note: frames cross this type byte-for-byte as they do a
+//! `SocketConn` — same codec, same framing, same rx/tx byte metrics —
+//! so swapping one in changes scheduling, never payloads.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::codec::{self, CodecError, WireMsg, MAX_FRAME_BYTES};
+use super::endpoint::Conn;
+
+/// How long the blocking helpers sleep between polls. Short enough that
+/// a handshake round-trip costs ~a millisecond of added latency, long
+/// enough not to spin a core while a peer thinks.
+const POLL_SLEEP: Duration = Duration::from_millis(1);
+
+/// Read chunk size per `try_recv` syscall. Frames are usually far
+/// smaller; large gather replies just take a few reads.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// A codec-framed connection over a *nonblocking* socket, with
+/// buffered, retryable reads and writes.
+pub struct BufConn {
+    stream: TcpStream,
+    /// Bytes received but not yet parsed into a frame.
+    in_buf: Vec<u8>,
+    /// Encoded frames queued for the peer, already length-prefixed.
+    out_buf: Vec<u8>,
+    /// How much of `out_buf` has been written.
+    out_pos: usize,
+}
+
+impl BufConn {
+    /// Take ownership of a stream and switch it to nonblocking mode.
+    pub fn new(stream: TcpStream) -> std::io::Result<BufConn> {
+        // Frames are small and latency-bound; never batch them.
+        let _ = stream.set_nodelay(true);
+        stream.set_nonblocking(true)?;
+        // A leftover read timeout from a previous (blocking) life of the
+        // stream is meaningless now; clear it defensively.
+        let _ = stream.set_read_timeout(None);
+        Ok(BufConn { stream, in_buf: Vec::new(), out_buf: Vec::new(), out_pos: 0 })
+    }
+
+    /// Queue one frame for the peer and opportunistically flush. The
+    /// frame is fully buffered on `Ok`, whether or not any bytes moved;
+    /// only a dead peer errors.
+    pub fn queue_send(&mut self, msg: &WireMsg) -> Result<(), CodecError> {
+        let body = codec::encode(msg);
+        let len = u32::try_from(body.len()).map_err(|_| CodecError::Oversize(u32::MAX))?;
+        if len > MAX_FRAME_BYTES {
+            return Err(CodecError::Oversize(len));
+        }
+        self.out_buf.extend_from_slice(&len.to_le_bytes());
+        self.out_buf.extend_from_slice(&body);
+        codec::record_frame_bytes("tx", msg, body.len() + 4);
+        self.try_flush().map(|_| ())
+    }
+
+    /// Push queued output toward the peer without blocking. `Ok(true)`
+    /// when the queue is fully drained, `Ok(false)` when the socket
+    /// would block with bytes still pending.
+    pub fn try_flush(&mut self) -> Result<bool, CodecError> {
+        while self.out_pos < self.out_buf.len() {
+            match self.stream.write(&self.out_buf[self.out_pos..]) {
+                Ok(0) => return Err(CodecError::Io(ErrorKind::WriteZero)),
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(CodecError::Io(e.kind())),
+            }
+        }
+        self.out_buf.clear();
+        self.out_pos = 0;
+        Ok(true)
+    }
+
+    /// Bytes queued but not yet written.
+    pub fn pending_out(&self) -> usize {
+        self.out_buf.len() - self.out_pos
+    }
+
+    /// Try to produce one frame without blocking. `Ok(None)` means no
+    /// complete frame is available yet; `Err(Closed)` a peer that hung
+    /// up cleanly between frames; `Err(Truncated)` one that died
+    /// mid-frame.
+    pub fn try_recv(&mut self) -> Result<Option<WireMsg>, CodecError> {
+        loop {
+            if let Some(msg) = self.parse_frame()? {
+                return Ok(Some(msg));
+            }
+            // Need more bytes. Read until a frame completes, the socket
+            // would block, or the peer is gone.
+            let start = self.in_buf.len();
+            self.in_buf.resize(start + READ_CHUNK, 0);
+            match self.stream.read(&mut self.in_buf[start..]) {
+                Ok(0) => {
+                    self.in_buf.truncate(start);
+                    return Err(if self.in_buf.is_empty() {
+                        CodecError::Closed
+                    } else {
+                        CodecError::Truncated
+                    });
+                }
+                Ok(n) => {
+                    self.in_buf.truncate(start + n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    self.in_buf.truncate(start);
+                    return Ok(None);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {
+                    self.in_buf.truncate(start);
+                }
+                Err(e) => {
+                    self.in_buf.truncate(start);
+                    return Err(CodecError::Io(e.kind()));
+                }
+            }
+        }
+    }
+
+    /// Parse one complete frame off the front of `in_buf`, if present.
+    fn parse_frame(&mut self) -> Result<Option<WireMsg>, CodecError> {
+        if self.in_buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([self.in_buf[0], self.in_buf[1], self.in_buf[2], self.in_buf[3]]);
+        if len > MAX_FRAME_BYTES {
+            return Err(CodecError::Oversize(len));
+        }
+        let total = 4 + len as usize;
+        if self.in_buf.len() < total {
+            return Ok(None);
+        }
+        let msg = codec::decode(&self.in_buf[4..total])?;
+        codec::record_frame_bytes("rx", &msg, total);
+        self.in_buf.drain(..total);
+        Ok(Some(msg))
+    }
+
+    /// Block (poll-sleep) until a frame arrives, the peer dies, or the
+    /// deadline passes (`Err(Io(TimedOut))`). Pending output keeps
+    /// draining while we wait, so a request/reply exchange can't wedge
+    /// on an unflushed request.
+    pub fn recv_deadline(&mut self, deadline: Option<Duration>) -> Result<WireMsg, CodecError> {
+        let t0 = Instant::now();
+        loop {
+            self.try_flush()?;
+            if let Some(msg) = self.try_recv()? {
+                return Ok(msg);
+            }
+            if let Some(d) = deadline {
+                if t0.elapsed() > d {
+                    return Err(CodecError::Io(ErrorKind::TimedOut));
+                }
+            }
+            std::thread::sleep(POLL_SLEEP);
+        }
+    }
+
+    /// Queue a frame and block (poll-sleep) until every queued byte is
+    /// on the wire or the deadline passes.
+    pub fn send_all(
+        &mut self,
+        msg: &WireMsg,
+        deadline: Option<Duration>,
+    ) -> Result<(), CodecError> {
+        let t0 = Instant::now();
+        self.queue_send(msg)?;
+        while !self.try_flush()? {
+            if let Some(d) = deadline {
+                if t0.elapsed() > d {
+                    return Err(CodecError::Io(ErrorKind::TimedOut));
+                }
+            }
+            std::thread::sleep(POLL_SLEEP);
+        }
+        Ok(())
+    }
+
+    /// Best-effort liveness probe of the peer, without consuming input.
+    /// `true` means the peer is certainly gone (clean close or reset);
+    /// `false` means it *may* be alive — an idle open socket and a live
+    /// peer look identical, so callers must treat `false` as "assume
+    /// alive". Used by the worker front to let a redialing worker
+    /// replace its own dead connection instead of dying as a duplicate.
+    pub fn peer_dead(&mut self) -> bool {
+        let mut probe = [0u8; 1];
+        match self.stream.peek(&mut probe) {
+            Ok(0) => true, // orderly shutdown: nothing more will come
+            Ok(_) => false,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => false,
+            Err(e) => matches!(
+                e.kind(),
+                ErrorKind::ConnectionReset
+                    | ErrorKind::ConnectionAborted
+                    | ErrorKind::BrokenPipe
+                    | ErrorKind::NotConnected
+            ),
+        }
+    }
+}
+
+/// The [`Conn`] impl makes a `BufConn` a drop-in for the blocking
+/// request/reply paths (handshakes, epoch switches): `send` drains the
+/// queue, `recv` waits for a frame, both without deadline.
+impl Conn for BufConn {
+    fn send(&mut self, msg: WireMsg) -> Result<(), CodecError> {
+        self.send_all(&msg, None)
+    }
+
+    fn recv(&mut self) -> Result<WireMsg, CodecError> {
+        self.recv_deadline(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::codec::{ShardReply, ShardRequest};
+    use crate::transport::SocketConn;
+    use std::net::TcpListener;
+
+    fn pair() -> (BufConn, SocketConn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (BufConn::new(server).unwrap(), SocketConn::new(client))
+    }
+
+    #[test]
+    fn frames_roundtrip_against_a_blocking_peer() {
+        let (mut buf, mut peer) = pair();
+        peer.send(WireMsg::Req(ShardRequest::Gather { keys: vec![1, 2, 3] })).unwrap();
+        // The frame is already in the socket; one try_recv sees it.
+        let t0 = Instant::now();
+        let msg = loop {
+            if let Some(m) = buf.try_recv().unwrap() {
+                break m;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "frame never arrived");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        match msg {
+            WireMsg::Req(ShardRequest::Gather { keys }) => assert_eq!(keys, vec![1, 2, 3]),
+            other => panic!("{other:?}"),
+        }
+        buf.queue_send(&WireMsg::Reply(ShardReply::Rows { dim: 2, data: vec![0.5; 6] })).unwrap();
+        while !buf.try_flush().unwrap() {}
+        match peer.recv().unwrap() {
+            WireMsg::Reply(ShardReply::Rows { dim, data }) => {
+                assert_eq!(dim, 2);
+                assert_eq!(data, vec![0.5; 6]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// A frame delivered byte-by-byte accumulates across try_recv calls
+    /// and parses only once complete — the partial-frame discipline the
+    /// event loop depends on.
+    #[test]
+    fn partial_frames_accumulate_until_complete() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut buf = BufConn::new(server).unwrap();
+
+        let body = codec::encode(&WireMsg::Req(ShardRequest::GetMeta { key: 42 }));
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        let t0 = Instant::now();
+        for (i, byte) in frame.iter().enumerate() {
+            client.write_all(std::slice::from_ref(byte)).unwrap();
+            client.flush().unwrap();
+            if i + 1 < frame.len() {
+                // Wait for the byte to land, then confirm no frame yet.
+                while buf.in_buf.len() < i + 1 {
+                    assert!(buf.try_recv().unwrap().is_none(), "parsed an incomplete frame");
+                    assert!(t0.elapsed() < Duration::from_secs(10), "bytes never arrived");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        let msg = loop {
+            if let Some(m) = buf.try_recv().unwrap() {
+                break m;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "complete frame never parsed");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert!(matches!(msg, WireMsg::Req(ShardRequest::GetMeta { key: 42 })));
+    }
+
+    #[test]
+    fn clean_close_is_closed_midframe_is_truncated() {
+        // Clean close between frames.
+        let (mut buf, peer) = pair();
+        drop(peer);
+        let t0 = Instant::now();
+        loop {
+            match buf.try_recv() {
+                Err(CodecError::Closed) => break,
+                Ok(None) => {
+                    assert!(t0.elapsed() < Duration::from_secs(5));
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                other => panic!("expected Closed, got {other:?}"),
+            }
+        }
+
+        // Death mid-frame.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut buf = BufConn::new(server).unwrap();
+        client.write_all(&100u32.to_le_bytes()).unwrap(); // promises 100 bytes
+        client.write_all(&[1, 2, 3]).unwrap(); // delivers 3
+        client.flush().unwrap();
+        drop(client);
+        let t0 = Instant::now();
+        loop {
+            match buf.try_recv() {
+                Err(CodecError::Truncated) => break,
+                Ok(None) => {
+                    assert!(t0.elapsed() < Duration::from_secs(5));
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                other => panic!("expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn peer_dead_detects_a_closed_peer_not_an_idle_one() {
+        let (mut buf, peer) = pair();
+        assert!(!buf.peer_dead(), "an idle live peer is not dead");
+        drop(peer);
+        // Closing is asynchronous; poll until the FIN lands.
+        let t0 = Instant::now();
+        while !buf.peer_dead() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "close never observed");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// The blocking Conn impl interoperates with a SocketConn — the
+    /// handshake paths use exactly this.
+    #[test]
+    fn conn_impl_blocks_like_a_socket_conn() {
+        let (mut buf, mut peer) = pair();
+        let t = std::thread::spawn(move || {
+            peer.send(WireMsg::Req(ShardRequest::Ping)).unwrap();
+            peer.recv().unwrap()
+        });
+        assert!(matches!(buf.recv().unwrap(), WireMsg::Req(ShardRequest::Ping)));
+        buf.send(WireMsg::Reply(ShardReply::Ok)).unwrap();
+        assert!(matches!(t.join().unwrap(), WireMsg::Reply(ShardReply::Ok)));
+    }
+}

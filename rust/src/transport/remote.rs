@@ -15,11 +15,18 @@
 //!   daemon, or a test harness) like any other lost shard: reconnect,
 //!   install the shard-local checkpoint over the wire (`SetDense`,
 //!   `SetSlots`, one bulk `InsertRows`), replay the journal.
-//! * **Server side** ([`serve_shard`]): one accept loop, one connection
-//!   at a time, and a **fresh shard per connection**. The front's
-//!   checkpoint is authoritative — a server that accepted a reconnect
-//!   holds no state worth preserving (the front could not know what the
-//!   dying connection left behind), so every accept starts from the
+//! * **Server side** ([`serve_shard`]): one accept loop dispatching on
+//!   each connection's *first frame*. A `ReadHello` opens a read-only
+//!   companion connection onto the **current** shard generation, served
+//!   on its own thread ([`serve_reads`]) so gathers and checkpoint
+//!   reads answer while an `Apply` is in flight on the primary. Any
+//!   other first request is a **primary** connection — also served on
+//!   its own thread (the accept loop must stay free to take the read
+//!   companion dialed while the primary is live), with a **fresh shard
+//!   per primary**. The front's checkpoint
+//!   is authoritative — a server that accepted a reconnect holds no
+//!   state worth preserving (the front could not know what the dying
+//!   connection left behind), so every primary starts from the
 //!   config-derived initial state and lets the install overwrite it.
 //!   This makes reconnect semantics deterministic: the rebuilt shard is
 //!   bit-identical to the lost one, exactly as in-process respawn is.
@@ -30,17 +37,25 @@
 //! [`serve_shard`].
 
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::endpoint::SocketConn;
-use super::service::serve_counting;
+use super::codec::{ShardReply, ShardRequest, WireMsg};
+use super::endpoint::{Conn, SocketConn};
+use super::service::{serve_counting, serve_reads};
 use super::supervisor::{ShardCheckpoint, ShardSpawnSpec};
 use crate::runtime::HostTensor;
+use crate::shard::PsShard;
 
 /// How long the front keeps dialing a shard address before declaring the
 /// shard unrecoverable. Long enough to ride out a shard-server restart;
 /// short enough that a mis-typed address fails the run, not the shift.
 pub const RECONNECT_DEADLINE: Duration = Duration::from_secs(20);
+
+/// How long the accept loop waits for a freshly accepted connection's
+/// first frame. Real peers (the supervisor) send it immediately after
+/// connect; a silent junk peer must not wedge the accept loop forever.
+const FIRST_FRAME_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Dial `addr` until it accepts or `deadline` elapses, backing off
 /// 10 ms → 500 ms between attempts. `None` means nobody ever listened.
@@ -79,10 +94,12 @@ pub fn connect_retry(addr: &str, deadline: Duration) -> Option<SocketConn> {
     }
 }
 
-/// Run one shard's server loop forever: accept a connection, build a
-/// fresh shard from `spec` at its initial parameters, and serve codec
-/// RPCs until the peer goes away; then loop back to `accept`. Returns
-/// only when the listener itself fails.
+/// Run one shard's accept loop forever: accept a connection, dispatch
+/// on its first frame (`ReadHello` → read-only companion onto the
+/// current generation, anything else → a fresh primary), and hand it
+/// to its own serving thread — the accept loop itself never blocks on
+/// a served connection, because the supervisor dials the companion
+/// while its primary is live. Returns only when the listener fails.
 ///
 /// Logs go to stderr — stdout belongs to the launcher, which prints
 /// exactly one `listening on` line that process supervisors (and the
@@ -92,16 +109,86 @@ pub fn serve_shard(
     spec: ShardSpawnSpec,
     init_params: &[HostTensor],
 ) -> std::io::Result<()> {
+    // The generation read companions attach to: the shard behind the
+    // most recent primary connection. A companion outliving its primary
+    // serves that generation's (now orphaned) state until its own
+    // socket closes — the supervisor redials both on recovery.
+    let mut current: Option<Arc<PsShard>> = None;
     loop {
         let (stream, peer) = listener.accept()?;
+        let _ = stream.set_read_timeout(Some(FIRST_FRAME_TIMEOUT));
+        let mut conn = SocketConn::new(stream);
+        let first = match conn.recv() {
+            Ok(WireMsg::Req(req)) => req,
+            other => {
+                eprintln!(
+                    "shard {}: dropping connection from {peer}: no first request ({other:?})",
+                    spec.index
+                );
+                continue;
+            }
+        };
+        if let ShardRequest::ReadHello { shard } = first {
+            let Some(gen) = current.clone() else {
+                eprintln!(
+                    "shard {}: read companion from {peer} before any primary; dropping",
+                    spec.index
+                );
+                continue;
+            };
+            // Same wrong-number policy as the primary `Hello`: die at
+            // connect, loudly.
+            assert_eq!(shard as usize, spec.index, "ReadHello: wrong shard dialed");
+            if conn.send(WireMsg::Reply(ShardReply::Ok)).is_err() {
+                continue;
+            }
+            let _ = conn.stream.set_read_timeout(None);
+            let index = spec.index;
+            std::thread::Builder::new()
+                .name(format!("ps-shard-{index}-read"))
+                .spawn(move || {
+                    let (handled, exit) = serve_reads(gen, Box::new(conn));
+                    eprintln!(
+                        "shard {index}: read companion from {peer} ended after {handled} \
+                         requests ({exit})"
+                    );
+                })
+                .expect("spawning read companion thread");
+            continue;
+        }
         eprintln!("shard {}: serving connection from {peer}", spec.index);
-        let service = spec.service_at(&ShardCheckpoint::initial(&spec, init_params));
-        let (handled, exit) = serve_counting(service, Box::new(SocketConn::new(stream)));
-        eprintln!(
-            "shard {}: connection from {peer} ended after {handled} requests ({exit}); \
-             awaiting reconnect",
-            spec.index
-        );
+        let mut service = spec.service_at(&ShardCheckpoint::initial(&spec, init_params));
+        current = Some(service.shard_handle());
+        // Serve the primary on its own thread so the accept loop stays
+        // free for the read companion the supervisor dials *while* this
+        // primary is live (serving it inline would deadlock that
+        // handshake). A reconnecting front makes the old thread's recv
+        // fail, so it dies with its socket; the fresh accept above
+        // hands the new primary a fresh shard exactly as before.
+        let index = spec.index;
+        std::thread::Builder::new()
+            .name(format!("ps-shard-{index}"))
+            .spawn(move || {
+                // The dispatched first request belongs to this primary:
+                // execute it before entering the serve loop (it is
+                // request 1 of the connection's tally).
+                let reply = service.handle(first);
+                if conn.send(WireMsg::Reply(reply)).is_err() {
+                    eprintln!(
+                        "shard {index}: connection from {peer} ended after 1 request; \
+                         awaiting reconnect"
+                    );
+                    return;
+                }
+                let _ = conn.stream.set_read_timeout(None);
+                let (handled, exit) = serve_counting(service, Box::new(conn));
+                eprintln!(
+                    "shard {index}: connection from {peer} ended after {} requests ({exit}); \
+                     awaiting reconnect",
+                    handled + 1
+                );
+            })
+            .expect("spawning shard primary thread");
     }
 }
 
@@ -136,9 +223,9 @@ mod tests {
         assert!(t0.elapsed() >= Duration::from_millis(100));
     }
 
-    /// The accept loop hands every connection a fresh shard, so state
-    /// written on one connection is gone on the next — the reconnect
-    /// contract the supervisor's checkpoint install relies on.
+    /// The accept loop hands every primary connection a fresh shard, so
+    /// state written on one connection is gone on the next — the
+    /// reconnect contract the supervisor's checkpoint install relies on.
     #[test]
     fn serve_shard_resets_state_per_connection() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -164,6 +251,43 @@ mod tests {
             ShardReply::Dense { dense } => {
                 assert_eq!(dense, vec![vec![1.0, 2.0, 3.0, 4.0]], "fresh shard per connection")
             }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    /// A `ReadHello` connection attaches to the current primary's shard
+    /// generation and answers reads on its own thread, while the
+    /// primary connection stays open (and possibly busy) beside it.
+    #[test]
+    fn read_companion_serves_the_current_generation() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let init = vec![HostTensor { shape: vec![4], data: vec![1.0, 2.0, 3.0, 4.0] }];
+        std::thread::spawn(move || {
+            let _ = serve_shard(listener, spec(), &init);
+        });
+
+        let mut primary = connect_retry(&addr, Duration::from_secs(5)).expect("primary connect");
+        match rpc(&mut primary, ShardRequest::SetDense { dense: vec![vec![9.0; 4]] }).unwrap() {
+            ShardReply::Ok => {}
+            other => panic!("{other:?}"),
+        }
+
+        let mut reader = connect_retry(&addr, Duration::from_secs(5)).expect("read connect");
+        match rpc(&mut reader, ShardRequest::ReadHello { shard: 0 }).unwrap() {
+            ShardReply::Ok => {}
+            other => panic!("ReadHello rejected: {other:?}"),
+        }
+        // The companion reads the state the *primary* wrote: same shard.
+        match rpc(&mut reader, ShardRequest::ReadDense).unwrap() {
+            ShardReply::Dense { dense } => assert_eq!(dense, vec![vec![9.0; 4]]),
+            other => panic!("{other:?}"),
+        }
+        // A mutating verb on the read companion closes it.
+        assert!(rpc(&mut reader, ShardRequest::SetDense { dense: vec![vec![0.0; 4]] }).is_err());
+        // The primary is unaffected.
+        match rpc(&mut primary, ShardRequest::Ping).unwrap() {
+            ShardReply::Ok => {}
             other => panic!("{other:?}"),
         }
     }

@@ -8,6 +8,17 @@
 //! the service (they are deterministic config, not state — mutable state
 //! lives in the shard's slot buffers), which is what makes a respawned
 //! service bit-compatible with the one it replaces.
+//!
+//! Two connections reach each shard: the **primary** (mutating)
+//! connection served by [`serve`]/[`serve_counting`], and a **read-only
+//! companion** served by [`serve_reads`] over an [`Arc`] handle to the
+//! same shard ([`ShardService::shard_handle`]). Reads — embedding
+//! gathers above all — answer on the companion while an `Apply` is in
+//! flight on the primary, instead of queueing behind it; the shard's
+//! own `RwLock`s are the only synchronization, exactly as when both
+//! verbs shared one connection.
+
+use std::sync::Arc;
 
 use super::codec::{CodecError, RowRecord, ShardReply, ShardRequest, WireMsg};
 use super::endpoint::Conn;
@@ -17,14 +28,76 @@ use crate::shard::PsShard;
 use crate::util::json::Json;
 
 pub struct ShardService {
-    shard: PsShard,
+    shard: Arc<PsShard>,
     opt_dense: Box<dyn Optimizer>,
     opt_emb: Box<dyn Optimizer>,
 }
 
+/// Execute one *read-only* request against the shard, or hand a
+/// mutating request back to the caller. The single dispatch point for
+/// what "read-only" means on the wire: both the primary service and the
+/// read-only companion loop route through here, so the two connections
+/// can never disagree about a verb's side effects.
+fn try_handle_read(shard: &PsShard, req: ShardRequest) -> Result<ShardReply, ShardRequest> {
+    Ok(match req {
+        ShardRequest::Ping => ShardReply::Ok,
+        ShardRequest::ReadHello { shard: s } => {
+            // The companion-connection handshake: same wrong-number
+            // policy as `Hello` — a front that dialed the wrong server
+            // must die at connect, not read another model's rows.
+            assert_eq!(s as usize, shard.index, "ReadHello: wrong shard dialed");
+            ShardReply::Ok
+        }
+        ShardRequest::ReadDense => {
+            let d = shard.dense.read().unwrap();
+            ShardReply::Dense { dense: d.params.clone() }
+        }
+        ShardRequest::ReadSlots => {
+            let d = shard.dense.read().unwrap();
+            ShardReply::Dense { dense: d.slots.clone() }
+        }
+        ShardRequest::Gather { keys } => {
+            let dim = shard.emb.dim();
+            let mut data = vec![0.0f32; keys.len() * dim];
+            for (i, &key) in keys.iter().enumerate() {
+                shard.emb.read_row_into(key, &mut data[i * dim..(i + 1) * dim]);
+            }
+            ShardReply::Rows { dim: dim as u64, data }
+        }
+        ShardRequest::GetMeta { key } => ShardReply::Meta { meta: shard.emb.meta(key) },
+        ShardRequest::DumpRows => {
+            let mut rows: Vec<RowRecord> = Vec::with_capacity(shard.emb.len());
+            shard.emb.for_each_row(|k, v, st, m| {
+                rows.push((k, v.to_vec(), st.to_vec(), m));
+            });
+            // Canonical order: the shard-local checkpoint stream is
+            // byte-stable regardless of hash-map iteration order.
+            rows.sort_by_key(|(k, _, _, _)| *k);
+            ShardReply::RowDump { rows }
+        }
+        ShardRequest::Stats => ShardReply::Stats {
+            stats: shard.stats(),
+            emb_mem_bytes: shard.emb.memory_bytes() as u64,
+        },
+        ShardRequest::ObsScrape => {
+            // Fleet scrape: hand the coordinator this process's whole
+            // registry (in a shard-server process that is exactly the
+            // shard's metrics; in-process it is the shared registry).
+            ShardReply::Obs { entries: obs::global().snapshot() }
+        }
+        other => return Err(other),
+    })
+}
+
 impl ShardService {
     pub fn new(shard: PsShard, opt_dense: Box<dyn Optimizer>, opt_emb: Box<dyn Optimizer>) -> Self {
-        ShardService { shard, opt_dense, opt_emb }
+        ShardService { shard: Arc::new(shard), opt_dense, opt_emb }
+    }
+
+    /// A shared handle to the shard, for a read-only companion loop
+    /// ([`serve_reads`]) running beside this service.
+    pub fn shard_handle(&self) -> Arc<PsShard> {
+        self.shard.clone()
     }
 
     /// Execute one request. Every request produces exactly one reply —
@@ -35,8 +108,11 @@ impl ShardService {
         obs::global()
             .counter(&obs::labeled("gba_shard_requests_total", "rpc", req.kind_name()))
             .inc();
+        let req = match try_handle_read(&self.shard, req) {
+            Ok(reply) => return reply,
+            Err(req) => req,
+        };
         match req {
-            ShardRequest::Ping => ShardReply::Ok,
             ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim } => {
                 // A front that dialed the wrong server or was launched
                 // with a mode whose optimizer shape differs must die at
@@ -72,14 +148,6 @@ impl ShardService {
                 );
                 ShardReply::Ok
             }
-            ShardRequest::ReadDense => {
-                let d = self.shard.dense.read().unwrap();
-                ShardReply::Dense { dense: d.params.clone() }
-            }
-            ShardRequest::ReadSlots => {
-                let d = self.shard.dense.read().unwrap();
-                ShardReply::Dense { dense: d.slots.clone() }
-            }
             ShardRequest::SetDense { dense } => {
                 let n_slots = self.opt_dense.slots();
                 let mut d = self.shard.dense.write().unwrap();
@@ -104,15 +172,6 @@ impl ShardService {
                 }
                 ShardReply::Ok
             }
-            ShardRequest::Gather { keys } => {
-                let dim = self.shard.emb.dim();
-                let mut data = vec![0.0f32; keys.len() * dim];
-                for (i, &key) in keys.iter().enumerate() {
-                    self.shard.emb.read_row_into(key, &mut data[i * dim..(i + 1) * dim]);
-                }
-                ShardReply::Rows { dim: dim as u64, data }
-            }
-            ShardRequest::GetMeta { key } => ShardReply::Meta { meta: self.shard.emb.meta(key) },
             ShardRequest::InsertRow { key, vec, state, meta } => {
                 self.shard.emb.insert_row(key, vec, state, meta);
                 ShardReply::Ok
@@ -123,20 +182,6 @@ impl ShardService {
                 }
                 ShardReply::Ok
             }
-            ShardRequest::DumpRows => {
-                let mut rows: Vec<RowRecord> = Vec::with_capacity(self.shard.emb.len());
-                self.shard.emb.for_each_row(|k, v, st, m| {
-                    rows.push((k, v.to_vec(), st.to_vec(), m));
-                });
-                // Canonical order: the shard-local checkpoint stream is
-                // byte-stable regardless of hash-map iteration order.
-                rows.sort_by_key(|(k, _, _, _)| *k);
-                ShardReply::RowDump { rows }
-            }
-            ShardRequest::Stats => ShardReply::Stats {
-                stats: self.shard.stats(),
-                emb_mem_bytes: self.shard.emb.memory_bytes() as u64,
-            },
             ShardRequest::SwapPolicy { opt, lr, reset_slots } => {
                 // In-place mode switch (§1): install the new epoch's
                 // optimizer pair. Slot state survives only a same-shape
@@ -160,12 +205,8 @@ impl ShardService {
                 self.opt_emb = opt_emb;
                 ShardReply::Ok
             }
-            ShardRequest::ObsScrape => {
-                // Fleet scrape: hand the coordinator this process's whole
-                // registry (in a shard-server process that is exactly the
-                // shard's metrics; in-process it is the shared registry).
-                ShardReply::Obs { entries: obs::global().snapshot() }
-            }
+            // Read verbs were consumed by `try_handle_read` above.
+            _ => unreachable!("read verb fell through try_handle_read"),
         }
     }
 }
@@ -185,6 +226,43 @@ pub fn serve_counting(mut service: ShardService, mut conn: Box<dyn Conn>) -> (u6
         match conn.recv() {
             Ok(WireMsg::Req(req)) => {
                 let reply = service.handle(req);
+                handled += 1;
+                if let Err(e) = conn.send(WireMsg::Reply(reply)) {
+                    return (handled, e);
+                }
+            }
+            Ok(_) => return (handled, CodecError::Malformed("expected a request frame")),
+            Err(e) => return (handled, e),
+        }
+    }
+}
+
+/// Serve the read-only companion connection: only verbs without side
+/// effects execute; a mutating request on this connection is a protocol
+/// violation that ends the loop (the supervisor routes every mutation
+/// over the primary, so this can only be a bug or a hostile peer —
+/// either way the shard's state must not change through the back door).
+/// Exits quietly when the peer hangs up; shard state lives with the
+/// *primary* connection, so a dead read companion loses nothing.
+pub fn serve_reads(shard: Arc<PsShard>, mut conn: Box<dyn Conn>) -> (u64, CodecError) {
+    let mut handled = 0u64;
+    loop {
+        match conn.recv() {
+            Ok(WireMsg::Req(req)) => {
+                obs::global()
+                    .counter(&obs::labeled("gba_shard_requests_total", "rpc", req.kind_name()))
+                    .inc();
+                let reply = match try_handle_read(&shard, req) {
+                    Ok(reply) => reply,
+                    Err(req) => {
+                        eprintln!(
+                            "shard {}: mutating {} on the read-only connection; closing it",
+                            shard.index,
+                            req.kind_name()
+                        );
+                        return (handled, CodecError::Malformed("mutating request on a read connection"));
+                    }
+                };
                 handled += 1;
                 if let Err(e) = conn.send(WireMsg::Reply(reply)) {
                     return (handled, e);

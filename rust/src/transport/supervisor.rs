@@ -25,12 +25,19 @@
 //! each connection; the flush fan-out locks all slots in index order, so
 //! shard applies run in parallel server-side while fronts never deadlock.
 //!
-//! Two deliberate semantics, inherited from one-connection-per-shard:
+//! Each shard carries **two** connections: the *primary* (every
+//! mutating verb, checkpoint reads, recovery) and a *read-only
+//! companion* ([`read_call`](ShardSupervisor::read_call)) behind its
+//! own slot mutex. Gathers and other side-effect-free reads ride the
+//! companion, so they answer while an `Apply` is in flight on the
+//! primary instead of queueing behind the fan-out — restoring the
+//! overlap the in-process plane's per-row locks always had. On the
+//! server both connections reach one shard; its own `RwLock`s are the
+//! only synchronization. Lock order where both slots are held:
+//! primary, then read.
 //!
-//! * Reads queue behind an in-flight apply on the same shard (the fan-out
-//!   holds every slot for its duration). The in-process plane let gathers
-//!   overlap applies via per-row locks; restoring that over the wire
-//!   needs a second (read) connection per shard — a ROADMAP follow-up.
+//! One deliberate semantic, inherited from per-incarnation serving:
+//!
 //! * [`ShardStats`](crate::shard::ShardStats) counters are
 //!   *per-incarnation*: a respawned shard restarts them at zero (state is
 //!   checkpointed, load telemetry is not). Check `lost_shard_events`
@@ -45,7 +52,7 @@ use std::thread::JoinHandle;
 use super::codec::{self, CodecError, RowRecord, ShardReply, ShardRequest, WireMsg};
 use super::endpoint::{rpc, ChanConn, Conn, DeadConn, SocketConn};
 use super::remote;
-use super::service::{serve, ShardService};
+use super::service::{serve, serve_reads, ShardService};
 use crate::config::{OptimKind, TransportKind};
 use crate::embedding::EmbeddingConfig;
 use crate::obs;
@@ -133,48 +140,96 @@ impl ShardCheckpoint {
     }
 }
 
+/// Everything one (re)spawn produces: the primary endpoint, the
+/// read-only companion endpoint, and — for in-process transports — the
+/// threads behind them (the `Socket` read companion is served by a
+/// thread the accept thread detaches; it exits when its socket closes).
+struct Spawned {
+    conn: Box<dyn Conn>,
+    read_conn: Box<dyn Conn>,
+    handle: Option<JoinHandle<()>>,
+    read_handle: Option<JoinHandle<()>>,
+}
+
 /// Build and launch one shard service from a checkpoint; returns the
-/// front's endpoint and, for in-process transports, the service
-/// thread's handle. For the `Remote` transport nothing is spawned —
-/// the shard-server process already exists; its fresh shard is brought
-/// to `ckpt` by installing the state over the wire. An unreachable or
-/// mis-shaped remote peer is an `Err` (the in-process transports can
-/// only fail on environment exhaustion, which stays a panic): at
-/// session build the error surfaces through `TrainSession::new`, while
-/// mid-training recovery turns it into the fatal double-fault panic.
+/// front's two endpoints (primary + read companion) and, for in-process
+/// transports, the service threads' handles. For the `Remote` transport
+/// nothing is spawned — the shard-server process already exists; its
+/// fresh shard is brought to `ckpt` by installing the state over the
+/// wire on the primary, then a second connection is attached to it with
+/// the `ReadHello` handshake. An unreachable or mis-shaped remote peer
+/// is an `Err` (the in-process transports can only fail on environment
+/// exhaustion, which stays a panic): at session build the error
+/// surfaces through `TrainSession::new`, while mid-training recovery
+/// turns it into the fatal double-fault panic.
 fn spawn_service(
     kind: TransportKind,
     spec: &ShardSpawnSpec,
     ckpt: &ShardCheckpoint,
     connect_deadline: std::time::Duration,
-) -> Result<(Box<dyn Conn>, Option<JoinHandle<()>>), String> {
+) -> Result<Spawned, String> {
     let name = format!("ps-shard-{}", spec.index);
+    let read_name = format!("ps-shard-{}-read", spec.index);
     Ok(match kind {
         TransportKind::InProc => {
             let service = spec.service_at(ckpt);
+            let shard = service.shard_handle();
             let (client, server) = chan::duplex::<(u64, WireMsg)>();
+            let (read_client, read_server) = chan::duplex::<(u64, WireMsg)>();
             let handle = std::thread::Builder::new()
                 .name(name)
                 .spawn(move || serve(service, Box::new(ChanConn { pipe: server })))
                 .expect("spawning shard service thread");
-            (Box::new(ChanConn { pipe: client }), Some(handle))
+            let read_handle = std::thread::Builder::new()
+                .name(read_name)
+                .spawn(move || {
+                    let _ = serve_reads(shard, Box::new(ChanConn { pipe: read_server }));
+                })
+                .expect("spawning shard read thread");
+            Spawned {
+                conn: Box::new(ChanConn { pipe: client }),
+                read_conn: Box::new(ChanConn { pipe: read_client }),
+                handle: Some(handle),
+                read_handle: Some(read_handle),
+            }
         }
         TransportKind::Socket => {
             let service = spec.service_at(ckpt);
+            let shard = service.shard_handle();
             let listener =
                 std::net::TcpListener::bind("127.0.0.1:0").expect("binding shard socket");
             let addr = listener.local_addr().expect("shard socket addr");
             let handle = std::thread::Builder::new()
                 .name(name)
                 .spawn(move || {
+                    // Two sequential connects from one client: accept
+                    // order is their connect order — primary first,
+                    // read companion second.
                     if let Ok((stream, _peer)) = listener.accept() {
+                        if let Ok((read_stream, _peer)) = listener.accept() {
+                            let _ = std::thread::Builder::new().name(read_name).spawn(
+                                move || {
+                                    let _ = serve_reads(
+                                        shard,
+                                        Box::new(SocketConn::new(read_stream)),
+                                    );
+                                },
+                            );
+                        }
                         serve(service, Box::new(SocketConn::new(stream)));
                     }
                 })
                 .expect("spawning shard service thread");
             let stream =
                 std::net::TcpStream::connect(addr).expect("connecting to shard socket");
-            (Box::new(SocketConn::new(stream)), Some(handle))
+            let read_stream =
+                std::net::TcpStream::connect(addr).expect("connecting to shard read socket");
+            Spawned {
+                conn: Box::new(SocketConn::new(stream)),
+                read_conn: Box::new(SocketConn::new(read_stream)),
+                handle: Some(handle),
+                read_handle: None,
+            }
         }
         TransportKind::Remote => {
             let addr = spec
@@ -190,7 +245,32 @@ fn spawn_service(
             install_checkpoint(&mut conn, spec, ckpt).map_err(|e| {
                 format!("shard {}: installing checkpoint at {addr}: {e}", spec.index)
             })?;
-            (Box::new(conn), None)
+            // The companion attaches to the generation the install just
+            // created; connected only now so the server has a current
+            // generation to hand it.
+            let mut read_conn =
+                remote::connect_retry(addr, connect_deadline).ok_or_else(|| {
+                    format!(
+                        "shard {}: no shard-server reachable at {addr} for the read \
+                         companion",
+                        spec.index
+                    )
+                })?;
+            match rpc(&mut read_conn, ShardRequest::ReadHello { shard: spec.index as u64 }) {
+                Ok(ShardReply::Ok) => {}
+                other => {
+                    return Err(format!(
+                        "shard {}: read-companion handshake at {addr} failed: {other:?}",
+                        spec.index
+                    ))
+                }
+            }
+            Spawned {
+                conn: Box::new(conn),
+                read_conn: Box::new(read_conn),
+                handle: None,
+                read_handle: None,
+            }
         }
     })
 }
@@ -369,6 +449,15 @@ struct ShardSlot {
     applies_since_ckpt: usize,
 }
 
+/// The read-only companion connection, behind its own mutex so reads
+/// never contend with the primary slot. No journal, no checkpoint:
+/// reads have nothing to replay, and recovery (which needs the journal)
+/// always runs through the primary slot.
+struct ReadSlot {
+    conn: Box<dyn Conn>,
+    handle: Option<JoinHandle<()>>,
+}
+
 pub struct ShardSupervisor {
     kind: TransportKind,
     /// (Re)spawn recipes, one per shard. Behind per-shard mutexes
@@ -380,6 +469,9 @@ pub struct ShardSupervisor {
     /// [`swap_optimizer`]: Self::swap_optimizer
     specs: Vec<Mutex<ShardSpawnSpec>>,
     slots: Vec<Mutex<ShardSlot>>,
+    /// Read-only companions, index-aligned with `slots`. Lock order
+    /// where both are held: `slots[s]`, then `read_slots[s]`.
+    read_slots: Vec<Mutex<ReadSlot>>,
     lost_events: AtomicU64,
     ckpt_every: AtomicUsize,
     /// In-memory journal cap before spilling to disk (0 = never spill).
@@ -412,25 +504,29 @@ impl ShardSupervisor {
         init_params: &[HostTensor],
         connect_deadline: std::time::Duration,
     ) -> anyhow::Result<Self> {
-        let slots = specs
-            .iter()
-            .map(|spec| {
-                let ckpt = ShardCheckpoint::initial(spec, init_params);
-                let (conn, handle) = spawn_service(kind, spec, &ckpt, connect_deadline)
-                    .map_err(|e| anyhow::anyhow!(e))?;
-                Ok(Mutex::new(ShardSlot {
-                    conn,
-                    handle,
-                    ckpt,
-                    wal: Journal::new(spec.index),
-                    applies_since_ckpt: 0,
-                }))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
+        let mut slots = Vec::with_capacity(specs.len());
+        let mut read_slots = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let ckpt = ShardCheckpoint::initial(spec, init_params);
+            let spawned = spawn_service(kind, spec, &ckpt, connect_deadline)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            slots.push(Mutex::new(ShardSlot {
+                conn: spawned.conn,
+                handle: spawned.handle,
+                ckpt,
+                wal: Journal::new(spec.index),
+                applies_since_ckpt: 0,
+            }));
+            read_slots.push(Mutex::new(ReadSlot {
+                conn: spawned.read_conn,
+                handle: spawned.read_handle,
+            }));
+        }
         Ok(ShardSupervisor {
             kind,
             specs: specs.into_iter().map(Mutex::new).collect(),
             slots,
+            read_slots,
             lost_events: AtomicU64::new(0),
             ckpt_every: AtomicUsize::new(DEFAULT_CKPT_EVERY),
             journal_spill_bytes: AtomicUsize::new(0),
@@ -476,10 +572,43 @@ impl ShardSupervisor {
         self.slots[s].lock().unwrap().wal.spilled_frames()
     }
 
-    /// One RPC to shard `s`, with journaling and lost-shard recovery.
+    /// One RPC to shard `s` on the primary connection, with journaling
+    /// and lost-shard recovery.
     pub fn call(&self, s: usize, req: ShardRequest) -> ShardReply {
         let mut guard = self.slots[s].lock().unwrap();
         self.exec(s, &mut guard, req)
+    }
+
+    /// One *read-only* RPC to shard `s` on its read companion. Holds
+    /// only the read slot on the happy path, so the call answers while
+    /// an `Apply` (or the whole flush fan-out) holds the primary slot —
+    /// the overlap that motivates the second connection. The request
+    /// must be side-effect-free: the server closes the companion on any
+    /// mutating verb.
+    ///
+    /// A dead companion takes the full recovery path: lock primary then
+    /// read (the global lock order), retry once (another thread may
+    /// have already recovered the shard and with it this connection),
+    /// then [`recover`](Self::recover) and retry again.
+    pub fn read_call(&self, s: usize, req: ShardRequest) -> ShardReply {
+        debug_assert!(!is_mutating(&req), "mutating request routed to read_call");
+        {
+            let mut rs = self.read_slots[s].lock().unwrap();
+            if let Ok(reply) = rpc(rs.conn.as_mut(), req.clone()) {
+                return reply;
+            }
+        }
+        // Companion dead. Take both slots in order; by the time the
+        // primary lock is ours, a concurrent recovery may have replaced
+        // both connections already — retry before recovering again.
+        let mut guard = self.slots[s].lock().unwrap();
+        let mut rs = self.read_slots[s].lock().unwrap();
+        if let Ok(reply) = rpc(rs.conn.as_mut(), req.clone()) {
+            return reply;
+        }
+        self.recover(s, &mut guard, &mut rs);
+        rpc(rs.conn.as_mut(), req)
+            .unwrap_or_else(|e| panic!("shard {s} read companion unreachable after respawn: {e}"))
     }
 
     fn exec(&self, s: usize, guard: &mut MutexGuard<'_, ShardSlot>, req: ShardRequest) -> ShardReply {
@@ -502,7 +631,7 @@ impl ShardSupervisor {
                 reply
             }
             Err(_) => {
-                self.recover(s, slot);
+                self.recover_locked(s, slot);
                 match retry {
                     // The journal replay inside `recover` already applied
                     // this request to the rebuilt shard.
@@ -554,7 +683,7 @@ impl ShardSupervisor {
                 }
             } else {
                 // Recovery refreshes the checkpoint itself; no deferral.
-                self.recover(i, slot);
+                self.recover_locked(i, slot);
             }
         }
         due
@@ -576,7 +705,7 @@ impl ShardSupervisor {
                 && self.refresh_ckpt(s, slot).is_err()
             {
                 // Died between the apply ack and the snapshot reads.
-                self.recover(s, slot);
+                self.recover_locked(s, slot);
             }
         }
     }
@@ -610,7 +739,7 @@ impl ShardSupervisor {
                 let mut guard = self.slots[s].lock().unwrap();
                 let slot = &mut *guard;
                 if self.refresh_ckpt(s, slot).is_err() {
-                    self.recover(s, slot);
+                    self.recover_locked(s, slot);
                 }
             }
             match self.call(s, ShardRequest::SwapPolicy { opt, lr, reset_slots }) {
@@ -625,7 +754,7 @@ impl ShardSupervisor {
             let mut guard = self.slots[s].lock().unwrap();
             let slot = &mut *guard;
             if self.refresh_ckpt(s, slot).is_err() {
-                self.recover(s, slot);
+                self.recover_locked(s, slot);
             }
         }
     }
@@ -636,12 +765,17 @@ impl ShardSupervisor {
     /// touching the shard takes the recovery path.
     pub fn kill(&self, s: usize) {
         let mut guard = self.slots[s].lock().unwrap();
+        let mut rs = self.read_slots[s].lock().unwrap();
         let slot = &mut *guard;
-        // Dropping the old endpoint closes the channel / socket …
+        // Dropping the old endpoints closes the channels / sockets …
         let _ = std::mem::replace(&mut slot.conn, Box::new(DeadConn));
-        // … which makes the service loop exit; join so the death is
+        let _ = std::mem::replace(&mut rs.conn, Box::new(DeadConn));
+        // … which makes the service loops exit; join so the death is
         // complete, not in flight, when the injection returns.
         if let Some(h) = slot.handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = rs.handle.take() {
             let _ = h.join();
         }
     }
@@ -654,7 +788,7 @@ impl ShardSupervisor {
             && self.refresh_ckpt(s, slot).is_err()
         {
             // Died between the apply ack and the snapshot reads.
-            self.recover(s, slot);
+            self.recover_locked(s, slot);
         }
     }
 
@@ -685,15 +819,25 @@ impl ShardSupervisor {
         Ok(())
     }
 
+    /// [`recover`](Self::recover) for callers holding only the primary
+    /// slot: takes the read slot (respecting the primary-then-read lock
+    /// order) and recovers both connections.
+    fn recover_locked(&self, s: usize, slot: &mut ShardSlot) {
+        let mut rs = self.read_slots[s].lock().unwrap();
+        self.recover(s, slot, &mut rs);
+    }
+
     /// The lost-shard path: respawn (or, for a remote peer, reconnect to)
     /// the shard from the shard-local checkpoint and replay the journal.
     /// For `Remote` this is the reconnect-and-replay protocol — the
-    /// shard-server hands every new connection a fresh shard, the
+    /// shard-server hands every new primary connection a fresh shard, the
     /// checkpoint is installed over the wire, and the journal brings it
-    /// back to the exact lost state. Panics only on a double fault (the
-    /// respawned shard dying during replay), which no caller can
-    /// meaningfully survive.
-    fn recover(&self, s: usize, slot: &mut ShardSlot) {
+    /// back to the exact lost state. Both connections are replaced as a
+    /// pair — whichever died first, the other points at the dead (or
+    /// superseded) incarnation and must go with it. Panics only on a
+    /// double fault (the respawned shard dying during replay), which no
+    /// caller can meaningfully survive.
+    fn recover(&self, s: usize, slot: &mut ShardSlot, rs: &mut ReadSlot) {
         self.lost_events.fetch_add(1, Ordering::Relaxed);
         obs::global()
             .counter(&obs::labeled("gba_shard_recoveries_total", "shard", &s.to_string()))
@@ -703,16 +847,21 @@ impl ShardSupervisor {
             crate::util::json::Json::obj().set("shard", s),
         );
         let _ = std::mem::replace(&mut slot.conn, Box::new(DeadConn));
+        let _ = std::mem::replace(&mut rs.conn, Box::new(DeadConn));
         if let Some(h) = slot.handle.take() {
             let _ = h.join();
         }
+        if let Some(h) = rs.handle.take() {
+            let _ = h.join();
+        }
         let spec = self.specs[s].lock().unwrap();
-        let (conn, handle) =
-            spawn_service(self.kind, &spec, &slot.ckpt, self.connect_deadline)
-                .unwrap_or_else(|e| panic!("shard {s}: respawn after loss failed: {e}"));
+        let spawned = spawn_service(self.kind, &spec, &slot.ckpt, self.connect_deadline)
+            .unwrap_or_else(|e| panic!("shard {s}: respawn after loss failed: {e}"));
         drop(spec);
-        slot.conn = conn;
-        slot.handle = handle;
+        slot.conn = spawned.conn;
+        slot.handle = spawned.handle;
+        rs.conn = spawned.read_conn;
+        rs.handle = spawned.read_handle;
         let ShardSlot { conn, wal, .. } = &mut *slot;
         wal.for_each(|req| match rpc(conn.as_mut(), req) {
             Ok(ShardReply::Ok) => {}
@@ -726,6 +875,19 @@ impl ShardSupervisor {
 
 impl Drop for ShardSupervisor {
     fn drop(&mut self) {
+        // Sever the read companions first: their loops exit as soon as
+        // the connection drops, and (for InProc) their threads hold an
+        // `Arc` of the shard that must die for the shard to free.
+        for m in &self.read_slots {
+            let mut rs = match m.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            let _ = std::mem::replace(&mut rs.conn, Box::new(DeadConn));
+            if let Some(h) = rs.handle.take() {
+                let _ = h.join();
+            }
+        }
         for m in &self.slots {
             // A front thread that panicked mid-RPC poisons its slot;
             // shutdown must still close the connection and reap the
@@ -740,5 +902,101 @@ impl Drop for ShardSupervisor {
                 let _ = h.join();
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::EmbeddingConfig;
+    use crate::optim::Sgd;
+    use std::time::Duration;
+
+    fn spec() -> ShardSpawnSpec {
+        ShardSpawnSpec {
+            index: 0,
+            ranges: vec![(0, 4)],
+            emb_cfg: EmbeddingConfig { dim: 2, init_scale: 0.0, seed: 1, shards: 1 },
+            opt_dense: Box::new(Sgd { lr: 1.0 }),
+            opt_emb: Box::new(Sgd { lr: 1.0 }),
+            addr: None,
+        }
+    }
+
+    fn start(kind: TransportKind) -> Arc<ShardSupervisor> {
+        let init = vec![crate::runtime::HostTensor { shape: vec![4], data: vec![0.0; 4] }];
+        Arc::new(
+            ShardSupervisor::start(kind, vec![spec()], &init, Duration::from_secs(5)).unwrap(),
+        )
+    }
+
+    /// The seam the read companion exists for: a gather must answer
+    /// while the primary slot is held (as it is for the whole flush
+    /// fan-out when an apply is in flight), instead of queueing on it.
+    #[test]
+    fn gather_answers_while_the_primary_slot_is_held() {
+        for kind in [TransportKind::InProc, TransportKind::Socket] {
+            let sup = start(kind);
+            // Materialize a row through the primary first.
+            match sup.call(
+                0,
+                ShardRequest::InsertRow {
+                    key: 7,
+                    vec: vec![1.5, 2.5],
+                    state: vec![],
+                    meta: Default::default(),
+                },
+            ) {
+                ShardReply::Ok => {}
+                other => panic!("{other:?}"),
+            }
+            // An apply is "in flight": its thread owns the primary slot.
+            let primary_busy = sup.slots[0].lock().unwrap();
+            let (tx, rx) = std::sync::mpsc::channel();
+            let s2 = sup.clone();
+            std::thread::spawn(move || {
+                let _ = tx.send(s2.read_call(0, ShardRequest::Gather { keys: vec![7] }));
+            });
+            let reply = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("gather queued behind the held primary slot");
+            match reply {
+                ShardReply::Rows { dim, data } => {
+                    assert_eq!(dim, 2);
+                    assert_eq!(data, vec![1.5, 2.5]);
+                }
+                other => panic!("{other:?}"),
+            }
+            drop(primary_busy);
+        }
+    }
+
+    /// A dead read companion recovers through the normal lost-shard
+    /// path and the retried read answers — with the shard state the
+    /// journal replay rebuilt.
+    #[test]
+    fn read_call_recovers_a_dead_companion() {
+        let sup = start(TransportKind::InProc);
+        match sup.call(
+            0,
+            ShardRequest::InsertRow {
+                key: 3,
+                vec: vec![4.0, 5.0],
+                state: vec![],
+                meta: Default::default(),
+            },
+        ) {
+            ShardReply::Ok => {}
+            other => panic!("{other:?}"),
+        }
+        sup.kill(0);
+        match sup.read_call(0, ShardRequest::Gather { keys: vec![3] }) {
+            ShardReply::Rows { dim, data } => {
+                assert_eq!(dim, 2);
+                assert_eq!(data, vec![4.0, 5.0], "journal replay restored the row");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(sup.lost_shard_events(), 1);
     }
 }

@@ -5,26 +5,39 @@
 //! run in separate `gba-train worker` OS processes. The front binds one
 //! listening socket ([`WorkerFront::bind`]), waits for `mode.workers`
 //! connect-time `Hello` identity/shape handshakes
-//! ([`WorkerFront::ensure_connected`]), and then serves each worker's
-//! day over the existing length-prefixed codec
-//! ([`WorkerFront::run_day`]): one serving thread per worker executes
+//! ([`WorkerFront::ensure_connected`]), and then serves every worker's
+//! day on **one event-loop thread** ([`WorkerFront::run_day`]): each
+//! connection is a nonblocking [`BufConn`], and a readiness sweep
+//! drains queued replies, retries gated pulls, and executes
 //! `Pull`/`Push`/`Gather`/`DenseParams`/`Reset` requests against the
 //! shared PS front — the token-control plane is driven *unchanged*, by
-//! the same five verbs the in-thread workers call — and collects the
-//! `EndOfDay` stats. Because the verbs, their ordering per worker, and
-//! the codec's raw-bit `f32` framing are identical to the in-thread
-//! plane, a remote day is bit-for-bit identical to an in-thread day on
-//! the same schedule (pinned by `tests/process_workers.rs`).
+//! the same five verbs the in-thread workers call — before collecting
+//! the `EndOfDay` stats. A 256-worker fleet therefore costs one front
+//! thread plus the PS apply path, not 256 parked OS threads. Because
+//! the verbs, their per-worker ordering, and the codec's raw-bit `f32`
+//! framing are identical to the in-thread plane, a remote day is
+//! bit-for-bit identical to an in-thread day on the same schedule
+//! (pinned by `tests/process_workers.rs`).
+//!
+//! A `Pull` the control plane gates (`PullReply::Wait`) never crosses
+//! the wire: the loop parks that worker's reply and retries the pull on
+//! later sweeps, so the worker blocks on its socket exactly as it used
+//! to block on the front's condvar. A `Push` that completes the global
+//! batch runs the flush inline on the loop thread — exactly as the
+//! in-thread worker whose push completed the batch would have run it.
 //!
 //! Failure model (the worker-plane face of Appendix B): a worker
 //! process that dies mid-day surfaces as a receive/send error on its
-//! connection. If the worker held an unpushed claim, the serving thread
-//! reclaims it with `worker_reset` — the token returns to the control
-//! plane's books, the day completes on the surviving workers, and the
-//! lost claim is accounted as one `failure` in the day's stats (so
+//! connection. If the worker held an unpushed claim, the loop reclaims
+//! it with `worker_reset` — the token returns to the control plane's
+//! books, the day completes on the surviving workers, and the lost
+//! claim is accounted as one `failure` in the day's stats (so
 //! `applied + dropped + failures == batches` still balances). The dead
 //! worker's slot reopens: a replacement process may `Hello` with the
-//! same id before the next day.
+//! same id before the next day — and a worker that redials while its
+//! *previous* connection is still parked in the slot replaces it, as
+//! long as the old peer is verifiably dead (a live duplicate id still
+//! fails the run loudly).
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -34,7 +47,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::codec::{PullReply, WireMsg, WorkerReply, WorkerRequest};
-use super::endpoint::{Conn, SocketConn};
+use super::nbio::BufConn;
 use crate::config::{ExperimentConfig, ModeKind};
 use crate::coordinator::WorkerId;
 use crate::obs;
@@ -47,7 +60,7 @@ use crate::worker::WorkerStats;
 pub const WORKER_ACCEPT_DEADLINE: Duration = Duration::from_secs(120);
 
 /// Per-connection bound on the `Hello` read: caps how long one slow or
-/// silent peer can stall the accept loop (and the slots lock).
+/// silent peer can stall admission.
 const HELLO_TIMEOUT: Duration = Duration::from_secs(2);
 
 /// How long `shutdown` waits for each worker's pending `BeginDay`
@@ -57,6 +70,17 @@ const HELLO_TIMEOUT: Duration = Duration::from_secs(2);
 /// window would make a *successful* session look like a crash to a
 /// worker that was briefly descheduled.
 const FAREWELL_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How long the accept path sleeps when no connection is pending.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Idle sweeps before the day loop parks. A burst of traffic is served
+/// spin-free; a genuinely idle fleet (every worker mid-compute) costs
+/// one short sleep per wakeup instead of a spinning core.
+const IDLE_SPINS_BEFORE_PARK: u32 = 64;
+
+/// How long the day loop parks when no connection had traffic.
+const IDLE_PARK: Duration = Duration::from_micros(500);
 
 /// The config-derived shape every connecting worker must declare in its
 /// `Hello` — identity (worker id in range, no duplicates) plus the keys
@@ -107,7 +131,7 @@ impl WorkerShape {
 
 /// One connection slot per worker id (`None` = not yet connected, or
 /// lost and awaiting a replacement).
-type WorkerSlots = Vec<Option<SocketConn>>;
+type WorkerSlots = Vec<Option<BufConn>>;
 
 /// Outcome of one accepted connection's handshake: a worker admitted to
 /// a slot, or a peer that never presented a well-formed `Hello` (a port
@@ -166,6 +190,17 @@ impl WorkerFront {
         self.slots.lock().unwrap().iter().filter(|s| s.is_some()).count()
     }
 
+    /// Which worker ids currently have no connection.
+    fn missing(&self) -> Vec<usize> {
+        self.slots
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter_map(|(w, s)| s.is_none().then_some(w))
+            .collect()
+    }
+
     /// Admit workers for a day. The session's *first* day demands the
     /// full complement (blocking up to `deadline` — the experiment's
     /// worker count is part of its shape); later days drain any queued
@@ -199,20 +234,23 @@ impl WorkerFront {
     /// whose identity or shape disagrees with the front's config fails
     /// the call — a mis-launched worker must stop the run, not train a
     /// diverging model.
+    ///
+    /// The `slots` lock is held only for the instants a connection is
+    /// checked in or out — never across the accept/handshake wait — so
+    /// [`connected`](Self::connected) and obs scrapes stay responsive
+    /// for the whole (up to 120 s) admission window.
     pub fn ensure_connected(&self, deadline: Duration) -> Result<()> {
-        let mut slots = self.slots.lock().unwrap();
         let t0 = Instant::now();
-        while slots.iter().any(|s| s.is_none()) {
+        loop {
+            let missing = self.missing();
+            if missing.is_empty() {
+                return Ok(());
+            }
             // Checked every iteration — not only when the queue is
             // empty — so a stream of slow junk peers (each costing up
             // to one HELLO_TIMEOUT) cannot push the wait arbitrarily
             // past the deadline; worst-case overshoot is one handshake.
             if t0.elapsed() > deadline {
-                let missing: Vec<usize> = slots
-                    .iter()
-                    .enumerate()
-                    .filter_map(|(w, s)| s.is_none().then_some(w))
-                    .collect();
                 bail!(
                     "waited {deadline:?} for {} worker(s) {missing:?} of {} to say \
                      Hello on {}",
@@ -222,9 +260,9 @@ impl WorkerFront {
                 );
             }
             match self.listener.accept() {
-                Ok((stream, peer)) => self.admit(stream, peer, &mut slots)?,
+                Ok((stream, peer)) => self.admit(stream, peer)?,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(20));
+                    std::thread::sleep(ACCEPT_POLL);
                 }
                 // A connection that aborted between arrival and accept
                 // is the peer's problem; only listener-level failures
@@ -239,16 +277,14 @@ impl WorkerFront {
                 Err(e) => return Err(e).context("accepting a worker connection"),
             }
         }
-        Ok(())
     }
 
     /// Drain queued connections without blocking (replacement workers
     /// dialing in between days).
     fn accept_pending(&self) -> Result<()> {
-        let mut slots = self.slots.lock().unwrap();
         loop {
             match self.listener.accept() {
-                Ok((stream, peer)) => self.admit(stream, peer, &mut slots)?,
+                Ok((stream, peer)) => self.admit(stream, peer)?,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
                 Err(e)
                     if matches!(
@@ -264,37 +300,55 @@ impl WorkerFront {
 
     /// Handshake one accepted connection into its slot. Junk peers are
     /// logged and dropped; only a well-formed `Hello` with the wrong
-    /// identity/shape errors.
-    fn admit(
-        &self,
-        stream: TcpStream,
-        peer: SocketAddr,
-        slots: &mut WorkerSlots,
-    ) -> Result<()> {
+    /// identity/shape errors. The `slots` lock is taken only for the
+    /// final occupancy check + install, not across the handshake I/O.
+    fn admit(&self, stream: TcpStream, peer: SocketAddr) -> Result<()> {
         // A handshake that cannot even configure its socket is junk,
         // not fatal: keep accepting.
-        if stream.set_nonblocking(false).is_err()
-            || stream.set_read_timeout(Some(HELLO_TIMEOUT)).is_err()
-        {
-            eprintln!("worker front: dropping {peer}: socket setup failed");
-            return Ok(());
-        }
-        let mut conn = SocketConn::new(stream);
-        match self
-            .handshake(&mut conn, slots)
+        let mut conn = match BufConn::new(stream) {
+            Ok(c) => c,
+            Err(_) => {
+                eprintln!("worker front: dropping {peer}: socket setup failed");
+                return Ok(());
+            }
+        };
+        let w = match self
+            .handshake(&mut conn)
             .with_context(|| format!("worker hello from {peer}"))?
         {
-            Admitted::Worker(w) => {
-                conn.stream.set_read_timeout(None).context("clearing hello timeout")?;
-                eprintln!("worker front: worker {w} connected from {peer}");
-                slots[w] = Some(conn);
-            }
+            Admitted::Worker(w) => w,
             Admitted::Junk(why) => {
                 // A scanner, probe or vanished peer must not abort a
                 // training run; drop it and go on.
                 eprintln!("worker front: ignoring connection from {peer}: {why}");
+                return Ok(());
             }
+        };
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(old) = slots[w].as_mut() {
+            // A worker that redials after losing its `Ok` ack (or after
+            // a crash the front has not yet observed) must be able to
+            // replace its *own* dead connection — aborting the run as a
+            // duplicate would turn a worker-side hiccup into a dead
+            // fleet. Only a verifiably dead old peer is replaced; if it
+            // might still be alive, two processes claim one identity
+            // and that genuinely is fatal.
+            if !old.peer_dead() {
+                bail!("worker hello from {peer}: duplicate worker id {w} (already connected)");
+            }
+            eprintln!(
+                "worker front: worker {w} reconnected from {peer}; replacing its dead connection"
+            );
         }
+        // Ack after the slot decision so a rejected duplicate never
+        // sees an `Ok`. Queued-but-unflushed ack bytes drain on the
+        // event loop (or the next blocking exchange).
+        if let Err(e) = conn.queue_send(&WireMsg::WorkerRep(WorkerReply::Ok)) {
+            eprintln!("worker front: ignoring connection from {peer}: vanished during the Hello ack: {e}");
+            return Ok(());
+        }
+        eprintln!("worker front: worker {w} connected from {peer}");
+        slots[w] = Some(conn);
         Ok(())
     }
 
@@ -302,28 +356,27 @@ impl WorkerFront {
     /// sends a well-formed `Hello` is [`Admitted::Junk`]; a *valid*
     /// `Hello` with the wrong identity or shape is an `Err` that fails
     /// the run (that peer is a mis-launched worker, and training on
-    /// would silently diverge).
-    fn handshake(&self, conn: &mut SocketConn, slots: &[Option<SocketConn>]) -> Result<Admitted> {
-        let (worker, local_batch, fields, emb_dim, seed, samples_per_day) = match conn.recv() {
-            Ok(WireMsg::WorkerReq(WorkerRequest::Hello {
-                worker,
-                local_batch,
-                fields,
-                emb_dim,
-                seed,
-                samples_per_day,
-            })) => (worker, local_batch, fields, emb_dim, seed, samples_per_day),
-            Ok(other) => return Ok(Admitted::Junk(format!("expected Hello, got {other:?}"))),
-            Err(e) => return Ok(Admitted::Junk(format!("no Hello: {e}"))),
-        };
+    /// would silently diverge). Slot occupancy is *not* checked here —
+    /// the caller decides under the slots lock.
+    fn handshake(&self, conn: &mut BufConn) -> Result<Admitted> {
+        let (worker, local_batch, fields, emb_dim, seed, samples_per_day) =
+            match conn.recv_deadline(Some(HELLO_TIMEOUT)) {
+                Ok(WireMsg::WorkerReq(WorkerRequest::Hello {
+                    worker,
+                    local_batch,
+                    fields,
+                    emb_dim,
+                    seed,
+                    samples_per_day,
+                })) => (worker, local_batch, fields, emb_dim, seed, samples_per_day),
+                Ok(other) => return Ok(Admitted::Junk(format!("expected Hello, got {other:?}"))),
+                Err(e) => return Ok(Admitted::Junk(format!("no Hello: {e}"))),
+            };
         let s = self.shape.lock().unwrap().clone();
         let s = &s;
         let w = worker as usize;
         if w >= s.workers {
             bail!("worker id {w} out of range for {} workers", s.workers);
-        }
-        if slots[w].is_some() {
-            bail!("duplicate worker id {w} (already connected)");
         }
         if local_batch != s.local_batch {
             bail!(
@@ -349,17 +402,15 @@ impl WorkerFront {
                 s.samples_per_day
             );
         }
-        if let Err(e) = conn.send(WireMsg::WorkerRep(WorkerReply::Ok)) {
-            return Ok(Admitted::Junk(format!("vanished during the Hello ack: {e}")));
-        }
         Ok(Admitted::Worker(w))
     }
 
-    /// Serve one training day to every connected worker: announce the
-    /// day, execute each worker's PS verbs against `ps`, collect
-    /// `EndOfDay` stats. Returns per-worker stats (a worker that died
-    /// mid-day contributes zero batches and one `failure` per reclaimed
-    /// claim; its slot reopens for a replacement).
+    /// Serve one training day to every connected worker on one
+    /// event-loop thread: announce the day, execute each worker's PS
+    /// verbs against `ps`, collect `EndOfDay` stats. Returns per-worker
+    /// stats (a worker that died mid-day contributes zero batches and
+    /// one `failure` per reclaimed claim; its slot reopens for a
+    /// replacement).
     pub fn run_day(&self, day: usize, ps: &ShardedPs) -> Result<Vec<WorkerStats>> {
         let conns: WorkerSlots = {
             let mut slots = self.slots.lock().unwrap();
@@ -369,30 +420,12 @@ impl WorkerFront {
             conns.iter().any(|c| c.is_some()),
             "no live worker connections for day {day}"
         );
-        let mut results = Vec::new();
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = conns
-                .into_iter()
-                .enumerate()
-                .map(|(w, conn)| {
-                    scope.spawn(move || match conn {
-                        Some(mut c) => {
-                            let (alive, stats) = serve_worker_day(w, day, &mut c, ps);
-                            (alive.then_some(c), stats)
-                        }
-                        None => (None, WorkerStats::default()),
-                    })
-                })
-                .collect();
-            results = handles
-                .into_iter()
-                .map(|h| h.join().expect("worker serving thread panicked"))
-                .collect();
-        });
+        let had_conn: Vec<bool> = conns.iter().map(|c| c.is_some()).collect();
+        let results = serve_day_loop(day, conns, ps);
         let mut slots = self.slots.lock().unwrap();
         let mut stats_out = Vec::with_capacity(results.len());
         for (w, (conn, stats)) in results.into_iter().enumerate() {
-            if conn.is_none() {
+            if conn.is_none() && had_conn[w] {
                 eprintln!(
                     "worker front: worker {w} lost during day {day}; slot reopened \
                      ({} claim(s) reclaimed)",
@@ -467,9 +500,9 @@ impl WorkerFront {
         // here are logged, never fatal.
         for (w, slot) in slots.iter_mut().enumerate().skip(new_workers) {
             if let Some(mut conn) = slot.take() {
-                match conn.recv() {
+                match conn.recv_deadline(None) {
                     Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay)) => {
-                        let _ = conn.send(WireMsg::WorkerRep(WorkerReply::SessionOver));
+                        let _ = conn.send_all(&WireMsg::WorkerRep(WorkerReply::SessionOver), None);
                         eprintln!(
                             "worker front: worker {w} retired by the epoch-{epoch} switch \
                              (mode {} runs {} workers)",
@@ -505,9 +538,14 @@ impl WorkerFront {
         let mut slots = self.slots.lock().unwrap();
         for slot in slots.iter_mut() {
             if let Some(mut conn) = slot.take() {
-                let _ = conn.stream.set_read_timeout(Some(FAREWELL_TIMEOUT));
-                if matches!(conn.recv(), Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay))) {
-                    let _ = conn.send(WireMsg::WorkerRep(WorkerReply::SessionOver));
+                if matches!(
+                    conn.recv_deadline(Some(FAREWELL_TIMEOUT)),
+                    Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay))
+                ) {
+                    let _ = conn.send_all(
+                        &WireMsg::WorkerRep(WorkerReply::SessionOver),
+                        Some(FAREWELL_TIMEOUT),
+                    );
                 }
             }
         }
@@ -519,21 +557,21 @@ impl WorkerFront {
 /// re-derived shape, confirm the epoch. Any wire failure or
 /// disagreement is an error — the caller fails the switch.
 fn rehandshake(
-    conn: &mut SocketConn,
+    conn: &mut BufConn,
     w: WorkerId,
     epoch: u64,
     kind: ModeKind,
     shape: &WorkerShape,
 ) -> Result<()> {
-    match conn.recv() {
+    match conn.recv_deadline(None) {
         Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay)) => {}
         Ok(other) => bail!("expected BeginDay before the switch, got {other:?}"),
         Err(e) => bail!("connection lost awaiting BeginDay: {e}"),
     }
-    conn.send(WireMsg::WorkerRep(WorkerReply::Switch { epoch, mode: kind }))
+    conn.send_all(&WireMsg::WorkerRep(WorkerReply::Switch { epoch, mode: kind }), None)
         .map_err(|e| anyhow::anyhow!("announcing the switch: {e}"))?;
     let (e, worker, workers, local_batch, fields, emb_dim, seed, samples_per_day) =
-        match conn.recv() {
+        match conn.recv_deadline(None) {
             Ok(WireMsg::WorkerReq(WorkerRequest::SwitchMode {
                 epoch,
                 worker,
@@ -563,133 +601,266 @@ fn rehandshake(
          (front/worker config files disagree)",
         kind.as_str()
     );
-    conn.send(WireMsg::WorkerRep(WorkerReply::Epoch { epoch }))
+    conn.send_all(&WireMsg::WorkerRep(WorkerReply::Epoch { epoch }), None)
         .map_err(|e| anyhow::anyhow!("confirming epoch {epoch}: {e}"))?;
     Ok(())
 }
 
-/// Serve one worker's day on its connection. Returns whether the
-/// connection is still good and the worker's stats (synthesized, with
-/// any reclaimed claim counted as a failure, when the worker died).
-fn serve_worker_day(
-    w: WorkerId,
-    day: usize,
-    conn: &mut dyn Conn,
-    ps: &ShardedPs,
-) -> (bool, WorkerStats) {
-    let mut stats = WorkerStats::default();
-    // Whether the worker holds a pulled-but-unpushed claim; on death it
-    // must go back to the control plane or the day never quiesces.
-    let mut claim = false;
+/// Where one worker's day currently stands in the event loop.
+enum Phase {
+    /// Waiting for the worker's `BeginDay`.
+    Opening,
+    /// Day announced; serving PS verbs until `EndOfDay`.
+    Serving,
+    /// `EndOfDay` collected (or the connection was lost).
+    Done,
+}
 
-    // The worker is gone (or spoke nonsense): reclaim any in-flight
-    // claim — the token returns to the control plane's books, counted
-    // as one failure — and report the connection dead.
-    let lost = |claim: bool, stats: &mut WorkerStats, why: String| {
+/// Per-worker event-loop state.
+struct Served {
+    conn: BufConn,
+    phase: Phase,
+    /// Whether the worker holds a pulled-but-unpushed claim; on death it
+    /// must go back to the control plane or the day never quiesces.
+    claim: bool,
+    /// A `Pull` the control plane gated (`Wait`): the reply is parked
+    /// and the pull retried each sweep, so `Wait` never crosses the
+    /// wire — the worker blocks on its socket exactly as it used to
+    /// block on the front's condvar.
+    pending_pull: bool,
+    /// Connection still good (false once lost).
+    alive: bool,
+    stats: WorkerStats,
+}
+
+impl Served {
+    /// The worker is gone (or spoke nonsense): reclaim any in-flight
+    /// claim — the token returns to the control plane's books, counted
+    /// as one failure — and mark the connection dead.
+    fn lost(&mut self, w: WorkerId, day: usize, ps: &ShardedPs, why: String) {
         eprintln!("worker front: worker {w} day {day}: {why}");
-        if claim {
+        if self.claim {
             ps.worker_reset(w);
-            stats.failures += 1;
+            self.stats.failures += 1;
+            self.claim = false;
+        }
+        self.alive = false;
+        self.phase = Phase::Done;
+        self.pending_pull = false;
+    }
+}
+
+/// The day's readiness loop: one thread sweeps every connection —
+/// flush queued replies, retry gated pulls, execute newly arrived
+/// requests — until every worker has delivered `EndOfDay` or died.
+/// Returns, per worker id, the surviving connection (None = never
+/// connected or lost) and the day's stats.
+fn serve_day_loop(
+    day: usize,
+    conns: WorkerSlots,
+    ps: &ShardedPs,
+) -> Vec<(Option<BufConn>, WorkerStats)> {
+    let reg = obs::global();
+    let depth_gauge = reg.gauge("gba_front_ready_queue_depth");
+    let polls = reg.counter("gba_front_loop_polls_total");
+    let wakeups = reg.counter("gba_front_loop_wakeups_total");
+
+    let mut served: Vec<Option<Served>> = conns
+        .into_iter()
+        .map(|c| {
+            c.map(|conn| Served {
+                conn,
+                phase: Phase::Opening,
+                claim: false,
+                pending_pull: false,
+                alive: true,
+                stats: WorkerStats::default(),
+            })
+        })
+        .collect();
+
+    let mut idle_spins = 0u32;
+    loop {
+        polls.inc();
+        let mut ready = 0usize;
+        let mut open = 0usize;
+        for w in 0..served.len() {
+            let Some(st) = served[w].as_mut() else { continue };
+            if matches!(st.phase, Phase::Done) {
+                continue;
+            }
+            open += 1;
+            // Push queued reply bytes toward the worker first: a reply
+            // that never drains is a wedged worker, and its socket
+            // error surfaces here.
+            if let Err(e) = st.conn.try_flush() {
+                st.lost(w, day, ps, format!("reply failed: {e}"));
+                continue;
+            }
+            // Retry a gated pull before reading more requests — the
+            // worker is parked on this reply and sends nothing new.
+            if st.pending_pull {
+                match ps.pull(w) {
+                    PullReply::Wait => {}
+                    r => {
+                        st.pending_pull = false;
+                        st.claim = st.claim || matches!(r, PullReply::Work(_));
+                        if let Err(e) = st.conn.queue_send(&WireMsg::WorkerRep(WorkerReply::Pull(r)))
+                        {
+                            st.lost(w, day, ps, format!("reply failed: {e}"));
+                            continue;
+                        }
+                        ready += 1;
+                    }
+                }
+                continue;
+            }
+            // Execute newly arrived frames. One frame per sweep per
+            // worker keeps the sweep fair; the protocol alternates
+            // request/reply anyway, so at most one request is pending.
+            match st.conn.try_recv() {
+                Ok(None) => {}
+                Ok(Some(msg)) => {
+                    ready += 1;
+                    handle_frame(st, w, day, msg, ps);
+                }
+                Err(e) => {
+                    let why = match st.phase {
+                        Phase::Opening => format!("connection lost before BeginDay: {e}"),
+                        _ => format!("connection lost mid-day: {e}"),
+                    };
+                    st.lost(w, day, ps, why);
+                }
+            }
+        }
+        depth_gauge.set(ready as f64);
+        if open == 0 {
+            break;
+        }
+        if ready == 0 {
+            idle_spins += 1;
+            if idle_spins > IDLE_SPINS_BEFORE_PARK {
+                wakeups.inc();
+                std::thread::sleep(IDLE_PARK);
+            }
+        } else {
+            idle_spins = 0;
+        }
+    }
+
+    served
+        .into_iter()
+        .map(|s| match s {
+            None => (None, WorkerStats::default()),
+            Some(st) => {
+                let Served { conn, alive, stats, .. } = st;
+                (alive.then_some(conn), stats)
+            }
+        })
+        .collect()
+}
+
+/// Execute one decoded frame for worker `w`. The frame's decode already
+/// installed its trace id on the loop thread, so spans emitted here —
+/// and the shard apply spans an inline flush may emit below them —
+/// correlate with the worker's own `worker_push` span.
+fn handle_frame(st: &mut Served, w: WorkerId, day: usize, msg: WireMsg, ps: &ShardedPs) {
+    let req = match msg {
+        WireMsg::WorkerReq(req) => req,
+        other => {
+            st.lost(w, day, ps, format!("expected a worker request, got {other:?}"));
+            return;
         }
     };
-
-    // The day opens on the worker's pending BeginDay request.
-    match conn.recv() {
-        Ok(WireMsg::WorkerReq(WorkerRequest::BeginDay)) => {}
-        Ok(other) => {
-            lost(claim, &mut stats, format!("expected BeginDay, got {other:?}"));
-            return (false, stats);
+    if matches!(st.phase, Phase::Opening) {
+        // The day opens on the worker's pending BeginDay request.
+        match req {
+            WorkerRequest::BeginDay => {
+                if let Err(e) =
+                    st.conn.queue_send(&WireMsg::WorkerRep(WorkerReply::Day { day: day as u64 }))
+                {
+                    st.lost(w, day, ps, format!("announcing day: {e}"));
+                    return;
+                }
+                st.phase = Phase::Serving;
+            }
+            other => st.lost(w, day, ps, format!("expected BeginDay, got {other:?}")),
         }
-        Err(e) => {
-            lost(claim, &mut stats, format!("connection lost before BeginDay: {e}"));
-            return (false, stats);
+        return;
+    }
+    obs::global()
+        .counter(&obs::labeled("gba_front_requests_total", "rpc", req.kind_name()))
+        .inc();
+    let reply = match req {
+        WorkerRequest::Pull { worker } if worker as usize == w => {
+            // Non-blocking pull: a gate parks the reply (retried each
+            // sweep) instead of parking a thread.
+            match ps.pull(w) {
+                PullReply::Wait => {
+                    st.pending_pull = true;
+                    return;
+                }
+                r => {
+                    // The token is issued *before* the send: a send
+                    // failure with work in flight must reclaim it.
+                    st.claim = st.claim || matches!(r, PullReply::Work(_));
+                    WorkerReply::Pull(r)
+                }
+            }
         }
-    }
-    if let Err(e) = conn.send(WireMsg::WorkerRep(WorkerReply::Day { day: day as u64 })) {
-        lost(claim, &mut stats, format!("announcing day: {e}"));
-        return (false, stats);
-    }
-
-    loop {
-        let req = match conn.recv() {
-            Ok(WireMsg::WorkerReq(req)) => req,
-            Ok(other) => {
-                lost(claim, &mut stats, format!("expected a worker request, got {other:?}"));
-                return (false, stats);
-            }
-            Err(e) => {
-                lost(claim, &mut stats, format!("connection lost mid-day: {e}"));
-                return (false, stats);
-            }
-        };
-        obs::global()
-            .counter(&obs::labeled("gba_front_requests_total", "rpc", req.kind_name()))
-            .inc();
-        let reply = match req {
-            WorkerRequest::Pull { worker } if worker as usize == w => {
-                let r = ps.pull_blocking(w);
-                // The token is issued *before* the send: a send failure
-                // with work in flight must reclaim it.
-                claim = claim || matches!(r, PullReply::Work(_));
-                WorkerReply::Pull(r)
-            }
-            WorkerRequest::Push(grad) if grad.worker == w => {
-                // The claim is consumed whatever the policy decides
-                // (apply, buffer or drop). If this push completes the
-                // global batch, this serving thread runs the flush —
-                // exactly as the in-thread worker would have. A push
-                // claiming another worker's id falls through to the
-                // protocol-violation arm below — it would corrupt that
-                // worker's claim accounting.
-                claim = false;
-                // The decoded frame installed the worker's trace id on
-                // this serving thread, so this span — and the shard
-                // apply spans the flush may emit below it — correlate
-                // with the worker's own `worker_push` span.
-                obs::trace::span(
-                    "front_push",
-                    Json::obj().set("worker", w).set("token", grad.token),
-                );
-                ps.push(grad);
-                WorkerReply::Ok
-            }
-            WorkerRequest::Gather { keys, batch, fields } => {
-                WorkerReply::Emb(ps.gather(&keys, batch as usize, fields as usize))
-            }
-            WorkerRequest::DenseParams => WorkerReply::Dense(ps.dense_params()),
-            WorkerRequest::Reset { worker } if worker as usize == w => {
-                ps.worker_reset(w);
-                claim = false;
-                WorkerReply::Ok
-            }
-            WorkerRequest::EndOfDay { batches, samples, failures, busy_sec } => {
-                stats.batches = batches;
-                stats.samples = samples;
-                stats.failures += failures;
-                stats.busy_sec = busy_sec;
-                // Ack so the worker can move on to its next BeginDay; a
-                // failed ack only matters for the *next* day's accept.
-                let alive = conn.send(WireMsg::WorkerRep(WorkerReply::Ok)).is_ok();
-                return (alive, stats);
-            }
-            other => {
-                lost(claim, &mut stats, format!("protocol violation: {other:?}"));
-                return (false, stats);
-            }
-        };
-        if let Err(e) = conn.send(WireMsg::WorkerRep(reply)) {
-            lost(claim, &mut stats, format!("reply failed: {e}"));
-            return (false, stats);
+        WorkerRequest::Push(grad) if grad.worker == w => {
+            // The claim is consumed whatever the policy decides
+            // (apply, buffer or drop). If this push completes the
+            // global batch, the loop thread runs the flush inline —
+            // exactly as the in-thread worker would have. A push
+            // claiming another worker's id falls through to the
+            // protocol-violation arm below — it would corrupt that
+            // worker's claim accounting.
+            st.claim = false;
+            obs::trace::span("front_push", Json::obj().set("worker", w).set("token", grad.token));
+            ps.push(grad);
+            WorkerReply::Ok
         }
-        // A successfully delivered Work token is the worker's problem
-        // now — but only until its next push/reset, tracked above.
+        WorkerRequest::Gather { keys, batch, fields } => {
+            WorkerReply::Emb(ps.gather(&keys, batch as usize, fields as usize))
+        }
+        WorkerRequest::DenseParams => WorkerReply::Dense(ps.dense_params()),
+        WorkerRequest::Reset { worker } if worker as usize == w => {
+            ps.worker_reset(w);
+            st.claim = false;
+            WorkerReply::Ok
+        }
+        WorkerRequest::EndOfDay { batches, samples, failures, busy_sec } => {
+            st.stats.batches = batches;
+            st.stats.samples = samples;
+            st.stats.failures += failures;
+            st.stats.busy_sec = busy_sec;
+            // Ack so the worker can move on to its next BeginDay; the
+            // queued bytes drain on the farewell/next-day path, and a
+            // failed queue only matters for the *next* day's accept.
+            st.phase = Phase::Done;
+            if st.conn.queue_send(&WireMsg::WorkerRep(WorkerReply::Ok)).is_err() {
+                st.alive = false;
+            }
+            return;
+        }
+        other => {
+            st.lost(w, day, ps, format!("protocol violation: {other:?}"));
+            return;
+        }
+    };
+    if let Err(e) = st.conn.queue_send(&WireMsg::WorkerRep(reply)) {
+        st.lost(w, day, ps, format!("reply failed: {e}"));
     }
+    // A successfully delivered Work token is the worker's problem
+    // now — but only until its next push/reset, tracked above.
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::transport::codec::CodecError;
+    use crate::transport::endpoint::{Conn, SocketConn};
     use std::net::TcpStream;
 
     fn shape() -> WorkerShape {
@@ -767,6 +938,107 @@ mod tests {
         let err = front.ensure_connected(Duration::from_millis(100)).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("[0]"), "which worker is missing? {msg}");
+    }
+
+    /// `connected()` (and with it obs scrapes) must answer while
+    /// `ensure_connected` is mid-wait — the admission path may not hold
+    /// the slots lock across its accept window.
+    #[test]
+    fn connected_answers_while_admission_waits() {
+        let front = std::sync::Arc::new(WorkerFront::bind("127.0.0.1:0", shape()).unwrap());
+        let f = front.clone();
+        let t = std::thread::spawn(move || {
+            // No worker ever dials: this spends its full deadline waiting.
+            f.ensure_connected(Duration::from_millis(600)).unwrap_err()
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        let t0 = Instant::now();
+        assert_eq!(front.connected(), 0);
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "connected() blocked behind the admission wait: {:?}",
+            t0.elapsed()
+        );
+        t.join().unwrap();
+    }
+
+    /// A worker that redials while its previous connection is dead in
+    /// the slot (a lost `Ok` ack, a crash the front has not observed)
+    /// replaces that connection instead of aborting the run as a
+    /// duplicate id.
+    #[test]
+    fn replacement_hello_swaps_out_a_dead_connection() {
+        let front = WorkerFront::bind("127.0.0.1:0", shape()).unwrap();
+        let addr = front.addr();
+        let first = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape().hello(0))).unwrap();
+            assert!(matches!(conn.recv().unwrap(), WireMsg::WorkerRep(WorkerReply::Ok)));
+            conn
+        });
+        front.ensure_connected(Duration::from_secs(10)).unwrap();
+        front.admit_for_day(Duration::from_secs(10)).unwrap(); // arms the between-days path
+        drop(first.join().unwrap()); // worker 0's connection dies
+
+        let second = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape().hello(0))).unwrap();
+            match conn.recv().unwrap() {
+                WireMsg::WorkerRep(WorkerReply::Ok) => {}
+                other => panic!("replacement not admitted: {other:?}"),
+            }
+            conn
+        });
+        // Poll: the redial and the front's close observation race.
+        let t0 = Instant::now();
+        loop {
+            front.admit_for_day(Duration::from_secs(10)).unwrap();
+            if second.is_finished() {
+                break;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(10), "replacement never admitted");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let _conn = second.join().unwrap();
+        assert_eq!(front.connected(), 1);
+    }
+
+    /// Two *live* processes claiming one worker id is still fatal — the
+    /// liveness probe only forgives verifiably dead predecessors.
+    #[test]
+    fn duplicate_hello_with_live_predecessor_still_fails() {
+        let front = WorkerFront::bind("127.0.0.1:0", shape()).unwrap();
+        let addr = front.addr();
+        let first = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape().hello(0))).unwrap();
+            assert!(matches!(conn.recv().unwrap(), WireMsg::WorkerRep(WorkerReply::Ok)));
+            conn
+        });
+        front.ensure_connected(Duration::from_secs(10)).unwrap();
+        front.admit_for_day(Duration::from_secs(10)).unwrap();
+
+        let dup = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape().hello(0))).unwrap();
+            conn
+        });
+        let t0 = Instant::now();
+        let err = loop {
+            match front.admit_for_day(Duration::from_secs(10)) {
+                Err(e) => break e,
+                Ok(()) => {
+                    assert!(t0.elapsed() < Duration::from_secs(10), "duplicate never rejected");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        assert!(
+            format!("{err:#}").contains("duplicate worker id"),
+            "unhelpful duplicate error: {err:#}"
+        );
+        let _live = first.join().unwrap();
+        let _dup = dup.join().unwrap();
     }
 
     /// The epoch re-handshake end to end against a scripted worker: the

@@ -2,7 +2,7 @@
 //! `gba-train worker` child processes drive Algorithm 1 over the wire
 //! against a front running in this process.
 //!
-//! Three pins:
+//! Four pins:
 //!
 //! * **Bit-identity** — a full training day with `[cluster] workers =
 //!   "remote"` (one real worker child, so the pull/push schedule is
@@ -10,6 +10,12 @@
 //!   embedding rows and counters as the identical config with in-thread
 //!   workers. There is exactly one `run_worker`, generic over
 //!   `PsClient`; the transports must not change a single bit.
+//! * **Fleet scale** — 128 workers, every connection multiplexed onto
+//!   the front's ONE event-loop thread, train a sync day bit-identical
+//!   to 128 in-thread workers. Sync's cohort barrier plus the control
+//!   plane's canonical (token, batch) flush order make the day
+//!   schedule-independent, so this pin holds even though 128 racing
+//!   connections admit pushes in arbitrary order.
 //! * **Worker-process failure** — SIGKILL one of four worker children
 //!   mid-day: the front's `worker_reset` path reclaims the in-flight
 //!   claim, the day completes on the survivors, and conservation holds
@@ -27,6 +33,7 @@ use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use gba::config::{ExperimentConfig, ModeKind, WorkerPlane};
+use gba::worker::remote::{run_worker_process, WorkerProcOptions};
 use gba::worker::session::{SessionOptions, TrainSession};
 
 const BIN: &str = env!("CARGO_BIN_EXE_gba-train");
@@ -115,6 +122,52 @@ local_batch = 32
 [mode.gba]
 workers = 4
 local_batch = 16
+iota = 3
+
+[cluster]
+workers = "remote"
+worker_listen = "127.0.0.1:0"
+"#;
+
+/// 128 sync workers at a tiny local batch: 256 batches/day = exactly
+/// two full cohort rounds. Small enough to finish in seconds, large
+/// enough that all 128 connections are concurrently live on the one
+/// event-loop thread.
+const CONFIG_128W: &str = r#"
+name = "process-workers-128w"
+seed = 35
+
+[model]
+variant = "tiny"
+fields = 4
+emb_dim = 4
+hidden1 = 16
+hidden2 = 8
+vocab_size = 500
+zipf_s = 1.1
+
+[data]
+days_base = 1
+days_eval = 1
+samples_per_day = 2048
+teacher_seed = 3
+label_noise = 0.02
+
+[train]
+optimizer = "adam"
+optimizer_async = "adagrad"
+lr = 0.01
+lr_async = 0.05
+eval_batch = 256
+eval_samples = 1024
+
+[mode.sync]
+workers = 128
+local_batch = 8
+
+[mode.gba]
+workers = 128
+local_batch = 8
 iota = 3
 
 [cluster]
@@ -316,6 +369,68 @@ fn killed_worker_process_reclaims_claim_and_day_completes() {
         n_batches
     );
     assert!(session.ps().quiescent());
+}
+
+/// ISSUE 7 acceptance: a 128-worker fleet day served end to end by ONE
+/// front event-loop thread, bit-identical to the same day trained by
+/// 128 in-thread workers.
+///
+/// The workers are in-test threads running [`run_worker_process`] — the
+/// exact code path a `gba-train worker` child executes, over real TCP
+/// through the real admission handshake — because 128 child processes
+/// would buy no extra coverage of the front at 100× the spawn cost.
+///
+/// What makes the pin possible at this scale: sync's cohort barrier
+/// fixes *which* batches each global step aggregates, and the control
+/// plane's canonical (token, batch) flush order fixes the float
+/// summation order — so the arbitrary order in which 128 racing
+/// connections deliver their pushes cannot move a single bit.
+#[test]
+fn fleet_day_on_one_event_loop_bit_identical_to_inproc() {
+    const W: usize = 128;
+
+    // In-thread reference: same config, worker plane flipped.
+    let mut cfg = ExperimentConfig::from_toml(CONFIG_128W).unwrap();
+    cfg.cluster.workers = WorkerPlane::InProc;
+    let inproc_session =
+        TrainSession::new(cfg, ModeKind::Sync, SessionOptions::default()).unwrap();
+    let inproc_stats = inproc_session.train_day(0).unwrap();
+    let inproc = fingerprint(&inproc_session, &inproc_stats);
+
+    let cfg = ExperimentConfig::from_toml(CONFIG_128W).unwrap();
+    let session =
+        TrainSession::new(cfg.clone(), ModeKind::Sync, SessionOptions::default()).unwrap();
+    let addr = session.worker_addr().expect("remote plane binds at build");
+    let (stats, remote) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..W)
+            .map(|w| {
+                let cfg = &cfg;
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    run_worker_process(cfg, ModeKind::Sync, w, &addr, WorkerProcOptions::default())
+                })
+            })
+            .collect();
+        let stats = session.train_day(0).expect("fleet day failed");
+        let remote = fingerprint(&session, &stats);
+        // SessionOver answers every worker's pending BeginDay; each
+        // thread must come home having served exactly the one day.
+        session.shutdown_workers();
+        for (w, h) in handles.into_iter().enumerate() {
+            let days = h
+                .join()
+                .expect("worker thread panicked")
+                .unwrap_or_else(|e| panic!("worker {w} failed: {e:#}"));
+            assert_eq!(days, 1, "worker {w} served {days} days");
+        }
+        (stats, remote)
+    });
+
+    assert!(session.ps().quiescent(), "claims or buffered grads leaked");
+    assert_eq!(stats.failures, 0, "a worker was lost mid-day");
+    let n_batches = session.gen().batches_per_day(8) as u64;
+    assert_eq!(remote.applied + remote.dropped, n_batches);
+    assert_bit_identical(&remote, &inproc);
 }
 
 /// A worker launched with the wrong `--mode` has a different local
