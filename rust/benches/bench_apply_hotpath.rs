@@ -1,0 +1,103 @@
+//! ISSUE 8 trajectory bench: the shard apply hot path.
+//!
+//! Measures the three surfaces the PR accelerates, straight on a
+//! [`PsShard`] (no transport, so wire cost can't mask kernel cost):
+//!
+//!  * dense sweep — one aggregated dense apply per optimizer kind ×
+//!    `apply_threads` × tensor size. The chunked kernels set the
+//!    single-thread floor; the row-sharded fan-out sets the scaling.
+//!  * embedding sweep — lock-shard-grouped `apply_grads` at growing
+//!    key counts, threads 1 vs 8. One `RwLock` acquisition per
+//!    lock-shard per apply instead of one per key.
+//!
+//! Every configuration is bit-identical to `apply_threads = 1` by the
+//! pins in `shard::tests` and `optim::tests`; this bench only asks how
+//! fast the identical answer arrives.
+//!
+//!     cargo bench --bench bench_apply_hotpath
+//!
+//! CI stores the JSON report as the `BENCH_8.json` trajectory artifact.
+
+use gba::embedding::EmbeddingConfig;
+use gba::optim::{Adagrad, Adam, Optimizer, Sgd};
+use gba::runtime::HostTensor;
+use gba::shard::PsShard;
+use gba::util::bench::{black_box, Bencher};
+use gba::util::rng::Pcg64;
+
+/// Dense tensor sizes: one comfortably sub-fan-out (serial path), one
+/// around the crossover, one where 8 workers each get a real slice.
+const DENSE_SIZES: [usize; 3] = [4_096, 65_536, 1_048_576];
+const THREADS: [usize; 2] = [1, 8];
+const EMB_DIM: usize = 16;
+const EMB_KEY_COUNTS: [usize; 3] = [256, 2_048, 16_384];
+
+fn optimizers() -> Vec<(&'static str, Box<dyn Optimizer>)> {
+    vec![
+        ("sgd", Box::new(Sgd { lr: 1e-6 }) as Box<dyn Optimizer>),
+        ("adagrad", Box::new(Adagrad::new(1e-6))),
+        ("adam", Box::new(Adam::new(1e-6))),
+    ]
+}
+
+fn dense_shard(n: usize, dense_slots: usize, threads: usize) -> PsShard {
+    let init = HostTensor { shape: vec![n], data: vec![0.1; n] };
+    PsShard::new(
+        0,
+        vec![(0, n)],
+        std::slice::from_ref(&init),
+        dense_slots,
+        EmbeddingConfig { dim: EMB_DIM, init_scale: 0.0, seed: 7, shards: 8 },
+        dense_slots,
+        threads,
+    )
+}
+
+fn dense_grad(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_f32() * 2e-4 - 1e-4).collect()
+}
+
+fn emb_group(rng: &mut Pcg64, keys: usize) -> Vec<(u64, Vec<f32>, u32)> {
+    (0..keys as u64)
+        .map(|k| (k * 3, (0..EMB_DIM).map(|_| rng.next_f32() * 2e-4 - 1e-4).collect(), 1))
+        .collect()
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::seeded(80);
+
+    println!("-- dense apply: optimizer kind x apply_threads x tensor size --");
+    for (name, opt) in optimizers() {
+        for &n in &DENSE_SIZES {
+            let grad = dense_grad(&mut rng, n);
+            for &threads in &THREADS {
+                let shard = dense_shard(n, opt.slots(), threads);
+                let dense = vec![grad.clone()];
+                let mut step = 0u64;
+                b.bench_units(&format!("dense/{name} n={n} threads={threads}"), n as f64, || {
+                    step += 1;
+                    shard.apply(black_box(&dense), &[], opt.as_ref(), opt.as_ref(), step);
+                });
+            }
+        }
+    }
+
+    println!("-- embedding apply: lock-shard-grouped, key count x apply_threads --");
+    let opt = Adam::new(1e-6);
+    for &keys in &EMB_KEY_COUNTS {
+        let group = emb_group(&mut rng, keys);
+        for &threads in &THREADS {
+            // Tiny dense side so the embedding group dominates the apply.
+            let shard = dense_shard(64, opt.slots(), threads);
+            let dense = vec![vec![0.0f32; 64]];
+            let mut step = 0u64;
+            b.bench_units(&format!("emb/keys={keys} threads={threads}"), keys as f64, || {
+                step += 1;
+                shard.apply(black_box(&dense), black_box(&group), &opt, &opt, step);
+            });
+        }
+    }
+
+    b.write_report("results/bench_apply_hotpath.json").ok();
+}

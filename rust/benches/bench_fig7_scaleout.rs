@@ -43,6 +43,7 @@ fn sim_scaleout(b: &mut Bencher) {
             compute: StragglerModel::new(&cluster, workers, 1),
             ps_apply_ms: cluster.ps_apply_ms,
             n_shards: 1,
+            apply_threads: 1,
             wire_ms: 0.0,
             start_sec: 10.0 * 3600.0,
             duration_sec: 30.0,

@@ -38,6 +38,7 @@ fn spec() -> ShardSpawnSpec {
         opt_dense: Box::new(Sgd { lr: 1e-6 }),
         opt_emb: Box::new(Sgd { lr: 1e-6 }),
         addr: None,
+        apply_threads: 1,
     }
 }
 

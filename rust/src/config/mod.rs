@@ -201,6 +201,19 @@ ps_apply_ms = 0.5
     }
 
     #[test]
+    fn ps_apply_threads_parses_defaults_and_rejects() {
+        assert_eq!(ExperimentConfig::from_toml(SAMPLE).unwrap().ps.apply_threads, 1);
+        let threaded = format!("{SAMPLE}\n[ps]\nn_shards = 2\napply_threads = 8\n");
+        assert_eq!(ExperimentConfig::from_toml(&threaded).unwrap().ps.apply_threads, 8);
+        let zero = format!("{SAMPLE}\n[ps]\napply_threads = 0\n");
+        assert!(ExperimentConfig::from_toml(&zero).is_err(), "0 threads rejected");
+        let huge = format!("{SAMPLE}\n[ps]\napply_threads = 65\n");
+        assert!(ExperimentConfig::from_toml(&huge).is_err(), "over-cap rejected");
+        let bad = format!("{SAMPLE}\n[ps]\napply_threads = \"many\"\n");
+        assert!(ExperimentConfig::from_toml(&bad).is_err(), "malformed rejected");
+    }
+
+    #[test]
     fn cluster_workers_plane_default_parse_and_reject() {
         let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
         assert_eq!(cfg.cluster.workers, WorkerPlane::InProc, "absent defaults to inproc");

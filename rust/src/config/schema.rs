@@ -371,6 +371,12 @@ pub struct PsConfig {
     /// shard is declared unreachable. At build the failure surfaces as
     /// `Err` from `TrainSession::new`; mid-training it is fatal.
     pub connect_deadline_ms: u64,
+    /// Worker threads one shard fans a single apply across: the dense
+    /// sweep splits every tensor's index range, the embedding pass
+    /// splits by internal lock-shard. Bit-identical to 1 at any value
+    /// (elementwise updates on disjoint rows/ranges). 1 disables the
+    /// fan-out.
+    pub apply_threads: usize,
 }
 
 impl Default for PsConfig {
@@ -381,6 +387,7 @@ impl Default for PsConfig {
             shard_addrs: Vec::new(),
             journal_spill_bytes: 0,
             connect_deadline_ms: 20_000,
+            apply_threads: 1,
         }
     }
 }
@@ -568,6 +575,12 @@ impl ExperimentConfig {
                     .context("ps.connect_deadline_ms must be a positive integer")?
                     as u64,
             },
+            apply_threads: match doc.get("ps.apply_threads") {
+                None => 1,
+                Some(v) => v
+                    .as_usize()
+                    .context("ps.apply_threads must be a positive integer")?,
+            },
         };
         // Same rule as [ps]/[cluster]: absent keys default, malformed
         // keys error (a run that silently fell back to "manual" would
@@ -673,6 +686,9 @@ impl ExperimentConfig {
         }
         if self.ps.connect_deadline_ms == 0 {
             bail!("ps.connect_deadline_ms must be positive");
+        }
+        if self.ps.apply_threads == 0 || self.ps.apply_threads > 64 {
+            bail!("ps.apply_threads must be in [1, 64], got {}", self.ps.apply_threads);
         }
         if self.cluster.workers == WorkerPlane::Remote && self.cluster.worker_listen.is_empty() {
             bail!("cluster.workers = \"remote\" needs a cluster.worker_listen address");

@@ -155,18 +155,78 @@ impl EmbeddingStore {
         opt: &dyn Optimizer,
         step: u64,
     ) {
-        let mut scaled = vec![0.0f32; self.cfg.dim];
-        for (key, gsum, count) in grads {
-            let shard = &self.shards[self.shard_of(*key)];
-            let mut guard = shard.write().unwrap();
-            let row = guard.entry(*key).or_insert_with(|| self.init_row(*key));
-            let inv = 1.0 / (*count).max(1) as f32;
-            for (s, g) in scaled.iter_mut().zip(gsum) {
-                *s = g * inv;
+        self.apply_grads_threaded(grads, opt, step, 1);
+    }
+
+    /// [`apply_grads`](Self::apply_grads), batched by internal
+    /// lock-shard: each sub-shard `RwLock` is taken **once per apply**
+    /// instead of once per key, and with `threads > 1` the lock-shard
+    /// groups are spread over scoped worker threads (each with its own
+    /// `scaled` scratch). Within a group, keys apply in arrival order.
+    ///
+    /// Bit-identical to the per-key loop it replaces: upstream per-key
+    /// aggregation means a key appears at most once per apply, and a key
+    /// always maps to the same lock-shard, so no two workers ever touch
+    /// the same row and per-row float work is independent across rows.
+    pub fn apply_grads_threaded(
+        &self,
+        grads: &[(u64, Vec<f32>, u32)],
+        opt: &dyn Optimizer,
+        step: u64,
+        threads: usize,
+    ) {
+        if grads.is_empty() {
+            return;
+        }
+        // Group grad indices by lock-shard, preserving arrival order.
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, (key, _, _)) in grads.iter().enumerate() {
+            groups[self.shard_of(*key)].push(i);
+        }
+        let apply_group = |group: &[usize], scaled: &mut [f32]| {
+            if group.is_empty() {
+                return;
             }
-            opt.apply(&mut row.vec, &scaled, &mut row.state, step);
-            row.meta.last_update_step = step;
-            row.meta.update_count += 1;
+            let shard = &self.shards[self.shard_of(grads[group[0]].0)];
+            let mut guard = shard.write().unwrap();
+            for &i in group {
+                let (key, gsum, count) = &grads[i];
+                let row = guard.entry(*key).or_insert_with(|| self.init_row(*key));
+                let inv = 1.0 / (*count).max(1) as f32;
+                for (s, g) in scaled.iter_mut().zip(gsum) {
+                    *s = g * inv;
+                }
+                opt.apply(&mut row.vec, scaled, &mut row.state, step);
+                row.meta.last_update_step = step;
+                row.meta.update_count += 1;
+            }
+        };
+        let busy = groups.iter().filter(|g| !g.is_empty()).count();
+        let workers = threads.max(1).min(busy.max(1));
+        if workers <= 1 {
+            let mut scaled = vec![0.0f32; self.cfg.dim];
+            for g in &groups {
+                apply_group(g, &mut scaled);
+            }
+        } else {
+            // Round-robin the lock-shard groups over `workers` scoped
+            // threads; the calling thread takes stripe 0.
+            std::thread::scope(|scope| {
+                for w in 1..workers {
+                    let groups = &groups;
+                    let apply_group = &apply_group;
+                    scope.spawn(move || {
+                        let mut scaled = vec![0.0f32; self.cfg.dim];
+                        for g in groups.iter().skip(w).step_by(workers) {
+                            apply_group(g, &mut scaled);
+                        }
+                    });
+                }
+                let mut scaled = vec![0.0f32; self.cfg.dim];
+                for g in groups.iter().step_by(workers) {
+                    apply_group(g, &mut scaled);
+                }
+            });
         }
     }
 
@@ -359,5 +419,49 @@ mod tests {
         let s = store(2);
         let _ = s.row(1);
         assert!(s.memory_bytes() > 0);
+    }
+
+    /// The lock-shard-batched, multi-threaded apply must leave the store
+    /// bit-identical to the serial per-key path, for any thread count.
+    #[test]
+    fn threaded_apply_grads_bit_identical_to_serial() {
+        use crate::optim::Adam;
+        let opt = Adam::new(0.01);
+        // Unique keys per apply (the upstream aggregation invariant),
+        // spanning every lock-shard, applied over several steps.
+        let grads_at = |step: u64| -> Vec<(u64, Vec<f32>, u32)> {
+            (0..257u64)
+                .map(|k| {
+                    let g: Vec<f32> =
+                        (0..4).map(|j| ((k * 31 + j + step) % 17) as f32 * 0.25 - 2.0).collect();
+                    (k * 7, g, 1 + (k % 3) as u32)
+                })
+                .collect()
+        };
+        let dump = |s: &EmbeddingStore| {
+            let mut rows: Vec<(u64, Vec<u32>, Vec<u32>, u64, u32)> = Vec::new();
+            s.for_each_row(|k, v, st, m| {
+                rows.push((
+                    k,
+                    v.iter().map(|x| x.to_bits()).collect(),
+                    st.iter().map(|x| x.to_bits()).collect(),
+                    m.last_update_step,
+                    m.update_count,
+                ));
+            });
+            rows.sort_by_key(|r| r.0);
+            rows
+        };
+        let serial = store(2);
+        for step in 1..=3 {
+            serial.apply_grads(&grads_at(step), &opt, step);
+        }
+        for threads in [2, 4, 16] {
+            let s = store(2);
+            for step in 1..=3 {
+                s.apply_grads_threaded(&grads_at(step), &opt, step, threads);
+            }
+            assert_eq!(dump(&serial), dump(&s), "threads={threads} diverged");
+        }
     }
 }

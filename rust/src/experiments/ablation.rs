@@ -41,6 +41,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
             compute,
             ps_apply_ms: cfg.cluster.ps_apply_ms,
             n_shards: cfg.ps.n_shards,
+            apply_threads: cfg.ps.apply_threads,
             wire_ms: SimParams::wire_ms_of(&cfg),
             start_sec: 15.0 * 3600.0,
             duration_sec: if ctx.quick { 60.0 } else { 180.0 },

@@ -38,6 +38,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 compute,
                 ps_apply_ms: cfg.cluster.ps_apply_ms,
                 n_shards: cfg.ps.n_shards,
+                apply_threads: cfg.ps.apply_threads,
                 wire_ms: SimParams::wire_ms_of(&cfg),
                 start_sec: start,
                 duration_sec: window,
@@ -59,6 +60,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 compute,
                 ps_apply_ms: cfg.cluster.ps_apply_ms,
                 n_shards: cfg.ps.n_shards,
+                apply_threads: cfg.ps.apply_threads,
                 wire_ms: SimParams::wire_ms_of(&cfg),
                 start_sec: start,
                 duration_sec: window,

@@ -8,8 +8,20 @@
 //!
 //!   state.len() == param.len() * opt.slots()
 //!   slot s of weight i lives at state[s * n + i]   (planar layout)
+//!
+//! The kernels are written as exact-chunk loops (`chunks_exact(CHUNK)` +
+//! a scalar remainder with the identical per-element body) so the release
+//! build autovectorizes them. The per-element float operation order is
+//! unchanged from the original scalar loops, so the chunked kernels are
+//! bit-identical to the scalar references — which are retained under
+//! `#[cfg(test)]` as oracles and pinned by property tests below.
 
 use crate::config::OptimKind;
+
+/// Vector width the kernels are unrolled to. Eight f32s is one AVX2
+/// register / two NEON registers; the value only affects codegen, never
+/// results (the remainder loop runs the same per-element body).
+const CHUNK: usize = 8;
 
 pub trait Optimizer: Send + Sync {
     fn kind(&self) -> OptimKind;
@@ -18,7 +30,16 @@ pub trait Optimizer: Send + Sync {
     /// In-place parameter update. `step` is the 1-based global update
     /// index (Adam bias correction); sparse rows pass the global step too
     /// ("lazy Adam" semantics, matching DeepRec's sparse Adam).
+    ///
+    /// `state` is the planar buffer (`slots() * param.len()` floats).
     fn apply(&self, param: &mut [f32], grad: &[f32], state: &mut [f32], step: u64);
+    /// In-place update with the per-slot state planes already split out:
+    /// `planes[j]` holds slot `j` and has the same length as `param`.
+    /// This is the form the parallel shard apply uses — a `[a,b)`
+    /// sub-range of a *planar* state buffer is not contiguous, but its
+    /// per-plane views are. `apply` wraps this for planar buffers; both
+    /// entry points run the same kernel.
+    fn apply_planes(&self, param: &mut [f32], grad: &[f32], planes: &mut [&mut [f32]], step: u64);
     fn lr(&self) -> f32;
     /// Clone into a box (checkpoint restore paths).
     fn boxed_clone(&self) -> Box<dyn Optimizer>;
@@ -37,9 +58,21 @@ impl Optimizer for Sgd {
     fn slots(&self) -> usize {
         0
     }
-    fn apply(&self, param: &mut [f32], grad: &[f32], _state: &mut [f32], _step: u64) {
-        for (p, g) in param.iter_mut().zip(grad) {
-            *p -= self.lr * g;
+    fn apply(&self, param: &mut [f32], grad: &[f32], _state: &mut [f32], step: u64) {
+        self.apply_planes(param, grad, &mut [], step);
+    }
+    fn apply_planes(&self, param: &mut [f32], grad: &[f32], _planes: &mut [&mut [f32]], _step: u64) {
+        debug_assert_eq!(grad.len(), param.len());
+        let lr = self.lr;
+        let mut pc = param.chunks_exact_mut(CHUNK);
+        let mut gc = grad.chunks_exact(CHUNK);
+        for (p, g) in (&mut pc).zip(&mut gc) {
+            for i in 0..CHUNK {
+                p[i] -= lr * g[i];
+            }
+        }
+        for (p, g) in pc.into_remainder().iter_mut().zip(gc.remainder()) {
+            *p -= lr * g;
         }
     }
     fn lr(&self) -> f32 {
@@ -71,17 +104,36 @@ impl Optimizer for Adagrad {
     fn slots(&self) -> usize {
         1
     }
-    fn apply(&self, param: &mut [f32], grad: &[f32], state: &mut [f32], _step: u64) {
-        let n = param.len();
-        debug_assert_eq!(state.len(), n);
-        for i in 0..n {
-            let g = grad[i];
-            // Zero-initialized slots get the TF init_acc on first touch.
-            if state[i] == 0.0 {
-                state[i] = self.init_acc;
+    fn apply(&self, param: &mut [f32], grad: &[f32], state: &mut [f32], step: u64) {
+        debug_assert_eq!(state.len(), param.len());
+        self.apply_planes(param, grad, &mut [state], step);
+    }
+    fn apply_planes(&self, param: &mut [f32], grad: &[f32], planes: &mut [&mut [f32]], _step: u64) {
+        let [acc] = planes else { panic!("adagrad: expected 1 state plane, got {}", planes.len()) };
+        debug_assert_eq!(grad.len(), param.len());
+        debug_assert_eq!(acc.len(), param.len());
+        let (lr, eps, init_acc) = (self.lr, self.eps, self.init_acc);
+        let mut pc = param.chunks_exact_mut(CHUNK);
+        let mut gc = grad.chunks_exact(CHUNK);
+        let mut ac = acc.chunks_exact_mut(CHUNK);
+        for ((p, g), a) in (&mut pc).zip(&mut gc).zip(&mut ac) {
+            for i in 0..CHUNK {
+                let g = g[i];
+                // Zero-initialized slots get the TF init_acc on first touch.
+                if a[i] == 0.0 {
+                    a[i] = init_acc;
+                }
+                a[i] += g * g;
+                p[i] -= lr * g / (a[i].sqrt() + eps);
             }
-            state[i] += g * g;
-            param[i] -= self.lr * g / (state[i].sqrt() + self.eps);
+        }
+        let (pr, gr, ar) = (pc.into_remainder(), gc.remainder(), ac.into_remainder());
+        for ((p, &g), a) in pr.iter_mut().zip(gr).zip(ar.iter_mut()) {
+            if *a == 0.0 {
+                *a = init_acc;
+            }
+            *a += g * g;
+            *p -= lr * g / (a.sqrt() + eps);
         }
     }
     fn lr(&self) -> f32 {
@@ -117,17 +169,40 @@ impl Optimizer for Adam {
     fn apply(&self, param: &mut [f32], grad: &[f32], state: &mut [f32], step: u64) {
         let n = param.len();
         debug_assert_eq!(state.len(), 2 * n);
+        let (m, v) = state.split_at_mut(n);
+        self.apply_planes(param, grad, &mut [m, v], step);
+    }
+    fn apply_planes(&self, param: &mut [f32], grad: &[f32], planes: &mut [&mut [f32]], step: u64) {
+        let [m, v] = planes else { panic!("adam: expected 2 state planes, got {}", planes.len()) };
+        debug_assert_eq!(grad.len(), param.len());
+        debug_assert_eq!(m.len(), param.len());
+        debug_assert_eq!(v.len(), param.len());
         let t = step.max(1) as i32;
         let bc1 = 1.0 - self.beta1.powi(t);
         let bc2 = 1.0 - self.beta2.powi(t);
-        let (m, v) = state.split_at_mut(n);
-        for i in 0..n {
-            let g = grad[i];
-            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
-            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
-            let mhat = m[i] / bc1;
-            let vhat = v[i] / bc2;
-            param[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        let (lr, b1, b2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
+        let mut pc = param.chunks_exact_mut(CHUNK);
+        let mut gc = grad.chunks_exact(CHUNK);
+        let mut mc = m.chunks_exact_mut(CHUNK);
+        let mut vc = v.chunks_exact_mut(CHUNK);
+        for (((p, g), m), v) in (&mut pc).zip(&mut gc).zip(&mut mc).zip(&mut vc) {
+            for i in 0..CHUNK {
+                let g = g[i];
+                m[i] = b1 * m[i] + (1.0 - b1) * g;
+                v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+        let (pr, gr) = (pc.into_remainder(), gc.remainder());
+        let (mr, vr) = (mc.into_remainder(), vc.into_remainder());
+        for (((p, &g), m), v) in pr.iter_mut().zip(gr).zip(mr.iter_mut()).zip(vr.iter_mut()) {
+            *m = b1 * *m + (1.0 - b1) * g;
+            *v = b2 * *v + (1.0 - b2) * g * g;
+            let mhat = *m / bc1;
+            let vhat = *v / bc2;
+            *p -= lr * mhat / (vhat.sqrt() + eps);
         }
     }
     fn lr(&self) -> f32 {
@@ -147,9 +222,54 @@ pub fn make_optimizer(kind: OptimKind, lr: f64) -> Box<dyn Optimizer> {
     }
 }
 
+/// The original scalar kernels, kept verbatim as bit-identity oracles
+/// for the chunked implementations above.
+#[cfg(test)]
+pub(crate) mod scalar_ref {
+    use super::{Adagrad, Adam, Sgd};
+
+    pub fn sgd(opt: &Sgd, param: &mut [f32], grad: &[f32]) {
+        for (p, g) in param.iter_mut().zip(grad) {
+            *p -= opt.lr * g;
+        }
+    }
+
+    pub fn adagrad(opt: &Adagrad, param: &mut [f32], grad: &[f32], state: &mut [f32]) {
+        let n = param.len();
+        debug_assert_eq!(state.len(), n);
+        for i in 0..n {
+            let g = grad[i];
+            if state[i] == 0.0 {
+                state[i] = opt.init_acc;
+            }
+            state[i] += g * g;
+            param[i] -= opt.lr * g / (state[i].sqrt() + opt.eps);
+        }
+    }
+
+    pub fn adam(opt: &Adam, param: &mut [f32], grad: &[f32], state: &mut [f32], step: u64) {
+        let n = param.len();
+        debug_assert_eq!(state.len(), 2 * n);
+        let t = step.max(1) as i32;
+        let bc1 = 1.0 - opt.beta1.powi(t);
+        let bc2 = 1.0 - opt.beta2.powi(t);
+        let (m, v) = state.split_at_mut(n);
+        for i in 0..n {
+            let g = grad[i];
+            m[i] = opt.beta1 * m[i] + (1.0 - opt.beta1) * g;
+            v[i] = opt.beta2 * v[i] + (1.0 - opt.beta2) * g * g;
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            param[i] -= opt.lr * mhat / (vhat.sqrt() + opt.eps);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, gen};
+    use crate::util::rng::Pcg64;
 
     fn quad_descend(opt: &dyn Optimizer, steps: u64) -> f32 {
         // minimize f(x) = 0.5*||x||^2, grad = x
@@ -217,5 +337,140 @@ mod tests {
         for k in [OptimKind::Sgd, OptimKind::Adagrad, OptimKind::Adam] {
             assert_eq!(make_optimizer(k, 0.01).kind(), k);
         }
+    }
+
+    // --- chunked-vs-scalar bit-identity pins -------------------------------
+
+    /// Lengths that straddle every chunking regime: empty, sub-chunk,
+    /// one-off-chunk boundaries, and a large odd length (1023 = 127*8 + 7).
+    const PIN_LENS: [usize; 6] = [0, 1, 7, 8, 9, 1023];
+
+    /// A gradient stream with hostile values mixed in: NaN, ±inf,
+    /// subnormals, and exact zeros alongside ordinary finite floats. The
+    /// kernels must propagate every bit pattern exactly as the scalar
+    /// reference does.
+    fn hostile_grad(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| match rng.gen_range(10) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3 => f32::from_bits(rng.next_u32() & 0x007f_ffff), // subnormal / ±0
+                4 => 0.0,
+                _ => gen::f32_in(rng, 10.0),
+            })
+            .collect()
+    }
+
+    fn assert_bits_eq(tag: &str, a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}[{i}]: {x:?} vs {y:?}");
+        }
+    }
+
+    #[test]
+    fn sgd_chunked_bit_identical_to_scalar() {
+        check("sgd chunked == scalar", 64, |rng| {
+            let opt = Sgd { lr: gen::f32_in(rng, 1.0).abs().max(1e-4) };
+            for &n in &PIN_LENS {
+                let p0: Vec<f32> = (0..n).map(|_| gen::f32_in(rng, 5.0)).collect();
+                let g = hostile_grad(rng, n);
+                let (mut pa, mut pb) = (p0.clone(), p0);
+                opt.apply(&mut pa, &g, &mut [], 1);
+                scalar_ref::sgd(&opt, &mut pb, &g);
+                assert_bits_eq("sgd param", &pa, &pb);
+            }
+        });
+    }
+
+    #[test]
+    fn adagrad_chunked_bit_identical_to_scalar() {
+        check("adagrad chunked == scalar", 64, |rng| {
+            let opt = Adagrad::new(gen::f32_in(rng, 1.0).abs().max(1e-4));
+            for &n in &PIN_LENS {
+                let p0: Vec<f32> = (0..n).map(|_| gen::f32_in(rng, 5.0)).collect();
+                // Mix zero slots (first-touch init_acc branch) with warm ones.
+                let s0: Vec<f32> = (0..n)
+                    .map(|_| if rng.gen_range(2) == 0 { 0.0 } else { gen::f32_in(rng, 3.0).abs() })
+                    .collect();
+                let g = hostile_grad(rng, n);
+                let (mut pa, mut sa) = (p0.clone(), s0.clone());
+                let (mut pb, mut sb) = (p0, s0);
+                opt.apply(&mut pa, &g, &mut sa, 1);
+                scalar_ref::adagrad(&opt, &mut pb, &g, &mut sb);
+                assert_bits_eq("adagrad param", &pa, &pb);
+                assert_bits_eq("adagrad state", &sa, &sb);
+            }
+        });
+    }
+
+    #[test]
+    fn adagrad_all_zero_state_takes_first_touch_branch() {
+        let opt = Adagrad::new(0.1);
+        let n = 9;
+        let mut p = vec![0.0f32; n];
+        let mut s = vec![0.0f32; n];
+        let g = vec![1.0f32; n];
+        opt.apply(&mut p, &g, &mut s, 1);
+        let (mut pr, mut sr) = (vec![0.0f32; n], vec![0.0f32; n]);
+        scalar_ref::adagrad(&opt, &mut pr, &g, &mut sr);
+        assert_bits_eq("first-touch param", &p, &pr);
+        assert_bits_eq("first-touch state", &s, &sr);
+        // And the accumulator actually got the init: 0.1 + 1*1 = 1.1.
+        assert!(s.iter().all(|&a| (a - 1.1).abs() < 1e-6), "{s:?}");
+    }
+
+    #[test]
+    fn adam_chunked_bit_identical_to_scalar() {
+        check("adam chunked == scalar", 64, |rng| {
+            let opt = Adam::new(gen::f32_in(rng, 0.1).abs().max(1e-4));
+            for &n in &PIN_LENS {
+                let step = 1 + rng.gen_range(1000);
+                let p0: Vec<f32> = (0..n).map(|_| gen::f32_in(rng, 5.0)).collect();
+                let s0: Vec<f32> = (0..2 * n).map(|_| gen::f32_in(rng, 2.0)).collect();
+                let g = hostile_grad(rng, n);
+                let (mut pa, mut sa) = (p0.clone(), s0.clone());
+                let (mut pb, mut sb) = (p0, s0);
+                opt.apply(&mut pa, &g, &mut sa, step);
+                scalar_ref::adam(&opt, &mut pb, &g, &mut sb, step);
+                assert_bits_eq("adam param", &pa, &pb);
+                assert_bits_eq("adam state", &sa, &sb);
+            }
+        });
+    }
+
+    /// `apply_planes` over separately-allocated planes must match `apply`
+    /// over the planar buffer — this is the contract the parallel shard
+    /// apply relies on when it splits a planar buffer into plane views.
+    #[test]
+    fn apply_planes_matches_planar_apply() {
+        check("apply_planes == apply", 32, |rng| {
+            for kind in [OptimKind::Sgd, OptimKind::Adagrad, OptimKind::Adam] {
+                let opt = make_optimizer(kind, 0.01);
+                let n = gen::usize_in(rng, 0, 40);
+                let step = 1 + rng.gen_range(50);
+                let p0: Vec<f32> = (0..n).map(|_| gen::f32_in(rng, 5.0)).collect();
+                let s0: Vec<f32> = (0..n * opt.slots()).map(|_| gen::f32_in(rng, 2.0)).collect();
+                let g = hostile_grad(rng, n);
+
+                let (mut pa, mut sa) = (p0.clone(), s0.clone());
+                opt.apply(&mut pa, &g, &mut sa, step);
+
+                let mut pb = p0;
+                let mut planes: Vec<Vec<f32>> =
+                    s0.chunks(n.max(1)).map(|c| c.to_vec()).collect();
+                if n == 0 {
+                    planes = vec![Vec::new(); opt.slots()];
+                }
+                let mut views: Vec<&mut [f32]> =
+                    planes.iter_mut().map(|p| p.as_mut_slice()).collect();
+                opt.apply_planes(&mut pb, &g, &mut views, step);
+
+                assert_bits_eq("planes param", &pa, &pb);
+                let flat: Vec<f32> = planes.into_iter().flatten().collect();
+                assert_bits_eq("planes state", &sa, &flat);
+            }
+        });
     }
 }

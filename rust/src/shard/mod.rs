@@ -144,6 +144,8 @@ pub struct PsBuild {
     /// Redial window per shard-server (initial connect and recovery);
     /// `None` uses [`RECONNECT_DEADLINE`](crate::transport::RECONNECT_DEADLINE).
     pub connect_deadline: Option<Duration>,
+    /// Per-shard apply fan-out (`[ps] apply_threads`); 1 is serial.
+    pub apply_threads: usize,
 }
 
 impl PsBuild {
@@ -180,6 +182,7 @@ impl PsBuild {
                 opt_dense: self.opt_dense.boxed_clone(),
                 opt_emb: self.opt_emb.boxed_clone(),
                 addr: self.shard_addrs.get(s).cloned(),
+                apply_threads: self.apply_threads,
             })
             .collect();
         let deadline =
@@ -264,6 +267,7 @@ impl ShardedPs {
             transport: TransportKind::InProc,
             shard_addrs: Vec::new(),
             connect_deadline: None,
+            apply_threads: 1,
         }
         .build()
     }
@@ -1095,6 +1099,7 @@ mod tests {
             transport: TransportKind::Socket,
             shard_addrs: Vec::new(),
             connect_deadline: None,
+            apply_threads: 2,
         }
         .build();
         assert_eq!(ps.transport(), TransportKind::Socket);

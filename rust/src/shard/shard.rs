@@ -9,14 +9,22 @@
 //! * an [`EmbeddingStore`] holding the **consistent-hash slice** of the
 //!   embedding keyspace routed to this shard.
 //!
+//! The apply hot path fans out inside one shard: the dense sweep splits
+//! every tensor's index range across up to `apply_threads` scoped
+//! workers on disjoint sub-ranges (elementwise optimizers ⇒ disjoint
+//! writes ⇒ bit-identical to the serial sweep), and the embedding pass
+//! parallelizes across the store's internal lock-shards. See
+//! `docs/PERF.md` for the measurement loop behind this.
+//!
 //! Shards hold no coordination state whatsoever — see
 //! [`super::control::ControlPlane`] for the control plane.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use crate::embedding::{EmbeddingConfig, EmbeddingStore};
+use crate::obs::{self, Histogram};
 use crate::optim::Optimizer;
 use crate::runtime::HostTensor;
 
@@ -38,8 +46,10 @@ pub struct ShardCounters {
     /// Dense applies executed by this shard.
     pub applies: AtomicU64,
     /// Nanoseconds this shard spent inside its apply (dense optimizer
-    /// sweep + embedding grads). The per-flush wall cost is the *max*
-    /// across shards, so imbalance here is what caps scale-out.
+    /// sweep + embedding grads), measured from write-lock acquisition —
+    /// queueing behind readers is recorded separately as
+    /// `gba_shard_apply_lock_wait_seconds`. The per-flush wall cost is
+    /// the *max* across shards, so imbalance here is what caps scale-out.
     pub apply_ns: AtomicU64,
     /// Embedding keys routed here for gradient application.
     pub emb_keys_applied: AtomicU64,
@@ -56,6 +66,102 @@ pub struct ShardStats {
     pub dense_elems: usize,
 }
 
+/// Minimum dense elements per worker before the parallel sweep engages —
+/// below this, scoped-thread spawn overhead beats the parallel win.
+const MIN_DENSE_ELEMS_PER_WORKER: usize = 4096;
+
+/// One worker's cut of one tensor: disjoint `[a,b)` views of the
+/// parameter slice, its gradient, and each optimizer state plane.
+struct DenseUnit<'a> {
+    param: &'a mut [f32],
+    grad: &'a [f32],
+    planes: Vec<&'a mut [f32]>,
+}
+
+fn run_units(units: &mut [DenseUnit<'_>], opt: &dyn Optimizer, step: u64) {
+    for u in units.iter_mut() {
+        opt.apply_planes(u.param, u.grad, &mut u.planes, step);
+    }
+}
+
+/// Run the dense optimizer sweep, splitting every tensor's index range
+/// across up to `threads` scoped workers on disjoint sub-ranges. The
+/// optimizers are elementwise, so the disjoint writes make the result
+/// bit-identical to the serial sweep regardless of interleaving.
+/// Returns the number of workers actually used.
+fn apply_dense(
+    params: &mut [Vec<f32>],
+    slots: &mut [Vec<f32>],
+    dense: &[Vec<f32>],
+    opt: &dyn Optimizer,
+    step: u64,
+    threads: usize,
+) -> usize {
+    let total: usize = params.iter().map(|p| p.len()).sum();
+    let workers = threads.max(1).min((total / MIN_DENSE_ELEMS_PER_WORKER).max(1));
+    if workers <= 1 {
+        for ((p, s), g) in params.iter_mut().zip(slots.iter_mut()).zip(dense) {
+            opt.apply(p, g, s, step);
+        }
+        return 1;
+    }
+    let n_slots = opt.slots();
+    let mut parts: Vec<Vec<DenseUnit<'_>>> = (0..workers).map(|_| Vec::new()).collect();
+    // Tensors whose slice lengths don't match the optimizer layout take
+    // the plain `apply` unchanged (same behavior as the serial sweep).
+    let mut odd: Vec<usize> = Vec::new();
+    for (t, ((p, s), g)) in params.iter_mut().zip(slots.iter_mut()).zip(dense).enumerate() {
+        let n = p.len();
+        if g.len() != n || s.len() != n * n_slots {
+            odd.push(t);
+            continue;
+        }
+        // Planar state -> per-slot plane views, then cut param, grad and
+        // every plane at the same worker boundaries.
+        let mut planes: Vec<&mut [f32]> = Vec::with_capacity(n_slots);
+        let mut rest = s.as_mut_slice();
+        for _ in 0..n_slots {
+            let (head, tail) = rest.split_at_mut(n);
+            planes.push(head);
+            rest = tail;
+        }
+        let mut rest_p = p.as_mut_slice();
+        let mut rest_g = g.as_slice();
+        let mut start = 0;
+        for (k, part) in parts.iter_mut().enumerate() {
+            let end = n * (k + 1) / workers;
+            let len = end - start;
+            let (hp, tp) = rest_p.split_at_mut(len);
+            rest_p = tp;
+            let (hg, tg) = rest_g.split_at(len);
+            rest_g = tg;
+            let mut hplanes = Vec::with_capacity(n_slots);
+            for plane in planes.iter_mut() {
+                let (h, t) = std::mem::take(plane).split_at_mut(len);
+                hplanes.push(h);
+                *plane = t;
+            }
+            part.push(DenseUnit { param: hp, grad: hg, planes: hplanes });
+            start = end;
+        }
+    }
+    std::thread::scope(|scope| {
+        let mut parts = parts.into_iter();
+        let mut own = parts.next().unwrap();
+        let handles: Vec<_> = parts
+            .map(|mut units| scope.spawn(move || run_units(&mut units, opt, step)))
+            .collect();
+        run_units(&mut own, opt, step);
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    for t in odd {
+        opt.apply(&mut params[t], &dense[t], &mut slots[t], step);
+    }
+    workers
+}
+
 pub struct PsShard {
     pub index: usize,
     /// `(lo, hi)` into each dense tensor's flat data.
@@ -63,10 +169,19 @@ pub struct PsShard {
     pub dense: RwLock<DenseShardState>,
     pub emb: EmbeddingStore,
     pub counters: ShardCounters,
+    /// Worker fan-out for one apply (`[ps] apply_threads`).
+    apply_threads: usize,
+    // Obs handles resolved once at construction: `labeled` allocates and
+    // the registry lookup takes a lock, neither of which belongs in the
+    // per-apply hot path.
+    apply_hist: Arc<Histogram>,
+    lock_wait_hist: Arc<Histogram>,
+    workers_hist: Arc<Histogram>,
 }
 
 impl PsShard {
     /// Carve shard `index`'s slices out of the full initial parameters.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         index: usize,
         ranges: Vec<(usize, usize)>,
@@ -74,6 +189,7 @@ impl PsShard {
         dense_slots: usize,
         emb_cfg: EmbeddingConfig,
         emb_slots: usize,
+        apply_threads: usize,
     ) -> Self {
         debug_assert_eq!(ranges.len(), init_params.len());
         let params: Vec<Vec<f32>> = ranges
@@ -83,12 +199,13 @@ impl PsShard {
             .collect();
         let slots: Vec<Vec<f32>> =
             ranges.iter().map(|&(lo, hi)| vec![0.0f32; (hi - lo) * dense_slots]).collect();
-        Self::from_parts(index, ranges, params, slots, emb_cfg, emb_slots)
+        Self::from_parts(index, ranges, params, slots, emb_cfg, emb_slots, apply_threads)
     }
 
     /// Build a shard from already-sliced state — the respawn path: a
     /// [`ShardSupervisor`](crate::transport::ShardSupervisor) restores a
     /// lost shard from its shard-local checkpoint's dense/slot slices.
+    #[allow(clippy::too_many_arguments)]
     pub fn from_parts(
         index: usize,
         ranges: Vec<(usize, usize)>,
@@ -96,18 +213,34 @@ impl PsShard {
         slots: Vec<Vec<f32>>,
         emb_cfg: EmbeddingConfig,
         emb_slots: usize,
+        apply_threads: usize,
     ) -> Self {
         debug_assert_eq!(ranges.len(), params.len());
         debug_assert_eq!(ranges.len(), slots.len());
         for (&(lo, hi), p) in ranges.iter().zip(&params) {
             debug_assert_eq!(hi - lo, p.len());
         }
+        let label = index.to_string();
+        let reg = obs::global();
         PsShard {
             index,
             ranges,
             dense: RwLock::new(DenseShardState { params, slots }),
             emb: EmbeddingStore::new(emb_cfg, emb_slots),
             counters: ShardCounters::default(),
+            apply_threads: apply_threads.max(1),
+            apply_hist: reg.histogram(
+                &obs::labeled("gba_shard_apply_seconds", "shard", &label),
+                Histogram::latency_bounds(),
+            ),
+            lock_wait_hist: reg.histogram(
+                &obs::labeled("gba_shard_apply_lock_wait_seconds", "shard", &label),
+                Histogram::latency_bounds(),
+            ),
+            workers_hist: reg.histogram(
+                &obs::labeled("gba_shard_apply_workers", "shard", &label),
+                &[1.0, 2.0, 4.0, 8.0, 16.0, 32.0],
+            ),
         }
     }
 
@@ -123,28 +256,26 @@ impl PsShard {
         opt_emb: &dyn Optimizer,
         opt_step: u64,
     ) {
-        let t0 = Instant::now();
+        // Queueing behind readers is contention, not apply cost — record
+        // it separately and start the apply clock once the lock is held.
+        let t_lock = Instant::now();
         let mut d = self.dense.write().unwrap();
+        self.lock_wait_hist.record(t_lock.elapsed().as_secs_f64());
+        let t0 = Instant::now();
         let DenseShardState { params, slots } = &mut *d;
         debug_assert_eq!(dense.len(), params.len(), "apply: slice count mismatch");
-        for ((p, s), g) in params.iter_mut().zip(slots.iter_mut()).zip(dense) {
-            opt_dense.apply(p, g, s, opt_step);
-        }
+        let workers = apply_dense(params, slots, dense, opt_dense, opt_step, self.apply_threads);
         drop(d);
         self.counters.applies.fetch_add(1, Ordering::Relaxed);
+        self.workers_hist.record(workers as f64);
 
         if !emb_group.is_empty() {
-            self.emb.apply_grads(emb_group, opt_emb, opt_step);
+            self.emb.apply_grads_threaded(emb_group, opt_emb, opt_step, self.apply_threads);
             self.counters.emb_keys_applied.fetch_add(emb_group.len() as u64, Ordering::Relaxed);
         }
         let elapsed = t0.elapsed();
         self.counters.apply_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
-        crate::obs::global()
-            .histogram(
-                &crate::obs::labeled("gba_shard_apply_seconds", "shard", &self.index.to_string()),
-                crate::obs::Histogram::latency_bounds(),
-            )
-            .record(elapsed.as_secs_f64());
+        self.apply_hist.record(elapsed.as_secs_f64());
     }
 
     /// Copy this shard's parameter slices into full-size flat buffers.
@@ -166,5 +297,113 @@ impl PsShard {
             emb_rows: self.emb.len(),
             dense_elems,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Adam, Sgd};
+    use crate::util::rng::Pcg64;
+
+    fn grads(rng: &mut Pcg64, lens: &[usize]) -> Vec<Vec<f32>> {
+        lens.iter().map(|&n| (0..n).map(|_| rng.next_f32() * 2.0 - 1.0).collect()).collect()
+    }
+
+    /// The tentpole pin: one shard driven through identical apply
+    /// sequences (dense + embedding) at 1, 2 and 8 apply threads must
+    /// end bit-identical — parameters, optimizer slots, and rows.
+    #[test]
+    fn apply_threads_sweep_bit_identical() {
+        // Big enough that the parallel sweep actually engages at 8
+        // threads (see MIN_DENSE_ELEMS_PER_WORKER), plus a sub-chunk
+        // tensor for the remainder paths.
+        let lens = [40_000usize, 37];
+        let ranges: Vec<(usize, usize)> = lens.iter().map(|&n| (0, n)).collect();
+        let init: Vec<HostTensor> = lens
+            .iter()
+            .map(|&n| HostTensor {
+                shape: vec![n],
+                data: (0..n).map(|i| (i % 13) as f32 * 0.1 - 0.5).collect(),
+            })
+            .collect();
+        let opt_d = Adam::new(0.01);
+        let opt_e = Adam::new(0.05);
+        let emb_cfg = EmbeddingConfig { dim: 8, init_scale: 0.05, seed: 11, shards: 8 };
+
+        type Snap = (Vec<Vec<u32>>, Vec<Vec<u32>>, Vec<(u64, Vec<u32>)>);
+        let run = |threads: usize| -> Snap {
+            let shard = PsShard::new(
+                0,
+                ranges.clone(),
+                &init,
+                opt_d.slots(),
+                emb_cfg.clone(),
+                opt_e.slots(),
+                threads,
+            );
+            let mut rng = Pcg64::seeded(40);
+            for step in 1..=4 {
+                let dense = grads(&mut rng, &lens);
+                let emb: Vec<(u64, Vec<f32>, u32)> = (0..100u64)
+                    .map(|k| {
+                        let g: Vec<f32> = (0..8).map(|_| rng.next_f32() - 0.5).collect();
+                        (k * 3, g, 1 + (k % 2) as u32)
+                    })
+                    .collect();
+                shard.apply(&dense, &emb, &opt_d, &opt_e, step);
+            }
+            let d = shard.dense.read().unwrap();
+            let p: Vec<Vec<u32>> =
+                d.params.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect();
+            let s: Vec<Vec<u32>> =
+                d.slots.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect();
+            let mut rows: Vec<(u64, Vec<u32>)> = Vec::new();
+            shard.emb.for_each_row(|k, v, st, _| {
+                rows.push((k, v.iter().chain(st).map(|x| x.to_bits()).collect()));
+            });
+            rows.sort_by_key(|r| r.0);
+            (p, s, rows)
+        };
+
+        let base = run(1);
+        for threads in [2, 8] {
+            assert_eq!(base, run(threads), "apply_threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_engages_and_matches_serial() {
+        // 40k elems at 8 threads must actually fan out — guard against
+        // the size threshold silently forcing the serial path — and the
+        // fanned-out result must match one serial apply exactly.
+        let n = 40_000;
+        let mut params = vec![vec![0.1f32; n]];
+        let mut slots = vec![vec![0.0f32; 2 * n]];
+        let dense = vec![vec![0.5f32; n]];
+        let opt = Adam::new(0.01);
+        let w = apply_dense(&mut params, &mut slots, &dense, &opt, 1, 8);
+        assert!(w > 1, "expected parallel fan-out, got {w} worker(s)");
+        let mut p2 = vec![vec![0.1f32; n]];
+        let mut s2 = vec![vec![0.0f32; 2 * n]];
+        opt.apply(&mut p2[0], &dense[0], &mut s2[0], 1);
+        assert!(params[0].iter().zip(&p2[0]).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(slots[0].iter().zip(&s2[0]).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn mismatched_grad_length_falls_back_to_plain_apply() {
+        // A tensor whose gradient slice doesn't match the layout skips
+        // the fan-out and keeps the plain `apply` semantics (SGD zips,
+        // so only the overlapping prefix updates).
+        let n = 40_000;
+        let mut params = vec![vec![1.0f32; n]];
+        let mut slots = vec![vec![]];
+        let dense = vec![vec![1.0f32; 10]];
+        let opt = Sgd { lr: 1.0 };
+        let w = apply_dense(&mut params, &mut slots, &dense, &opt, 1, 8);
+        assert!(w > 1, "threshold is on param elems, fan-out still reported");
+        assert!(params[0][..10].iter().all(|&x| x == 0.0));
+        assert!(params[0][10..].iter().all(|&x| x == 1.0));
     }
 }

@@ -30,6 +30,10 @@ pub struct SimParams {
     /// PS shards: the dense/embedding apply fans out across shards in
     /// parallel, so the effective apply cost is `ps_apply_ms / n_shards`.
     pub n_shards: usize,
+    /// Per-shard apply fan-out (`[ps] apply_threads`): inside one shard
+    /// the dense sweep and the embedding lock-shard groups also apply in
+    /// parallel, further dividing the apply cost.
+    pub apply_threads: usize,
     /// Serialization + framing cost per flush fan-out (ms) when shards
     /// sit behind a socket transport. The encode happens once on the
     /// flusher's critical path (the per-shard sends then overlap), so it
@@ -45,10 +49,11 @@ pub struct SimParams {
 
 impl SimParams {
     /// Effective wall cost of one aggregated apply (ms): the per-shard
-    /// slices apply concurrently, then the wire cost (if any) rides on
-    /// top once.
+    /// slices apply concurrently — and each shard fans out over its
+    /// apply threads — then the wire cost (if any) rides on top once.
     pub fn effective_apply_ms(&self) -> f64 {
-        self.ps_apply_ms / self.n_shards.max(1) as f64 + self.wire_ms
+        let lanes = (self.n_shards.max(1) * self.apply_threads.max(1)) as f64;
+        self.ps_apply_ms / lanes + self.wire_ms
     }
 
     /// Wire cost implied by a config's `[ps] transport` choice. Remote
@@ -233,6 +238,7 @@ pub fn simulate_mode(
         compute,
         ps_apply_ms: cfg.cluster.ps_apply_ms,
         n_shards: cfg.ps.n_shards,
+        apply_threads: cfg.ps.apply_threads,
         wire_ms: SimParams::wire_ms_of(cfg),
         start_sec,
         duration_sec,
@@ -269,6 +275,7 @@ mod tests {
             compute,
             ps_apply_ms: 0.1,
             n_shards: 1,
+            apply_threads: 1,
             wire_ms: 0.0,
             start_sec: 0.0,
             duration_sec: 60.0,
@@ -294,6 +301,20 @@ mod tests {
             slow.global_steps,
             fast.global_steps
         );
+    }
+
+    #[test]
+    fn apply_threads_divide_apply_cost_but_not_wire_cost() {
+        let mut p = params(8, false, 3);
+        p.n_shards = 4;
+        p.ps_apply_ms = 8.0;
+        p.wire_ms = 1.0;
+        let serial = p.effective_apply_ms();
+        p.apply_threads = 4;
+        // The fan-out divides the apply term (8/4/1 -> 8/4/4) and leaves
+        // the once-per-flush wire term alone.
+        assert_eq!(serial, 8.0 / 4.0 + 1.0);
+        assert_eq!(p.effective_apply_ms(), 8.0 / 16.0 + 1.0);
     }
 
     #[test]

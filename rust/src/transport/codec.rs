@@ -385,8 +385,21 @@ fn put_str(b: &mut Vec<u8>, s: &str) {
 
 fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
     put_u32(b, xs.len() as u32);
-    for &x in xs {
-        put_f32(b, x);
+    if cfg!(target_endian = "little") {
+        // SAFETY: on a little-endian host an f32's in-memory bytes are
+        // exactly its wire encoding (`to_le_bytes(to_bits(x))`), and any
+        // `&[f32]` is readable as raw bytes — so the whole slice appends
+        // with one bulk copy instead of the per-element staging loop.
+        // This writes dense/gather reply payloads straight from the
+        // source slices. Byte output is identical to the scalar loop.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs))
+        };
+        b.extend_from_slice(bytes);
+    } else {
+        for &x in xs {
+            put_f32(b, x);
+        }
     }
 }
 
@@ -455,35 +468,42 @@ fn put_pull_reply(b: &mut Vec<u8>, p: &PullReply) {
 /// ([`crate::obs::trace::current`], 0 when untraced).
 pub fn encode(msg: &WireMsg) -> Vec<u8> {
     let mut b = Vec::with_capacity(64);
-    put_u8(&mut b, WIRE_VERSION);
-    put_u64(&mut b, crate::obs::trace::current());
+    encode_into(&mut b, msg);
+    b
+}
+
+/// [`encode`], appending to an existing buffer. The event-driven
+/// transport fronts encode straight into a connection's output buffer
+/// with this, skipping the intermediate body allocation and copy.
+pub fn encode_into(b: &mut Vec<u8>, msg: &WireMsg) {
+    put_u8(b, WIRE_VERSION);
+    put_u64(b, crate::obs::trace::current());
     match msg {
         WireMsg::Push(g) => {
-            put_u8(&mut b, 1);
-            put_grad_push(&mut b, g);
+            put_u8(b, 1);
+            put_grad_push(b, g);
         }
         WireMsg::Pull(p) => {
-            put_u8(&mut b, 2);
-            put_pull_reply(&mut b, p);
+            put_u8(b, 2);
+            put_pull_reply(b, p);
         }
         WireMsg::Req(r) => {
-            put_u8(&mut b, 3);
-            encode_req(&mut b, r);
+            put_u8(b, 3);
+            encode_req(b, r);
         }
         WireMsg::Reply(r) => {
-            put_u8(&mut b, 4);
-            encode_reply(&mut b, r);
+            put_u8(b, 4);
+            encode_reply(b, r);
         }
         WireMsg::WorkerReq(r) => {
-            put_u8(&mut b, 5);
-            encode_worker_req(&mut b, r);
+            put_u8(b, 5);
+            encode_worker_req(b, r);
         }
         WireMsg::WorkerRep(r) => {
-            put_u8(&mut b, 6);
-            encode_worker_reply(&mut b, r);
+            put_u8(b, 6);
+            encode_worker_reply(b, r);
         }
     }
-    b
 }
 
 fn encode_worker_req(b: &mut Vec<u8>, r: &WorkerRequest) {
@@ -703,6 +723,29 @@ fn encode_reply(b: &mut Vec<u8>, r: &ShardReply) {
 
 // ---- decode -----------------------------------------------------------------
 
+/// Bulk-reinterpret a validated `4 * n`-byte slice as `n` f32s: one
+/// sized allocation plus one memcpy on little-endian hosts, where the
+/// wire layout (LE f32 bit patterns) *is* the in-memory layout. Output
+/// is bit-identical to the per-element `from_le_bytes` loop, which
+/// remains the path on big-endian hosts.
+fn bytes_to_f32s(raw: &[u8]) -> Vec<f32> {
+    let n = raw.len() / 4;
+    debug_assert_eq!(raw.len(), n * 4);
+    if cfg!(target_endian = "little") {
+        let mut out = vec![0.0f32; n];
+        // SAFETY: `out` owns exactly `n * 4` writable bytes, `raw` holds
+        // exactly `n * 4` readable bytes, the two can't overlap (`out`
+        // is a fresh allocation), and every 4-byte pattern is a valid
+        // f32 — NaN payloads included, which the fuzz suite exercises.
+        unsafe {
+            std::ptr::copy_nonoverlapping(raw.as_ptr(), out.as_mut_ptr() as *mut u8, n * 4);
+        }
+        out
+    } else {
+        raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+}
+
 /// Bounds-checked cursor over one frame body. Every length read is
 /// validated against the bytes actually remaining before any allocation.
 struct Rd<'a> {
@@ -753,7 +796,7 @@ impl<'a> Rd<'a> {
     fn f32s(&mut self) -> Result<Vec<f32>, CodecError> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        Ok(bytes_to_f32s(raw))
     }
 
     /// A `u32`-counted vector of `u64`s, length-checked before any
@@ -772,7 +815,12 @@ impl<'a> Rd<'a> {
 
     fn f32_vecs(&mut self) -> Result<Vec<Vec<f32>>, CodecError> {
         let n = self.u32()? as usize;
-        let mut out = Vec::new();
+        // Each vector costs at least its own 4-byte count on the wire;
+        // bound the count against the remaining bytes before allocating.
+        if self.b.len() - self.i < n * 4 {
+            return Err(CodecError::Truncated);
+        }
+        let mut out = Vec::with_capacity(n);
         for _ in 0..n {
             out.push(self.f32s()?);
         }

@@ -67,14 +67,23 @@ impl BufConn {
     /// frame is fully buffered on `Ok`, whether or not any bytes moved;
     /// only a dead peer errors.
     pub fn queue_send(&mut self, msg: &WireMsg) -> Result<(), CodecError> {
-        let body = codec::encode(msg);
-        let len = u32::try_from(body.len()).map_err(|_| CodecError::Oversize(u32::MAX))?;
-        if len > MAX_FRAME_BYTES {
-            return Err(CodecError::Oversize(len));
-        }
-        self.out_buf.extend_from_slice(&len.to_le_bytes());
-        self.out_buf.extend_from_slice(&body);
-        codec::record_frame_bytes("tx", msg, body.len() + 4);
+        // Encode straight into the output buffer — reserve the 4-byte
+        // length slot, append the body in place, patch the slot — so
+        // large dense/gather frames skip the intermediate body Vec and
+        // its copy. Bytes on the wire are identical to encode-then-copy.
+        let start = self.out_buf.len();
+        self.out_buf.extend_from_slice(&[0u8; 4]);
+        codec::encode_into(&mut self.out_buf, msg);
+        let body_len = self.out_buf.len() - start - 4;
+        let len = match u32::try_from(body_len) {
+            Ok(len) if len <= MAX_FRAME_BYTES => len,
+            _ => {
+                self.out_buf.truncate(start);
+                return Err(CodecError::Oversize(u32::try_from(body_len).unwrap_or(u32::MAX)));
+            }
+        };
+        self.out_buf[start..start + 4].copy_from_slice(&len.to_le_bytes());
+        codec::record_frame_bytes("tx", msg, body_len + 4);
         self.try_flush().map(|_| ())
     }
 

@@ -208,6 +208,7 @@ mod tests {
             opt_dense: Box::new(Sgd { lr: 1.0 }),
             opt_emb: Box::new(Sgd { lr: 1.0 }),
             addr: None,
+            apply_threads: 1,
         }
     }
 

@@ -76,6 +76,8 @@ pub struct ShardSpawnSpec {
     /// `host:port` of the shard's `shard-server` process. Required by
     /// the `Remote` transport; ignored by `InProc`/`Socket`.
     pub addr: Option<String>,
+    /// Worker fan-out inside one apply (`[ps] apply_threads`).
+    pub apply_threads: usize,
 }
 
 impl ShardSpawnSpec {
@@ -98,6 +100,7 @@ impl ShardSpawnSpec {
             ckpt.slots.clone(),
             self.emb_cfg.clone(),
             ckpt.emb_slots,
+            self.apply_threads,
         );
         for (key, vec, state, meta) in &ckpt.rows {
             shard.emb.insert_row(*key, vec.clone(), state.clone(), *meta);
@@ -920,6 +923,7 @@ mod tests {
             opt_dense: Box::new(Sgd { lr: 1.0 }),
             opt_emb: Box::new(Sgd { lr: 1.0 }),
             addr: None,
+            apply_threads: 1,
         }
     }
 

@@ -192,6 +192,7 @@ pub fn shard_server_spec(
         opt_dense: make_optimizer(okind, lr),
         opt_emb: make_optimizer(okind, lr),
         addr: None,
+        apply_threads: cfg.ps.apply_threads,
     };
     (spec, init)
 }
@@ -238,6 +239,7 @@ impl TrainSession {
                 transport: cfg.ps.transport,
                 shard_addrs: cfg.ps.shard_addrs.clone(),
                 connect_deadline: Some(Duration::from_millis(cfg.ps.connect_deadline_ms)),
+                apply_threads: cfg.ps.apply_threads,
             }
             // An unreachable shard-server is an `Err` here (and a clean
             // nonzero exit from `gba-train train`), not a panic.

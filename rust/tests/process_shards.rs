@@ -224,6 +224,7 @@ fn build_front(cfg: &ExperimentConfig) -> ShardedPs {
         transport: cfg.ps.transport,
         shard_addrs: cfg.ps.shard_addrs.clone(),
         connect_deadline: None,
+        apply_threads: 1,
     }
     .build()
 }

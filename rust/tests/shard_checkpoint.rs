@@ -44,6 +44,7 @@ fn build(n_shards: usize, transport: TransportKind) -> ShardedPs {
         transport,
         shard_addrs: Vec::new(),
         connect_deadline: None,
+        apply_threads: 1,
     }
     .build()
 }

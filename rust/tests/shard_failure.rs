@@ -78,6 +78,7 @@ fn build(transport: TransportKind) -> ShardedPs {
         transport,
         shard_addrs: Vec::new(),
         connect_deadline: None,
+        apply_threads: 1,
     }
     .build()
 }
