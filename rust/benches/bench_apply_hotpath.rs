@@ -9,6 +9,11 @@
 //!  * embedding sweep — lock-shard-grouped `apply_grads` at growing
 //!    key counts, threads 1 vs 8. One `RwLock` acquisition per
 //!    lock-shard per apply instead of one per key.
+//!  * wire sweep — the same apply and a bulk gather as full RPCs
+//!    against a `ShardService` over a localhost socket, so the report
+//!    shows how much of the end-to-end step the codec + kernel leave on
+//!    the table (and what the scatter/gather streaming reply encode is
+//!    worth on the gather side).
 //!
 //! Every configuration is bit-identical to `apply_threads = 1` by the
 //! pins in `shard::tests` and `optim::tests`; this bench only asks how
@@ -22,6 +27,9 @@ use gba::embedding::EmbeddingConfig;
 use gba::optim::{Adagrad, Adam, Optimizer, Sgd};
 use gba::runtime::HostTensor;
 use gba::shard::PsShard;
+use gba::transport::codec::{ShardReply, ShardRequest};
+use gba::transport::endpoint::{rpc, SocketConn};
+use gba::transport::service::{serve, ShardService};
 use gba::util::bench::{black_box, Bencher};
 use gba::util::rng::Pcg64;
 
@@ -97,6 +105,58 @@ fn main() {
                 shard.apply(black_box(&dense), black_box(&group), &opt, &opt, step);
             });
         }
+    }
+
+    println!("-- wire transport: the same verbs as full RPCs over a localhost socket --");
+    {
+        let n = 65_536;
+        let keys = 2_048usize;
+        let opt = Adam::new(1e-6);
+        let shard = dense_shard(n, opt.slots(), 1);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            // Exits when the client drops its connection.
+            serve(
+                ShardService::new(shard, Box::new(Adam::new(1e-6)), Box::new(Adam::new(1e-6))),
+                Box::new(SocketConn::new(stream)),
+            );
+        });
+        let mut conn = SocketConn::new(std::net::TcpStream::connect(addr).unwrap());
+
+        let grad = dense_grad(&mut rng, n);
+        let group = emb_group(&mut rng, keys);
+        let mut step = 0u64;
+        b.bench_units(&format!("wire/apply n={n} keys={keys}"), (n + keys) as f64, || {
+            step += 1;
+            let reply = rpc(
+                &mut conn,
+                ShardRequest::Apply {
+                    opt_step: step,
+                    dense: vec![black_box(grad.clone())],
+                    emb: black_box(group.clone()),
+                },
+            )
+            .unwrap();
+            assert!(matches!(reply, ShardReply::Ok));
+        });
+
+        let gather_keys: Vec<u64> = (0..keys as u64).map(|k| k * 3).collect();
+        b.bench_units(&format!("wire/gather keys={keys}"), keys as f64, || {
+            let reply =
+                rpc(&mut conn, ShardRequest::Gather { keys: black_box(gather_keys.clone()) })
+                    .unwrap();
+            match reply {
+                ShardReply::Rows { dim, data } => {
+                    assert_eq!(data.len(), gather_keys.len() * dim as usize);
+                }
+                other => panic!("expected Rows, got {other:?}"),
+            }
+        });
+
+        drop(conn);
+        server.join().unwrap();
     }
 
     b.write_report("results/bench_apply_hotpath.json").ok();

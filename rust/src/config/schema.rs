@@ -348,6 +348,44 @@ pub struct ObsConfig {
     pub trace_dir: Option<String>,
 }
 
+/// Online serving plane (`[serve]` table) — knobs for `gba-train
+/// serve`, the read-only inference front.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// `host:port` the serving front's gather listener binds
+    /// (`host:0` picks a free port; the process prints the bound
+    /// address).
+    pub listen: String,
+    /// Hot-key cache capacity in embedding rows across all cache
+    /// shards. 0 disables caching entirely — every request is served
+    /// from a snapshot-consistent PS fetch.
+    pub cache_rows: usize,
+    /// Lock shards the cache is split across (bounds contention, not
+    /// capacity).
+    pub cache_shards: usize,
+    /// Request-batching collection window (µs): concurrent cache
+    /// misses arriving within one window coalesce into a single
+    /// cross-shard gather round. 0 fetches immediately (no window).
+    pub batch_window_us: u64,
+    /// Staleness bound (ms) for cache-served rows: the front drains
+    /// the shards' invalidation logs at least this often, so a cached
+    /// row lags a landed training apply by at most this long. 0 polls
+    /// before every request (freshest, most poll traffic).
+    pub max_stale_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: "127.0.0.1:0".to_string(),
+            cache_rows: 65_536,
+            cache_shards: 16,
+            batch_window_us: 100,
+            max_stale_ms: 50,
+        }
+    }
+}
+
 /// Parameter-server plane shape (`[ps]` table).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PsConfig {
@@ -427,6 +465,7 @@ pub struct ExperimentConfig {
     pub ps: PsConfig,
     pub switch: SwitchConfig,
     pub obs: ObsConfig,
+    pub serve: ServeConfig,
 }
 
 impl ExperimentConfig {
@@ -621,6 +660,45 @@ impl ExperimentConfig {
                 ),
             },
         };
+        // Same rule again for [serve]: absent keys take the defaults,
+        // malformed keys error (a serve front that silently ran with a
+        // default cache would invalidate a hit-rate measurement).
+        let serve_defaults = ServeConfig::default();
+        let serve = ServeConfig {
+            listen: match doc.get("serve.listen") {
+                None => serve_defaults.listen,
+                Some(v) => v
+                    .as_str()
+                    .context("serve.listen must be a \"host:port\" string")?
+                    .to_string(),
+            },
+            cache_rows: match doc.get("serve.cache_rows") {
+                None => serve_defaults.cache_rows,
+                Some(v) => v
+                    .as_usize()
+                    .context("serve.cache_rows must be a non-negative integer")?,
+            },
+            cache_shards: match doc.get("serve.cache_shards") {
+                None => serve_defaults.cache_shards,
+                Some(v) => v
+                    .as_usize()
+                    .context("serve.cache_shards must be a positive integer")?,
+            },
+            batch_window_us: match doc.get("serve.batch_window_us") {
+                None => serve_defaults.batch_window_us,
+                Some(v) => v
+                    .as_usize()
+                    .context("serve.batch_window_us must be a non-negative integer")?
+                    as u64,
+            },
+            max_stale_ms: match doc.get("serve.max_stale_ms") {
+                None => serve_defaults.max_stale_ms,
+                Some(v) => v
+                    .as_usize()
+                    .context("serve.max_stale_ms must be a non-negative integer")?
+                    as u64,
+            },
+        };
         Ok(ExperimentConfig {
             name: req_str("name")?,
             seed: req_usize("seed")? as u64,
@@ -632,6 +710,7 @@ impl ExperimentConfig {
             ps,
             switch,
             obs,
+            serve,
         })
     }
 
@@ -698,6 +777,19 @@ impl ExperimentConfig {
         }
         if self.obs.trace_dir.as_deref() == Some("") {
             bail!("obs.trace_dir must be a directory path, not empty");
+        }
+        if self.serve.listen.is_empty() {
+            bail!("serve.listen must be a \"host:port\" address, not empty");
+        }
+        if self.serve.cache_shards == 0 || self.serve.cache_shards > 1024 {
+            bail!("serve.cache_shards must be in [1, 1024], got {}", self.serve.cache_shards);
+        }
+        if self.serve.batch_window_us > 1_000_000 {
+            bail!(
+                "serve.batch_window_us must be at most 1000000 (1 s), got {} \
+                 — the window adds directly to every miss's serve latency",
+                self.serve.batch_window_us
+            );
         }
         let sw = &self.switch;
         if !(0.0..=1.0).contains(&sw.low_watermark) || !(0.0..=1.0).contains(&sw.high_watermark) {

@@ -37,6 +37,7 @@ pub mod obs;
 pub mod optim;
 pub mod ps;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod sim;
 pub mod transport;

@@ -7,6 +7,10 @@
 //!                         multi-process deployment; see docs/DEPLOY.md)
 //!   worker                run one training worker as this process,
 //!                         dialing a front with [cluster] workers="remote"
+//!   serve                 read-only inference front over the live PS
+//!                         shards (hot-key cache + batched gathers)
+//!   serve-probe           drive Zipfian gather traffic at a serve front
+//!                         and report served-QPS latency quantiles
 //!   datagen               inspect the synthetic data generator
 //!   inspect               dump the AOT artifact manifest
 //!
@@ -106,6 +110,19 @@ USAGE:
                   (run worker W's Algorithm-1 loop as this process,
                    against a front started with --workers remote; exits 0
                    when the front ends the session)
+  gba-train serve --config FILE [--shard-addrs HOST:PORT,...]
+                  [--listen ADDR] [--cache-rows N]
+                  [--obs-listen ADDR] [--obs-trace-dir DIR]
+                  (serve read-only embedding gathers from the PS shard
+                   fleet — the shard-servers keep answering while (and
+                   after) a trainer runs against them; prints
+                   \"serve front listening on ADDR\" once every shard
+                   companion is attached; cache/batching/staleness knobs
+                   come from [serve], see docs/DEPLOY.md)
+  gba-train serve-probe --config FILE --connect ADDR
+                  [--requests N] [--batch B]
+                  (replay the generator's Zipfian key traffic against a
+                   serve front; prints served QPS and p50/p95/p99 latency)
   gba-train datagen --config FILE [--day D] [--samples N]
   gba-train inspect [--artifacts DIR]
 
@@ -126,6 +143,8 @@ fn main() {
         "train" => cmd_train(&args),
         "shard-server" => cmd_shard_server(&args),
         "worker" => cmd_worker(&args),
+        "serve" => cmd_serve(&args),
+        "serve-probe" => cmd_serve_probe(&args),
         "datagen" => cmd_datagen(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
@@ -476,6 +495,126 @@ fn cmd_worker(args: &Args) -> Result<()> {
     };
     let days = run_worker_process(&cfg, kind, worker_id, addr, opts)?;
     eprintln!("worker {worker_id}: session over after {days} day(s)");
+    Ok(())
+}
+
+/// Run the read-only serving front as this process: attach a read
+/// companion to every PS shard-server, then answer worker-vocabulary
+/// gathers (hot-key cache + batched snapshot fetches) forever. The
+/// shard fleet keeps serving while a trainer applies into it — that is
+/// the point — and after the trainer exits, so `serve` works against a
+/// quiesced fleet too. The banner prints only once every companion is
+/// attached, so "listening" means "ready to answer".
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config = args.get("config").context("--config FILE required")?;
+    let mut cfg = ExperimentConfig::load(config)?;
+    if let Some(addrs) = args.get("shard-addrs") {
+        cfg.ps.shard_addrs = addrs
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        cfg.ps.transport = TransportKind::Remote;
+        cfg.validate()?;
+    }
+    anyhow::ensure!(
+        !cfg.ps.shard_addrs.is_empty(),
+        "serve needs the shard fleet's addresses: set [ps] shard_addrs \
+         (with transport = \"remote\") or pass --shard-addrs"
+    );
+    if let Some(listen) = args.get("listen") {
+        cfg.serve.listen = listen.to_string();
+    }
+    if let Some(rows) = args.get("cache-rows") {
+        cfg.serve.cache_rows = rows.parse().context("--cache-rows wants an integer")?;
+    }
+    cfg.validate()?;
+
+    let deadline = std::time::Duration::from_millis(cfg.ps.connect_deadline_ms);
+    let shards = gba::serve::RemoteReadShards::connect(
+        &cfg.ps.shard_addrs,
+        cfg.model.emb_dim,
+        deadline,
+    )
+    .context("attaching read companions to the PS shard fleet")?;
+    let n_shards = cfg.ps.shard_addrs.len();
+    let front = std::sync::Arc::new(gba::serve::ServeFront::new(
+        Box::new(shards),
+        cfg.serve.clone(),
+    ));
+    let listener = std::net::TcpListener::bind(&cfg.serve.listen)
+        .with_context(|| format!("binding serve listener on {}", cfg.serve.listen))?;
+    let addr = gba::serve::serve_listener(front, listener)?;
+    // One parseable line, same contract as the shard-server banner: the
+    // first stdout line is the bound address.
+    println!(
+        "serve front listening on {addr} ({n_shards} shards, cache {} rows, \
+         window {} us, max-stale {} ms)",
+        cfg.serve.cache_rows, cfg.serve.batch_window_us, cfg.serve.max_stale_ms
+    );
+    use std::io::Write;
+    std::io::stdout().flush()?;
+    init_obs(&mut cfg, args, "serve")?;
+    eprintln!("serve: task {} | emb dim {} | serving forever", cfg.name, cfg.model.emb_dim);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Drive the generator's Zipfian key traffic at a serve front and
+/// report served-QPS latency quantiles — the online half of the
+/// Table 5.2 throughput story (the offline half is bench_table52_qps).
+fn cmd_serve_probe(args: &Args) -> Result<()> {
+    let config = args.get("config").context("--config FILE required")?;
+    let cfg = ExperimentConfig::load(config)?;
+    let addr = args.get("connect").context("--connect ADDR required")?;
+    let requests: usize =
+        args.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(2000);
+    let batch: usize = args.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(8);
+    anyhow::ensure!(requests > 0 && batch > 0, "--requests and --batch must be positive");
+    let fields = cfg.model.fields;
+
+    // The generator's own samples ARE the serving key distribution:
+    // per-field Zipfian ids over the ids the trainer actually touched.
+    let gen = DataGen::new(&cfg.model, &cfg.data, cfg.seed);
+    let mut client =
+        gba::serve::ServeClient::connect(addr, std::time::Duration::from_secs(20))?;
+    let mut keys = Vec::with_capacity(batch * fields);
+    // Warm the connection (and the front's cache head) outside the clock.
+    keys.extend(gen.sample(0, 0).keys.iter().copied());
+    for _ in 1..batch {
+        keys.extend(gen.sample(0, 0).keys.iter().copied());
+    }
+    client.gather(&keys, batch, fields)?;
+
+    let mut lat_ns: Vec<f64> = Vec::with_capacity(requests);
+    let t0 = std::time::Instant::now();
+    for r in 0..requests {
+        keys.clear();
+        for b in 0..batch {
+            let j = (r * batch + b) % cfg.data.samples_per_day.max(1);
+            keys.extend(gen.sample(0, j).keys.iter().copied());
+        }
+        let s = std::time::Instant::now();
+        let t = client.gather(&keys, batch, fields)?;
+        lat_ns.push(s.elapsed().as_nanos() as f64);
+        anyhow::ensure!(
+            t.shape == vec![batch, fields, cfg.model.emb_dim],
+            "serve returned shape {:?}",
+            t.shape
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ms = |p: f64| gba::util::stats::percentile_sorted(&lat_ns, p) / 1e6;
+    println!(
+        "serve-probe: {requests} requests x {batch}x{fields} keys | qps {:.0} | \
+         latency p50 {:.3} ms p95 {:.3} ms p99 {:.3} ms",
+        requests as f64 / wall,
+        ms(50.0),
+        ms(95.0),
+        ms(99.0)
+    );
     Ok(())
 }
 

@@ -1,0 +1,823 @@
+//! The online serving plane: a read-only inference front over the
+//! sharded PS.
+//!
+//! The paper's models exist to answer pull traffic — GBA trains them on
+//! a parameter server precisely so the *same* sharded store can serve
+//! inference lookups while training continues. [`ServeFront`] is that
+//! read path:
+//!
+//! * **Hot-key cache.** Recommendation key traffic is Zipfian (Fig. 4),
+//!   so a small sharded map in front of the PS absorbs most lookups.
+//!   Training applies invalidate it through the shards' bounded
+//!   invalidation logs (`ReadInvalidations`), polled at most every
+//!   `[serve] max_stale_ms` — a cache-served row lags a landed apply by
+//!   at most that bound, never longer.
+//! * **Batched cross-shard gathers.** Concurrent requests coalesce
+//!   their cache misses into one *round*: a `[serve] batch_window_us`
+//!   collection window, then one `GatherAt` RPC per involved PS shard
+//!   for the union of missed keys, instead of a per-request fan-out.
+//! * **Snapshot-consistent reads.** `GatherAt` reads under each shard's
+//!   apply seqlock and reports the step the rows are consistent at; the
+//!   round retries the fan-out until every involved shard reports the
+//!   *same* step. A fetched row block therefore never observes a
+//!   half-applied global batch (pinned bit-identical under concurrent
+//!   applies by `tests/serve_plane.rs`). With the cache disabled
+//!   (`cache_rows = 0`) every served gather is such a block.
+//!
+//! The front runs against either a live in-process [`ShardedPs`] (reads
+//! go over the supervisor's read slots, overlapping training applies —
+//! PR 7's companion-connection seam) or, via [`RemoteReadShards`],
+//! read-only companion connections to remote `shard-server` processes.
+//! [`serve_listener`] exposes it over the worker-plane wire vocabulary
+//! (`WorkerRequest::Gather` → `WorkerReply::Emb`), so any `PsClient`
+//! gather client can speak to it unchanged.
+
+use std::collections::{HashMap, HashSet};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::ServeConfig;
+use crate::obs::{self, Histogram};
+use crate::runtime::HostTensor;
+use crate::shard::{ShardRouter, ShardedPs};
+use crate::transport::codec::{
+    self, CodecError, ShardReply, ShardRequest, WireMsg, WorkerReply, WorkerRequest,
+};
+use crate::transport::endpoint::{rpc, Conn, SocketConn};
+use crate::transport::remote::connect_retry;
+use crate::util::rng::mix64;
+
+/// Fan-out retry budget for one snapshot round: how many times the
+/// round re-issues its per-shard `GatherAt`s waiting for every shard to
+/// report the same step. Flushes apply to all shards back-to-back under
+/// the front's snapshot lock, so disagreement windows are micro-scale;
+/// the budget only trips if training wedges mid-flush.
+const SNAPSHOT_RETRIES: usize = 1000;
+
+/// Pause between snapshot retry attempts.
+const SNAPSHOT_RETRY_PAUSE: Duration = Duration::from_micros(100);
+
+/// A read-only door into a live sharded PS — the seam that lets one
+/// [`ServeFront`] run over an in-process [`ShardedPs`] (tests, benches,
+/// single-box deploys) or remote companion connections
+/// ([`RemoteReadShards`]) with identical semantics.
+pub trait ReadShards: Send + Sync {
+    fn n_shards(&self) -> usize;
+    fn emb_dim(&self) -> usize;
+    /// One read-only RPC against shard `s`. Must route only verbs
+    /// `try_handle_read` accepts; a mutating verb is a caller bug.
+    fn read_call(&self, s: usize, req: ShardRequest) -> Result<ShardReply>;
+}
+
+impl ReadShards for Arc<ShardedPs> {
+    fn n_shards(&self) -> usize {
+        ShardedPs::n_shards(self)
+    }
+
+    fn emb_dim(&self) -> usize {
+        ShardedPs::emb_dim(self)
+    }
+
+    fn read_call(&self, s: usize, req: ShardRequest) -> Result<ShardReply> {
+        Ok(ShardedPs::read_call(self, s, req))
+    }
+}
+
+/// Read-only companion connections to remote `shard-server` processes:
+/// one socket per shard, attached with the `ReadHello` handshake — the
+/// same read plane a training front's gathers overlap applies on, so a
+/// serve process shares shards with a live trainer by construction.
+pub struct RemoteReadShards {
+    conns: Vec<Mutex<SocketConn>>,
+    emb_dim: usize,
+}
+
+impl RemoteReadShards {
+    /// Dial every shard address and complete the read-companion
+    /// handshake, retrying each until `deadline`. A shard-server only
+    /// accepts a companion once a *primary* (training) connection has
+    /// established the serving generation — so against a fleet that has
+    /// never trained, this fails with instructions rather than hanging
+    /// forever.
+    pub fn connect(addrs: &[String], emb_dim: usize, deadline: Duration) -> Result<Self> {
+        let t0 = Instant::now();
+        let mut conns = Vec::with_capacity(addrs.len());
+        for (s, addr) in addrs.iter().enumerate() {
+            loop {
+                let remaining = deadline.saturating_sub(t0.elapsed());
+                let mut conn = connect_retry(addr, remaining)
+                    .with_context(|| format!("shard {s}: nothing listening on {addr}"))?;
+                match rpc(&mut conn, ShardRequest::ReadHello { shard: s as u64 }) {
+                    Ok(ShardReply::Ok) => {
+                        conns.push(Mutex::new(conn));
+                        break;
+                    }
+                    // The server drops a companion that arrives before
+                    // any primary has attached — keep dialing until the
+                    // trainer shows up or the deadline says it won't.
+                    Ok(other) => bail!("shard {s}: unexpected ReadHello reply: {other:?}"),
+                    Err(_) if t0.elapsed() < deadline => {
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                    Err(e) => bail!(
+                        "shard {s} at {addr} refused the read companion ({e}); \
+                         a shard-server only serves reads once a trainer has \
+                         attached — start (or run) training against this fleet first"
+                    ),
+                }
+            }
+        }
+        Ok(RemoteReadShards { conns, emb_dim })
+    }
+}
+
+impl ReadShards for RemoteReadShards {
+    fn n_shards(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn emb_dim(&self) -> usize {
+        self.emb_dim
+    }
+
+    fn read_call(&self, s: usize, req: ShardRequest) -> Result<ShardReply> {
+        let mut conn = self.conns[s].lock().unwrap();
+        rpc(&mut *conn, req).map_err(|e| anyhow!("shard {s} read RPC failed: {e}"))
+    }
+}
+
+/// Instance-local serving counters. Mirrored into the process obs
+/// registry as `gba_serve_*`; kept local too so tests and the bench can
+/// assert on *this* front's traffic regardless of what else the process
+/// is doing.
+#[derive(Default)]
+pub struct ServeStats {
+    pub requests: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    pub cache_evictions: AtomicU64,
+    /// Batched fetch rounds executed (one per leader, not per request).
+    pub rounds: AtomicU64,
+    /// Extra fan-out attempts spent waiting for all shards to agree.
+    pub snapshot_retries: AtomicU64,
+}
+
+/// Point-in-time copy of [`ServeStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStatsSnapshot {
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub rounds: u64,
+    pub snapshot_retries: u64,
+}
+
+/// One completed fetch round: the union of missed keys, resolved at one
+/// consistent step across every involved shard.
+struct RoundResult {
+    step: u64,
+    rows: HashMap<u64, Vec<f32>>,
+}
+
+/// Leader/follower state for request-window batching.
+struct RoundState {
+    /// Id of the round currently collecting keys.
+    round: u64,
+    /// Union of cache-missed keys awaiting the next fetch.
+    keys: Vec<u64>,
+    /// A leader is inside the collection window or the fan-out.
+    leader_running: bool,
+    /// Latest completed round and its result.
+    last: Option<(u64, Arc<RoundResult>)>,
+    /// Highest round that failed (its keys were drained but never
+    /// served); contributors at or below it must error out.
+    failed: Option<u64>,
+}
+
+/// Cache-invalidation cursors, one per PS shard, plus the poll clock.
+struct InvalCursors {
+    last_poll: Option<Instant>,
+    since: Vec<u64>,
+}
+
+/// The serving front. Shared across connection threads behind an
+/// [`Arc`]; every public method takes `&self`.
+pub struct ServeFront {
+    shards: Box<dyn ReadShards>,
+    router: ShardRouter,
+    dim: usize,
+    cfg: ServeConfig,
+    /// Sharded hot-key cache: `mix64(key) % cache_shards` picks the
+    /// slice. Empty when `cache_rows = 0` (caching disabled). Each
+    /// slice holds at most `cache_rows / cache_shards` rows and flushes
+    /// whole when full — Zipfian traffic immediately re-warms the head.
+    cache: Vec<Mutex<HashMap<u64, Vec<f32>>>>,
+    cache_rows_per_shard: usize,
+    batch: Mutex<RoundState>,
+    batch_cv: Condvar,
+    inval: Mutex<InvalCursors>,
+    pub stats: ServeStats,
+    latency_hist: Arc<Histogram>,
+}
+
+impl ServeFront {
+    pub fn new(shards: Box<dyn ReadShards>, cfg: ServeConfig) -> Self {
+        let n = shards.n_shards();
+        let dim = shards.emb_dim();
+        let cache_shards = if cfg.cache_rows == 0 { 0 } else { cfg.cache_shards.max(1) };
+        let cache = (0..cache_shards).map(|_| Mutex::new(HashMap::new())).collect();
+        let reg = obs::global();
+        for name in [
+            "gba_serve_requests_total",
+            "gba_serve_cache_hits_total",
+            "gba_serve_cache_misses_total",
+            "gba_serve_cache_evictions_total",
+            "gba_serve_rounds_total",
+            "gba_serve_snapshot_retries_total",
+        ] {
+            // Materialize the family at 0 so /metrics shows it pre-traffic.
+            reg.counter(name);
+        }
+        ServeFront {
+            router: ShardRouter::new(n),
+            dim,
+            cache_rows_per_shard: if cache_shards == 0 {
+                0
+            } else {
+                (cfg.cache_rows / cache_shards).max(1)
+            },
+            cache,
+            batch: Mutex::new(RoundState {
+                round: 0,
+                keys: Vec::new(),
+                leader_running: false,
+                last: None,
+                failed: None,
+            }),
+            batch_cv: Condvar::new(),
+            inval: Mutex::new(InvalCursors { last_poll: None, since: vec![0; n] }),
+            stats: ServeStats::default(),
+            latency_hist: reg
+                .histogram("gba_serve_latency_seconds", Histogram::latency_bounds()),
+            shards,
+            cfg,
+        }
+    }
+
+    pub fn emb_dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn stats_snapshot(&self) -> ServeStatsSnapshot {
+        ServeStatsSnapshot {
+            requests: self.stats.requests.load(Ordering::Relaxed),
+            cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.stats.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: self.stats.cache_evictions.load(Ordering::Relaxed),
+            rounds: self.stats.rounds.load(Ordering::Relaxed),
+            snapshot_retries: self.stats.snapshot_retries.load(Ordering::Relaxed),
+        }
+    }
+
+    fn count(&self, local: &AtomicU64, name: &'static str, by: u64) {
+        if by == 0 {
+            return;
+        }
+        local.fetch_add(by, Ordering::Relaxed);
+        obs::global().counter(name).add(by);
+    }
+
+    /// Serve one gather: `keys` (one per `[batch, fields]` slot, dups
+    /// allowed) → a `[batch, fields, dim]` tensor, exactly the
+    /// [`ShardedPs::gather`] contract. Rows come from the hot cache
+    /// when present (staleness ≤ `max_stale_ms` behind the live PS) and
+    /// otherwise from one snapshot-consistent batched fetch round.
+    pub fn gather(&self, keys: &[u64], batch: usize, fields: usize) -> Result<HostTensor> {
+        let t0 = Instant::now();
+        self.count(&self.stats.requests, "gba_serve_requests_total", 1);
+        self.maintain_cache()?;
+
+        let dim = self.dim;
+        let mut data = vec![0.0f32; keys.len() * dim];
+        // Resolve from cache first; collect the distinct misses.
+        let mut miss: Vec<u64> = Vec::new();
+        let mut miss_at: Vec<usize> = Vec::new();
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for (i, &key) in keys.iter().enumerate() {
+            match self.cache_get(key) {
+                Some(row) => {
+                    data[i * dim..(i + 1) * dim].copy_from_slice(&row);
+                    hits += 1;
+                }
+                None => {
+                    miss.push(key);
+                    miss_at.push(i);
+                    misses += 1;
+                }
+            }
+        }
+        self.count(&self.stats.cache_hits, "gba_serve_cache_hits_total", hits);
+        self.count(&self.stats.cache_misses, "gba_serve_cache_misses_total", misses);
+
+        if !miss.is_empty() {
+            let round = self.fetch_batched(&miss)?;
+            for (&key, &i) in miss.iter().zip(&miss_at) {
+                let row = round
+                    .rows
+                    .get(&key)
+                    .ok_or_else(|| anyhow!("fetch round missing key {key}"))?;
+                data[i * dim..(i + 1) * dim].copy_from_slice(row);
+                self.cache_put(key, row.clone());
+            }
+        }
+        self.latency_hist.record(t0.elapsed().as_secs_f64());
+        Ok(HostTensor { shape: vec![batch, fields, dim], data })
+    }
+
+    fn cache_slot(&self, key: u64) -> Option<&Mutex<HashMap<u64, Vec<f32>>>> {
+        if self.cache.is_empty() {
+            return None;
+        }
+        Some(&self.cache[(mix64(key) % self.cache.len() as u64) as usize])
+    }
+
+    fn cache_get(&self, key: u64) -> Option<Vec<f32>> {
+        self.cache_slot(key)?.lock().unwrap().get(&key).cloned()
+    }
+
+    fn cache_put(&self, key: u64, row: Vec<f32>) {
+        let Some(slot) = self.cache_slot(key) else { return };
+        let mut m = slot.lock().unwrap();
+        if m.len() >= self.cache_rows_per_shard && !m.contains_key(&key) {
+            // Flush-on-full: cheap, and Zipfian heads re-warm in a few
+            // requests. Counted so hit-rate dips are attributable.
+            let dropped = m.len() as u64;
+            m.clear();
+            self.count(&self.stats.cache_evictions, "gba_serve_cache_evictions_total", dropped);
+        }
+        m.insert(key, row);
+    }
+
+    /// Drain the shards' invalidation logs if the staleness budget is
+    /// up, evicting every cached row a training apply has touched since
+    /// the last poll. `max_stale_ms = 0` polls before every request.
+    fn maintain_cache(&self) -> Result<()> {
+        if self.cache.is_empty() {
+            return Ok(());
+        }
+        let mut cur = self.inval.lock().unwrap();
+        let due = match cur.last_poll {
+            None => true,
+            Some(t) => t.elapsed() >= Duration::from_millis(self.cfg.max_stale_ms),
+        };
+        if !due {
+            return Ok(());
+        }
+        for s in 0..self.shards.n_shards() {
+            let since = cur.since[s];
+            match self.shards.read_call(s, ShardRequest::ReadInvalidations { since })? {
+                ShardReply::Invalidations { upto, full, keys } => {
+                    if full {
+                        let mut dropped = 0u64;
+                        for slot in &self.cache {
+                            let mut m = slot.lock().unwrap();
+                            dropped += m.len() as u64;
+                            m.clear();
+                        }
+                        self.count(
+                            &self.stats.cache_evictions,
+                            "gba_serve_cache_evictions_total",
+                            dropped,
+                        );
+                    } else {
+                        let mut dropped = 0u64;
+                        for key in keys {
+                            if let Some(slot) = self.cache_slot(key) {
+                                if slot.lock().unwrap().remove(&key).is_some() {
+                                    dropped += 1;
+                                }
+                            }
+                        }
+                        self.count(
+                            &self.stats.cache_evictions,
+                            "gba_serve_cache_evictions_total",
+                            dropped,
+                        );
+                    }
+                    cur.since[s] = upto;
+                }
+                other => bail!("shard {s}: expected Invalidations, got {other:?}"),
+            }
+        }
+        cur.last_poll = Some(Instant::now());
+        Ok(())
+    }
+
+    /// Join (or lead) the current batching round for `miss` and return
+    /// its result once the round's fan-out completes. The leader sleeps
+    /// out the collection window, drains the union of every concurrent
+    /// request's misses, and runs one snapshot fan-out for all of them;
+    /// followers block on the round's completion.
+    fn fetch_batched(&self, miss: &[u64]) -> Result<Arc<RoundResult>> {
+        let mut st = self.batch.lock().unwrap();
+        st.keys.extend_from_slice(miss);
+        let my_round = st.round;
+        loop {
+            if let Some((r, res)) = &st.last {
+                if *r >= my_round {
+                    return Ok(res.clone());
+                }
+            }
+            if let Some(f) = st.failed {
+                if f >= my_round {
+                    bail!("batched fetch round {my_round} failed (leader error)");
+                }
+            }
+            if !st.leader_running {
+                st.leader_running = true;
+                drop(st);
+                if self.cfg.batch_window_us > 0 {
+                    std::thread::sleep(Duration::from_micros(self.cfg.batch_window_us));
+                }
+                let (keys, round) = {
+                    let mut st = self.batch.lock().unwrap();
+                    let keys = std::mem::take(&mut st.keys);
+                    let round = st.round;
+                    st.round += 1;
+                    (keys, round)
+                };
+                let fetched = self.fetch_now(&keys);
+                st = self.batch.lock().unwrap();
+                st.leader_running = false;
+                match fetched {
+                    Ok(res) => {
+                        let res = Arc::new(res);
+                        st.last = Some((round, res.clone()));
+                        self.batch_cv.notify_all();
+                        debug_assert!(round >= my_round);
+                        return Ok(res);
+                    }
+                    Err(e) => {
+                        st.failed = Some(st.failed.map_or(round, |f| f.max(round)));
+                        self.batch_cv.notify_all();
+                        return Err(e);
+                    }
+                }
+            }
+            st = self.batch_cv.wait(st).unwrap();
+        }
+    }
+
+    /// One snapshot fan-out: group `keys` by owning PS shard, issue the
+    /// per-shard `GatherAt`s concurrently, and retry the whole round
+    /// until every involved shard reports the same applied step.
+    fn fetch_now(&self, keys: &[u64]) -> Result<RoundResult> {
+        self.count(&self.stats.rounds, "gba_serve_rounds_total", 1);
+        if keys.is_empty() {
+            return Ok(RoundResult { step: 0, rows: HashMap::new() });
+        }
+        let n = self.shards.n_shards();
+        let mut groups: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut seen: HashSet<u64> = HashSet::with_capacity(keys.len());
+        for &key in keys {
+            if seen.insert(key) {
+                groups[self.router.shard_of_hash(mix64(key))].push(key);
+            }
+        }
+        let involved: Vec<usize> = (0..n).filter(|&s| !groups[s].is_empty()).collect();
+        let dim = self.dim;
+        for attempt in 0..SNAPSHOT_RETRIES {
+            if attempt > 0 {
+                self.count(&self.stats.snapshot_retries, "gba_serve_snapshot_retries_total", 1);
+                std::thread::sleep(SNAPSHOT_RETRY_PAUSE);
+            }
+            // Concurrent fan-out: each involved shard answers on its own
+            // connection/read slot, so the round's latency is the max,
+            // not the sum, of the per-shard gathers.
+            let mut replies: Vec<(usize, Result<(u64, Vec<f32>)>)> = Vec::new();
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = involved
+                    .iter()
+                    .map(|&s| {
+                        let skeys = &groups[s];
+                        scope.spawn(move || {
+                            let reply = self
+                                .shards
+                                .read_call(s, ShardRequest::GatherAt { keys: skeys.clone() })?;
+                            match reply {
+                                ShardReply::RowsAt { step, dim: rdim, data } => {
+                                    debug_assert_eq!(rdim as usize, dim);
+                                    Ok((step, data))
+                                }
+                                other => bail!("shard {s}: expected RowsAt, got {other:?}"),
+                            }
+                        })
+                    })
+                    .collect();
+                for (&s, h) in involved.iter().zip(handles) {
+                    replies.push((s, h.join().expect("gather fan-out thread panicked")));
+                }
+            });
+            let mut parts: Vec<(usize, u64, Vec<f32>)> = Vec::with_capacity(replies.len());
+            for (s, r) in replies {
+                let (step, data) = r?;
+                parts.push((s, step, data));
+            }
+            let step0 = parts.first().map(|p| p.1).unwrap_or(0);
+            if parts.iter().all(|p| p.1 == step0) {
+                let mut rows = HashMap::with_capacity(seen.len());
+                for (s, _, data) in parts {
+                    for (j, &key) in groups[s].iter().enumerate() {
+                        rows.insert(key, data[j * dim..(j + 1) * dim].to_vec());
+                    }
+                }
+                return Ok(RoundResult { step: step0, rows });
+            }
+        }
+        bail!(
+            "no cross-shard snapshot after {SNAPSHOT_RETRIES} attempts — \
+             shards never agreed on an applied step (training wedged mid-flush?)"
+        )
+    }
+}
+
+/// Serve the front over TCP: accept loop, one thread per connection,
+/// speaking the worker-plane gather vocabulary — a connection sends
+/// `WorkerRequest::Gather { keys, batch, fields }` frames and receives
+/// `WorkerReply::Emb` tensors. Any other verb closes the connection
+/// (this plane is read-only by construction). Returns the bound
+/// address; the accept loop runs on a background thread for the life of
+/// the process.
+pub fn serve_listener(front: Arc<ServeFront>, listener: TcpListener) -> std::io::Result<SocketAddr> {
+    let addr = listener.local_addr()?;
+    std::thread::Builder::new().name("serve-accept".into()).spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let front = front.clone();
+            let _ = std::thread::Builder::new()
+                .name("serve-conn".into())
+                .spawn(move || serve_conn(front, stream));
+        }
+    })?;
+    Ok(addr)
+}
+
+fn serve_conn(front: Arc<ServeFront>, stream: TcpStream) {
+    let mut conn = SocketConn::new(stream);
+    loop {
+        match conn.recv() {
+            Ok(WireMsg::WorkerReq(WorkerRequest::Gather { keys, batch, fields })) => {
+                let t = match front.gather(&keys, batch as usize, fields as usize) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        eprintln!("serve: gather failed: {e:#}");
+                        return;
+                    }
+                };
+                if conn.send(WireMsg::WorkerRep(WorkerReply::Emb(t))).is_err() {
+                    return;
+                }
+            }
+            Ok(_) => {
+                eprintln!("serve: non-gather frame on a serving connection; closing it");
+                return;
+            }
+            Err(CodecError::Closed) => return,
+            Err(e) => {
+                eprintln!("serve: connection error: {e}");
+                return;
+            }
+        }
+    }
+}
+
+/// Client half of [`serve_listener`]'s protocol — what `serve-probe`
+/// and the served-QPS bench drive: one blocking gather per call.
+pub struct ServeClient {
+    conn: SocketConn,
+}
+
+impl ServeClient {
+    pub fn connect(addr: &str, deadline: Duration) -> Result<Self> {
+        let conn = connect_retry(addr, deadline)
+            .with_context(|| format!("no serve front listening on {addr}"))?;
+        Ok(ServeClient { conn })
+    }
+
+    pub fn gather(&mut self, keys: &[u64], batch: usize, fields: usize) -> Result<HostTensor> {
+        self.conn
+            .send(WireMsg::WorkerReq(WorkerRequest::Gather {
+                keys: keys.to_vec(),
+                batch: batch as u64,
+                fields: fields as u64,
+            }))
+            .map_err(|e| anyhow!("serve send failed: {e}"))?;
+        match self.conn.recv().map_err(|e| anyhow!("serve recv failed: {e}"))? {
+            WireMsg::WorkerRep(WorkerReply::Emb(t)) => Ok(t),
+            other => bail!("serve protocol: expected Emb, got {:?}", codec::wire_kind(&other)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// In-memory [`ReadShards`]: every key's row is `key + 1000·step`
+    /// in all components, so a served value pins exactly which step the
+    /// row was read at. Invalidation keys are staged per shard.
+    struct MockShards {
+        n: usize,
+        dim: usize,
+        step: AtomicU64,
+        gather_calls: AtomicU64,
+        pending_inval: Mutex<Vec<Vec<u64>>>,
+    }
+
+    impl MockShards {
+        fn new(n: usize, dim: usize) -> Self {
+            MockShards {
+                n,
+                dim,
+                step: AtomicU64::new(0),
+                gather_calls: AtomicU64::new(0),
+                pending_inval: Mutex::new(vec![Vec::new(); n]),
+            }
+        }
+
+        fn row_value(key: u64, step: u64) -> f32 {
+            (key + 1000 * step) as f32
+        }
+
+        /// Advance the training step and stage the touched keys in
+        /// shard 0's invalidation log (eviction is by key, so which
+        /// shard reports it doesn't matter).
+        fn apply(&self, keys: &[u64]) {
+            self.step.fetch_add(1, Ordering::Relaxed);
+            self.pending_inval.lock().unwrap()[0].extend_from_slice(keys);
+        }
+    }
+
+    impl ReadShards for Arc<MockShards> {
+        fn n_shards(&self) -> usize {
+            self.n
+        }
+
+        fn emb_dim(&self) -> usize {
+            self.dim
+        }
+
+        fn read_call(&self, s: usize, req: ShardRequest) -> Result<ShardReply> {
+            match req {
+                ShardRequest::GatherAt { keys } => {
+                    self.gather_calls.fetch_add(1, Ordering::Relaxed);
+                    let step = self.step.load(Ordering::Relaxed);
+                    let mut data = vec![0.0f32; keys.len() * self.dim];
+                    for (i, &key) in keys.iter().enumerate() {
+                        data[i * self.dim..(i + 1) * self.dim]
+                            .fill(MockShards::row_value(key, step));
+                    }
+                    Ok(ShardReply::RowsAt { step, dim: self.dim as u64, data })
+                }
+                ShardRequest::ReadInvalidations { .. } => {
+                    let keys = std::mem::take(&mut self.pending_inval.lock().unwrap()[s]);
+                    Ok(ShardReply::Invalidations {
+                        upto: self.step.load(Ordering::Relaxed),
+                        full: false,
+                        keys,
+                    })
+                }
+                other => bail!("mock: unexpected read verb {other:?}"),
+            }
+        }
+    }
+
+    fn cfg(cache_rows: usize) -> ServeConfig {
+        ServeConfig {
+            listen: "127.0.0.1:0".to_string(),
+            cache_rows,
+            cache_shards: 4,
+            batch_window_us: 0,
+            max_stale_ms: 0, // poll invalidations before every request
+        }
+    }
+
+    fn front_over(mock: &Arc<MockShards>, cache_rows: usize) -> ServeFront {
+        ServeFront::new(Box::new(mock.clone()), cfg(cache_rows))
+    }
+
+    #[test]
+    fn cache_hits_skip_the_ps_and_invalidation_evicts() {
+        let mock = Arc::new(MockShards::new(2, 3));
+        let front = front_over(&mock, 1024);
+
+        let t = front.gather(&[1, 2, 3], 1, 3).unwrap();
+        assert_eq!(t.shape, vec![1, 3, 3]);
+        for (i, key) in [1u64, 2, 3].into_iter().enumerate() {
+            assert_eq!(t.data[i * 3..(i + 1) * 3], [MockShards::row_value(key, 0); 3]);
+        }
+
+        // Same keys again: all hits, no new PS gathers.
+        let calls_before = mock.gather_calls.load(Ordering::Relaxed);
+        let t2 = front.gather(&[1, 2, 3], 1, 3).unwrap();
+        assert_eq!(t2.data, t.data);
+        assert_eq!(mock.gather_calls.load(Ordering::Relaxed), calls_before);
+        let s = front.stats_snapshot();
+        assert_eq!(s.cache_hits, 3);
+        assert_eq!(s.cache_misses, 3);
+
+        // A training apply touching key 2 must evict it: the next
+        // gather re-fetches key 2 at the new step while 1 and 3 are
+        // still served from cache at the old value.
+        mock.apply(&[2]);
+        let t3 = front.gather(&[1, 2, 3], 1, 3).unwrap();
+        assert_eq!(t3.data[0..3], [MockShards::row_value(1, 0); 3]);
+        assert_eq!(t3.data[3..6], [MockShards::row_value(2, 1); 3]);
+        assert_eq!(t3.data[6..9], [MockShards::row_value(3, 0); 3]);
+        assert!(front.stats_snapshot().cache_evictions >= 1);
+    }
+
+    #[test]
+    fn cache_rows_zero_disables_caching() {
+        let mock = Arc::new(MockShards::new(2, 2));
+        let front = front_over(&mock, 0);
+        front.gather(&[7, 8], 1, 2).unwrap();
+        front.gather(&[7, 8], 1, 2).unwrap();
+        let s = front.stats_snapshot();
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.cache_misses, 4);
+        // Every request ran its own fetch round.
+        assert_eq!(s.rounds, 2);
+    }
+
+    #[test]
+    fn duplicate_keys_in_one_request_fetch_once() {
+        let mock = Arc::new(MockShards::new(2, 2));
+        let front = front_over(&mock, 1024);
+        // batch=2, fields=2: key 5 appears three times.
+        let t = front.gather(&[5, 5, 5, 9], 2, 2).unwrap();
+        assert_eq!(t.shape, vec![2, 2, 2]);
+        for slot in 0..3 {
+            assert_eq!(t.data[slot * 2..(slot + 1) * 2], [MockShards::row_value(5, 0); 2]);
+        }
+        assert_eq!(t.data[6..8], [MockShards::row_value(9, 0); 2]);
+    }
+
+    #[test]
+    fn concurrent_misses_coalesce_into_fewer_rounds() {
+        let mock = Arc::new(MockShards::new(2, 2));
+        let mut c = cfg(1 << 20);
+        c.batch_window_us = 2000; // real window so threads can pile in
+        c.max_stale_ms = 60_000; // keep maintenance out of the way
+        let front = Arc::new(ServeFront::new(Box::new(mock.clone()), c));
+
+        let threads = 8;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let front = front.clone();
+                scope.spawn(move || {
+                    // Distinct keys per thread: every request misses.
+                    let keys = [100 + t as u64, 200 + t as u64];
+                    front.gather(&keys, 1, 2).unwrap();
+                });
+            }
+        });
+        let s = front.stats_snapshot();
+        assert_eq!(s.requests, threads as u64);
+        assert_eq!(s.cache_misses, 2 * threads as u64);
+        // The point of the window: strictly fewer fetch rounds than
+        // requests (typically 1-2 for 8 threads in a 2 ms window).
+        assert!(
+            s.rounds < threads as u64,
+            "expected coalescing, got {} rounds for {} requests",
+            s.rounds,
+            threads
+        );
+    }
+
+    #[test]
+    fn listener_serves_the_worker_gather_vocabulary_over_tcp() {
+        let mock = Arc::new(MockShards::new(2, 3));
+        let front = Arc::new(front_over(&mock, 1024));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = serve_listener(front, listener).unwrap();
+
+        let mut client =
+            ServeClient::connect(&addr.to_string(), Duration::from_secs(5)).unwrap();
+        let t = client.gather(&[11, 12], 1, 2).unwrap();
+        assert_eq!(t.shape, vec![1, 2, 3]);
+        assert_eq!(t.data[0..3], [MockShards::row_value(11, 0); 3]);
+        assert_eq!(t.data[3..6], [MockShards::row_value(12, 0); 3]);
+
+        // A non-gather frame closes the connection rather than touching
+        // the read plane.
+        let mut bad = ServeClient::connect(&addr.to_string(), Duration::from_secs(5)).unwrap();
+        bad.conn.send(WireMsg::Req(ShardRequest::Ping)).unwrap();
+        assert!(matches!(bad.conn.recv(), Err(CodecError::Closed | CodecError::Io(_))));
+    }
+}

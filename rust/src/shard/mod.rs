@@ -307,6 +307,26 @@ impl ShardedPs {
         self.pull_stall_ns.load(Ordering::Relaxed)
     }
 
+    /// One read-only RPC against shard `s`, over its read slot — the
+    /// in-process serving plane's door into a live training PS: a
+    /// [`ServeFront`](crate::serve::ServeFront) built over a shared
+    /// `ShardedPs` issues its `GatherAt`/`ReadInvalidations` fan-out
+    /// through here while training flushes continue on the primary
+    /// slots.
+    pub fn read_call(&self, s: usize, req: ShardRequest) -> ShardReply {
+        self.supervisor.read_call(s, req)
+    }
+
+    /// Owning shard of an embedding key (the router's rendezvous hash).
+    pub fn shard_of_key(&self, key: u64) -> usize {
+        self.router.shard_of_key(key)
+    }
+
+    /// Embedding dimension this PS serves.
+    pub fn emb_dim(&self) -> usize {
+        self.emb_dim
+    }
+
     // ---- fault injection / supervision ------------------------------------
 
     /// Deterministically kill shard `s`: its endpoint is severed and its

@@ -19,8 +19,9 @@
 //! Shards hold no coordination state whatsoever — see
 //! [`super::control::ControlPlane`] for the control plane.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::embedding::{EmbeddingConfig, EmbeddingStore};
@@ -69,6 +70,24 @@ pub struct ShardStats {
 /// Minimum dense elements per worker before the parallel sweep engages —
 /// below this, scoped-thread spawn overhead beats the parallel win.
 const MIN_DENSE_ELEMS_PER_WORKER: usize = 4096;
+
+/// Cap on keys buffered in the embedding-invalidation log. When an
+/// apply pushes the total past this, the oldest entries drop and the
+/// log's `floor` rises — readers whose cursor predates the floor get
+/// `full = true` and must treat their whole cache as invalid. 64k keys
+/// × 8 bytes bounds the log at ~512 KiB per shard.
+const INVAL_LOG_MAX_KEYS: usize = 65_536;
+
+/// Bounded log of embedding keys touched by recent applies, drained by
+/// the serving plane's `ReadInvalidations` RPC to evict stale hot-cache
+/// rows. `floor` is the highest apply step whose keys have been dropped
+/// (0 = nothing dropped yet).
+struct InvalLog {
+    upto: u64,
+    floor: u64,
+    total_keys: usize,
+    entries: VecDeque<(u64, Vec<u64>)>,
+}
 
 /// One worker's cut of one tensor: disjoint `[a,b)` views of the
 /// parameter slice, its gradient, and each optimizer state plane.
@@ -169,6 +188,15 @@ pub struct PsShard {
     pub dense: RwLock<DenseShardState>,
     pub emb: EmbeddingStore,
     pub counters: ShardCounters,
+    /// Apply seqlock for snapshot-consistent serving reads: holds
+    /// `2 * opt_step + 1` while an apply for `opt_step` is in flight and
+    /// `2 * opt_step` once it has fully landed (dense *and* embedding).
+    /// [`gather_rows_at`](Self::gather_rows_at) retries until it reads
+    /// the same even value on both sides of the row reads, so a served
+    /// row block never straddles an apply.
+    apply_seq: AtomicU64,
+    /// Recently-invalidated embedding keys for the serving plane.
+    inval: Mutex<InvalLog>,
     /// Worker fan-out for one apply (`[ps] apply_threads`).
     apply_threads: usize,
     // Obs handles resolved once at construction: `labeled` allocates and
@@ -228,6 +256,13 @@ impl PsShard {
             dense: RwLock::new(DenseShardState { params, slots }),
             emb: EmbeddingStore::new(emb_cfg, emb_slots),
             counters: ShardCounters::default(),
+            apply_seq: AtomicU64::new(0),
+            inval: Mutex::new(InvalLog {
+                upto: 0,
+                floor: 0,
+                total_keys: 0,
+                entries: VecDeque::new(),
+            }),
             apply_threads: apply_threads.max(1),
             apply_hist: reg.histogram(
                 &obs::labeled("gba_shard_apply_seconds", "shard", &label),
@@ -256,6 +291,10 @@ impl PsShard {
         opt_emb: &dyn Optimizer,
         opt_step: u64,
     ) {
+        // Seqlock goes odd before any state changes; applies on one
+        // shard are serialized by the flush path, so the store pair
+        // never races another apply.
+        self.apply_seq.store(opt_step * 2 + 1, Ordering::Release);
         // Queueing behind readers is contention, not apply cost — record
         // it separately and start the apply clock once the lock is held.
         let t_lock = Instant::now();
@@ -273,9 +312,71 @@ impl PsShard {
             self.emb.apply_grads_threaded(emb_group, opt_emb, opt_step, self.apply_threads);
             self.counters.emb_keys_applied.fetch_add(emb_group.len() as u64, Ordering::Relaxed);
         }
+        {
+            let mut log = self.inval.lock().unwrap();
+            log.upto = log.upto.max(opt_step);
+            if !emb_group.is_empty() {
+                let keys: Vec<u64> = emb_group.iter().map(|(k, _, _)| *k).collect();
+                log.total_keys += keys.len();
+                log.entries.push_back((opt_step, keys));
+                while log.total_keys > INVAL_LOG_MAX_KEYS {
+                    let Some((step, dropped)) = log.entries.pop_front() else { break };
+                    log.total_keys -= dropped.len();
+                    log.floor = log.floor.max(step);
+                }
+            }
+        }
+        // Rows and dense state are fully landed: seqlock goes even.
+        self.apply_seq.store(opt_step * 2, Ordering::Release);
         let elapsed = t0.elapsed();
         self.counters.apply_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
         self.apply_hist.record(elapsed.as_secs_f64());
+    }
+
+    /// Seqlock-consistent embedding gather for the serving plane:
+    /// materialize-and-read `keys` like a plain `Gather`, but retry the
+    /// whole block until the apply seqlock reads the same *even* value
+    /// on both sides — the returned rows are exactly the state after
+    /// the returned step's apply, never a half-applied mix. Lazy row
+    /// materialization is deterministic in the key, so it never
+    /// perturbs the snapshot.
+    pub fn gather_rows_at(&self, keys: &[u64]) -> (u64, usize, Vec<f32>) {
+        let dim = self.emb.dim();
+        let mut data = vec![0.0f32; keys.len() * dim];
+        loop {
+            let s0 = self.apply_seq.load(Ordering::Acquire);
+            if s0 & 1 == 1 {
+                // An apply is in flight; its emb writes grab the same
+                // store locks we read under, so just yield and re-poll.
+                std::thread::yield_now();
+                continue;
+            }
+            for (i, &key) in keys.iter().enumerate() {
+                self.emb.read_row_into(key, &mut data[i * dim..(i + 1) * dim]);
+            }
+            if self.apply_seq.load(Ordering::Acquire) == s0 {
+                return (s0 >> 1, dim, data);
+            }
+        }
+    }
+
+    /// Drain the invalidation log: `(upto, full, keys)` where `keys`
+    /// are the embedding keys applies with step > `since` touched,
+    /// `upto` is the latest applied step, and `full` means the bounded
+    /// log dropped entries past `since` — the caller must invalidate
+    /// everything it has cached.
+    pub fn invalidations_since(&self, since: u64) -> (u64, bool, Vec<u64>) {
+        let log = self.inval.lock().unwrap();
+        let full = since < log.floor;
+        let mut keys = Vec::new();
+        if !full {
+            for (step, ks) in log.entries.iter() {
+                if *step > since {
+                    keys.extend_from_slice(ks);
+                }
+            }
+        }
+        (log.upto, full, keys)
     }
 
     /// Copy this shard's parameter slices into full-size flat buffers.
@@ -389,6 +490,94 @@ mod tests {
         opt.apply(&mut p2[0], &dense[0], &mut s2[0], 1);
         assert!(params[0].iter().zip(&p2[0]).all(|(a, b)| a.to_bits() == b.to_bits()));
         assert!(slots[0].iter().zip(&s2[0]).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    /// Zero-init shard whose embedding rows move by exactly +1.0 per
+    /// apply (Sgd lr 1.0, grad −1.0): row value == applied step.
+    fn unit_shard() -> PsShard {
+        let init = vec![HostTensor { shape: vec![4], data: vec![0.0; 4] }];
+        let emb_cfg = EmbeddingConfig { dim: 2, init_scale: 0.0, seed: 1, shards: 2 };
+        PsShard::new(0, vec![(0, 4)], &init, 0, emb_cfg, 0, 1)
+    }
+
+    fn unit_apply(shard: &PsShard, keys: &[u64], step: u64) {
+        let opt = Sgd { lr: 1.0 };
+        let emb: Vec<(u64, Vec<f32>, u32)> =
+            keys.iter().map(|&k| (k, vec![-1.0, -1.0], 1)).collect();
+        shard.apply(&[vec![0.0; 4]], &emb, &opt, &opt, step);
+    }
+
+    #[test]
+    fn gather_rows_at_reports_the_applied_step() {
+        let shard = unit_shard();
+        let keys = [3u64, 11, 7];
+        let (step, dim, data) = shard.gather_rows_at(&keys);
+        assert_eq!((step, dim), (0, 2));
+        assert!(data.iter().all(|&x| x == 0.0), "zero-init rows before any apply");
+        for s in 1..=4 {
+            unit_apply(&shard, &keys, s);
+        }
+        let (step, dim, data) = shard.gather_rows_at(&keys);
+        assert_eq!((step, dim), (4, 2));
+        assert!(data.iter().all(|&x| x == 4.0), "row value == applied step, got {data:?}");
+    }
+
+    #[test]
+    fn gather_rows_at_never_observes_a_half_applied_step() {
+        let shard = std::sync::Arc::new(unit_shard());
+        let keys: Vec<u64> = (0..16).map(|k| k * 5 + 1).collect();
+        let applier = {
+            let shard = shard.clone();
+            let keys = keys.clone();
+            std::thread::spawn(move || {
+                for s in 1..=200 {
+                    unit_apply(&shard, &keys, s);
+                }
+            })
+        };
+        // Every apply moves *every* served row by +1, so a consistent
+        // snapshot has all components equal to the reported step; any
+        // half-applied mix would show two adjacent values.
+        let mut last_step = 0;
+        while last_step < 200 {
+            let (step, _, data) = shard.gather_rows_at(&keys);
+            assert!(step >= last_step, "steps must be monotone: {step} < {last_step}");
+            for &x in &data {
+                assert_eq!(x, step as f32, "row straddles apply at step {step}: {data:?}");
+            }
+            last_step = step;
+        }
+        applier.join().unwrap();
+    }
+
+    #[test]
+    fn invalidation_log_reports_keys_past_cursor() {
+        let shard = unit_shard();
+        unit_apply(&shard, &[1, 2], 1);
+        unit_apply(&shard, &[3], 2);
+        let (upto, full, mut keys) = shard.invalidations_since(0);
+        keys.sort_unstable();
+        assert_eq!((upto, full, keys), (2, false, vec![1, 2, 3]));
+        let (upto, full, keys) = shard.invalidations_since(1);
+        assert_eq!((upto, full, keys), (2, false, vec![3]));
+        let (upto, full, keys) = shard.invalidations_since(2);
+        assert_eq!((upto, full, keys), (2, false, vec![]));
+    }
+
+    #[test]
+    fn invalidation_log_overflow_raises_floor_and_reports_full() {
+        let shard = unit_shard();
+        let big: Vec<u64> = (0..40_000u64).collect();
+        let bigger: Vec<u64> = (40_000..80_000u64).collect();
+        unit_apply(&shard, &big, 1);
+        unit_apply(&shard, &bigger, 2);
+        // 80k keys exceed the 64k cap: step 1's entry dropped, floor = 1.
+        let (upto, full, keys) = shard.invalidations_since(0);
+        assert_eq!((upto, full), (2, true));
+        assert!(keys.is_empty(), "a full invalidation reports no key list");
+        let (upto, full, keys) = shard.invalidations_since(1);
+        assert_eq!((upto, full), (2, false));
+        assert_eq!(keys.len(), 40_000, "step 2's entry survives the trim");
     }
 
     #[test]

@@ -296,6 +296,19 @@ pub enum ShardRequest {
     /// lets `Gather`/`ReadDense` overlap an in-flight `Apply` instead
     /// of queueing behind it on one socket.
     ReadHello { shard: u64 },
+    /// Snapshot gather for the serving plane: like `Gather`, but the
+    /// reply also names the shard's applied step and the whole read is
+    /// taken under the shard's apply seqlock — the rows are guaranteed
+    /// not to straddle an in-flight `Apply`. The serve front fans one
+    /// of these out per involved shard and retries until every shard
+    /// reports the same step, so a served batch never observes a
+    /// half-applied global batch.
+    GatherAt { keys: Vec<u64> },
+    /// Drain the shard's embedding-invalidation log: every key whose
+    /// row changed in an apply with step > `since`. Read-only (the log
+    /// is a serving-plane artifact, not shard state) — the serve front
+    /// polls this to evict stale hot-cache entries.
+    ReadInvalidations { since: u64 },
 }
 
 impl ShardRequest {
@@ -318,6 +331,8 @@ impl ShardRequest {
             ShardRequest::SwapPolicy { .. } => "swap_policy",
             ShardRequest::ObsScrape => "obs_scrape",
             ShardRequest::ReadHello { .. } => "read_hello",
+            ShardRequest::GatherAt { .. } => "gather_at",
+            ShardRequest::ReadInvalidations { .. } => "read_invalidations",
         }
     }
 }
@@ -354,6 +369,15 @@ pub enum ShardReply {
     Stats { stats: ShardStats, emb_mem_bytes: u64 },
     /// `ObsScrape` payload: the registry's flat numeric snapshot.
     Obs { entries: Vec<(String, f64)> },
+    /// `GatherAt` payload: `Rows` plus the shard's applied step the
+    /// rows were read at (seqlock-consistent — see `GatherAt`).
+    RowsAt { step: u64, dim: u64, data: Vec<f32> },
+    /// `ReadInvalidations` payload. `upto` is the shard's latest
+    /// applied step; `keys` are the rows invalidated by applies with
+    /// step > the request's `since`. `full` means the bounded log has
+    /// dropped entries past `since` — the caller must treat *every*
+    /// cached row as invalid.
+    Invalidations { upto: u64, full: bool, keys: Vec<u64> },
 }
 
 // ---- encode -----------------------------------------------------------------
@@ -383,8 +407,9 @@ fn put_str(b: &mut Vec<u8>, s: &str) {
     b.extend_from_slice(s.as_bytes());
 }
 
-fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
-    put_u32(b, xs.len() as u32);
+/// Raw f32 wire bytes, no count prefix — the body shared by [`put_f32s`]
+/// and the scatter/gather rows-frame writer ([`write_rows_frame`]).
+fn append_f32_bytes(b: &mut Vec<u8>, xs: &[f32]) {
     if cfg!(target_endian = "little") {
         // SAFETY: on a little-endian host an f32's in-memory bytes are
         // exactly its wire encoding (`to_le_bytes(to_bits(x))`), and any
@@ -401,6 +426,11 @@ fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
             put_f32(b, x);
         }
     }
+}
+
+fn put_f32s(b: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(b, xs.len() as u32);
+    append_f32_bytes(b, xs);
 }
 
 fn put_f32_vecs(b: &mut Vec<u8>, xss: &[Vec<f32>]) {
@@ -671,6 +701,17 @@ fn encode_req(b: &mut Vec<u8>, r: &ShardRequest) {
             put_u8(b, 15);
             put_u64(b, *shard);
         }
+        ShardRequest::GatherAt { keys } => {
+            put_u8(b, 16);
+            put_u32(b, keys.len() as u32);
+            for &k in keys {
+                put_u64(b, k);
+            }
+        }
+        ShardRequest::ReadInvalidations { since } => {
+            put_u8(b, 17);
+            put_u64(b, *since);
+        }
     }
 }
 
@@ -716,6 +757,21 @@ fn encode_reply(b: &mut Vec<u8>, r: &ShardReply) {
             for (name, value) in entries {
                 put_str(b, name);
                 put_f64(b, *value);
+            }
+        }
+        ShardReply::RowsAt { step, dim, data } => {
+            put_u8(b, 7);
+            put_u64(b, *step);
+            put_u64(b, *dim);
+            put_f32s(b, data);
+        }
+        ShardReply::Invalidations { upto, full, keys } => {
+            put_u8(b, 8);
+            put_u64(b, *upto);
+            put_u8(b, *full as u8);
+            put_u32(b, keys.len() as u32);
+            for &k in keys {
+                put_u64(b, k);
             }
         }
     }
@@ -1047,6 +1103,8 @@ fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
         },
         14 => ShardRequest::ObsScrape,
         15 => ShardRequest::ReadHello { shard: rd.u64()? },
+        16 => ShardRequest::GatherAt { keys: rd.u64s()? },
+        17 => ShardRequest::ReadInvalidations { since: rd.u64()? },
         _ => return Err(CodecError::Malformed("shard request tag")),
     })
 }
@@ -1089,6 +1147,20 @@ fn decode_reply(rd: &mut Rd) -> Result<ShardReply, CodecError> {
             }
             ShardReply::Obs { entries }
         }
+        7 => {
+            let step = rd.u64()?;
+            let dim = rd.u64()?;
+            ShardReply::RowsAt { step, dim, data: rd.f32s()? }
+        }
+        8 => ShardReply::Invalidations {
+            upto: rd.u64()?,
+            full: match rd.u8()? {
+                0 => false,
+                1 => true,
+                _ => return Err(CodecError::Malformed("invalidations full flag")),
+            },
+            keys: rd.u64s()?,
+        },
         _ => return Err(CodecError::Malformed("shard reply tag")),
     })
 }
@@ -1132,6 +1204,55 @@ pub fn write_frame<W: Write>(w: &mut W, msg: &WireMsg) -> Result<(), CodecError>
     w.write_all(&out).map_err(|e| CodecError::Io(e.kind()))?;
     w.flush().map_err(|e| CodecError::Io(e.kind()))?;
     record_frame_bytes("tx", msg, out.len());
+    Ok(())
+}
+
+/// Scatter/gather encode for `Gather` replies: write one length-prefixed
+/// [`ShardReply::Rows`] frame whose rows are produced *into* the frame's
+/// output buffer by `fill(row_index, row_slice)` — the shard never
+/// assembles the `keys.len() * dim` float `Vec` the materializing path
+/// builds before encoding. Byte output (and the tx-bytes metric sample)
+/// is identical to
+/// `write_frame(w, &WireMsg::Reply(ShardReply::Rows { dim, data }))`,
+/// pinned by `rows_frame_streaming_encode_is_byte_identical`.
+///
+/// `fill` writes through a `dim`-sized scratch row, so on little-endian
+/// hosts each row costs one bulk byte copy into the out-buffer; one
+/// buffer, one write — a frame is never interleaved on the stream.
+pub fn write_rows_frame<W: Write>(
+    w: &mut W,
+    dim: usize,
+    n_rows: usize,
+    fill: &mut dyn FnMut(usize, &mut [f32]),
+) -> Result<(), CodecError> {
+    let floats = n_rows * dim;
+    let mut out = Vec::with_capacity(4 + 1 + 8 + 1 + 1 + 8 + 4 + floats.saturating_mul(4));
+    out.extend_from_slice(&[0u8; 4]); // length prefix, patched below
+    put_u8(&mut out, WIRE_VERSION);
+    put_u64(&mut out, crate::obs::trace::current());
+    put_u8(&mut out, 4); // outer tag: Reply
+    put_u8(&mut out, 2); // reply tag: Rows
+    put_u64(&mut out, dim as u64);
+    put_u32(&mut out, floats as u32);
+    let mut row = vec![0.0f32; dim];
+    for i in 0..n_rows {
+        fill(i, &mut row);
+        append_f32_bytes(&mut out, &row);
+    }
+    let len = u32::try_from(out.len() - 4).map_err(|_| CodecError::Oversize(u32::MAX))?;
+    if len > MAX_FRAME_BYTES {
+        return Err(CodecError::Oversize(len));
+    }
+    out[..4].copy_from_slice(&len.to_le_bytes());
+    w.write_all(&out).map_err(|e| CodecError::Io(e.kind()))?;
+    w.flush().map_err(|e| CodecError::Io(e.kind()))?;
+    // Metric parity with `write_frame`'s record for a Reply message.
+    crate::obs::global()
+        .histogram(
+            &crate::obs::labeled("gba_wire_tx_bytes", "msg", "reply"),
+            crate::obs::Histogram::byte_bounds(),
+        )
+        .record(out.len() as f64);
     Ok(())
 }
 
@@ -1586,5 +1707,120 @@ mod tests {
         let mut buf = Vec::new();
         write_frame(&mut buf, &msg).unwrap();
         assert_eq!(frame_size(&msg), buf.len());
+    }
+
+    #[test]
+    fn gather_at_roundtrip_and_truncation_rejected() {
+        let body = encode(&WireMsg::Req(ShardRequest::GatherAt { keys: vec![u64::MAX, 0, 7] }));
+        match decode(&body).unwrap() {
+            WireMsg::Req(ShardRequest::GatherAt { keys }) => {
+                assert_eq!(keys, vec![u64::MAX, 0, 7])
+            }
+            other => panic!("{other:?}"),
+        }
+        for cut in 0..body.len() {
+            assert!(decode(&body[..cut]).is_err(), "decoded truncated GatherAt at {cut}");
+        }
+    }
+
+    #[test]
+    fn read_invalidations_roundtrip_and_truncation_rejected() {
+        let body =
+            encode(&WireMsg::Req(ShardRequest::ReadInvalidations { since: u64::MAX - 1 }));
+        match decode(&body).unwrap() {
+            WireMsg::Req(ShardRequest::ReadInvalidations { since }) => {
+                assert_eq!(since, u64::MAX - 1)
+            }
+            other => panic!("{other:?}"),
+        }
+        for cut in 0..body.len() {
+            assert!(decode(&body[..cut]).is_err(), "decoded truncated ReadInvalidations at {cut}");
+        }
+    }
+
+    #[test]
+    fn rows_at_roundtrip_preserves_bits_and_truncation_rejected() {
+        let rep = ShardReply::RowsAt {
+            step: u64::MAX,
+            dim: 3,
+            data: vec![1.0, f32::NAN, -0.0, f32::INFINITY, 0.5, -2.0],
+        };
+        let body = encode(&WireMsg::Reply(rep.clone()));
+        match (decode(&body).unwrap(), &rep) {
+            (
+                WireMsg::Reply(ShardReply::RowsAt { step, dim, data }),
+                ShardReply::RowsAt { step: ws, dim: wd, data: wdata },
+            ) => {
+                assert_eq!(step, *ws);
+                assert_eq!(dim, *wd);
+                assert_eq!(bits(&data), bits(wdata));
+            }
+            (other, _) => panic!("{other:?}"),
+        }
+        for cut in 0..body.len() {
+            assert!(decode(&body[..cut]).is_err(), "decoded truncated RowsAt at {cut}");
+        }
+    }
+
+    #[test]
+    fn invalidations_roundtrip_and_junk_full_flag_rejected() {
+        for (full, keys) in [(false, vec![1u64, u64::MAX]), (true, vec![])] {
+            let body = encode(&WireMsg::Reply(ShardReply::Invalidations {
+                upto: 42,
+                full,
+                keys: keys.clone(),
+            }));
+            match decode(&body).unwrap() {
+                WireMsg::Reply(ShardReply::Invalidations { upto, full: f, keys: k }) => {
+                    assert_eq!(upto, 42);
+                    assert_eq!(f, full);
+                    assert_eq!(k, keys);
+                }
+                other => panic!("{other:?}"),
+            }
+            for cut in 0..body.len() {
+                assert!(decode(&body[..cut]).is_err(), "decoded truncated Invalidations at {cut}");
+            }
+        }
+        // A junk `full` byte is Malformed, not a bool cast.
+        let mut body = encode(&WireMsg::Reply(ShardReply::Invalidations {
+            upto: 0,
+            full: false,
+            keys: vec![],
+        }));
+        let flag_at = body.len() - 4 - 1; // before the empty keys count
+        body[flag_at] = 9;
+        assert_eq!(decode(&body).unwrap_err(), CodecError::Malformed("invalidations full flag"));
+    }
+
+    #[test]
+    fn rows_frame_streaming_encode_is_byte_identical() {
+        let dim = 3usize;
+        let rows: Vec<Vec<f32>> = vec![
+            vec![1.0, f32::NAN, -0.0],
+            vec![f32::INFINITY, 0.5, -2.0],
+            vec![0.0, 7.25, f32::MIN_POSITIVE],
+        ];
+        let data: Vec<f32> = rows.iter().flatten().copied().collect();
+        crate::obs::trace::set_current(0x0123_4567_89ab_cdef);
+        let mut materialized = Vec::new();
+        write_frame(
+            &mut materialized,
+            &WireMsg::Reply(ShardReply::Rows { dim: dim as u64, data }),
+        )
+        .unwrap();
+        let mut streamed = Vec::new();
+        write_rows_frame(&mut streamed, dim, rows.len(), &mut |i, out| {
+            out.copy_from_slice(&rows[i]);
+        })
+        .unwrap();
+        crate::obs::trace::clear();
+        assert_eq!(streamed, materialized);
+        // Zero rows and zero dim are well-formed frames too.
+        let mut a = Vec::new();
+        write_frame(&mut a, &WireMsg::Reply(ShardReply::Rows { dim: 4, data: vec![] })).unwrap();
+        let mut b = Vec::new();
+        write_rows_frame(&mut b, 4, 0, &mut |_, _| unreachable!()).unwrap();
+        assert_eq!(a, b);
     }
 }

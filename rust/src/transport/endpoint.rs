@@ -30,6 +30,26 @@ use crate::util::chan;
 pub trait Conn: Send {
     fn send(&mut self, msg: WireMsg) -> Result<(), CodecError>;
     fn recv(&mut self) -> Result<WireMsg, CodecError>;
+
+    /// Send a [`ShardReply::Rows`] reply whose rows are produced by
+    /// `fill(row_index, row_slice)`. The default materializes the full
+    /// float block and goes through [`send`](Conn::send) — correct for
+    /// value-moving connections ([`ChanConn`]) — while [`SocketConn`]
+    /// overrides it to scatter/gather-encode rows straight into the
+    /// frame's out-buffer ([`codec::write_rows_frame`]), skipping the
+    /// `keys.len() * dim` staging `Vec` on the gather reply hot path.
+    fn send_rows(
+        &mut self,
+        dim: usize,
+        n_rows: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+    ) -> Result<(), CodecError> {
+        let mut data = vec![0.0f32; n_rows * dim];
+        for (i, row) in data.chunks_exact_mut(dim.max(1)).enumerate().take(n_rows) {
+            fill(i, row);
+        }
+        self.send(WireMsg::Reply(ShardReply::Rows { dim: dim as u64, data }))
+    }
 }
 
 /// In-process endpoint over a [`chan::duplex`] pair. The channel
@@ -72,6 +92,15 @@ impl Conn for SocketConn {
 
     fn recv(&mut self) -> Result<WireMsg, CodecError> {
         codec::read_frame(&mut self.stream)
+    }
+
+    fn send_rows(
+        &mut self,
+        dim: usize,
+        n_rows: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+    ) -> Result<(), CodecError> {
+        codec::write_rows_frame(&mut self.stream, dim, n_rows, fill)
     }
 }
 
@@ -157,6 +186,45 @@ mod tests {
         server.join().unwrap();
         // Server side hung up: the next recv reports a closed peer.
         assert!(client.recv().is_err());
+    }
+
+    #[test]
+    fn send_rows_decodes_as_a_plain_rows_reply_on_both_transports() {
+        // Socket: the streaming override must produce a frame the
+        // standard reader decodes as ShardReply::Rows.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = SocketConn::new(stream);
+            conn.send_rows(2, 3, &mut |i, row| {
+                row[0] = i as f32;
+                row[1] = -(i as f32);
+            })
+            .unwrap();
+        });
+        let mut client = SocketConn::new(TcpStream::connect(addr).unwrap());
+        match client.recv().unwrap() {
+            WireMsg::Reply(ShardReply::Rows { dim, data }) => {
+                assert_eq!(dim, 2);
+                assert_eq!(data, vec![0.0, -0.0, 1.0, -1.0, 2.0, -2.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        server.join().unwrap();
+
+        // Channel: the default materializing path carries the same reply.
+        let (a, b) = chan::duplex();
+        let mut tx = ChanConn { pipe: a };
+        let mut rx = ChanConn { pipe: b };
+        tx.send_rows(2, 2, &mut |i, row| row.fill(i as f32 + 0.5)).unwrap();
+        match rx.recv().unwrap() {
+            WireMsg::Reply(ShardReply::Rows { dim, data }) => {
+                assert_eq!(dim, 2);
+                assert_eq!(data, vec![0.5, 0.5, 1.5, 1.5]);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -64,6 +64,17 @@ fn try_handle_read(shard: &PsShard, req: ShardRequest) -> Result<ShardReply, Sha
             }
             ShardReply::Rows { dim: dim as u64, data }
         }
+        ShardRequest::GatherAt { keys } => {
+            // Serving-plane gather: same rows as `Gather`, read under
+            // the shard's apply seqlock and stamped with the step they
+            // are consistent at.
+            let (step, dim, data) = shard.gather_rows_at(&keys);
+            ShardReply::RowsAt { step, dim: dim as u64, data }
+        }
+        ShardRequest::ReadInvalidations { since } => {
+            let (upto, full, keys) = shard.invalidations_since(since);
+            ShardReply::Invalidations { upto, full, keys }
+        }
         ShardRequest::GetMeta { key } => ShardReply::Meta { meta: shard.emb.meta(key) },
         ShardRequest::DumpRows => {
             let mut rows: Vec<RowRecord> = Vec::with_capacity(shard.emb.len());
@@ -221,9 +232,26 @@ pub fn serve(service: ShardService, conn: Box<dyn Conn>) {
 /// [`serve`], but reporting how many requests were handled and why the
 /// loop exited (tests assert on the exit cause).
 pub fn serve_counting(mut service: ShardService, mut conn: Box<dyn Conn>) -> (u64, CodecError) {
+    let shard = service.shard_handle();
     let mut handled = 0u64;
     loop {
         match conn.recv() {
+            // Gather is the read hot path: stream its rows reply
+            // straight into the connection out-buffer instead of
+            // materializing the `keys.len() * dim` float block first
+            // (same counter and bytes metric as the generic path).
+            Ok(WireMsg::Req(ShardRequest::Gather { keys })) => {
+                obs::global()
+                    .counter(&obs::labeled("gba_shard_requests_total", "rpc", "gather"))
+                    .inc();
+                handled += 1;
+                let dim = shard.emb.dim();
+                if let Err(e) = conn.send_rows(dim, keys.len(), &mut |i, row| {
+                    shard.emb.read_row_into(keys[i], row);
+                }) {
+                    return (handled, e);
+                }
+            }
             Ok(WireMsg::Req(req)) => {
                 let reply = service.handle(req);
                 handled += 1;
@@ -248,6 +276,20 @@ pub fn serve_reads(shard: Arc<PsShard>, mut conn: Box<dyn Conn>) -> (u64, CodecE
     let mut handled = 0u64;
     loop {
         match conn.recv() {
+            // Same streaming Gather hot path as `serve_counting` — the
+            // companion connection is where serving gathers land.
+            Ok(WireMsg::Req(ShardRequest::Gather { keys })) => {
+                obs::global()
+                    .counter(&obs::labeled("gba_shard_requests_total", "rpc", "gather"))
+                    .inc();
+                handled += 1;
+                let dim = shard.emb.dim();
+                if let Err(e) = conn.send_rows(dim, keys.len(), &mut |i, row| {
+                    shard.emb.read_row_into(keys[i], row);
+                }) {
+                    return (handled, e);
+                }
+            }
             Ok(WireMsg::Req(req)) => {
                 obs::global()
                     .counter(&obs::labeled("gba_shard_requests_total", "rpc", req.kind_name()))

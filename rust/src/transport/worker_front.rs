@@ -76,11 +76,31 @@ const ACCEPT_POLL: Duration = Duration::from_millis(5);
 
 /// Idle sweeps before the day loop parks. A burst of traffic is served
 /// spin-free; a genuinely idle fleet (every worker mid-compute) costs
-/// one short sleep per wakeup instead of a spinning core.
+/// a few short sleeps per quiet spell instead of a spinning core.
 const IDLE_SPINS_BEFORE_PARK: u32 = 64;
 
-/// How long the day loop parks when no connection had traffic.
-const IDLE_PARK: Duration = Duration::from_micros(500);
+/// First park when no connection had traffic. Consecutive idle parks
+/// double from here ([`idle_backoff`]) up to [`IDLE_PARK_MAX`]: a
+/// briefly quiet fleet pays one 500 µs nap, a long-idle fleet (workers
+/// deep in compute, or a day waiting on stragglers) converges to ~32
+/// wakeups/s instead of 2000/s of pure poll overhead. Any traffic
+/// resets the ladder, so burst latency stays bounded by the *first*
+/// rung, not the last.
+const IDLE_PARK_BASE: Duration = Duration::from_micros(500);
+
+/// Ceiling of the idle backoff ladder. High enough to make an idle
+/// front cheap, low enough that the first frame after a long lull still
+/// waits at most ~16 ms before the sweep sees it.
+const IDLE_PARK_MAX: Duration = Duration::from_millis(16);
+
+/// Bounded exponential idle backoff: park `n` (0-based count of
+/// consecutive idle parks) maps to `IDLE_PARK_BASE << n`, saturating at
+/// [`IDLE_PARK_MAX`].
+fn idle_backoff(n: u32) -> Duration {
+    let base = IDLE_PARK_BASE.as_micros() as u64;
+    let max = IDLE_PARK_MAX.as_micros() as u64;
+    Duration::from_micros(base.saturating_mul(1u64 << n.min(16)).min(max))
+}
 
 /// The config-derived shape every connecting worker must declare in its
 /// `Hello` — identity (worker id in range, no duplicates) plus the keys
@@ -741,7 +761,7 @@ fn serve_day_loop(
             idle_spins += 1;
             if idle_spins > IDLE_SPINS_BEFORE_PARK {
                 wakeups.inc();
-                std::thread::sleep(IDLE_PARK);
+                std::thread::sleep(idle_backoff(idle_spins - IDLE_SPINS_BEFORE_PARK - 1));
             }
         } else {
             idle_spins = 0;
@@ -1125,5 +1145,96 @@ mod tests {
         assert!(msg.contains("re-derived"), "unhelpful disagreement error: {msg}");
         assert_eq!(front.connected(), 0, "the slot reopened for a replacement");
         assert!(t.join().unwrap());
+    }
+}
+
+#[cfg(test)]
+mod idle_backoff_tests {
+    use super::*;
+
+    #[test]
+    fn backoff_ladder_doubles_from_base_and_saturates() {
+        assert_eq!(idle_backoff(0), IDLE_PARK_BASE);
+        assert_eq!(idle_backoff(1), IDLE_PARK_BASE * 2);
+        assert_eq!(idle_backoff(2), IDLE_PARK_BASE * 4);
+        assert_eq!(idle_backoff(3), IDLE_PARK_BASE * 8);
+        assert_eq!(idle_backoff(5), IDLE_PARK_MAX);
+        // Past the ceiling it stays there, including absurd counts that
+        // would overflow a naive shift.
+        assert_eq!(idle_backoff(16), IDLE_PARK_MAX);
+        assert_eq!(idle_backoff(u32::MAX), IDLE_PARK_MAX);
+    }
+
+    #[test]
+    fn backoff_is_monotone_nondecreasing() {
+        for n in 0..20u32 {
+            assert!(
+                idle_backoff(n) <= idle_backoff(n + 1),
+                "backoff shrank at rung {n}: {:?} > {:?}",
+                idle_backoff(n),
+                idle_backoff(n + 1)
+            );
+        }
+    }
+
+    /// The loop-wakeup counter must keep counting parks under the
+    /// backoff ladder — an idle day loop (one worker that begins a day
+    /// and then goes quiet) parks repeatedly, and the obs registry sees
+    /// every one of those naps.
+    #[test]
+    fn idle_day_loop_still_counts_wakeups() {
+        use crate::coordinator::modes::GbaPolicy;
+        use crate::embedding::EmbeddingConfig;
+        use crate::optim::Sgd;
+        use crate::runtime::{HostTensor, VariantDims};
+        use crate::transport::endpoint::{Conn, SocketConn};
+        use std::net::TcpStream;
+
+        let shape = WorkerShape {
+            workers: 1,
+            local_batch: 16,
+            fields: 4,
+            emb_dim: 4,
+            seed: 7,
+            samples_per_day: 512,
+        };
+        let ps = ShardedPs::new(
+            VariantDims { fields: 4, emb_dim: 4, hidden1: 8, hidden2: 4, mlp_in: 20 },
+            vec![HostTensor { shape: vec![4], data: vec![0.0; 4] }],
+            EmbeddingConfig { dim: 4, init_scale: 0.0, seed: 1, shards: 2 },
+            Box::new(Sgd { lr: 1.0 }),
+            Box::new(Sgd { lr: 1.0 }),
+            Box::new(GbaPolicy::with_iota(1, 3)),
+        );
+
+        let before = obs::global().counter("gba_front_loop_wakeups_total").get();
+        let front = WorkerFront::bind("127.0.0.1:0", shape.clone()).unwrap();
+        let addr = front.addr();
+        let t = std::thread::spawn(move || {
+            let mut conn = SocketConn::new(TcpStream::connect(addr).unwrap());
+            conn.send(WireMsg::WorkerReq(shape.hello(0))).unwrap();
+            assert!(matches!(conn.recv().unwrap(), WireMsg::WorkerRep(WorkerReply::Ok)));
+            conn.send(WireMsg::WorkerReq(WorkerRequest::BeginDay)).unwrap();
+            assert!(matches!(conn.recv().unwrap(), WireMsg::WorkerRep(WorkerReply::Day { .. })));
+            // Go quiet long enough for the sweep to run the idle ladder,
+            // then finish the day so run_day can return.
+            std::thread::sleep(Duration::from_millis(100));
+            conn.send(WireMsg::WorkerReq(WorkerRequest::EndOfDay {
+                batches: 0,
+                samples: 0,
+                failures: 0,
+                busy_sec: 0.0,
+            }))
+            .unwrap();
+            assert!(matches!(conn.recv().unwrap(), WireMsg::WorkerRep(WorkerReply::Ok)));
+            conn
+        });
+        front.ensure_connected(Duration::from_secs(10)).unwrap();
+        front.run_day(0, &ps).unwrap();
+        let _conn = t.join().unwrap();
+        assert!(
+            obs::global().counter("gba_front_loop_wakeups_total").get() > before,
+            "a 100 ms idle spell parked zero times"
+        );
     }
 }

@@ -53,6 +53,8 @@ pub struct BenchResult {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    /// Tail latency per iteration — the number a serving SLO watches.
+    pub p99_ns: f64,
     pub std_ns: f64,
     pub samples: usize,
     pub total_iters: u64,
@@ -73,6 +75,7 @@ impl BenchResult {
             .set("mean_ns", self.mean_ns)
             .set("p50_ns", self.p50_ns)
             .set("p95_ns", self.p95_ns)
+            .set("p99_ns", self.p99_ns)
             .set("std_ns", self.std_ns)
             .set("samples", self.samples)
             .set("total_iters", self.total_iters)
@@ -167,6 +170,7 @@ impl Bencher {
             mean_ns: stats::mean(&samples),
             p50_ns: stats::percentile_sorted(&samples, 50.0),
             p95_ns: stats::percentile_sorted(&samples, 95.0),
+            p99_ns: stats::percentile_sorted(&samples, 99.0),
             std_ns: stats::std(&samples),
             samples: samples.len(),
             total_iters,

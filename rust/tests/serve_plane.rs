@@ -1,0 +1,284 @@
+//! Online serving plane, end to end (ISSUE 9).
+//!
+//! Pins the two contracts `gba-train serve` stands on:
+//!
+//!  * **Cache invalidation at the apply point** — a row a training apply
+//!    just changed must never be served stale past the staleness window,
+//!    on both transports: in-proc (`Arc<ShardedPs>` behind the
+//!    `ReadShards` seam) and remote (`serve_shard` accept loops over
+//!    TCP with `ReadHello` read companions).
+//!  * **Snapshot consistency** — a served gather never observes a
+//!    half-applied global batch: under a concurrent applier that moves
+//!    every served key each step, every response is bit-identical to
+//!    *one* applied step, and steps only move forward.
+//!
+//! Fixtures use `init_scale = 0.0` + `Sgd { lr: 1.0 }` + a gradient of
+//! `-1.0` per key per step, so the exact row value IS the applied step
+//! count — any torn or stale read shows up as a wrong number, not a
+//! tolerance failure.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use gba::config::ServeConfig;
+use gba::coordinator::modes::GbaPolicy;
+use gba::embedding::EmbeddingConfig;
+use gba::optim::Sgd;
+use gba::runtime::{HostTensor, VariantDims};
+use gba::serve::{serve_listener, RemoteReadShards, ServeClient, ServeFront};
+use gba::shard::{ShardRouter, ShardedPs};
+use gba::transport::codec::{GradPush, PullReply, ShardReply, ShardRequest};
+use gba::transport::endpoint::{rpc, SocketConn};
+use gba::transport::remote::serve_shard;
+use gba::transport::supervisor::ShardSpawnSpec;
+
+const DIM: usize = 4;
+const DENSE_LEN: usize = 4;
+const FIELDS: usize = 4;
+const BATCH: usize = 4;
+
+/// 16 keys, asserted to land on both PS shards so every gather is a
+/// genuine cross-shard fan-out.
+fn served_keys(ps: &ShardedPs) -> Vec<u64> {
+    let keys: Vec<u64> = (0..(BATCH * FIELDS) as u64).collect();
+    let shards: std::collections::HashSet<usize> =
+        keys.iter().map(|&k| ps.shard_of_key(k)).collect();
+    assert!(shards.len() > 1, "fixture keys all hash to one shard; widen the key range");
+    keys
+}
+
+fn two_shard_ps() -> Arc<ShardedPs> {
+    Arc::new(ShardedPs::with_shards(
+        VariantDims { fields: FIELDS, emb_dim: DIM, hidden1: 8, hidden2: 4, mlp_in: 20 },
+        vec![HostTensor { shape: vec![DENSE_LEN], data: vec![0.0; DENSE_LEN] }],
+        EmbeddingConfig { dim: DIM, init_scale: 0.0, seed: 1, shards: 2 },
+        Box::new(Sgd { lr: 1.0 }),
+        Box::new(Sgd { lr: 1.0 }),
+        Box::new(GbaPolicy::with_iota(1, 3)),
+        2,
+    ))
+}
+
+fn front_cfg(cache_rows: usize) -> ServeConfig {
+    ServeConfig {
+        listen: "127.0.0.1:0".to_string(),
+        cache_rows,
+        cache_shards: 4,
+        batch_window_us: 0,
+        // Poll invalidations on every request: the staleness window is
+        // zero, so a stale hit is a bug, not a config artifact.
+        max_stale_ms: 0,
+    }
+}
+
+/// One training step through the real pull/push seam: every key in
+/// `keys` gets a `-1.0` gradient, so each flush adds exactly `+1.0`
+/// (lr 1.0, one contributing worker) to every served row.
+fn train_step(ps: &ShardedPs, keys: &[u64]) {
+    let item = loop {
+        match ps.pull(0) {
+            PullReply::Work(item) => break item,
+            PullReply::Wait => std::thread::yield_now(),
+            PullReply::EndOfData => panic!("fixture ran out of batches"),
+        }
+    };
+    ps.push(GradPush {
+        worker: 0,
+        token: item.token,
+        dense: vec![HostTensor { shape: vec![DENSE_LEN], data: vec![0.0; DENSE_LEN] }],
+        emb: keys.iter().map(|&k| (k, vec![-1.0; DIM])).collect(),
+        n_samples: 1,
+        loss: 0.0,
+    });
+}
+
+#[test]
+fn inproc_apply_invalidates_cached_rows() {
+    let ps = two_shard_ps();
+    let keys = served_keys(&ps);
+    let cached = ServeFront::new(Box::new(ps.clone()), front_cfg(1024));
+    let direct = ServeFront::new(Box::new(ps.clone()), front_cfg(0));
+
+    let before = cached.gather(&keys, BATCH, FIELDS).unwrap();
+    assert_eq!(before.shape, vec![BATCH, FIELDS, DIM]);
+    assert!(before.data.iter().all(|&v| v == 0.0), "untrained rows must be zero");
+    let again = cached.gather(&keys, BATCH, FIELDS).unwrap();
+    assert_eq!(again.data, before.data);
+    assert!(
+        cached.stats_snapshot().cache_hits >= keys.len() as u64,
+        "second gather should be served from the hot-key cache"
+    );
+
+    // A training day moves every served key underneath the front.
+    ps.set_day(0, 8);
+    train_step(&ps, &keys);
+
+    let fresh = direct.gather(&keys, BATCH, FIELDS).unwrap();
+    assert!(fresh.data.iter().all(|&v| v == 1.0), "apply must land before an uncached read");
+    let served = cached.gather(&keys, BATCH, FIELDS).unwrap();
+    assert_eq!(
+        served.data, fresh.data,
+        "cached front served a stale row past the invalidation point"
+    );
+    let s = cached.stats_snapshot();
+    assert!(s.cache_evictions >= keys.len() as u64, "applied keys must be evicted, got {s:?}");
+}
+
+/// Boot one `serve_shard` accept loop and return its address plus the
+/// primary connection that anchors the generation read companions
+/// attach to (and that raw `Apply` RPCs drive).
+fn boot_shard(index: usize) -> (String, SocketConn) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let spec = ShardSpawnSpec {
+            index,
+            ranges: vec![(0, DENSE_LEN)],
+            emb_cfg: EmbeddingConfig { dim: DIM, init_scale: 0.0, seed: 1, shards: 2 },
+            opt_dense: Box::new(Sgd { lr: 1.0 }),
+            opt_emb: Box::new(Sgd { lr: 1.0 }),
+            addr: None,
+            apply_threads: 1,
+        };
+        let init = [HostTensor { shape: vec![DENSE_LEN], data: vec![0.0; DENSE_LEN] }];
+        let _ = serve_shard(listener, spec, &init);
+    });
+    let mut primary = SocketConn::new(TcpStream::connect(&addr).unwrap());
+    match rpc(&mut primary, ShardRequest::Ping).unwrap() {
+        ShardReply::Ok => {}
+        other => panic!("shard {index}: Ping rejected: {other:?}"),
+    }
+    (addr, primary)
+}
+
+/// Apply `opt_step` on BOTH shard servers (keys routed the same way the
+/// serve front routes gathers), so the fleet agrees on the step again
+/// once the round of RPCs completes.
+fn remote_apply(primaries: &mut [SocketConn], keys: &[u64], opt_step: u64) {
+    let router = ShardRouter::new(primaries.len());
+    for (s, conn) in primaries.iter_mut().enumerate() {
+        let emb: Vec<(u64, Vec<f32>, u32)> = keys
+            .iter()
+            .filter(|&&k| router.shard_of_key(k) == s)
+            .map(|&k| (k, vec![-1.0; DIM], 1))
+            .collect();
+        let reply = rpc(
+            conn,
+            ShardRequest::Apply { opt_step, dense: vec![vec![0.0; DENSE_LEN]], emb },
+        )
+        .unwrap();
+        assert!(matches!(reply, ShardReply::Ok), "shard {s}: apply rejected");
+    }
+}
+
+#[test]
+fn remote_apply_invalidates_cached_rows() {
+    let (addr0, prim0) = boot_shard(0);
+    let (addr1, prim1) = boot_shard(1);
+    let mut primaries = [prim0, prim1];
+    let addrs = [addr0, addr1];
+
+    let reads = RemoteReadShards::connect(&addrs, DIM, Duration::from_secs(10)).unwrap();
+    let front = ServeFront::new(Box::new(reads), front_cfg(1024));
+    let keys: Vec<u64> = (0..(BATCH * FIELDS) as u64).collect();
+
+    let before = front.gather(&keys, BATCH, FIELDS).unwrap();
+    assert!(before.data.iter().all(|&v| v == 0.0));
+    front.gather(&keys, BATCH, FIELDS).unwrap();
+    assert!(front.stats_snapshot().cache_hits >= keys.len() as u64);
+
+    remote_apply(&mut primaries, &keys, 1);
+    let served = front.gather(&keys, BATCH, FIELDS).unwrap();
+    assert!(
+        served.data.iter().all(|&v| v == 1.0),
+        "remote front served a stale row after a raw shard apply"
+    );
+
+    remote_apply(&mut primaries, &keys, 2);
+    let served = front.gather(&keys, BATCH, FIELDS).unwrap();
+    assert!(served.data.iter().all(|&v| v == 2.0));
+    assert!(front.stats_snapshot().cache_evictions >= 2 * keys.len() as u64);
+}
+
+#[test]
+fn gathers_are_bit_identical_to_one_applied_step_under_concurrent_applies() {
+    const STEPS: usize = 120;
+    let ps = two_shard_ps();
+    let keys = served_keys(&ps);
+    // cache off: every gather is a live cross-shard snapshot fan-out.
+    let front = ServeFront::new(Box::new(ps.clone()), front_cfg(0));
+    ps.set_day(0, STEPS);
+
+    let applier = {
+        let ps = ps.clone();
+        let keys = keys.clone();
+        std::thread::spawn(move || {
+            for _ in 0..STEPS {
+                train_step(&ps, &keys);
+            }
+        })
+    };
+
+    let mut last = 0.0f32;
+    while !applier.is_finished() {
+        let t = front.gather(&keys, BATCH, FIELDS).unwrap();
+        let v = t.data[0];
+        assert!(
+            t.data.iter().all(|&x| x.to_bits() == v.to_bits()),
+            "torn read: a gather mixed rows from two applied steps: {:?}",
+            &t.data[..DIM.min(t.data.len())]
+        );
+        assert_eq!(v.fract(), 0.0, "served value {v} is not a whole applied step");
+        assert!(v >= last, "served step went backwards: {last} -> {v}");
+        last = v;
+    }
+    applier.join().unwrap();
+
+    let done = front.gather(&keys, BATCH, FIELDS).unwrap();
+    assert!(
+        done.data.iter().all(|&x| x == STEPS as f32),
+        "final gather must see every applied step"
+    );
+}
+
+#[test]
+fn concurrent_tcp_clients_coalesce_into_shared_rounds() {
+    let ps = two_shard_ps();
+    let keys = served_keys(&ps);
+    let front = Arc::new(ServeFront::new(
+        Box::new(ps.clone()),
+        ServeConfig {
+            listen: "127.0.0.1:0".to_string(),
+            cache_rows: 0,
+            cache_shards: 4,
+            batch_window_us: 3_000,
+            max_stale_ms: 60_000,
+        },
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = serve_listener(front.clone(), listener).unwrap();
+
+    let n_clients = 4;
+    let per_client = 8;
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let keys = &keys;
+            let addr = addr.to_string();
+            scope.spawn(move || {
+                let mut client = ServeClient::connect(&addr, Duration::from_secs(5)).unwrap();
+                for _ in 0..per_client {
+                    let t = client.gather(&keys[c * 2..c * 2 + 8], 2, FIELDS).unwrap();
+                    assert_eq!(t.shape, vec![2, FIELDS, DIM]);
+                }
+            });
+        }
+    });
+
+    let s = front.stats_snapshot();
+    assert_eq!(s.requests, (n_clients * per_client) as u64);
+    assert!(
+        s.rounds < s.requests,
+        "collection window never coalesced concurrent misses: {s:?}"
+    );
+}
