@@ -37,6 +37,7 @@ fn main() {
             compute: StragglerModel::new(&cluster, workers, seed),
             ps_apply_ms: cluster.ps_apply_ms,
             n_shards: 1,
+            apply_threads: 1,
             wire_ms: 0.0,
             start_sec: start,
             duration_sec: 120.0,

@@ -2,6 +2,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::staleness::{StalenessConfig, StalenessPolicyKind};
 use crate::util::toml::TomlDoc;
 
 /// The six training modes evaluated in the paper (Table 5.2).
@@ -175,6 +176,10 @@ pub struct TrainConfig {
     pub eval_batch: usize,
     /// Samples evaluated per AUC measurement.
     pub eval_samples: usize,
+    /// Staleness-decay policy at the control plane's flush point
+    /// (`[train] staleness_policy` + per-policy knobs; default `gba`,
+    /// the paper's fixed decay, bit-identical to pre-seam training).
+    pub staleness: StalenessConfig,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -530,6 +535,44 @@ impl ExperimentConfig {
             lr_async: doc.get_f64("train.lr_async").unwrap_or(req_f64("train.lr")?),
             eval_batch: doc.get_usize("train.eval_batch").unwrap_or(256),
             eval_samples: doc.get_usize("train.eval_samples").unwrap_or(10_000),
+            // Absent keys default (gba = zero behavior change); malformed
+            // keys error — a "gap_aware" run that silently fell back to
+            // the fixed decay would invalidate the whole ablation.
+            staleness: {
+                let d = StalenessConfig::default();
+                StalenessConfig {
+                    policy: match doc.get("train.staleness_policy") {
+                        None => d.policy,
+                        Some(v) => StalenessPolicyKind::parse(
+                            v.as_str().context("train.staleness_policy must be a string")?,
+                        )?,
+                    },
+                    gap_scale: match doc.get("train.gap_scale") {
+                        None => d.gap_scale,
+                        Some(v) => v.as_f64().context("train.gap_scale must be a number")?,
+                    },
+                    abs_bound_min: match doc.get("train.abs_bound_min") {
+                        None => d.abs_bound_min,
+                        Some(v) => v
+                            .as_usize()
+                            .context("train.abs_bound_min must be a non-negative integer")?
+                            as u64,
+                    },
+                    abs_bound_max: match doc.get("train.abs_bound_max") {
+                        None => d.abs_bound_max,
+                        Some(v) => v
+                            .as_usize()
+                            .context("train.abs_bound_max must be a non-negative integer")?
+                            as u64,
+                    },
+                    abs_adapt_rate: match doc.get("train.abs_adapt_rate") {
+                        None => d.abs_adapt_rate,
+                        Some(v) => {
+                            v.as_f64().context("train.abs_adapt_rate must be a number")?
+                        }
+                    },
+                }
+            },
         };
         let mut modes = Vec::new();
         for kind in ModeKind::ALL {
@@ -789,6 +832,25 @@ impl ExperimentConfig {
                 "serve.batch_window_us must be at most 1000000 (1 s), got {} \
                  — the window adds directly to every miss's serve latency",
                 self.serve.batch_window_us
+            );
+        }
+        let st = &self.train.staleness;
+        if !(st.gap_scale > 0.0) || !st.gap_scale.is_finite() {
+            bail!("train.gap_scale must be a positive finite number, got {}", st.gap_scale);
+        }
+        if st.abs_bound_min > st.abs_bound_max {
+            bail!(
+                "train.abs_bound_min ({}) must not exceed train.abs_bound_max ({}) \
+                 — the pair is the adaptive bound's clamp window",
+                st.abs_bound_min,
+                st.abs_bound_max
+            );
+        }
+        if !(st.abs_adapt_rate > 0.0 && st.abs_adapt_rate <= 1.0) {
+            bail!(
+                "train.abs_adapt_rate must be in (0, 1], got {} \
+                 — it is the EMA rate of the observed-staleness statistics",
+                st.abs_adapt_rate
             );
         }
         let sw = &self.switch;

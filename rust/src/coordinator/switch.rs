@@ -174,6 +174,12 @@ impl SwitchPlane {
     pub fn observe(&mut self, signal: f64) -> Option<ModeKind> {
         self.switcher.as_mut()?.observe(signal)
     }
+
+    /// [`observe`](Self::observe) with the staleness-gap signal beside
+    /// the straggler signal (see [`AdaptiveSwitcher::observe_signals`]).
+    pub fn observe_signals(&mut self, straggler: f64, gap: f64) -> Option<ModeKind> {
+        self.switcher.as_mut()?.observe_signals(straggler, gap)
+    }
 }
 
 /// Adaptive switching controller (paper §6 future work): choose the mode
@@ -206,6 +212,20 @@ impl AdaptiveSwitcher {
 
     /// Feed a signal observation; returns Some(new_mode) on a switch.
     pub fn observe(&mut self, signal: f64) -> Option<ModeKind> {
+        self.observe_signals(signal, 0.0)
+    }
+
+    /// Feed both controller signals for one day: the batch-latency
+    /// straggler signal (`1 − median/p95`) and the normalized staleness
+    /// gap from the control plane's staleness policy (0 when the `gba`
+    /// policy is active — it has no gap notion, so this degenerates to
+    /// [`observe`](Self::observe)). Both live in `[0, 1)` and mean
+    /// "how much is asynchrony hurting us right now", so the controller
+    /// acts on whichever is louder: a straggler storm *or* runaway
+    /// parameter drift can push the fleet into GBA, and both must clear
+    /// before it settles back to sync.
+    pub fn observe_signals(&mut self, straggler: f64, gap: f64) -> Option<ModeKind> {
+        let signal = straggler.max(gap);
         let next = match self.current {
             ModeKind::Sync if signal > self.high_watermark => ModeKind::Gba,
             ModeKind::Gba if signal < self.low_watermark => ModeKind::Sync,
@@ -259,6 +279,24 @@ mod tests {
         assert_eq!(a.observe(0.5), None); // hysteresis holds GBA
         assert_eq!(a.observe(0.3), Some(ModeKind::Sync));
         assert_eq!(a.observe(0.3), None);
+    }
+
+    /// The second controller signal: a loud staleness gap proposes GBA
+    /// even with a quiet straggler signal, and the hysteresis release
+    /// needs *both* signals below the low watermark.
+    #[test]
+    fn gap_signal_drives_the_switcher_beside_latency() {
+        let mut a = AdaptiveSwitcher::new(ModeKind::Sync);
+        assert_eq!(a.observe_signals(0.1, 0.2), None, "both quiet");
+        assert_eq!(a.observe_signals(0.1, 0.9), Some(ModeKind::Gba), "gap alone trips it");
+        assert_eq!(a.observe_signals(0.1, 0.5), None, "gap still above low: hold GBA");
+        assert_eq!(a.observe_signals(0.5, 0.1), None, "straggler above low: hold GBA");
+        assert_eq!(a.observe_signals(0.1, 0.1), Some(ModeKind::Sync), "both cleared");
+        // Plane-level delegation, manual plane still never volunteers.
+        let mut p = SwitchPlane::adaptive(ModeKind::Sync, 0.6, 0.4);
+        assert_eq!(p.observe_signals(0.0, 0.8), Some(ModeKind::Gba));
+        let mut m = SwitchPlane::manual(ModeKind::Sync);
+        assert_eq!(m.observe_signals(0.9, 0.9), None);
     }
 
     #[test]

@@ -11,7 +11,8 @@ use crate::config::ModeKind;
 use crate::coordinator::modes::GbaPolicy;
 use crate::coordinator::DecayStrategy;
 use crate::metrics::report::{write_result, Table};
-use crate::sim::{simulate, SimParams};
+use crate::sim::{simulate, simulate_with_staleness, SimParams};
+use crate::staleness::{make_staleness, StalenessConfig, StalenessPolicyKind};
 use crate::util::json::Json;
 
 pub fn run(ctx: &ExpCtx) -> Result<()> {
@@ -69,6 +70,88 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         "\n(threshold ι=0 drops every late gradient; exponential never drops \
          but down-weights — the paper's Eqn. 1 is the threshold row)"
     );
-    write_result(&ctx.out_dir, "ablation_decay", &Json::obj().set("rows", Json::Arr(jrows)))?;
+
+    // Staleness-policy sweep under a straggler storm: GBA's fixed decay
+    // vs. gap_aware vs. abs through the `rust/src/staleness/` seam,
+    // under the spike-trace storm of `examples/straggler_storm.rs`
+    // (severe lognormal heterogeneity at the spike hour, so deep
+    // staleness actually occurs). The sim has no loss surface;
+    // gradient utilization (kept fraction) and the kept-staleness
+    // distribution are the convergence proxies — see docs/STALENESS.md
+    // for how to read them.
+    let storm_cluster = crate::config::ClusterConfig {
+        trace: "spike".into(),
+        base_compute_ms: 8.0,
+        hetero_sigma: 0.5,
+        ps_apply_ms: 0.5,
+        wire_ms: 0.0,
+        workers: crate::config::WorkerPlane::InProc,
+        worker_listen: String::new(),
+    };
+    let storm_workers = 16usize;
+    let storm_batch = 256usize;
+    let mut storm_table = Table::new(
+        "Ablation — staleness policies under a straggler storm (sim, spike hour)",
+        &["policy", "steps", "kept", "dropped", "kept_frac", "stale mean", "stale max"],
+    );
+    let mut storm_rows = Vec::new();
+    for kind in StalenessPolicyKind::ALL {
+        let scfg = StalenessConfig { policy: kind, ..StalenessConfig::default() };
+        let compute = StragglerModel::new(&storm_cluster, storm_workers, ctx.seed);
+        let params = SimParams {
+            workers: storm_workers,
+            local_batch: storm_batch,
+            compute,
+            ps_apply_ms: storm_cluster.ps_apply_ms,
+            n_shards: cfg.ps.n_shards,
+            apply_threads: cfg.ps.apply_threads,
+            wire_ms: 0.0,
+            // The spike trace peaks mid-day; simulate through the spike.
+            start_sec: 12.0 * 3600.0,
+            duration_sec: if ctx.quick { 60.0 } else { 120.0 },
+            seed: ctx.seed,
+        };
+        let out = simulate_with_staleness(
+            &params,
+            Box::new(GbaPolicy::with_iota(storm_workers, 4)),
+            make_staleness(&scfg),
+        );
+        let kept = out.staleness.count();
+        let total = kept + out.dropped_batches;
+        let kept_frac = if total > 0 { kept as f64 / total as f64 } else { 0.0 };
+        storm_table.row(vec![
+            kind.as_str().to_string(),
+            out.global_steps.to_string(),
+            kept.to_string(),
+            out.dropped_batches.to_string(),
+            format!("{kept_frac:.3}"),
+            format!("{:.3}", out.staleness.mean()),
+            out.staleness.max().to_string(),
+        ]);
+        storm_rows.push(
+            Json::obj()
+                .set("policy", kind.as_str())
+                .set("steps", out.global_steps)
+                .set("kept", kept)
+                .set("dropped", out.dropped_batches)
+                .set("kept_frac", kept_frac)
+                .set("stale_mean", out.staleness.mean())
+                .set("stale_max", out.staleness.max())
+                .set("samples", out.samples_done),
+        );
+    }
+    storm_table.print();
+    println!(
+        "\n(kept_frac is the convergence proxy: the fraction of pushed \
+         gradients that survived the decay and actually moved the model)"
+    );
+
+    write_result(
+        &ctx.out_dir,
+        "ablation_decay",
+        &Json::obj()
+            .set("rows", Json::Arr(jrows))
+            .set("storm_rows", Json::Arr(storm_rows)),
+    )?;
     Ok(())
 }

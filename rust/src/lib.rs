@@ -40,6 +40,7 @@ pub mod runtime;
 pub mod serve;
 pub mod shard;
 pub mod sim;
+pub mod staleness;
 pub mod transport;
 pub mod util;
 pub mod worker;

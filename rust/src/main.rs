@@ -82,6 +82,13 @@ USAGE:
                                  policy: adaptive watches per-day straggler
                                  telemetry and switches sync<->gba in place,
                                  with remote workers re-handshaking live)
+                  [--staleness-policy gba|gap_aware|abs]   (override [train]
+                                 staleness_policy: how the control plane
+                                 decays stale gradients at the flush point —
+                                 gba = the paper's fixed schedule, gap_aware
+                                 = penalize by parameter movement since
+                                 issue, abs = online-adapted staleness
+                                 bound; see docs/STALENESS.md)
                   [--shards N]   (override [ps] n_shards: PS plane width)
                   [--transport inproc|socket|remote]   (override [ps]
                                  transport: shard endpoints in-process,
@@ -237,6 +244,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(policy) = args.get("switch-policy") {
         cfg.switch.policy = SwitchPolicyKind::parse(policy)?;
+    }
+    if let Some(policy) = args.get("staleness-policy") {
+        cfg.train.staleness.policy = gba::staleness::StalenessPolicyKind::parse(policy)?;
+        cfg.validate()?;
     }
     init_obs(&mut cfg, args, "trainer")?;
     let task_name = cfg.name.clone();

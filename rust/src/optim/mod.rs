@@ -222,6 +222,22 @@ pub fn make_optimizer(kind: OptimKind, lr: f64) -> Box<dyn Optimizer> {
     }
 }
 
+/// Digest of the training configuration a transport front will aggregate
+/// under: optimizer kinds *and* exact learning-rate bit patterns for the
+/// dense/embedding pair. Sent in the shard `Hello` so a shard server that
+/// was booted with a same-shape but different-lr config (the one mismatch
+/// the slot-count handshake cannot see) fails loudly at connect instead
+/// of silently training two configs against one model.
+pub fn config_digest(opt_dense: &dyn Optimizer, opt_emb: &dyn Optimizer) -> u64 {
+    use crate::util::rng::mix64;
+    let mut d = mix64(0x6762_615f_6366_6764); // "gba_cfgd"
+    for opt in [opt_dense, opt_emb] {
+        d = mix64(d ^ opt.kind().wire_id() as u64);
+        d = mix64(d ^ opt.lr().to_bits() as u64);
+    }
+    d
+}
+
 /// The original scalar kernels, kept verbatim as bit-identity oracles
 /// for the chunked implementations above.
 #[cfg(test)]
@@ -337,6 +353,22 @@ mod tests {
         for k in [OptimKind::Sgd, OptimKind::Adagrad, OptimKind::Adam] {
             assert_eq!(make_optimizer(k, 0.01).kind(), k);
         }
+    }
+
+    #[test]
+    fn config_digest_separates_lr_and_kind() {
+        let base = (make_optimizer(OptimKind::Adam, 0.001), make_optimizer(OptimKind::Adagrad, 0.01));
+        let same = (make_optimizer(OptimKind::Adam, 0.001), make_optimizer(OptimKind::Adagrad, 0.01));
+        let d0 = config_digest(base.0.as_ref(), base.1.as_ref());
+        assert_eq!(d0, config_digest(same.0.as_ref(), same.1.as_ref()));
+        // Same shape (Adam/Adagrad pair), different dense lr: must differ.
+        let lr_swap = make_optimizer(OptimKind::Adam, 0.002);
+        assert_ne!(d0, config_digest(lr_swap.as_ref(), base.1.as_ref()));
+        // Different kind pairing must differ too.
+        let kind_swap = make_optimizer(OptimKind::Sgd, 0.001);
+        assert_ne!(d0, config_digest(kind_swap.as_ref(), base.1.as_ref()));
+        // Order matters: (dense, emb) vs (emb, dense) are different configs.
+        assert_ne!(d0, config_digest(base.1.as_ref(), base.0.as_ref()));
     }
 
     // --- chunked-vs-scalar bit-identity pins -------------------------------

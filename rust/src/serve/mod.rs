@@ -205,6 +205,90 @@ struct InvalCursors {
     since: Vec<u64>,
 }
 
+/// One cached row plus its clock reference bit.
+struct CacheEntry {
+    row: Vec<f32>,
+    /// Set on every hit; cleared when the clock hand sweeps past. A row
+    /// survives eviction as long as it is re-referenced between sweeps.
+    referenced: bool,
+}
+
+/// One lock-shard of the hot-key cache: a clock (second-chance) ring.
+/// Full slots evict exactly one victim — the first un-referenced row at
+/// or after the hand — so a Zipfian head that keeps getting hits is
+/// never dumped wholesale the way the old flush-on-full scheme did.
+#[derive(Default)]
+struct CacheShard {
+    rows: HashMap<u64, CacheEntry>,
+    /// Ring of cached keys in insertion-slot order. Invalidation removes
+    /// from `rows` only, leaving a stale ring slot the clock hand reuses
+    /// for free on its next pass.
+    ring: Vec<u64>,
+    hand: usize,
+}
+
+impl CacheShard {
+    fn get(&mut self, key: u64) -> Option<Vec<f32>> {
+        let e = self.rows.get_mut(&key)?;
+        e.referenced = true;
+        Some(e.row.clone())
+    }
+
+    /// Insert `row`, evicting at most one victim. Returns the number of
+    /// live rows evicted (0 or 1).
+    fn put(&mut self, key: u64, row: Vec<f32>, cap: usize) -> u64 {
+        if let Some(e) = self.rows.get_mut(&key) {
+            e.row = row;
+            e.referenced = true;
+            return 0;
+        }
+        // Fresh inserts start un-referenced: a one-shot churn key never
+        // earns its bit, so the clock evicts it before any row that was
+        // hit since the hand's last pass.
+        let entry = CacheEntry { row, referenced: false };
+        if self.ring.len() < cap {
+            self.ring.push(key);
+            self.rows.insert(key, entry);
+            return 0;
+        }
+        // Clock sweep. Bounded: pass 1 may clear every reference bit,
+        // so by 2·len + 1 inspections a victim (or stale slot) is found.
+        for _ in 0..(2 * self.ring.len() + 1) {
+            let slot = self.hand;
+            self.hand = (self.hand + 1) % self.ring.len();
+            let victim = self.ring[slot];
+            match self.rows.get_mut(&victim) {
+                // Stale slot: its key was invalidated out of `rows`
+                // already. Reuse it — nothing live is evicted.
+                None => {
+                    self.ring[slot] = key;
+                    self.rows.insert(key, entry);
+                    return 0;
+                }
+                Some(e) if e.referenced => {
+                    // Second chance: spare it, clear the bit, move on.
+                    e.referenced = false;
+                }
+                Some(_) => {
+                    self.rows.remove(&victim);
+                    self.ring[slot] = key;
+                    self.rows.insert(key, entry);
+                    return 1;
+                }
+            }
+        }
+        unreachable!("clock sweep found no victim in a full ring");
+    }
+
+    fn clear(&mut self) -> u64 {
+        let dropped = self.rows.len() as u64;
+        self.rows.clear();
+        self.ring.clear();
+        self.hand = 0;
+        dropped
+    }
+}
+
 /// The serving front. Shared across connection threads behind an
 /// [`Arc`]; every public method takes `&self`.
 pub struct ServeFront {
@@ -214,9 +298,10 @@ pub struct ServeFront {
     cfg: ServeConfig,
     /// Sharded hot-key cache: `mix64(key) % cache_shards` picks the
     /// slice. Empty when `cache_rows = 0` (caching disabled). Each
-    /// slice holds at most `cache_rows / cache_shards` rows and flushes
-    /// whole when full — Zipfian traffic immediately re-warms the head.
-    cache: Vec<Mutex<HashMap<u64, Vec<f32>>>>,
+    /// slice holds at most `cache_rows / cache_shards` rows under clock
+    /// (second-chance) eviction, so the Zipfian head survives cold-key
+    /// churn instead of being flushed wholesale on every overflow.
+    cache: Vec<Mutex<CacheShard>>,
     cache_rows_per_shard: usize,
     batch: Mutex<RoundState>,
     batch_cv: Condvar,
@@ -230,7 +315,7 @@ impl ServeFront {
         let n = shards.n_shards();
         let dim = shards.emb_dim();
         let cache_shards = if cfg.cache_rows == 0 { 0 } else { cfg.cache_shards.max(1) };
-        let cache = (0..cache_shards).map(|_| Mutex::new(HashMap::new())).collect();
+        let cache = (0..cache_shards).map(|_| Mutex::new(CacheShard::default())).collect();
         let reg = obs::global();
         for name in [
             "gba_serve_requests_total",
@@ -339,7 +424,7 @@ impl ServeFront {
         Ok(HostTensor { shape: vec![batch, fields, dim], data })
     }
 
-    fn cache_slot(&self, key: u64) -> Option<&Mutex<HashMap<u64, Vec<f32>>>> {
+    fn cache_slot(&self, key: u64) -> Option<&Mutex<CacheShard>> {
         if self.cache.is_empty() {
             return None;
         }
@@ -347,20 +432,13 @@ impl ServeFront {
     }
 
     fn cache_get(&self, key: u64) -> Option<Vec<f32>> {
-        self.cache_slot(key)?.lock().unwrap().get(&key).cloned()
+        self.cache_slot(key)?.lock().unwrap().get(key)
     }
 
     fn cache_put(&self, key: u64, row: Vec<f32>) {
         let Some(slot) = self.cache_slot(key) else { return };
-        let mut m = slot.lock().unwrap();
-        if m.len() >= self.cache_rows_per_shard && !m.contains_key(&key) {
-            // Flush-on-full: cheap, and Zipfian heads re-warm in a few
-            // requests. Counted so hit-rate dips are attributable.
-            let dropped = m.len() as u64;
-            m.clear();
-            self.count(&self.stats.cache_evictions, "gba_serve_cache_evictions_total", dropped);
-        }
-        m.insert(key, row);
+        let evicted = slot.lock().unwrap().put(key, row, self.cache_rows_per_shard);
+        self.count(&self.stats.cache_evictions, "gba_serve_cache_evictions_total", evicted);
     }
 
     /// Drain the shards' invalidation logs if the staleness budget is
@@ -385,9 +463,7 @@ impl ServeFront {
                     if full {
                         let mut dropped = 0u64;
                         for slot in &self.cache {
-                            let mut m = slot.lock().unwrap();
-                            dropped += m.len() as u64;
-                            m.clear();
+                            dropped += slot.lock().unwrap().clear();
                         }
                         self.count(
                             &self.stats.cache_evictions,
@@ -398,7 +474,10 @@ impl ServeFront {
                         let mut dropped = 0u64;
                         for key in keys {
                             if let Some(slot) = self.cache_slot(key) {
-                                if slot.lock().unwrap().remove(&key).is_some() {
+                                // Remove the row only; the ring slot
+                                // goes stale and the clock hand reuses
+                                // it on its next pass.
+                                if slot.lock().unwrap().rows.remove(&key).is_some() {
                                     dropped += 1;
                                 }
                             }
@@ -753,6 +832,36 @@ mod tests {
         assert_eq!(s.cache_misses, 4);
         // Every request ran its own fetch round.
         assert_eq!(s.rounds, 2);
+    }
+
+    /// Clock mechanics at the shard level: a full ring evicts exactly
+    /// one un-referenced victim per insert, referenced rows get a second
+    /// chance, and invalidated rows leave stale slots that are reused
+    /// without evicting anything live.
+    #[test]
+    fn clock_shard_evicts_one_cold_row_and_spares_referenced() {
+        let mut s = CacheShard::default();
+        for key in 0..4u64 {
+            assert_eq!(s.put(key, vec![key as f32], 4), 0, "filling evicts nothing");
+        }
+        // Reference keys 0 and 2; 1 and 3 stay cold.
+        assert!(s.get(0).is_some());
+        assert!(s.get(2).is_some());
+        // First overflow: hand at 0 spares 0 (referenced), evicts 1.
+        assert_eq!(s.put(10, vec![10.0], 4), 1);
+        assert!(s.rows.contains_key(&0), "referenced row survived the sweep");
+        assert!(!s.rows.contains_key(&1), "cold row was the victim");
+        assert_eq!(s.rows.len(), 4);
+        // Invalidation removes a row but leaves its ring slot; the next
+        // overflow reuses the stale slot with no live eviction.
+        s.rows.remove(&3);
+        assert_eq!(s.put(11, vec![11.0], 4), 0, "stale slot reused for free");
+        assert_eq!(s.rows.len(), 4);
+        // A re-put of a present key updates in place, never evicts.
+        assert_eq!(s.put(10, vec![99.0], 4), 0);
+        assert_eq!(s.get(10), Some(vec![99.0]));
+        assert_eq!(s.clear(), 4);
+        assert!(s.ring.is_empty() && s.hand == 0);
     }
 
     #[test]

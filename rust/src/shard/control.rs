@@ -27,6 +27,7 @@ use crate::coordinator::{ModePolicy, PullDecision, PushAction, WorkerId};
 use crate::metrics::TrainCounters;
 use crate::obs;
 use crate::ps::{GradPush, PullReply, WorkItem};
+use crate::staleness::{GbaStaleness, StalenessPolicy};
 
 /// An admitted aggregation, ready to be applied to the shards. Produced
 /// under the control lock; consumed (and the arithmetic done) outside it.
@@ -48,6 +49,11 @@ pub struct FlushJob {
 
 struct CtrlState {
     policy: Box<dyn ModePolicy>,
+    /// The staleness-decay seam (`[train] staleness_policy`): gets one
+    /// chance to rescale the mode policy's flush weights at admission.
+    /// The default [`GbaStaleness`] is a strict no-op, preserving the
+    /// paper's fixed decay bit-for-bit.
+    staleness: Box<dyn StalenessPolicy>,
     /// Buffered gradients awaiting the next flush, each paired with the
     /// batch index its worker's claim covered — the canonical sort key
     /// (with the token) that makes flush aggregation order-deterministic
@@ -99,6 +105,8 @@ struct CtrlObs {
     applying: Arc<obs::Gauge>,
     pushes: Arc<obs::Counter>,
     flushes: Arc<obs::Counter>,
+    staleness_gap: Arc<obs::Gauge>,
+    staleness_bound: Arc<obs::Gauge>,
 }
 
 impl CtrlObs {
@@ -111,6 +119,8 @@ impl CtrlObs {
             applying: r.gauge("gba_ctrl_applying"),
             pushes: r.counter("gba_ctrl_pushes_total"),
             flushes: r.counter("gba_ctrl_flushes_total"),
+            staleness_gap: r.gauge("gba_staleness_gap"),
+            staleness_bound: r.gauge("gba_staleness_bound"),
         }
     }
 }
@@ -127,6 +137,7 @@ impl ControlPlane {
             o: CtrlObs::new(),
             state: Mutex::new(CtrlState {
                 policy,
+                staleness: Box::new(GbaStaleness),
                 buffer: Vec::new(),
                 counters: TrainCounters::default(),
                 day: 0,
@@ -142,6 +153,14 @@ impl ControlPlane {
             }),
             cv: Condvar::new(),
         }
+    }
+
+    /// Install a staleness policy (default: [`GbaStaleness`], a strict
+    /// no-op). Called once at session build, before training starts —
+    /// swapping mid-run would discard issue-time snapshots.
+    pub fn set_staleness(&self, staleness: Box<dyn StalenessPolicy>) {
+        let mut c = self.state.lock().unwrap();
+        c.staleness = staleness;
     }
 
     /// Point the data list at a day with `n_batches` batches.
@@ -238,6 +257,9 @@ impl ControlPlane {
                 // policies' own single-token-per-worker bookkeeping.
                 c.claims.insert(w, batch_index);
                 c.outstanding += 1;
+                // Issue-time snapshot for gap-style staleness policies
+                // (no-op for the default).
+                c.staleness.on_issue(token);
                 self.observe_queues(&c);
                 PullReply::Work(item)
             }
@@ -285,7 +307,7 @@ impl ControlPlane {
             PushAction::FlushNow => {
                 c.buffer.push((batch, grad));
                 self.o.flushes.inc();
-                Some(Self::begin_flush(&mut c, Some(pusher)))
+                Some(self.begin_flush(&mut c, Some(pusher)))
             }
         };
         self.o.pushes.inc();
@@ -322,7 +344,7 @@ impl ControlPlane {
             return None;
         }
         self.o.flushes.inc();
-        let job = Self::begin_flush(&mut c, None);
+        let job = self.begin_flush(&mut c, None);
         self.observe_queues(&c);
         Some(job)
     }
@@ -336,7 +358,7 @@ impl ControlPlane {
             None
         } else {
             self.o.flushes.inc();
-            Some(Self::begin_flush(&mut c, None))
+            Some(self.begin_flush(&mut c, None))
         };
         c.policy = policy;
         self.observe_queues(&c);
@@ -353,6 +375,9 @@ impl ControlPlane {
             c.flusher = None;
         }
         if let Some(n) = norm {
+            // Feed the staleness policy's movement clock first — it is
+            // why collect_norm may have been forced on.
+            c.staleness.on_update_norm(n);
             if let Some(v) = c.grad_norms.as_mut() {
                 v.push(n);
             }
@@ -368,7 +393,7 @@ impl ControlPlane {
     /// with identical arithmetic and ordering. `flusher` is the worker
     /// whose push triggered the flush (read-your-writes fast path);
     /// partial and switch flushes have none.
-    fn begin_flush(c: &mut CtrlState, flusher: Option<WorkerId>) -> FlushJob {
+    fn begin_flush(&self, c: &mut CtrlState, flusher: Option<WorkerId>) -> FlushJob {
         let mut buffered = std::mem::take(&mut c.buffer);
         // Canonical aggregation order: workers race each other into the
         // buffer, so admission order depends on scheduling (thread
@@ -386,10 +411,21 @@ impl ControlPlane {
         let k = c.policy.global_step();
         let opt_step = k + 1;
 
+        // The staleness seam: the mode policy decided the base weights;
+        // the staleness policy gets one in-place rescale. The default
+        // `gba` policy is a strict no-op — the vector (and so every
+        // downstream float op) is bit-identical to the pre-seam code.
+        let mut weights = spec.weights;
+        c.staleness.reweight(k, &tokens, &mut weights);
+        self.o.staleness_gap.set(c.staleness.last_gap());
+        if let Some(b) = c.staleness.current_bound() {
+            self.o.staleness_bound.set(b);
+        }
+
         let mut included = 0usize;
         let mut loss_acc = 0.0f64;
         let mut wsum = 0.0f64;
-        for (entry, &w) in entries.iter().zip(&spec.weights) {
+        for (entry, &w) in entries.iter().zip(&weights) {
             let staleness = k.saturating_sub(entry.token);
             if w == 0.0 {
                 c.counters.dropped_batches += 1;
@@ -404,7 +440,7 @@ impl ControlPlane {
             c.counters.applied_gradients += included as u64;
             c.counters.samples_trained += entries
                 .iter()
-                .zip(&spec.weights)
+                .zip(&weights)
                 .filter(|(_, &w)| w > 0.0)
                 .map(|(e, _)| e.n_samples as u64)
                 .sum::<u64>();
@@ -419,11 +455,14 @@ impl ControlPlane {
         c.flusher = flusher;
         FlushJob {
             entries,
-            weights: spec.weights,
+            weights,
             dense_divisor: spec.dense_divisor,
             opt_step,
             included,
-            collect_norm: c.grad_norms.is_some(),
+            // Norm collection is forced on when the staleness policy
+            // needs the movement clock (gap_aware), even if Fig. 3
+            // collection is off.
+            collect_norm: c.grad_norms.is_some() || c.staleness.needs_norm(),
         }
     }
 
@@ -472,6 +511,12 @@ impl ControlPlane {
     /// (global step, mean loss) per apply since the last reset.
     pub fn loss_curve(&self) -> Vec<(u64, f32)> {
         self.state.lock().unwrap().loss_curve.clone()
+    }
+
+    /// Mean normalized parameter gap at the most recent flush — the
+    /// adaptive switcher's second signal (0.0 for policies without one).
+    pub fn staleness_gap(&self) -> f64 {
+        self.state.lock().unwrap().staleness.last_gap()
     }
 }
 
@@ -734,6 +779,101 @@ mod tests {
             other => panic!("{other:?}"),
         };
         assert_eq!((c.day, c.batch_index), (1, 0));
+    }
+
+    /// The staleness seam dispatches at the flush point: an installed
+    /// non-default policy sees every admitted entry and can rescale the
+    /// mode policy's weights, and its issue/apply hooks fire on the pull
+    /// and finish paths.
+    #[test]
+    fn staleness_policy_dispatches_at_the_flush_point() {
+        use crate::staleness::{StalenessPolicy, StalenessPolicyKind};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        struct Probe {
+            issues: Arc<AtomicUsize>,
+            norms: Arc<AtomicUsize>,
+            reweights: Arc<AtomicUsize>,
+        }
+        impl StalenessPolicy for Probe {
+            fn kind(&self) -> StalenessPolicyKind {
+                StalenessPolicyKind::GapAware
+            }
+            fn on_issue(&mut self, _token: u64) {
+                self.issues.fetch_add(1, Ordering::SeqCst);
+            }
+            fn needs_norm(&self) -> bool {
+                true
+            }
+            fn on_update_norm(&mut self, _norm: f64) {
+                self.norms.fetch_add(1, Ordering::SeqCst);
+            }
+            fn reweight(&mut self, _k: u64, _tokens: &[u64], weights: &mut [f32]) {
+                self.reweights.fetch_add(1, Ordering::SeqCst);
+                for w in weights {
+                    *w *= 0.5;
+                }
+            }
+            fn last_gap(&self) -> f64 {
+                2.0
+            }
+        }
+
+        let issues = Arc::new(AtomicUsize::new(0));
+        let norms = Arc::new(AtomicUsize::new(0));
+        let reweights = Arc::new(AtomicUsize::new(0));
+        let cp = ControlPlane::new(Box::new(GbaPolicy::with_iota(2, 3)));
+        cp.set_staleness(Box::new(Probe {
+            issues: issues.clone(),
+            norms: norms.clone(),
+            reweights: reweights.clone(),
+        }));
+        cp.set_day(0, 10);
+        let a = match cp.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        let b = match cp.pull(0) {
+            PullReply::Work(it) => it,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(issues.load(Ordering::SeqCst), 2, "on_issue fires per token issue");
+        assert!(cp.push(push_of(0, a.token)).is_none());
+        let job = cp.push(push_of(0, b.token)).expect("buffer of M admits a flush");
+        assert_eq!(reweights.load(Ordering::SeqCst), 1, "reweight fires once per flush");
+        assert_eq!(job.weights, vec![0.5, 0.5], "policy rescaled the mode weights");
+        assert_eq!(job.included, 2, "halved weights still count as included");
+        assert!(job.collect_norm, "needs_norm forces norm collection");
+        cp.finish_apply(Some(1.25));
+        assert_eq!(norms.load(Ordering::SeqCst), 1, "apply norm reaches the policy");
+        assert_eq!(cp.staleness_gap(), 2.0, "switcher signal surfaces the gap");
+    }
+
+    /// The default staleness policy leaves the admitted weights exactly
+    /// as the mode policy produced them (the bit-identity contract).
+    #[test]
+    fn default_staleness_is_identity_over_mode_weights() {
+        use crate::coordinator::DecayStrategy;
+        let cp = ControlPlane::new(Box::new(GbaPolicy::new(
+            2,
+            DecayStrategy::Exponential { alpha: 0.7 },
+        )));
+        cp.set_day(0, 100);
+        for _ in 0..4 {
+            let _ = cp.pull(0);
+        }
+        assert!(cp.push(push_of(0, 0)).is_none());
+        let j = cp.push(push_of(0, 0)).unwrap();
+        assert_eq!(j.weights, vec![1.0, 1.0]);
+        cp.finish_apply(None);
+        // k = 1: a token-0 entry must get exactly alpha^1 = 0.7.
+        assert!(cp.push(push_of(0, 0)).is_none());
+        let j = cp.push(push_of(0, 1)).unwrap();
+        assert_eq!(j.weights[0].to_bits(), 0.7f32.to_bits());
+        assert_eq!(j.weights[1].to_bits(), 1.0f32.to_bits());
+        assert!(!j.collect_norm, "gba never forces norm collection");
+        cp.finish_apply(None);
     }
 
     #[test]

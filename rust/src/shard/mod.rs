@@ -419,6 +419,18 @@ impl ShardedPs {
         self.control.loss_curve()
     }
 
+    /// Install a staleness-decay policy (`[train] staleness_policy`).
+    /// Called once at session build; the default is the no-op `gba`.
+    pub fn set_staleness_policy(&self, staleness: Box<dyn crate::staleness::StalenessPolicy>) {
+        self.control.set_staleness(staleness);
+    }
+
+    /// Mean normalized parameter gap at the most recent flush — the
+    /// adaptive switcher's second signal.
+    pub fn staleness_gap(&self) -> f64 {
+        self.control.staleness_gap()
+    }
+
     /// Swap the coordination policy (the *switch* operation, §1). Any
     /// buffered gradients are force-flushed under the old policy first.
     pub fn switch_policy(&self, policy: Box<dyn ModePolicy>) {

@@ -18,6 +18,7 @@ use crate::config::{ExperimentConfig, ModeKind};
 use crate::coordinator::modes::make_policy;
 use crate::coordinator::{ModePolicy, PullDecision, PushAction};
 use crate::metrics::{RateSeries, StalenessStats};
+use crate::staleness::{make_staleness, GbaStaleness, StalenessPolicy};
 use crate::util::rng::Pcg64;
 
 #[derive(Clone, Debug)]
@@ -90,8 +91,25 @@ impl SimOutcome {
     }
 }
 
-/// Simulate one mode policy under the given parameters.
-pub fn simulate(params: &SimParams, mut policy: Box<dyn ModePolicy>) -> SimOutcome {
+/// Simulate one mode policy under the given parameters (with the
+/// default no-op `gba` staleness decay — identical to the pre-seam
+/// simulator).
+pub fn simulate(params: &SimParams, policy: Box<dyn ModePolicy>) -> SimOutcome {
+    simulate_with_staleness(params, policy, Box::new(GbaStaleness))
+}
+
+/// Simulate one mode policy with an explicit staleness-decay policy at
+/// the flush point — the simulator half of the `rust/src/staleness/`
+/// seam, mirroring the control plane's hooks: `on_issue` at token
+/// issue, `reweight` over the mode policy's weights at every flush,
+/// and one unit of movement-clock advance per applied step (the
+/// threaded plane feeds real update norms; the sim has no parameters,
+/// so a unit clock makes the normalized gap read as "applies missed").
+pub fn simulate_with_staleness(
+    params: &SimParams,
+    mut policy: Box<dyn ModePolicy>,
+    mut decay: Box<dyn StalenessPolicy>,
+) -> SimOutcome {
     let n = params.workers;
     let mut rng = Pcg64::new(params.seed, 0x51u64);
     let t_end = params.start_sec + params.duration_sec;
@@ -127,6 +145,7 @@ pub fn simulate(params: &SimParams, mut policy: Box<dyn ModePolicy>) -> SimOutco
                 match policy.on_pull(w) {
                     PullDecision::Token(tok) => {
                         inflight_token[w] = tok;
+                        decay.on_issue(tok);
                         // Pushes are non-blocking for workers (Algorithm 1);
                         // the PS apply cost only gates *aggregated* updates,
                         // so it delays barrier-released cohorts (sync-family)
@@ -174,7 +193,12 @@ pub fn simulate(params: &SimParams, mut policy: Box<dyn ModePolicy>) -> SimOutco
                 buffer_tokens.push(token);
                 let k = policy.global_step();
                 let spec = policy.flush_spec(&buffer_tokens);
-                for (tok, wgt) in buffer_tokens.iter().zip(&spec.weights) {
+                // The staleness seam, same point as the control plane's
+                // begin_flush: one in-place rescale of the mode weights
+                // (no-op for the default `gba` policy).
+                let mut weights = spec.weights;
+                decay.reweight(k, &buffer_tokens, &mut weights);
+                for (tok, wgt) in buffer_tokens.iter().zip(&weights) {
                     if *wgt == 0.0 {
                         dropped += 1;
                     } else {
@@ -183,6 +207,8 @@ pub fn simulate(params: &SimParams, mut policy: Box<dyn ModePolicy>) -> SimOutco
                 }
                 buffer_tokens.clear();
                 policy.on_applied();
+                // Unit movement per applied step (see doc comment).
+                decay.on_update_norm(1.0);
                 steps += 1;
                 ps_free_at = t + params.effective_apply_ms() / 1e3;
                 // The apply may unblock gated workers.
@@ -245,7 +271,10 @@ pub fn simulate_mode(
         seed,
     };
     let policy = make_policy(kind, &mode, cfg.gba_m_effective());
-    simulate(&params, policy)
+    // Honor `[train] staleness_policy` in simulation too, so simulated
+    // sweeps (experiments/ablation.rs) exercise the same seam as the
+    // threaded plane.
+    simulate_with_staleness(&params, policy, make_staleness(&cfg.train.staleness))
 }
 
 #[cfg(test)]
@@ -382,6 +411,46 @@ mod tests {
         assert_eq!(a.samples_done, b.samples_done);
         assert_eq!(a.global_steps, b.global_steps);
         assert_eq!(a.per_worker_batches, b.per_worker_batches);
+    }
+
+    /// The staleness seam in the simulator: the default decay is exactly
+    /// `simulate`, and a hostile zero-everything policy turns every kept
+    /// batch into a drop without touching throughput accounting.
+    #[test]
+    fn staleness_seam_defaults_identical_and_dispatches() {
+        use crate::staleness::{GbaStaleness, StalenessPolicy, StalenessPolicyKind};
+
+        let p = params(16, true, 9);
+        let a = simulate(&p, Box::new(GbaPolicy::with_iota(16, 4)));
+        let b = simulate_with_staleness(
+            &p,
+            Box::new(GbaPolicy::with_iota(16, 4)),
+            Box::new(GbaStaleness),
+        );
+        assert_eq!(a.global_steps, b.global_steps);
+        assert_eq!(a.dropped_batches, b.dropped_batches);
+        assert_eq!(a.samples_done, b.samples_done);
+        assert_eq!(a.staleness.count(), b.staleness.count());
+
+        struct DropAll;
+        impl StalenessPolicy for DropAll {
+            fn kind(&self) -> StalenessPolicyKind {
+                StalenessPolicyKind::Abs
+            }
+            fn reweight(&mut self, _k: u64, _tokens: &[u64], weights: &mut [f32]) {
+                for w in weights {
+                    *w = 0.0;
+                }
+            }
+        }
+        let c = simulate_with_staleness(
+            &p,
+            Box::new(GbaPolicy::with_iota(16, 4)),
+            Box::new(DropAll),
+        );
+        assert_eq!(c.global_steps, a.global_steps, "steps are policy-driven, not weight-driven");
+        assert_eq!(c.staleness.count(), 0, "every entry decayed out");
+        assert!(c.dropped_batches > a.dropped_batches);
     }
 
     #[test]

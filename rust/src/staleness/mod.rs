@@ -1,0 +1,468 @@
+//! Pluggable staleness policies — the decay layer of GBA's token
+//! control, extracted behind a trait so the *reweighting* of buffered
+//! gradients is swappable independently of the mode state machine.
+//!
+//! The [`ModePolicy`](crate::coordinator::ModePolicy) decides *which*
+//! gradients enter a flush and hands back per-entry weights
+//! (`flush_spec`); a [`StalenessPolicy`] then gets one chance to rescale
+//! those weights before aggregation. Three implementations:
+//!
+//! * **`gba`** — the paper's fixed decay, untouched. `reweight` is a
+//!   strict no-op, so the default path produces bit-identical weights to
+//!   every pre-seam release (pinned by `tests/policy_properties.rs` and
+//!   the shard invariance suites).
+//! * **`gap_aware`** — Gap-Aware (arXiv 1909.10802): penalize a stale
+//!   gradient by how far the parameters have *moved* since its worker
+//!   pulled, not by how many steps elapsed. The control plane snapshots
+//!   a cumulative dense-update-norm clock per token at issue time; at
+//!   flush the gap is the clock distance, normalized by the mean
+//!   per-step update norm so it reads as "staleness in units of actual
+//!   parameter movement". Weight: `w / (1 + gap_scale · gap)` — monotone
+//!   non-increasing in the gap, 1.0 at gap 0.
+//! * **`abs`** — adaptive staleness bound (arXiv 2301.08895): a
+//!   threshold like Eqn. 1, but the bound tightens/loosens online from
+//!   the observed staleness histogram (EMA mean + 2σ), clamped to the
+//!   configured `[abs_bound_min, abs_bound_max]` window.
+//!
+//! Every policy's weights stay in `[0, 1]` (they only ever *scale* the
+//! mode policy's weights, which are themselves in `[0, 1]`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Which staleness policy a run decays with (`[train] staleness_policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StalenessPolicyKind {
+    /// The paper's fixed decay — identity over the mode policy's weights.
+    Gba,
+    /// Gap-Aware: penalize by parameter movement since issue.
+    GapAware,
+    /// Adaptive staleness bound from the observed histogram.
+    Abs,
+}
+
+impl StalenessPolicyKind {
+    pub const ALL: [StalenessPolicyKind; 3] =
+        [StalenessPolicyKind::Gba, StalenessPolicyKind::GapAware, StalenessPolicyKind::Abs];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StalenessPolicyKind::Gba => "gba",
+            StalenessPolicyKind::GapAware => "gap_aware",
+            StalenessPolicyKind::Abs => "abs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "gba" => StalenessPolicyKind::Gba,
+            "gap_aware" => StalenessPolicyKind::GapAware,
+            "abs" => StalenessPolicyKind::Abs,
+            other => bail!("unknown staleness policy '{other}' (gba | gap_aware | abs)"),
+        })
+    }
+}
+
+/// Per-policy knobs, threaded from `[train]` (see docs/STALENESS.md).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StalenessConfig {
+    pub policy: StalenessPolicyKind,
+    /// `gap_aware`: strength of the gap penalty (weight is
+    /// `w / (1 + gap_scale · gap)`); must be > 0.
+    pub gap_scale: f64,
+    /// `abs`: hard clamp window for the adaptive bound.
+    pub abs_bound_min: u64,
+    pub abs_bound_max: u64,
+    /// `abs`: EMA rate for the observed-staleness statistics, in (0, 1].
+    pub abs_adapt_rate: f64,
+}
+
+impl Default for StalenessConfig {
+    fn default() -> Self {
+        StalenessConfig {
+            policy: StalenessPolicyKind::Gba,
+            gap_scale: 1.0,
+            abs_bound_min: 1,
+            abs_bound_max: 16,
+            abs_adapt_rate: 0.1,
+        }
+    }
+}
+
+/// The staleness-decay seam. All methods are called under the control
+/// lock (threaded runtime) or from the single-threaded simulator, in a
+/// fixed order: `on_issue` at every token issue, `reweight` once per
+/// flush admission, `on_update_norm` once per completed apply (only
+/// when [`needs_norm`](Self::needs_norm) is true).
+pub trait StalenessPolicy: Send {
+    fn kind(&self) -> StalenessPolicyKind;
+
+    /// A token was issued to some worker: snapshot whatever issue-time
+    /// state the policy compares against at flush.
+    fn on_issue(&mut self, _token: u64) {}
+
+    /// Whether the policy needs the aggregated dense-gradient norm fed
+    /// back after each apply (the control plane forces norm collection
+    /// on the flush jobs when true).
+    fn needs_norm(&self) -> bool {
+        false
+    }
+
+    /// The apply for a flush landed with aggregated dense-update norm
+    /// `norm` — the policy's clock of actual parameter movement.
+    fn on_update_norm(&mut self, _norm: f64) {}
+
+    /// Rescale the mode policy's flush weights in place. `k` is the
+    /// global step at admission, `tokens[i]` the token of entry `i`.
+    /// Implementations must keep every weight in `[0, 1]` and must not
+    /// raise a weight above its incoming value.
+    fn reweight(&mut self, k: u64, tokens: &[u64], weights: &mut [f32]);
+
+    /// Mean normalized gap observed at the most recent `reweight` —
+    /// the second adaptive-switcher signal and the `gba_staleness_gap`
+    /// gauge. 0.0 for policies without a gap notion.
+    fn last_gap(&self) -> f64 {
+        0.0
+    }
+
+    /// Current adaptive bound (the `gba_staleness_bound` gauge);
+    /// `None` for policies without one.
+    fn current_bound(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Build a policy from config.
+pub fn make_staleness(cfg: &StalenessConfig) -> Box<dyn StalenessPolicy> {
+    match cfg.policy {
+        StalenessPolicyKind::Gba => Box::new(GbaStaleness),
+        StalenessPolicyKind::GapAware => Box::new(GapAwareStaleness::new(cfg.gap_scale)),
+        StalenessPolicyKind::Abs => Box::new(AbsStaleness::new(
+            cfg.abs_bound_min,
+            cfg.abs_bound_max,
+            cfg.abs_adapt_rate,
+        )),
+    }
+}
+
+/// The default: the mode policy's own decay (GBA Eqn. 1 / the
+/// `DecayStrategy` ablations) stands unmodified. This must stay a
+/// strict no-op — the bit-identity of every `staleness_policy = "gba"`
+/// run with pre-seam training depends on it.
+pub struct GbaStaleness;
+
+impl StalenessPolicy for GbaStaleness {
+    fn kind(&self) -> StalenessPolicyKind {
+        StalenessPolicyKind::Gba
+    }
+
+    fn reweight(&mut self, _k: u64, _tokens: &[u64], _weights: &mut [f32]) {}
+}
+
+/// How many steps behind the flush step an issue-time snapshot is kept
+/// before pruning. Far larger than any decay window that could still
+/// admit the token; a pruned (ancient) token reads as gap 0, which only
+/// *raises* its weight back toward the mode policy's — harmless, since
+/// such tokens are decayed out by the mode policy anyway.
+const SNAP_KEEP_STEPS: u64 = 256;
+
+/// Gap-Aware staleness (arXiv 1909.10802). Tracks a cumulative clock of
+/// applied dense-update norms; each token snapshots the clock at issue,
+/// and at flush the gap is the clock distance normalized by the mean
+/// per-step update norm.
+pub struct GapAwareStaleness {
+    gap_scale: f64,
+    /// Cumulative sum of applied update norms (the movement clock).
+    cum: f64,
+    /// Running mean of per-apply update norms (the normalizer).
+    norm_mean: f64,
+    norm_count: u64,
+    /// Issue-time clock snapshot per token (first issue wins: GBA issues
+    /// each token M times back-to-back, so the first is the cohort's
+    /// base).
+    snaps: BTreeMap<u64, f64>,
+    last_gap: f64,
+}
+
+impl GapAwareStaleness {
+    pub fn new(gap_scale: f64) -> Self {
+        GapAwareStaleness {
+            gap_scale,
+            cum: 0.0,
+            norm_mean: 0.0,
+            norm_count: 0,
+            snaps: BTreeMap::new(),
+            last_gap: 0.0,
+        }
+    }
+
+    /// Normalized gap for a token: movement since issue, in units of the
+    /// mean per-step update norm. Unknown tokens (pruned, or issued
+    /// before this policy was installed) read as gap 0.
+    fn gap_of(&self, token: u64) -> f64 {
+        let base = self.snaps.get(&token).copied().unwrap_or(self.cum);
+        let denom = if self.norm_count == 0 { 1.0 } else { self.norm_mean.max(1e-12) };
+        (self.cum - base).max(0.0) / denom
+    }
+}
+
+impl StalenessPolicy for GapAwareStaleness {
+    fn kind(&self) -> StalenessPolicyKind {
+        StalenessPolicyKind::GapAware
+    }
+
+    fn on_issue(&mut self, token: u64) {
+        self.snaps.entry(token).or_insert(self.cum);
+    }
+
+    fn needs_norm(&self) -> bool {
+        true
+    }
+
+    fn on_update_norm(&mut self, norm: f64) {
+        let norm = if norm.is_finite() { norm.max(0.0) } else { 0.0 };
+        self.cum += norm;
+        self.norm_count += 1;
+        self.norm_mean += (norm - self.norm_mean) / self.norm_count as f64;
+    }
+
+    fn reweight(&mut self, k: u64, tokens: &[u64], weights: &mut [f32]) {
+        let mut gap_sum = 0.0f64;
+        for (&tok, w) in tokens.iter().zip(weights.iter_mut()) {
+            let gap = self.gap_of(tok);
+            gap_sum += gap;
+            let scaled = *w as f64 / (1.0 + self.gap_scale * gap);
+            *w = scaled as f32;
+        }
+        if !tokens.is_empty() {
+            self.last_gap = gap_sum / tokens.len() as f64;
+        }
+        // Prune snapshots no decay window can still admit.
+        let keep_from = k.saturating_sub(SNAP_KEEP_STEPS);
+        self.snaps = self.snaps.split_off(&keep_from);
+    }
+
+    fn last_gap(&self) -> f64 {
+        self.last_gap
+    }
+}
+
+/// Adaptive staleness bound (arXiv 2301.08895): a threshold decay whose
+/// tolerance follows the observed staleness distribution — EMA mean plus
+/// two EMA standard deviations, clamped to the configured window. A
+/// quiet cluster tightens the bound toward `min` (outliers dropped
+/// aggressively); a straggler storm loosens it toward `max` so the
+/// system keeps absorbing late-but-useful gradients.
+pub struct AbsStaleness {
+    min: u64,
+    max: u64,
+    adapt_rate: f64,
+    /// EMA of observed staleness and of its square (for the σ term).
+    ema_mean: f64,
+    ema_sq: f64,
+    seen: bool,
+    bound: f64,
+}
+
+impl AbsStaleness {
+    pub fn new(min: u64, max: u64, adapt_rate: f64) -> Self {
+        assert!(min <= max, "abs bound window inverted");
+        AbsStaleness {
+            min,
+            max,
+            adapt_rate,
+            ema_mean: 0.0,
+            ema_sq: 0.0,
+            seen: false,
+            // Start wide open: no histogram yet, no grounds to drop.
+            bound: max as f64,
+        }
+    }
+
+    fn clamp(&self, b: f64) -> f64 {
+        b.clamp(self.min as f64, self.max as f64)
+    }
+}
+
+impl StalenessPolicy for AbsStaleness {
+    fn kind(&self) -> StalenessPolicyKind {
+        StalenessPolicyKind::Abs
+    }
+
+    fn reweight(&mut self, k: u64, tokens: &[u64], weights: &mut [f32]) {
+        // Fold this flush's staleness observations into the histogram
+        // statistics, then re-derive the bound and gate with it.
+        for &tok in tokens {
+            let s = k.saturating_sub(tok) as f64;
+            if !self.seen {
+                self.ema_mean = s;
+                self.ema_sq = s * s;
+                self.seen = true;
+            } else {
+                self.ema_mean += self.adapt_rate * (s - self.ema_mean);
+                self.ema_sq += self.adapt_rate * (s * s - self.ema_sq);
+            }
+        }
+        if self.seen {
+            let var = (self.ema_sq - self.ema_mean * self.ema_mean).max(0.0);
+            self.bound = self.clamp(self.ema_mean + 2.0 * var.sqrt());
+        }
+        for (&tok, w) in tokens.iter().zip(weights.iter_mut()) {
+            let s = k.saturating_sub(tok) as f64;
+            if s > self.bound {
+                *w = 0.0;
+            }
+        }
+    }
+
+    fn current_bound(&self) -> Option<f64> {
+        Some(self.bound)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip_and_reject() {
+        for k in StalenessPolicyKind::ALL {
+            assert_eq!(StalenessPolicyKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(StalenessPolicyKind::parse("lru").is_err());
+    }
+
+    #[test]
+    fn gba_reweight_is_bitwise_identity() {
+        let mut p = GbaStaleness;
+        let tokens = [0u64, 3, 7, 7];
+        let original = vec![1.0f32, 0.25, 0.0, 0.6180339887];
+        let mut weights = original.clone();
+        p.on_issue(7);
+        p.reweight(9, &tokens, &mut weights);
+        for (a, b) in original.iter().zip(&weights) {
+            assert_eq!(a.to_bits(), b.to_bits(), "gba staleness must not touch a single bit");
+        }
+        assert_eq!(p.last_gap(), 0.0);
+        assert_eq!(p.current_bound(), None);
+        assert!(!p.needs_norm());
+    }
+
+    #[test]
+    fn gap_aware_fresh_token_keeps_full_weight() {
+        let mut p = GapAwareStaleness::new(1.0);
+        p.on_issue(5);
+        // No movement between issue and flush: gap 0, weight untouched.
+        let mut w = vec![1.0f32];
+        p.reweight(5, &[5], &mut w);
+        assert_eq!(w[0], 1.0);
+        assert_eq!(p.last_gap(), 0.0);
+    }
+
+    #[test]
+    fn gap_aware_weight_monotone_in_gap() {
+        // Same token flushed after increasing amounts of movement must
+        // get a non-increasing weight.
+        let mut prev = f32::INFINITY;
+        for moved_steps in 0..10 {
+            let mut p = GapAwareStaleness::new(1.0);
+            p.on_issue(0);
+            for _ in 0..moved_steps {
+                p.on_update_norm(2.0);
+            }
+            let mut w = vec![1.0f32];
+            p.reweight(moved_steps, &[0], &mut w);
+            assert!((0.0..=1.0).contains(&w[0]));
+            assert!(w[0] <= prev, "gap_aware not monotone at {moved_steps} steps");
+            prev = w[0];
+        }
+    }
+
+    #[test]
+    fn gap_aware_normalizes_by_mean_update_norm() {
+        // Two policies seeing the same *relative* movement (3 steps of
+        // uniform updates) must agree on the gap regardless of scale.
+        let mut small = GapAwareStaleness::new(1.0);
+        let mut large = GapAwareStaleness::new(1.0);
+        small.on_issue(0);
+        large.on_issue(0);
+        for _ in 0..3 {
+            small.on_update_norm(0.01);
+            large.on_update_norm(100.0);
+        }
+        let (mut ws, mut wl) = (vec![1.0f32], vec![1.0f32]);
+        small.reweight(3, &[0], &mut ws);
+        large.reweight(3, &[0], &mut wl);
+        assert!((small.last_gap() - large.last_gap()).abs() < 1e-9);
+        assert!((ws[0] - wl[0]).abs() < 1e-6);
+        // Three mean steps of movement -> gap ~3.
+        assert!((small.last_gap() - 3.0).abs() < 1e-9, "gap = {}", small.last_gap());
+    }
+
+    #[test]
+    fn gap_aware_prunes_ancient_snapshots() {
+        let mut p = GapAwareStaleness::new(1.0);
+        for t in 0..5u64 {
+            p.on_issue(t);
+        }
+        let mut w = vec![1.0f32];
+        p.reweight(SNAP_KEEP_STEPS + 100, &[SNAP_KEEP_STEPS + 100], &mut w);
+        assert!(p.snaps.is_empty(), "ancient snapshots must be pruned");
+    }
+
+    #[test]
+    fn abs_bound_stays_clamped_under_hostile_feeds() {
+        let mut p = AbsStaleness::new(2, 8, 0.5);
+        // Quiet cluster: staleness 0 everywhere drives the bound to min.
+        for _ in 0..50 {
+            let mut w = vec![1.0f32; 4];
+            p.reweight(100, &[100, 100, 100, 100], &mut w);
+        }
+        assert_eq!(p.current_bound(), Some(2.0), "quiet cluster tightens to min");
+        // Storm: enormous staleness drives it to max, never past.
+        for _ in 0..50 {
+            let mut w = vec![1.0f32; 2];
+            p.reweight(10_000, &[0, 1], &mut w);
+        }
+        assert_eq!(p.current_bound(), Some(8.0), "storm loosens to max, clamped");
+    }
+
+    #[test]
+    fn abs_gates_by_the_adaptive_bound() {
+        let mut p = AbsStaleness::new(0, 4, 1.0);
+        // One flush of fresh grads pins the bound at the floor …
+        let mut w = vec![1.0f32; 3];
+        p.reweight(10, &[10, 10, 10], &mut w);
+        assert!(w.iter().all(|&x| x == 1.0));
+        let floor = p.current_bound().unwrap();
+        assert!(floor <= 4.0);
+        // … so a very stale grad in the next flush is zeroed while the
+        // fresh one survives.
+        let mut w = vec![1.0f32, 1.0];
+        p.reweight(100, &[0, 100], &mut w);
+        assert_eq!(w[0], 0.0, "staleness 100 must exceed a bound clamped to <= 4");
+        assert_eq!(w[1], 1.0);
+    }
+
+    #[test]
+    fn abs_never_raises_a_weight() {
+        let mut p = AbsStaleness::new(1, 16, 0.1);
+        let mut w = vec![0.25f32, 0.0, 1.0];
+        p.reweight(3, &[3, 2, 3], &mut w);
+        assert!(w[0] <= 0.25 && w[1] == 0.0 && w[2] <= 1.0);
+    }
+
+    #[test]
+    fn factory_builds_the_configured_policy() {
+        let mut cfg = StalenessConfig::default();
+        assert_eq!(make_staleness(&cfg).kind(), StalenessPolicyKind::Gba);
+        cfg.policy = StalenessPolicyKind::GapAware;
+        assert_eq!(make_staleness(&cfg).kind(), StalenessPolicyKind::GapAware);
+        cfg.policy = StalenessPolicyKind::Abs;
+        let p = make_staleness(&cfg);
+        assert_eq!(p.kind(), StalenessPolicyKind::Abs);
+        let b = p.current_bound().unwrap();
+        assert!((cfg.abs_bound_min as f64..=cfg.abs_bound_max as f64).contains(&b));
+    }
+}

@@ -271,10 +271,11 @@ pub enum ShardRequest {
     /// shape it will aggregate for. The server asserts agreement — a
     /// swapped `shard_addrs` entry or a `--mode` mismatch that changes
     /// the optimizer pair (async vs. the rest, Table 5.1) dies loudly at
-    /// connect instead of silently diverging. (Learning rates are not on
-    /// the wire; equal-kind different-lr configs remain the operator's
-    /// contract.)
-    Hello { shard: u64, dense_slots: u32, emb_slots: u32, emb_dim: u32 },
+    /// connect instead of silently diverging. `cfg_digest` folds the
+    /// optimizer kinds *and* learning rates (`optim::config_digest`) so a
+    /// same-shape different-lr shard server also fails at connect rather
+    /// than training two configs against one model.
+    Hello { shard: u64, dense_slots: u32, emb_slots: u32, emb_dim: u32, cfg_digest: u64 },
     /// In-place mode switch, shard half: install a fresh optimizer pair
     /// of `opt` at `lr` for every subsequent `Apply`. `reset_slots`
     /// zeroes the dense slot buffers and every row's optimizer state
@@ -683,12 +684,13 @@ fn encode_req(b: &mut Vec<u8>, r: &ShardRequest) {
             put_u8(b, 11);
             put_row_records(b, rows);
         }
-        ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim } => {
+        ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim, cfg_digest } => {
             put_u8(b, 12);
             put_u64(b, *shard);
             put_u32(b, *dense_slots);
             put_u32(b, *emb_slots);
             put_u32(b, *emb_dim);
+            put_u64(b, *cfg_digest);
         }
         ShardRequest::SwapPolicy { opt, lr, reset_slots } => {
             put_u8(b, 13);
@@ -1090,6 +1092,7 @@ fn decode_req(rd: &mut Rd) -> Result<ShardRequest, CodecError> {
             dense_slots: rd.u32()?,
             emb_slots: rd.u32()?,
             emb_dim: rd.u32()?,
+            cfg_digest: rd.u64()?,
         },
         13 => ShardRequest::SwapPolicy {
             opt: OptimKind::from_wire(rd.u8()?)
@@ -1385,12 +1388,14 @@ mod tests {
             dense_slots: 2,
             emb_slots: 1,
             emb_dim: 16,
+            cfg_digest: 0xdead_beef_cafe_f00d,
         };
         let body = encode(&WireMsg::Req(req));
         match decode(&body).unwrap() {
-            WireMsg::Req(ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim }) => {
+            WireMsg::Req(ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim, cfg_digest }) => {
                 assert_eq!(shard, u64::MAX);
                 assert_eq!((dense_slots, emb_slots, emb_dim), (2, 1, 16));
+                assert_eq!(cfg_digest, 0xdead_beef_cafe_f00d);
             }
             other => panic!("{other:?}"),
         }

@@ -124,7 +124,7 @@ impl ShardService {
             Err(req) => req,
         };
         match req {
-            ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim } => {
+            ShardRequest::Hello { shard, dense_slots, emb_slots, emb_dim, cfg_digest } => {
                 // A front that dialed the wrong server or was launched
                 // with a mode whose optimizer shape differs must die at
                 // connect, not diverge silently. Asserting (not erroring)
@@ -143,6 +143,12 @@ impl ShardService {
                     "Hello: embedding optimizer shape mismatch (front/server --mode disagree?)"
                 );
                 assert_eq!(emb_dim as usize, self.shard.emb.dim(), "Hello: emb_dim mismatch");
+                assert_eq!(
+                    cfg_digest,
+                    crate::optim::config_digest(self.opt_dense.as_ref(), self.opt_emb.as_ref()),
+                    "Hello: optimizer config digest mismatch (same shape but different \
+                     lr/kind pair — front and server were launched from different configs)"
+                );
                 ShardReply::Ok
             }
             ShardRequest::Apply { opt_step, dense, emb } => {
@@ -313,5 +319,58 @@ pub fn serve_reads(shard: Arc<PsShard>, mut conn: Box<dyn Conn>) -> (u64, CodecE
             Ok(_) => return (handled, CodecError::Malformed("expected a request frame")),
             Err(e) => return (handled, e),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embedding::EmbeddingConfig;
+    use crate::optim::config_digest;
+
+    fn tiny_service(dense_lr: f64) -> ShardService {
+        let shard = PsShard::from_parts(
+            0,
+            vec![(0, 4)],
+            vec![vec![0.0; 4]],
+            vec![vec![]],
+            EmbeddingConfig { dim: 4, ..EmbeddingConfig::default() },
+            0,
+            1,
+        );
+        ShardService::new(
+            shard,
+            make_optimizer(crate::config::OptimKind::Sgd, dense_lr),
+            make_optimizer(crate::config::OptimKind::Sgd, 0.01),
+        )
+    }
+
+    fn hello_for(dense_lr: f64) -> ShardRequest {
+        let (d, e) = (
+            make_optimizer(crate::config::OptimKind::Sgd, dense_lr),
+            make_optimizer(crate::config::OptimKind::Sgd, 0.01),
+        );
+        ShardRequest::Hello {
+            shard: 0,
+            dense_slots: 0,
+            emb_slots: 0,
+            emb_dim: 4,
+            cfg_digest: config_digest(d.as_ref(), e.as_ref()),
+        }
+    }
+
+    #[test]
+    fn hello_accepts_a_matching_config_digest() {
+        let mut svc = tiny_service(0.05);
+        assert!(matches!(svc.handle(hello_for(0.05)), ShardReply::Ok));
+    }
+
+    /// The gap the slot-count handshake cannot see: identical optimizer
+    /// shapes, different learning rate. The digest must kill the connect.
+    #[test]
+    #[should_panic(expected = "config digest mismatch")]
+    fn hello_rejects_a_same_shape_different_lr_front() {
+        let mut svc = tiny_service(0.05);
+        svc.handle(hello_for(0.1));
     }
 }

@@ -296,6 +296,10 @@ fn install_checkpoint(
             dense_slots: spec.opt_dense.slots() as u32,
             emb_slots: spec.opt_emb.slots() as u32,
             emb_dim: spec.emb_cfg.dim as u32,
+            cfg_digest: crate::optim::config_digest(
+                spec.opt_dense.as_ref(),
+                spec.opt_emb.as_ref(),
+            ),
         },
         ShardRequest::SetDense { dense: ckpt.dense.clone() },
         ShardRequest::SetSlots { slots: ckpt.slots.clone() },

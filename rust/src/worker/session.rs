@@ -247,6 +247,9 @@ impl TrainSession {
             .context("building the PS plane")?,
         );
         ps.set_journal_spill_bytes(cfg.ps.journal_spill_bytes);
+        // Install the configured staleness-decay policy before any token
+        // is issued (the default `gba` is a no-op and costs nothing).
+        ps.set_staleness_policy(crate::staleness::make_staleness(&cfg.train.staleness));
         if let Some(ckpt) = ckpt {
             // One bulk InsertRows frame per shard — the restore path that
             // stays tractable when the shards sit across a wire.
@@ -673,10 +676,17 @@ impl TrainSession {
     /// no-op (always `Ok(None)`) under `[switch] policy = "manual"`.
     pub fn observe_day(&mut self, stats: &DayStats) -> Result<Option<ModeKind>> {
         let signal = stats.straggler_signal();
-        match self.switch.observe(signal) {
+        // Second controller signal: the staleness policy's normalized
+        // parameter gap at the last flush, squashed to [0, 1) on the
+        // same scale as the straggler signal. 0 under the default `gba`
+        // policy, so manual and gba runs behave exactly as before.
+        let raw_gap = self.ps.staleness_gap();
+        let gap_signal = raw_gap / (raw_gap + 1.0);
+        let combined = signal.max(gap_signal);
+        match self.switch.observe_signals(signal, gap_signal) {
             None => Ok(None),
             Some(to) => {
-                self.switch_mode_with_signal(to, Some(signal))?;
+                self.switch_mode_with_signal(to, Some(combined))?;
                 Ok(Some(to))
             }
         }

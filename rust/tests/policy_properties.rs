@@ -9,6 +9,9 @@
 use gba::config::{ModeConfig, ModeKind};
 use gba::coordinator::modes::{make_policy, GbaPolicy, HopBsPolicy, SyncPolicy};
 use gba::coordinator::{DecayStrategy, ModePolicy, PullDecision, PushAction};
+use gba::staleness::{
+    make_staleness, GapAwareStaleness, StalenessConfig, StalenessPolicy, StalenessPolicyKind,
+};
 use gba::util::prop;
 use gba::util::rng::Pcg64;
 
@@ -255,6 +258,153 @@ fn decay_strategies_are_monotone_in_staleness() {
                 prev = w;
             }
             assert_eq!(s.weight(k, k), 1.0, "{s:?} fresh weight must be 1");
+        }
+    });
+}
+
+// --- staleness-policy invariants (ISSUE 10) ---------------------------------
+//
+// The `StalenessPolicy` seam reweights the mode policy's flush weights in
+// place. Random harness interleavings above produce the recorded flush
+// sequences; these properties hold for every policy on every recording.
+
+/// Record a random GBA run and return (pull order, flushes).
+fn record_gba_run(rng: &mut Pcg64) -> (Vec<u64>, Vec<(u64, Vec<u64>, Vec<f32>)>) {
+    let m = 1 + rng.gen_range(6) as usize;
+    let iota = rng.gen_range(5);
+    let workers = 2 + rng.gen_range(6) as usize;
+    let mut h = Harness::new(Box::new(GbaPolicy::with_iota(m, iota)), workers);
+    for _ in 0..500 {
+        h.step(rng);
+    }
+    (h.pulls, h.flushes)
+}
+
+/// Replay a recording through one staleness policy: issue every pulled
+/// token in order (feeding random update norms in between, as the apply
+/// loop would), then reweight each recorded flush. Returns the
+/// reweighted flushes paired with their recorded base weights.
+fn replay(
+    rng: &mut Pcg64,
+    policy: &mut dyn StalenessPolicy,
+    pulls: &[u64],
+    flushes: &[(u64, Vec<u64>, Vec<f32>)],
+) -> Vec<(Vec<f32>, Vec<f32>)> {
+    for &t in pulls {
+        policy.on_issue(t);
+        if rng.bernoulli(0.5) {
+            // Hostile norms too: zero, huge, ordinary.
+            let norm = match rng.gen_range(4) {
+                0 => 0.0,
+                1 => 1e9,
+                _ => rng.next_f32() as f64,
+            };
+            policy.on_update_norm(norm);
+        }
+    }
+    flushes
+        .iter()
+        .map(|(k, tokens, base)| {
+            let mut w = base.clone();
+            policy.reweight(*k, tokens, &mut w);
+            (base.clone(), w)
+        })
+        .collect()
+}
+
+fn random_staleness_cfg(rng: &mut Pcg64, kind: StalenessPolicyKind) -> StalenessConfig {
+    let min = 1 + rng.gen_range(4);
+    StalenessConfig {
+        policy: kind,
+        gap_scale: 0.1 + rng.next_f32() as f64 * 4.0,
+        abs_bound_min: min,
+        abs_bound_max: min + rng.gen_range(12),
+        abs_adapt_rate: (rng.next_f32() as f64).clamp(0.05, 1.0),
+    }
+}
+
+#[test]
+fn staleness_reweights_stay_in_unit_interval_and_never_raise() {
+    prop::check("staleness weight range", 30, |rng| {
+        let (pulls, flushes) = record_gba_run(rng);
+        for kind in StalenessPolicyKind::ALL {
+            let cfg = random_staleness_cfg(rng, kind);
+            let mut policy = make_staleness(&cfg);
+            for (base, w) in replay(rng, policy.as_mut(), &pulls, &flushes) {
+                for (&b, &x) in base.iter().zip(&w) {
+                    assert!(
+                        (0.0..=1.0).contains(&x),
+                        "{kind:?}: weight {x} outside [0,1] (base {b})"
+                    );
+                    assert!(x <= b, "{kind:?}: reweight raised {b} to {x}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gba_staleness_is_bitwise_identity_on_recorded_flushes() {
+    // The default policy's contract: `staleness_policy = "gba"` must be
+    // indistinguishable — bit for bit — from the pre-seam decay.
+    prop::check("gba staleness identity", 30, |rng| {
+        let (pulls, flushes) = record_gba_run(rng);
+        let cfg = StalenessConfig::default();
+        let mut policy = make_staleness(&cfg);
+        for (base, w) in replay(rng, policy.as_mut(), &pulls, &flushes) {
+            for (b, x) in base.iter().zip(&w) {
+                assert_eq!(b.to_bits(), x.to_bits(), "gba identity broken: {b} -> {x}");
+            }
+        }
+    });
+}
+
+#[test]
+fn gap_aware_weight_monotone_nonincreasing_in_gap() {
+    prop::check("gap_aware monotone", 40, |rng| {
+        let mut policy = GapAwareStaleness::new(0.1 + rng.next_f32() as f64 * 4.0);
+        // Token i is issued after i updates have landed, so in one flush
+        // at step n the gap strictly decreases with i — the reweighted
+        // weight must be non-decreasing in i (older = never weighted more).
+        let n = 4 + rng.gen_range(12);
+        for t in 0..n {
+            policy.on_issue(t);
+            policy.on_update_norm(0.25 + rng.next_f32() as f64);
+        }
+        let tokens: Vec<u64> = (0..n).collect();
+        let mut w = vec![1.0f32; tokens.len()];
+        policy.reweight(n, &tokens, &mut w);
+        for pair in w.windows(2) {
+            assert!(
+                pair[0] <= pair[1],
+                "older token outweighed a fresher one: {w:?}"
+            );
+        }
+        assert!(w.iter().all(|&x| (0.0..=1.0).contains(&x)), "{w:?}");
+    });
+}
+
+#[test]
+fn abs_bound_stays_within_clamp_on_hostile_histograms() {
+    prop::check("abs bound clamp", 30, |rng| {
+        let (pulls, flushes) = record_gba_run(rng);
+        let cfg = random_staleness_cfg(rng, StalenessPolicyKind::Abs);
+        let mut policy = make_staleness(&cfg);
+        for &t in &pulls {
+            policy.on_issue(t);
+        }
+        for (k, tokens, base) in &flushes {
+            let mut w = base.clone();
+            // Hostile step offsets push deep staleness into the histogram.
+            let k = k + rng.gen_range(1000);
+            policy.reweight(k, tokens, &mut w);
+            let bound = policy.current_bound().expect("abs always reports a bound");
+            assert!(
+                (cfg.abs_bound_min as f64..=cfg.abs_bound_max as f64).contains(&bound),
+                "bound {bound} escaped clamp [{}, {}]",
+                cfg.abs_bound_min,
+                cfg.abs_bound_max
+            );
         }
     });
 }

@@ -125,6 +125,50 @@ fn inproc_apply_invalidates_cached_rows() {
     assert!(s.cache_evictions >= keys.len() as u64, "applied keys must be evicted, got {s:?}");
 }
 
+/// The clock-eviction contract (ISSUE 10 satellite): a hot key set that
+/// keeps getting re-gathered must survive waves of one-shot cold keys.
+/// The pre-clock cache flushed a whole lock-shard every time it filled,
+/// so any sustained cold churn wiped the Zipfian head and every hot
+/// re-gather missed; second-chance eviction keeps the referenced head
+/// resident and evicts only the unreferenced churn.
+#[test]
+fn hot_keys_survive_cold_churn_under_clock_eviction() {
+    let ps = two_shard_ps();
+    let hot = served_keys(&ps);
+    // 128 rows over 4 cache shards = 32 rows per shard: even in the
+    // worst hash layout (all 16 hot keys on one cache shard) a churn
+    // wave's clock sweep cannot lap a re-referenced hot entry.
+    let front = ServeFront::new(Box::new(ps.clone()), front_cfg(128));
+
+    // Warm the hot set: first gather fills, second marks referenced.
+    front.gather(&hot, BATCH, FIELDS).unwrap();
+    front.gather(&hot, BATCH, FIELDS).unwrap();
+
+    let waves = 16usize;
+    let mut hot_hits_expected = 0u64;
+    let hits_at_start = front.stats_snapshot().cache_hits;
+    for wave in 0..waves {
+        // A wave of one-shot cold keys, disjoint from the hot set and
+        // from every other wave — enough total churn (16 * 16 keys) to
+        // overflow each cache shard several times.
+        let cold: Vec<u64> =
+            (0..(BATCH * FIELDS) as u64).map(|i| 1_000 + (wave as u64) * 100 + i).collect();
+        front.gather(&cold, BATCH, FIELDS).unwrap();
+        // The hot set is re-gathered between waves (that is what "hot"
+        // means); every one of these must be a cache hit.
+        front.gather(&hot, BATCH, FIELDS).unwrap();
+        hot_hits_expected += hot.len() as u64;
+    }
+    let s = front.stats_snapshot();
+    assert!(
+        s.cache_hits - hits_at_start >= hot_hits_expected,
+        "hot keys fell out of the cache under cold churn: {} hits across {waves} waves, \
+         wanted at least {hot_hits_expected} ({s:?})",
+        s.cache_hits - hits_at_start,
+    );
+    assert!(s.cache_evictions > 0, "churn never pressured the cache; the test is vacuous ({s:?})");
+}
+
 /// Boot one `serve_shard` accept loop and return its address plus the
 /// primary connection that anchors the generation read companions
 /// attach to (and that raw `Apply` RPCs drive).
